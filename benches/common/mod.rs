@@ -1,0 +1,72 @@
+//! Shared bench harness: load artifacts, run simulations, print
+//! paper-style tables.  Every bench binary regenerates the rows/series of
+//! one table or figure of the paper (see DESIGN.md per-experiment index).
+
+use jiagu::catalog::Catalog;
+use jiagu::config::{RunConfig, SchedulerKind};
+use jiagu::sim::{load_predictor, RunReport, Simulation};
+use jiagu::traces::TraceSet;
+use std::sync::Arc;
+
+#[allow(unused_imports)]
+pub use jiagu::util::bench::{bench, summarize, Table};
+
+/// Default simulated horizon for the sim-driven benches.  Override with
+/// JIAGU_BENCH_DURATION (CI wants shorter; paper-style runs want longer).
+#[allow(dead_code)]
+pub fn duration() -> usize {
+    std::env::var("JIAGU_BENCH_DURATION")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1200)
+}
+
+#[allow(dead_code)]
+pub struct Bench {
+    pub cat: Catalog,
+    pub artifacts: std::path::PathBuf,
+    pub predictor: Arc<dyn jiagu::runtime::Predictor>,
+}
+
+#[allow(dead_code)]
+impl Bench {
+    /// Load artifacts + the PJRT predictor (set JIAGU_NATIVE=1 to use the
+    /// pure-Rust forest instead, e.g. for scheduler-only profiling).
+    pub fn load() -> Self {
+        let artifacts = jiagu::artifacts_dir();
+        let cat = Catalog::load(&artifacts.join("functions.json"))
+            .expect("run `make artifacts` before `cargo bench`");
+        let native = std::env::var("JIAGU_NATIVE").is_ok();
+        let predictor = load_predictor(&artifacts, native).expect("predictor");
+        Self { cat, artifacts, predictor }
+    }
+
+    /// One simulated run of `cfg` over `trace`.
+    pub fn run(&self, mut cfg: RunConfig, trace: &TraceSet, duration_s: usize) -> RunReport {
+        cfg.duration_s = duration_s;
+        self.predictor.stats().reset();
+        Simulation::new(self.cat.clone(), cfg, self.predictor.clone())
+            .run(trace)
+            .expect("simulation")
+    }
+
+    /// The paper's scheduler line-up for Figs. 13/14.
+    pub fn lineup(&self) -> Vec<(&'static str, RunConfig)> {
+        vec![
+            ("K8s", RunConfig::with_scheduler(SchedulerKind::Kubernetes)),
+            ("Owl", RunConfig::with_scheduler(SchedulerKind::Owl)),
+            ("Gsight", RunConfig::with_scheduler(SchedulerKind::Gsight)),
+            ("Jiagu-NoDS", RunConfig::jiagu_nods()),
+            ("Jiagu-45", RunConfig::jiagu_45()),
+            ("Jiagu-30", RunConfig::jiagu_30()),
+        ]
+    }
+}
+
+/// Cold-start latency mean for a run under a given init model: measured
+/// per-call decision cost + constant init latency (see DESIGN.md
+/// "Scheduling-cost measurement model").
+#[allow(dead_code)]
+pub fn cold_start_ms(report: &RunReport, init_ms: f64) -> f64 {
+    report.scheduling_ms_mean + init_ms
+}

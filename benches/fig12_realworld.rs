@@ -1,0 +1,68 @@
+//! Fig. 12 — scheduling performance on real-world traces A–D.
+//!
+//! Three panels per trace: scheduling cost, model inferences per
+//! schedule, cold-start latency with cfork (8.4 ms init), each for Jiagu
+//! (pre-decision) vs Gsight (inference on the critical path), Gsight
+//! normalised to 1.  Paper: 81.0–93.7% lower scheduling cost, 83.8–92.1%
+//! fewer inferences, 57.4–69.3% lower cold start.
+
+mod common;
+
+use common::{cold_start_ms, Bench, Table};
+use jiagu::config::{RunConfig, SchedulerKind};
+use jiagu::traces;
+
+fn main() {
+    let b = Bench::load();
+    let dur = common::duration();
+    let mut t = Table::new(&[
+        "trace",
+        "sched Jiagu",
+        "sched Gsight",
+        "reduction",
+        "inf/sched J",
+        "inf/sched G",
+        "reduction",
+        "coldstart J (cfork)",
+        "coldstart G (cfork)",
+        "reduction",
+        "calib J",
+        "calib G",
+        "calib reduction",
+    ]);
+    for trace in traces::paper_traces(&b.cat, dur) {
+        let j = b.run(RunConfig::jiagu_45(), &trace, dur);
+        let g = b.run(
+            RunConfig::with_scheduler(SchedulerKind::Gsight),
+            &trace,
+            dur,
+        );
+        let red = |a: f64, bb: f64| format!("{:.1}%", 100.0 * (1.0 - a / bb.max(1e-12)));
+        let cs_j = cold_start_ms(&j, 8.4);
+        let cs_g = cold_start_ms(&g, 8.4);
+        // paper-calibrated cold start: our XLA forest inference is ~70x
+        // faster than the paper's 21.78 ms sklearn model, so we also
+        // report init + (inferences/schedule x 21.78 ms) to isolate the
+        // *policy* effect (how often inference blocks a cold start)
+        let cal_j = 8.4 + j.inferences_per_schedule * 21.78;
+        let cal_g = 8.4 + g.inferences_per_schedule * 21.78;
+        t.row(&[
+            trace.name.clone(),
+            format!("{:.3}ms", j.scheduling_ms_mean),
+            format!("{:.3}ms", g.scheduling_ms_mean),
+            red(j.scheduling_ms_mean, g.scheduling_ms_mean),
+            format!("{:.2}", j.inferences_per_schedule),
+            format!("{:.2}", g.inferences_per_schedule),
+            red(j.inferences_per_schedule, g.inferences_per_schedule),
+            format!("{cs_j:.2}ms"),
+            format!("{cs_g:.2}ms"),
+            red(cs_j, cs_g),
+            format!("{cal_j:.1}ms"),
+            format!("{cal_g:.1}ms"),
+            red(cal_j, cal_g),
+        ]);
+    }
+    t.print("Fig. 12: scheduling cost / inferences / cold start on real-world traces (paper: 81.0-93.7% / 83.8-92.1% / 57.4-69.3% reductions)");
+    println!("\n'calib' columns price each critical-path inference at the paper's measured 21.78 ms model cost;");
+    println!("they isolate the scheduling-policy effect from our much faster XLA forest (see EXPERIMENTS.md).");
+}

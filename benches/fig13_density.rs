@@ -1,0 +1,41 @@
+//! Fig. 13 — normalized function density across traces A–D for every
+//! scheduler, K8s = 100%.
+//!
+//! Paper: all QoS-aware schedulers beat K8s; Owl trails (2-function
+//! colocation limit); Gsight ≈ Jiagu-NoDS; dual-staged scaling lifts
+//! Jiagu-45 and Jiagu-30 further, up to +54.8% over K8s, +22% over
+//! Gsight, +38.3% over Owl, with QoS violations still < 10%.
+
+mod common;
+
+use common::{Bench, Table};
+use jiagu::traces;
+
+fn main() {
+    let b = Bench::load();
+    let dur = common::duration();
+    let lineup = b.lineup();
+    let mut t = Table::new(&[
+        "trace", "K8s", "Owl", "Gsight", "Jiagu-NoDS", "Jiagu-45", "Jiagu-30",
+    ]);
+    let mut qos_t = Table::new(&[
+        "trace", "K8s", "Owl", "Gsight", "Jiagu-NoDS", "Jiagu-45", "Jiagu-30",
+    ]);
+    for trace in traces::paper_traces(&b.cat, dur) {
+        let mut cells = vec![trace.name.clone()];
+        let mut qcells = vec![trace.name.clone()];
+        let mut k8s_density = 1.0;
+        for (name, cfg) in &lineup {
+            let r = b.run(cfg.clone(), &trace, dur);
+            if *name == "K8s" {
+                k8s_density = r.density;
+            }
+            cells.push(format!("{:.1}%", 100.0 * r.density / k8s_density));
+            qcells.push(format!("{:.1}%", 100.0 * r.qos_violation_rate));
+        }
+        t.row(&cells);
+        qos_t.row(&qcells);
+    }
+    t.print("Fig. 13: normalized function density, K8s = 100% (paper: Jiagu-30 up to 154.8%)");
+    qos_t.print("QoS violation rates for the same runs (paper: all < 10%)");
+}

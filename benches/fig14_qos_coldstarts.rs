@@ -1,0 +1,67 @@
+//! Fig. 14 — (a) per-function QoS violation on trace A; (b) cold starts
+//! avoided by dual-staged scaling + migration.
+//!
+//! Paper: (a) every function < 10% violations for all schedulers;
+//! (b) with 45 s release sensitivity all re-routing is logical; with 30 s
+//! a small share (<20%) would need real cold starts, which on-demand
+//! migration of cached instances avoids.
+
+mod common;
+
+use common::{Bench, Table};
+use jiagu::config::RunConfig;
+use jiagu::traces;
+
+fn main() {
+    let b = Bench::load();
+    let dur = common::duration();
+    let traces_all = traces::paper_traces(&b.cat, dur);
+
+    // (a) per-function QoS violations on trace A
+    let mut headers = vec!["system".to_string()];
+    headers.extend(b.cat.functions.iter().map(|f| f.name.clone()));
+    let mut t = Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for (name, cfg) in b.lineup() {
+        let r = b.run(cfg, &traces_all[0], dur);
+        let mut cells = vec![name.to_string()];
+        cells.extend(
+            r.per_function_violation
+                .iter()
+                .map(|v| format!("{:.1}%", 100.0 * v)),
+        );
+        t.row(&cells);
+    }
+    t.print("Fig. 14a: per-function QoS violation rate on Trace A (paper: all < 10%)");
+
+    // (b) logical vs would-be-real cold starts, 30/45 s sensitivity,
+    // with and without on-demand migration
+    let mut t2 = Table::new(&[
+        "trace",
+        "release",
+        "migration",
+        "logical CS",
+        "real-after-release",
+        "logical share",
+        "migrations",
+    ]);
+    for trace in &traces_all {
+        for (release, label) in [(45.0, "45s"), (30.0, "30s")] {
+            for migration in [true, false] {
+                let mut cfg = RunConfig::jiagu_45();
+                cfg.autoscaler.release_duration_s = release;
+                cfg.autoscaler.migration = migration;
+                let r = b.run(cfg, trace, dur);
+                t2.row(&[
+                    trace.name.clone(),
+                    label.to_string(),
+                    if migration { "on" } else { "off" }.to_string(),
+                    r.logical_cold_starts.to_string(),
+                    r.real_after_release.to_string(),
+                    format!("{:.1}%", 100.0 * r.logical_fraction()),
+                    r.migrations.to_string(),
+                ]);
+            }
+        }
+    }
+    t2.print("Fig. 14b: re-routing served logically vs needing real cold starts (paper: 45s fully logical; 30s <20% real, avoidable by migration)");
+}

@@ -1,0 +1,102 @@
+//! Fig. 15 — prediction accuracy of the deployed model.
+//!
+//! (a) overall/split-half/per-function error, scalability to 30/60
+//! functions, and the Gsight-style instance-granularity comparison —
+//! from `artifacts/model_comparison.json` (computed at `make artifacts`).
+//! (b) error convergence as samples of a behaviour-changed function
+//! arrive (incremental retraining).
+//!
+//! Additionally cross-checks the *deployed* forest (the PJRT artifact)
+//! against freshly sampled ground truth from the Rust mirror.
+
+mod common;
+
+use common::{Bench, Table};
+use jiagu::interference::{ground_truth_latency, NodeMix};
+use jiagu::model::feature_row;
+use jiagu::util::json::Json;
+use jiagu::util::rng::Rng;
+
+fn main() {
+    let b = Bench::load();
+    let j = Json::parse_file(&b.artifacts.join("model_comparison.json"))
+        .expect("model_comparison.json — run `make artifacts`");
+
+    // (a) errors recorded at training time
+    let a = j.get("fig15a").unwrap();
+    let mut t = Table::new(&["config", "mean relative error"]);
+    for key in [
+        "jiagu",
+        "jiagu_split1",
+        "jiagu_split2",
+        "jiagu_30fn",
+        "jiagu_60fn",
+        "gsight",
+    ] {
+        t.row(&[
+            key.to_string(),
+            format!("{:.1}%", 100.0 * a.get(key).unwrap().as_f64().unwrap()),
+        ]);
+    }
+    t.print("Fig. 15a: prediction error (paper: ~10-20%, no overfit across splits, stable at 30/60 functions)");
+
+    let mut t_fn = Table::new(&["function", "error"]);
+    if let Ok(per_fn) = a.get("per_function") {
+        if let Json::Obj(m) = per_fn {
+            for (name, v) in m {
+                t_fn.row(&[name.clone(), format!("{:.1}%", 100.0 * v.as_f64().unwrap())]);
+            }
+        }
+    }
+    t_fn.print("Fig. 15a: per-function error");
+
+    // deployed-forest spot check against the ground-truth mirror
+    let mut rng = Rng::seed_from(77);
+    let mut rows = Vec::new();
+    let mut truths = Vec::new();
+    for _ in 0..200 {
+        let kn = rng.range_u64(1, 4) as usize;
+        let fids = rng.choose_k(b.cat.len(), kn);
+        let entries: Vec<(usize, u32, u32)> = fids
+            .iter()
+            .map(|f| (*f, rng.range_u64(1, 8) as u32, rng.range_u64(0, 3) as u32))
+            .collect();
+        let mix = NodeMix::new(entries.clone());
+        let target = entries[0].0;
+        rows.push(feature_row(&b.cat, &mix, target));
+        truths.push(ground_truth_latency(&b.cat, &mix, target));
+    }
+    let preds = b.predictor.predict(&rows).unwrap();
+    let err: f64 = preds
+        .iter()
+        .zip(&truths)
+        .map(|(p, t)| ((*p as f64) - t).abs() / t)
+        .sum::<f64>()
+        / truths.len() as f64;
+    println!("\ndeployed PJRT forest vs Rust ground-truth mirror over 200 fresh mixes: {:.1}% mean relative error", 100.0 * err);
+
+    // (b) convergence series
+    let bseries = j.get("fig15b").unwrap();
+    let pts = bseries.get("sample_points").unwrap().f64_vec().unwrap();
+    let mut t2_headers: Vec<String> = vec!["function".into()];
+    t2_headers.extend(pts.iter().map(|p| format!("n={p}")));
+    let mut t2 = Table::new(&t2_headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    if let Json::Obj(series) = bseries.get("series").unwrap() {
+        let mut avg = vec![0.0; pts.len()];
+        let mut count = 0;
+        for (name, errs) in series {
+            let errs = errs.f64_vec().unwrap();
+            let mut cells = vec![name.clone()];
+            cells.extend(errs.iter().map(|e| format!("{:.0}%", 100.0 * e)));
+            t2.row(&cells);
+            for (i, e) in errs.iter().enumerate() {
+                avg[i] += e;
+            }
+            count += 1;
+        }
+        let mut cells = vec!["(average)".to_string()];
+        cells.extend(avg.iter().map(|e| format!("{:.0}%", 100.0 * e / count as f64)));
+        t2.row(&cells);
+    }
+    t2.print("Fig. 15b: error vs samples after a function's behaviour changes (paper: rapid drop, convergence within ~5-30 samples)");
+}

@@ -1,0 +1,33 @@
+//! Fig. 16 — prediction error across model classes on the same dataset:
+//! Jiagu's RFR vs ESP-style ridge, gradient-boosted trees (XGBoost
+//! stand-in), linear regression and MLP-2/3/4.
+//!
+//! Paper: RFR sits in the best tier (with low training cost and natural
+//! incremental retraining); linear regression is the clear loser because
+//! interference is non-linear.
+
+mod common;
+
+use common::{Bench, Table};
+use jiagu::util::json::Json;
+
+fn main() {
+    let b = Bench::load();
+    let j = Json::parse_file(&b.artifacts.join("model_comparison.json"))
+        .expect("model_comparison.json — run `make artifacts`");
+    let fig16 = j.get("fig16").unwrap();
+    let mut t = Table::new(&["model", "error", "training time", "input dims"]);
+    let order = ["jiagu_rfr", "xgboost", "esp", "mlp2", "mlp3", "mlp4", "linear"];
+    for name in order {
+        let m = fig16.get(name).unwrap();
+        t.row(&[
+            name.to_string(),
+            format!("{:.1}%", 100.0 * m.get("error").unwrap().as_f64().unwrap()),
+            format!("{:.1}s", m.get("fit_seconds").unwrap().as_f64().unwrap()),
+            format!("{}", m.get("dims").unwrap().as_usize().unwrap()),
+        ]);
+    }
+    t.print("Fig. 16: prediction error per model class (paper: RFR best tier; linear worst)");
+    println!("\nNote: all models share the same features + log-slowdown target; only the model class varies.");
+    println!("RFR additionally supports incremental retraining (the §6 periodic-retrain loop), unlike the closed-form fits.");
+}

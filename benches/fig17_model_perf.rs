@@ -1,0 +1,64 @@
+//! Fig. 17 — model performance.
+//!
+//! (a) training time + input dimensionality: Jiagu's function-granularity
+//! features (44 dims) vs Gsight-style instance-granularity (404 dims) —
+//! from `artifacts/model_comparison.json`.
+//! (b) inference cost vs number of batched inputs, *measured live*
+//! through the PJRT runtime (paper: only ~+2 ms going to 100 inputs —
+//! batched capacity sweeps are nearly free).
+
+mod common;
+
+use common::{bench, Bench, Table};
+use jiagu::util::json::Json;
+use jiagu::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let b = Bench::load();
+    let j = Json::parse_file(&b.artifacts.join("model_comparison.json"))
+        .expect("model_comparison.json — run `make artifacts`");
+
+    // (a)
+    let a = j.get("fig17a").unwrap();
+    let mut t = Table::new(&["model", "input dims", "training time"]);
+    for name in ["jiagu", "gsight"] {
+        let m = a.get(name).unwrap();
+        t.row(&[
+            format!("{name} granularity"),
+            m.get("dims").unwrap().as_usize().unwrap().to_string(),
+            format!("{:.1}s", m.get("fit_seconds").unwrap().as_f64().unwrap()),
+        ]);
+    }
+    t.print("Fig. 17a: training time and dimensionality (paper: function-granularity is ~10x smaller and faster)");
+
+    // (b) measured PJRT inference latency vs batch size
+    let mut rng = Rng::seed_from(5);
+    let n_feat = b.predictor.n_features();
+    let mut t2 = Table::new(&["batch rows", "mean", "p99", "per-row"]);
+    let mut base_mean = 0.0;
+    for rows_n in [1usize, 2, 4, 8, 16, 32, 64, 100, 128, 256] {
+        let rows: Vec<Vec<f32>> = (0..rows_n)
+            .map(|_| (0..n_feat).map(|_| rng.range_f64(0.0, 100.0) as f32).collect())
+            .collect();
+        let s = bench(3, Duration::from_millis(400), || {
+            b.predictor.predict(&rows).unwrap();
+        });
+        if rows_n == 1 {
+            base_mean = s.mean_ms();
+        }
+        t2.row(&[
+            rows_n.to_string(),
+            format!("{:.3}ms", s.mean_ms()),
+            format!("{:.3}ms", s.p99_ms()),
+            format!("{:.1}us", 1000.0 * s.mean_ms() / rows_n as f64),
+        ]);
+        if rows_n == 100 {
+            println!(
+                "  -> +{:.2} ms going from 1 to 100 batched inputs (paper: ~+2 ms)",
+                s.mean_ms() - base_mean
+            );
+        }
+    }
+    t2.print("Fig. 17b: PJRT inference latency vs batched inputs (measured live)");
+}

@@ -1,0 +1,106 @@
+//! Hot-path microbenchmarks (perf tracking, EXPERIMENTS.md §Perf).
+//!
+//! Times the building blocks the paper's latency claims rest on:
+//! feature-row construction, the fast-path table lookup + placement, the
+//! slow-path capacity sweep, a full asynchronous update, and the
+//! native-vs-PJRT predictor at the sweep's batch size.
+
+mod common;
+
+use common::{bench, Bench, Table};
+use jiagu::capacity::{self, CapacityConfig};
+use jiagu::cluster::Cluster;
+use jiagu::interference::NodeMix;
+use jiagu::model::features::FeatureBuilder;
+use jiagu::runtime::{ForestParams, NativeForest};
+use jiagu::scheduler::{JiaguScheduler, Scheduler};
+use jiagu::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let b = Bench::load();
+    let cfg = CapacityConfig::default();
+    let mut t = Table::new(&["operation", "mean", "p50", "p99"]);
+    let budget = Duration::from_millis(500);
+
+    // representative 3-function mix
+    let mix = NodeMix::new(vec![(0, 4, 1), (2, 3, 0), (5, 2, 1)]);
+
+    // 1. feature row build (hoisted builder)
+    {
+        let builder = FeatureBuilder::new(&b.cat, &mix);
+        let mut row = Vec::with_capacity(jiagu::model::N_FEATURES);
+        let s = bench(100, budget, || {
+            builder.row_into(0, &mut row);
+            std::hint::black_box(&row);
+        });
+        t.row(&["feature row (row_into)".into(),
+            format!("{:.0}ns", s.mean_ns), format!("{:.0}ns", s.p50_ns), format!("{:.0}ns", s.p99_ns)]);
+    }
+
+    // 2. native forest single prediction
+    let native = NativeForest::new(ForestParams::load(&b.artifacts.join("forest.json")).unwrap());
+    {
+        let row = FeatureBuilder::new(&b.cat, &mix).row(0);
+        let s = bench(100, budget, || {
+            std::hint::black_box(native.predict_one(&row));
+        });
+        t.row(&["native forest x1".into(),
+            format!("{:.0}ns", s.mean_ns), format!("{:.0}ns", s.p50_ns), format!("{:.0}ns", s.p99_ns)]);
+    }
+
+    // 3. PJRT predictor at sweep batch (capacity sweep row count)
+    {
+        let builder = FeatureBuilder::new(&b.cat, &mix);
+        let rows: Vec<Vec<f32>> = (0..84).map(|i| builder.row(i % b.cat.len())).collect();
+        let s = bench(5, budget, || {
+            b.predictor.predict(&rows).unwrap();
+        });
+        t.row(&["pjrt predict x84 (sweep batch)".into(),
+            format!("{:.3}ms", s.mean_ms()), format!("{:.3}ms", s.p50_ms()), format!("{:.3}ms", s.p99_ms())]);
+        let rows1 = rows[..1].to_vec();
+        let s = bench(5, budget, || {
+            b.predictor.predict(&rows1).unwrap();
+        });
+        t.row(&["pjrt predict x1".into(),
+            format!("{:.3}ms", s.mean_ms()), format!("{:.3}ms", s.p50_ms()), format!("{:.3}ms", s.p99_ms())]);
+    }
+
+    // 4. capacity sweep (slow path body)
+    {
+        let s = bench(5, budget, || {
+            capacity::compute_capacity(&b.cat, &mix, 0, b.predictor.as_ref(), &cfg).unwrap();
+        });
+        t.row(&["capacity sweep (slow path)".into(),
+            format!("{:.3}ms", s.mean_ms()), format!("{:.3}ms", s.p50_ms()), format!("{:.3}ms", s.p99_ms())]);
+    }
+
+    // 5. fast-path schedule decision (table hit), including placement +
+    // async update billed separately by the scheduler
+    {
+        let mut cluster = Cluster::new(8);
+        let mut sched = JiaguScheduler::new(b.predictor.clone(), cfg.clone(), 8);
+        sched.schedule(&b.cat, &mut cluster, 0, 1, 0.0).unwrap(); // warm table
+        let mut rng = Rng::seed_from(3);
+        let mut decision_ns = Vec::new();
+        let mut async_ns = Vec::new();
+        for i in 0..400 {
+            let f = rng.below(b.cat.len() as u64) as usize;
+            let r = sched.schedule(&b.cat, &mut cluster, f, 1, i as f64).unwrap();
+            decision_ns.push(r.decision_nanos as f64);
+            async_ns.push(r.async_nanos as f64);
+            // keep the cluster from saturating: evict what we placed
+            for p in &r.placements {
+                cluster.evict(&b.cat, p.instance);
+            }
+        }
+        let d = common::summarize(&decision_ns);
+        let a = common::summarize(&async_ns);
+        t.row(&["schedule decision (mixed fast/slow)".into(),
+            format!("{:.3}ms", d.mean_ns / 1e6), format!("{:.3}ms", d.p50_ns / 1e6), format!("{:.3}ms", d.p99_ns / 1e6)]);
+        t.row(&["async update (off critical path)".into(),
+            format!("{:.3}ms", a.mean_ns / 1e6), format!("{:.3}ms", a.p50_ns / 1e6), format!("{:.3}ms", a.p99_ns / 1e6)]);
+    }
+
+    t.print("Hot-path microbenchmarks (see EXPERIMENTS.md §Perf)");
+}

@@ -1,0 +1,93 @@
+//! Table 1 — profiling-cost scaling and scheduling speed of each design.
+//!
+//! The paper's complexity claims: Jiagu/Gsight O(n) solo-run profiling;
+//! Owl O(n²k) pairwise; Pythia O(n²) per-function models; Whare-map
+//! O(n^k) full-colocation history.  We count *actual* profiling samples
+//! our Owl port takes (memoized pair table) next to the analytic counts,
+//! and measure each scheduler's per-decision latency ("fast scheduling"
+//! = ~1 ms or less; Gsight pays model inference on the critical path).
+
+mod common;
+
+use common::{Bench, Table};
+use jiagu::config::{RunConfig, SchedulerKind};
+use jiagu::scheduler::{OwlScheduler, Scheduler};
+use jiagu::traces;
+
+fn analytic_samples(n: u64, k: u64, scheme: &str) -> String {
+    let v: f64 = match scheme {
+        "solo" => n as f64,                        // Jiagu / Gsight
+        "pair" => (n * n * k) as f64,              // Owl
+        "per-fn" => (n * n) as f64,                // Pythia
+        "combo" => (n as f64).powi(k as i32),      // Whare-map
+        _ => unreachable!(),
+    };
+    if v >= 1e9 {
+        format!("{:.1e}", v)
+    } else {
+        format!("{v:.0}")
+    }
+}
+
+fn main() {
+    let b = Bench::load();
+    let k = 10u64;
+
+    let mut t = Table::new(&[
+        "n functions",
+        "Jiagu O(n)",
+        "Gsight O(n)",
+        "Owl O(n^2 k)",
+        "Pythia O(n^2)",
+        "Whare-map O(n^k)",
+    ]);
+    for n in [6u64, 15, 30, 60] {
+        t.row(&[
+            n.to_string(),
+            analytic_samples(n, k, "solo"),
+            analytic_samples(n, k, "solo"),
+            analytic_samples(n, k, "pair"),
+            analytic_samples(n, k, "per-fn"),
+            analytic_samples(n, k, "combo"),
+        ]);
+    }
+    t.print("Table 1 (profiling cost scaling, k = 10 colocated instances): profiling runs needed");
+
+    // measured: Owl's actual memoized profiling queries over a full run
+    let dur = common::duration().min(900);
+    let trace = traces::paper_traces(&b.cat, dur).swap_remove(0);
+    {
+        let mut cluster = jiagu::cluster::Cluster::new(4);
+        let mut owl = OwlScheduler::new(7);
+        for f in 0..b.cat.len() {
+            owl.schedule(&b.cat, &mut cluster, f, 4, 0.0).unwrap();
+        }
+        println!(
+            "\nmeasured: Owl profiling samples after touching all {} functions: {} (pair table, memoized)",
+            b.cat.len(),
+            owl.profiling_samples
+        );
+        println!(
+            "measured: Jiagu profiling = {} solo runs (one per function) + runtime colocation samples",
+            b.cat.len()
+        );
+    }
+
+    // "fast scheduling?" column: per-decision latency of each scheduler
+    let mut t2 = Table::new(&["system", "mean decision", "p99 decision", "fast (<~1ms)?"]);
+    for (name, cfg) in [
+        ("Jiagu", RunConfig::jiagu_45()),
+        ("Gsight", RunConfig::with_scheduler(SchedulerKind::Gsight)),
+        ("Owl", RunConfig::with_scheduler(SchedulerKind::Owl)),
+        ("K8s", RunConfig::with_scheduler(SchedulerKind::Kubernetes)),
+    ] {
+        let r = b.run(cfg, &trace, dur);
+        t2.row(&[
+            name.to_string(),
+            format!("{:.3}ms", r.scheduling_ms_mean),
+            format!("{:.3}ms", r.scheduling_ms_p99),
+            if r.scheduling_ms_mean < 1.0 { "yes" } else { "no" }.to_string(),
+        ]);
+    }
+    t2.print("Table 1 (scheduling speed): measured per-decision latency");
+}

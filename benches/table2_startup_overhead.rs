@@ -1,0 +1,56 @@
+//! Table 2 — scheduling overhead relative to container startup across
+//! state-of-the-art init-optimised systems.
+//!
+//! The paper uses its ported Gsight's 21.78 ms average scheduling cost
+//! against each system's published startup latency.  We substitute the
+//! *measured* scheduling cost of our Gsight port (and show Jiagu's for
+//! contrast); published startup latencies come from the papers cited in
+//! Table 2.
+
+mod common;
+
+use common::{Bench, Table};
+use jiagu::config::{RunConfig, SchedulerKind};
+use jiagu::traces;
+
+/// (system, container startup ms) as published (paper Table 2).
+const SYSTEMS: &[(&str, f64)] = &[
+    ("AWS Snapstart", 100.0),
+    ("Replayable", 54.0),
+    ("Fireworks", 50.0),
+    ("SOCK", 20.0),
+    ("Molecule (cfork)", 8.4),
+    ("SEUSS", 7.5),
+    ("Catalyzer", 0.97),
+    ("Faasm", 0.5),
+];
+
+fn main() {
+    let b = Bench::load();
+    let dur = common::duration().min(900);
+    let trace = traces::paper_traces(&b.cat, dur).swap_remove(0);
+    let g = b.run(RunConfig::with_scheduler(SchedulerKind::Gsight), &trace, dur);
+    let j = b.run(RunConfig::jiagu_45(), &trace, dur);
+    println!(
+        "measured model-based scheduling cost: Gsight {:.3} ms (paper's port: 21.78 ms), Jiagu {:.3} ms",
+        g.scheduling_ms_mean, j.scheduling_ms_mean
+    );
+
+    let mut t = Table::new(&[
+        "system",
+        "container startup",
+        "Gsight sched overhead",
+        "Jiagu sched overhead",
+    ]);
+    for (name, startup) in SYSTEMS {
+        t.row(&[
+            name.to_string(),
+            format!("{startup}ms"),
+            format!("{:.1}%", 100.0 * g.scheduling_ms_mean / startup),
+            format!("{:.1}%", 100.0 * j.scheduling_ms_mean / startup),
+        ]);
+    }
+    t.print("Table 2: scheduling cost as % of container startup (paper: Gsight >20% on Snapstart, 2.6x on Molecule, 43.6x on Faasm)");
+    println!("\nShape check: the faster the init path, the more model-on-critical-path scheduling dominates;");
+    println!("pre-decision scheduling keeps the overhead negligible even for sub-ms init systems.");
+}

@@ -1,0 +1,112 @@
+//! Capacity explorer: what-if colocation analysis against the AOT
+//! predictor vs the ground truth — Fig. 7's capacity calculation made
+//! interactive.
+//!
+//! ```bash
+//! cargo run --release --example capacity_explorer            # matrix view
+//! cargo run --release --example capacity_explorer -- rnn gzip=4 linpack=2
+//! ```
+//!
+//! The positional form asks: with 4 gzip + 2 linpack saturated on a node,
+//! what is rnn's capacity (predicted and true)?
+
+use anyhow::{anyhow, Result};
+use jiagu::capacity::{compute_capacity, CapacityConfig};
+use jiagu::catalog::Catalog;
+use jiagu::interference::{self, NodeMix};
+use jiagu::sim::load_predictor;
+
+fn true_capacity(cat: &Catalog, base: &NodeMix, target: usize, max: u32) -> u32 {
+    let mut cap = 0;
+    for c in 1..=max {
+        let mut entries: Vec<_> = base
+            .entries
+            .iter()
+            .filter(|(f, _, _)| *f != target)
+            .copied()
+            .collect();
+        entries.push((target, c, 0));
+        let mix = NodeMix::new(entries);
+        if interference::mix_meets_qos(cat, &mix) {
+            cap = c;
+        } else {
+            break;
+        }
+    }
+    cap
+}
+
+fn main() -> Result<()> {
+    let artifacts = jiagu::artifacts_dir();
+    let cat = Catalog::load(&artifacts.join("functions.json"))?;
+    let predictor = load_predictor(&artifacts, false)?;
+    let cfg = CapacityConfig::default();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+
+    if args.is_empty() {
+        // pairwise capacity matrix: capacity of row-function given 4
+        // saturated instances of column-function
+        println!("capacity of ROW function given 4 saturated instances of COL (predicted/true):\n");
+        print!("{:>12}", "");
+        for c in 0..cat.len() {
+            print!("{:>12}", cat.get(c).name);
+        }
+        println!();
+        for r in 0..cat.len() {
+            print!("{:>12}", cat.get(r).name);
+            for c in 0..cat.len() {
+                let mix = if r == c {
+                    NodeMix::new(vec![(r, 0, 0)])
+                } else {
+                    NodeMix::new(vec![(c, 4, 0), (r, 0, 0)])
+                };
+                let pred = compute_capacity(&cat, &mix, r, predictor.as_ref(), &cfg)?;
+                let truth = true_capacity(&cat, &mix, r, cfg.max_candidates);
+                print!("{:>12}", format!("{pred}/{truth}"));
+            }
+            println!();
+        }
+        println!("\n(solo column r==c shows single-function capacity)");
+        let (calls, rows, nanos) = predictor.stats().snapshot();
+        println!(
+            "predictor: {calls} batched inferences ({rows} rows) in {:.1} ms — one per cell",
+            nanos as f64 / 1e6
+        );
+        return Ok(());
+    }
+
+    // positional: TARGET [name=count ...]
+    let target = cat
+        .id_of(&args[0])
+        .ok_or_else(|| anyhow!("unknown function {:?}", args[0]))?;
+    let mut entries = vec![(target, 0u32, 0u32)];
+    for spec in &args[1..] {
+        let (name, count) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow!("expected name=count, got {spec:?}"))?;
+        let fid = cat.id_of(name).ok_or_else(|| anyhow!("unknown function {name:?}"))?;
+        entries.push((fid, count.parse()?, 0));
+    }
+    let mix = NodeMix::new(entries);
+    let pred = compute_capacity(&cat, &mix, target, predictor.as_ref(), &cfg)?;
+    let truth = true_capacity(&cat, &mix, target, cfg.max_candidates);
+    println!("node mix: {:?}", &mix.entries[1..]);
+    println!(
+        "capacity of {}: predicted {pred}, ground truth {truth}",
+        cat.get(target).name
+    );
+    for c in [1, pred.max(1), (pred + 1).min(cfg.max_candidates)] {
+        let mut entries: Vec<_> =
+            mix.entries.iter().filter(|(f, _, _)| *f != target).copied().collect();
+        entries.push((target, c, 0));
+        let m = NodeMix::new(entries);
+        let lat = interference::ground_truth_latency(&cat, &m, target);
+        println!(
+            "  at {c:2} instances: true latency {:7.1} ms (QoS bound {:.1} ms){}",
+            lat,
+            cat.get(target).qos_latency_ms,
+            if lat > cat.get(target).qos_latency_ms { "  <- violates" } else { "" }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Quickstart: load the AOT predictor, build a small cluster, and watch
+//! pre-decision scheduling work — slow path once, fast path afterwards.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use jiagu::capacity::CapacityConfig;
+use jiagu::catalog::Catalog;
+use jiagu::cluster::Cluster;
+use jiagu::scheduler::{JiaguScheduler, Scheduler};
+use jiagu::sim::load_predictor;
+
+fn main() -> Result<()> {
+    let artifacts = jiagu::artifacts_dir();
+    let cat = Catalog::load(&artifacts.join("functions.json"))?;
+    println!("catalog: {} functions", cat.len());
+
+    // The production predictor: AOT-lowered JAX/Pallas forest via PJRT.
+    let predictor = load_predictor(&artifacts, false)?;
+    println!("predictor ready ({} features)\n", predictor.n_features());
+
+    let mut cluster = Cluster::new(3);
+    let mut sched = JiaguScheduler::new(predictor.clone(), CapacityConfig::default(), 3);
+
+    // 1. first instance of `rnn`: no capacity entry anywhere -> slow path
+    let rnn = cat.id_of("rnn").unwrap();
+    let r1 = sched.schedule(&cat, &mut cluster, rnn, 1, 0.0)?;
+    println!(
+        "schedule #1 (rnn x1):  path={:?}  decision={:.3} ms  critical inferences={}",
+        r1.path(),
+        r1.decision_nanos as f64 / 1e6,
+        r1.critical_inferences
+    );
+
+    // 2. spike of 4 more rnn instances: capacity table hit -> fast path,
+    //    batched into one decision + one asynchronous update
+    let r2 = sched.schedule(&cat, &mut cluster, rnn, 4, 1000.0)?;
+    println!(
+        "schedule #2 (rnn x4):  path={:?}  decision={:.3} ms  critical inferences={} (async {})",
+        r2.path(),
+        r2.decision_nanos as f64 / 1e6,
+        r2.critical_inferences,
+        r2.async_inferences
+    );
+
+    // 3. a different function lands next to it: slow path for gzip only
+    let gzip = cat.id_of("gzip").unwrap();
+    let r3 = sched.schedule(&cat, &mut cluster, gzip, 2, 2000.0)?;
+    println!(
+        "schedule #3 (gzip x2): path={:?}  decision={:.3} ms  critical inferences={}",
+        r3.path(),
+        r3.decision_nanos as f64 / 1e6,
+        r3.critical_inferences
+    );
+
+    // show the capacity table of the node everything landed on
+    let node = r1.placements[0].node;
+    println!("\ncapacity table of node {node} (under current mix {:?}):", cluster.mix(node).entries);
+    for (f, entry) in sched.capacity_table(node).iter() {
+        println!(
+            "  {:12}  capacity {:2}   (currently {} sat)",
+            cat.get(*f).name,
+            entry.capacity,
+            cluster.counts(node, *f).0,
+        );
+    }
+
+    let (calls, rows, nanos) = predictor.stats().snapshot();
+    println!(
+        "\npredictor totals: {calls} batched calls, {rows} rows, {:.3} ms",
+        nanos as f64 / 1e6
+    );
+    println!("fast/slow decisions: {}/{}", sched.fast_decisions, sched.slow_decisions);
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! End-to-end driver (the required E2E validation): the full stack —
+//! trace → router → dual-staged autoscaler → pre-decision scheduler →
+//! AOT predictor over PJRT → simulated cluster — on a real-world-like
+//! trace, reporting the paper's headline metrics.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_trace -- [--duration 1800] [--trace A]
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use anyhow::Result;
+use jiagu::config::{RunConfig, SchedulerKind};
+use jiagu::sim::{load_predictor, Simulation};
+use jiagu::traces;
+
+fn flag(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == &format!("--{name}"))
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> Result<()> {
+    let duration: usize = flag("duration").map(|v| v.parse().unwrap()).unwrap_or(1800);
+    let trace_name = flag("trace").unwrap_or_else(|| "A".into());
+    let artifacts = jiagu::artifacts_dir();
+    let cat = jiagu::catalog::Catalog::load(&artifacts.join("functions.json"))?;
+    let predictor = load_predictor(&artifacts, false)?;
+
+    let idx = (trace_name.as_bytes()[0].to_ascii_uppercase() - b'A') as usize;
+    let trace = traces::paper_traces(&cat, duration).swap_remove(idx.min(3));
+    println!(
+        "E2E: {} | {} functions | {} s horizon | PJRT predictor",
+        trace.name,
+        cat.len(),
+        duration
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut cfg = RunConfig::jiagu_45();
+    cfg.duration_s = duration;
+    cfg.scheduler = SchedulerKind::Jiagu;
+    let sim = Simulation::new(cat.clone(), cfg, predictor.clone());
+    let r = sim.run(&trace)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n== headline metrics (Jiagu-45 on {}) ==", trace.name);
+    println!("  function density:         {:.3} instances/node (K8s request packing = 12)", r.density);
+    println!("  QoS violation rate:       {:.2}% (target < 10%)", r.qos_violation_rate * 100.0);
+    println!("  scheduling cost:          mean {:.3} ms / p99 {:.3} ms", r.scheduling_ms_mean, r.scheduling_ms_p99);
+    println!("  cold start (cfork):       mean {:.3} ms / p99 {:.3} ms", r.cold_start_ms_mean, r.cold_start_ms_p99);
+    println!("  fast path rate:           {:.1}% ({} fast / {} slow)",
+        100.0 * r.fast_decisions as f64 / (r.fast_decisions + r.slow_decisions).max(1) as f64,
+        r.fast_decisions, r.slow_decisions);
+    println!("  inferences per schedule:  {:.3} critical / {:.3} async",
+        r.inferences_per_schedule,
+        r.async_inferences as f64 / r.schedule_calls.max(1) as f64);
+    println!("  dual-staged scaling:      {} released, {} logical cold starts, {} migrations",
+        r.released, r.logical_cold_starts, r.migrations);
+    println!("  instances started:        {} over {} schedule calls", r.instances_started, r.schedule_calls);
+    println!("  cluster:                  {} nodes peak", r.peak_nodes);
+    println!("  per-function QoS violation:");
+    for (f, v) in r.per_function_violation.iter().enumerate() {
+        println!("    {:12} {:.2}%", cat.get(f).name, v * 100.0);
+    }
+    let (calls, rows, nanos) = predictor.stats().snapshot();
+    println!(
+        "\npredictor: {} PJRT calls, {} rows, {:.1} ms total ({:.3} ms/call)",
+        calls, rows, nanos as f64 / 1e6, nanos as f64 / 1e6 / calls.max(1) as f64
+    );
+    println!("simulated {duration} s in {wall:.1} s wall-clock");
+    Ok(())
+}

@@ -1,0 +1,367 @@
+"""AOT build pipeline: train the predictor, lower to HLO text, emit
+artifacts consumed by the Rust coordinator and benches.
+
+Run once via ``make artifacts`` (never on the request path):
+
+    artifacts/meta.json                 shared contract (dims, layouts, Bs)
+    artifacts/functions.json            function catalog (+ hidden truth)
+    artifacts/forest.json               flattened forest + norm stats
+    artifacts/model_b{B}.hlo.txt        HLO text per batch-size variant
+    artifacts/interference_check.json   golden vectors for the Rust mirror
+    artifacts/predict_check.json        feature rows -> expected predictions
+    artifacts/model_comparison.json     Figs. 15/16/17a data
+    artifacts/aot.stamp                 build stamp (Makefile no-op guard)
+
+Interchange is HLO *text*: jax >= 0.5 serialized HloModuleProto uses
+64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from . import datagen
+from .baselines import (
+    EspRidge,
+    GradientBoostedTrees,
+    LinearRegression,
+    Mlp,
+    relative_error,
+)
+from .forest import RandomForestRegressor, flat_predict
+from .model import lower_predict, predict_latency_ref
+
+#: Compiled batch-size variants; the Rust runtime pads to the smallest fit.
+BATCH_VARIANTS = [1, 8, 16, 32, 64, 128, 256]
+
+#: Main-forest hyperparameters (see EXPERIMENTS.md for the sweep).
+N_TREES = 64
+DEPTH = 10
+
+SEED_CATALOG = 7
+SEED_TRAIN = 11
+SEED_TEST = 13
+N_TRAIN = 20000
+N_TEST = 2000
+NOISE = 0.05
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Gsight-style instance-granularity features (Fig. 17a comparison).
+# ---------------------------------------------------------------------------
+
+GSIGHT_SLOTS = 30  # max colocated instances modelled per row
+
+
+def gsight_features(specs, sat, cached, target_idx):
+    """Per-instance slot layout (~404 dims) as in instance-granularity
+    predictors (Gsight/Pythia): target solo + profile, then one 13-dim
+    profile slot per colocated saturated instance."""
+    tgt = specs[target_idx]
+    row = [tgt.solo_latency_ms] + list(tgt.profile)
+    slots = []
+    for spec, ns, nc in zip(specs, sat, cached):
+        slots.extend([spec.profile] * ns)
+        slots.extend(
+            [[datagen.CACHED_PRESSURE_FACTOR * p for p in spec.profile]] * nc
+        )
+    slots = slots[:GSIGHT_SLOTS]
+    for s in slots:
+        row.extend(s)
+    row.extend([0.0] * ((GSIGHT_SLOTS - len(slots)) * datagen.N_PROFILE))
+    return row
+
+
+def gsight_dataset(specs, n_samples, seed, noise_sigma=NOISE):
+    rng = np.random.default_rng(seed)
+    X, y = [], []
+    n_funcs = len(specs)
+    while len(y) < n_samples:
+        k = int(rng.integers(1, min(6, n_funcs) + 1))
+        chosen = rng.choice(n_funcs, size=k, replace=False)
+        sub = [specs[i] for i in chosen]
+        sat = [int(rng.integers(0, 15)) for _ in range(k)]
+        cached = [int(rng.integers(0, 5)) for _ in range(k)]
+        if sum(sat) == 0 or sum(sat) > 30:
+            continue
+        for t in range(k):
+            if sat[t] == 0:
+                continue
+            truth = datagen.ground_truth_latency(sub, sat, cached, t)
+            X.append(gsight_features(sub, sat, cached, t))
+            y.append(truth * float(1.0 + rng.normal(0.0, noise_sigma)))
+    return np.asarray(X, dtype=np.float64), np.asarray(y, dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Experiments feeding Figs. 15/16/17a.
+# ---------------------------------------------------------------------------
+
+def accuracy_experiments(specs, rf, flat, Xte, yte, te_names, report):
+    """Fig. 15a: overall error, split-half overfit check, 30/60-fn scale."""
+    pred = np.exp(flat_predict(flat, Xte)) * Xte[:, 0]
+    err_all = relative_error(pred, yte)
+    half = len(Xte) // 2
+    err_1 = relative_error(pred[:half], yte[:half])
+    err_2 = relative_error(pred[half:], yte[half:])
+    per_fn = {}
+    for name in sorted(set(te_names)):
+        m = np.asarray([n == name for n in te_names])
+        per_fn[name] = relative_error(pred[m], yte[m])
+    report["fig15a"] = {
+        "jiagu": err_all,
+        "jiagu_split1": err_1,
+        "jiagu_split2": err_2,
+        "per_function": per_fn,
+    }
+    # scalability: fresh catalogs of 30 and 60 functions
+    for n_fn in (30, 60):
+        cat = datagen.make_catalog(n_fn, seed=SEED_CATALOG + n_fn)
+        Xa, ya, _ = datagen.sample_dataset(cat, 12000, seed=SEED_TRAIN + n_fn, noise_sigma=NOISE)
+        Xb, yb, _ = datagen.sample_dataset(cat, 1500, seed=SEED_TEST + n_fn, noise_sigma=NOISE)
+        m = RandomForestRegressor(N_TREES, DEPTH, min_samples_leaf=2,
+                                  feature_frac=0.7, n_bins=128,
+                                  seed=3).fit(Xa, np.log(ya) - np.log(Xa[:, 0]))
+        report["fig15a"][f"jiagu_{n_fn}fn"] = relative_error(
+            np.exp(m.predict(Xb)) * Xb[:, 0], yb
+        )
+
+
+def convergence_experiment(specs, report):
+    """Fig. 15b: a function's behaviour *changes* (the paper's "behaviour
+    of functions changes" scenario, §6): its interference sensitivity
+    jumps 2.5x, invalidating the model's prior.  We retrain as runtime
+    samples of the changed function arrive (recent samples oversampled
+    10x, emulating recency-weighted incremental retraining) and track its
+    prediction error converging back down."""
+    from dataclasses import replace as dc_replace
+
+    sample_points = [0, 1, 2, 3, 5, 8, 12, 16, 22, 30]
+    series = {}
+    for held in range(len(specs)):
+        changed = dc_replace(
+            specs[held],
+            sensitivity=[s * 2.5 for s in specs[held].sensitivity],
+        )
+        specs_mod = list(specs)
+        specs_mod[held] = changed
+        others = [s for i, s in enumerate(specs) if i != held]
+        Xo, yo, _ = datagen.sample_dataset(others, 6000, seed=21 + held, noise_sigma=NOISE)
+        # runtime stream containing the changed function
+        Xh, yh, names_h = datagen.sample_dataset(
+            specs_mod, 4000, seed=31 + held, noise_sigma=NOISE
+        )
+        is_held = np.asarray([n == specs[held].name for n in names_h])
+        Xnew, ynew = Xh[is_held], yh[is_held]
+        Xtest, ytest = Xnew[200:400], ynew[200:400]
+        errs = []
+        for n_s in sample_points:
+            reps = 10  # recency weighting of fresh samples
+            Xtr = np.vstack([Xo] + [Xnew[:n_s]] * reps) if n_s else Xo
+            ytr = np.concatenate([yo] + [ynew[:n_s]] * reps) if n_s else yo
+            m = RandomForestRegressor(16, 8, min_samples_leaf=2,
+                                      feature_frac=0.7, n_bins=128,
+                                      seed=5).fit(Xtr, np.log(ytr) - np.log(Xtr[:, 0]))
+            errs.append(
+                relative_error(np.exp(m.predict(Xtest)) * Xtest[:, 0], ytest)
+            )
+        series[specs[held].name] = errs
+    report["fig15b"] = {"sample_points": sample_points, "series": series}
+
+
+def model_comparison(Xtr, ytr, Xte, yte, report):
+    """Fig. 16 (error per model) + Fig. 17a (training time, dims).
+
+    Every model gets the same target (log-slowdown) and the same feature
+    rows, so the comparison isolates model class, exactly as in Fig. 16.
+    """
+    rows = {}
+    ttr = np.log(ytr) - np.log(Xtr[:, 0])
+    models = [
+        ("jiagu_rfr", RandomForestRegressor(N_TREES, DEPTH, min_samples_leaf=2,
+                                            feature_frac=0.7, n_bins=128, seed=3)),
+        ("esp", EspRidge()),
+        ("xgboost", GradientBoostedTrees()),
+        ("linear", LinearRegression()),
+        ("mlp2", Mlp(2)),
+        ("mlp3", Mlp(3)),
+        ("mlp4", Mlp(4)),
+    ]
+    for name, m in models:
+        m.fit(Xtr, ttr)
+        pred = np.exp(m.predict(Xte)) * Xte[:, 0]
+        rows[name] = {
+            "error": relative_error(pred, yte),
+            "fit_seconds": m.fit_seconds,
+            "dims": int(Xtr.shape[1]),
+        }
+    report["fig16"] = rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-experiments", action="store_true",
+                    help="only train + lower (fast dev loop)")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    t_start = time.perf_counter()
+
+    # -- catalog + golden vectors ------------------------------------------
+    specs = datagen.make_catalog(6, seed=SEED_CATALOG)
+    with open(f"{out}/functions.json", "w") as f:
+        json.dump(datagen.catalog_to_json(specs), f, indent=1)
+    with open(f"{out}/interference_check.json", "w") as f:
+        json.dump(datagen.golden_vectors(specs, 64, seed=99), f)
+    print(f"[aot] catalog: {len(specs)} functions")
+
+    # -- datasets ------------------------------------------------------------
+    Xtr, ytr, _ = datagen.sample_dataset(specs, N_TRAIN, seed=SEED_TRAIN, noise_sigma=NOISE)
+    Xte, yte, te_names = datagen.sample_dataset(specs, N_TEST, seed=SEED_TEST, noise_sigma=NOISE)
+    print(f"[aot] dataset: train {Xtr.shape}, test {Xte.shape}")
+
+    # -- main forest ---------------------------------------------------------
+    # target = log-slowdown (latency / solo); the L2 graph multiplies the
+    # known solo latency back in (see model.predict_latency)
+    ttr = np.log(ytr) - np.log(Xtr[:, 0])
+    rf = RandomForestRegressor(
+        n_trees=N_TREES, max_depth=DEPTH, min_samples_leaf=2,
+        feature_frac=0.7, n_bins=128, seed=3,
+    ).fit(Xtr, ttr)
+    flat = rf.flatten()
+    mean = Xtr.mean(axis=0)
+    std = np.maximum(Xtr.std(axis=0), 1e-6)
+    # normalisation is applied *inside* the HLO graph; flatten thresholds
+    # stay in raw feature space, so normalise the split thresholds instead:
+    # threshold' = (threshold - mean[f]) / std[f] per node.
+    feat, thr = flat["feature"], flat["threshold"].astype(np.float64)
+    thr_n = np.where(
+        np.isfinite(thr), (thr - mean[feat]) / std[feat], np.inf
+    ).astype(np.float32)
+    flat_n = {"feature": feat, "threshold": thr_n, "leaf": flat["leaf"]}
+
+    err = relative_error(np.exp(flat_predict(flat, Xte)) * Xte[:, 0], yte)
+    print(f"[aot] forest: T={N_TREES} D={DEPTH} fit={rf.fit_seconds:.1f}s test-err={err:.3f}")
+
+    with open(f"{out}/forest.json", "w") as f:
+        json.dump(
+            {
+                "n_trees": N_TREES,
+                "depth": DEPTH,
+                "n_features": datagen.N_FEATURES,
+                "feature": flat_n["feature"].tolist(),
+                "threshold": [
+                    [t if np.isfinite(t) else 1e30 for t in row]
+                    for row in flat_n["threshold"].astype(float)
+                ],
+                "leaf": flat_n["leaf"].astype(float).tolist(),
+                "mean": mean.tolist(),
+                "std": std.tolist(),
+                "test_error": err,
+                "fit_seconds": rf.fit_seconds,
+            },
+            f,
+        )
+
+    # -- predict_check golden vectors (through the jnp ref graph) -----------
+    import jax.numpy as jnp
+
+    chk_rows = Xte[:64].astype(np.float32)
+    thr_inf = flat_n["threshold"]
+    (chk_pred,) = predict_latency_ref(
+        jnp.asarray(chk_rows), jnp.asarray(mean, jnp.float32),
+        jnp.asarray(std, jnp.float32), jnp.asarray(flat_n["feature"]),
+        jnp.asarray(thr_inf), jnp.asarray(flat_n["leaf"]),
+    )
+    with open(f"{out}/predict_check.json", "w") as f:
+        json.dump(
+            {
+                "x": chk_rows.astype(float).tolist(),
+                "expected_ms": np.asarray(chk_pred, dtype=float).tolist(),
+            },
+            f,
+        )
+
+    # -- lower per batch variant --------------------------------------------
+    for b in BATCH_VARIANTS:
+        lowered = lower_predict(b, datagen.N_FEATURES, N_TREES, DEPTH)
+        text = to_hlo_text(lowered)
+        path = f"{out}/model_b{b}.hlo.txt"
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] lowered {path}: {len(text)} chars")
+
+    # -- meta ------------------------------------------------------------------
+    with open(f"{out}/meta.json", "w") as f:
+        json.dump(
+            {
+                "n_features": datagen.N_FEATURES,
+                "n_profile_metrics": datagen.N_PROFILE,
+                "profile_metrics": datagen.PROFILE_METRICS,
+                "n_trees": N_TREES,
+                "depth": DEPTH,
+                "batch_variants": BATCH_VARIANTS,
+                "feature_layout": [
+                    "solo_latency_ms", "target_profile[13]",
+                    "target_sat", "target_cached",
+                    "agg_sat_profile[13]", "agg_cached_profile[13]",
+                    "total_sat", "total_cached",
+                ],
+                "target": "p90_latency_ms",
+                "train_rows": N_TRAIN,
+                "label_noise_sigma": NOISE,
+            },
+            f,
+            indent=1,
+        )
+
+    # -- experiments (Figs. 15/16/17a) ---------------------------------------
+    if not args.skip_experiments:
+        report: dict = {}
+        accuracy_experiments(specs, rf, flat, Xte, yte, te_names, report)
+        print(f"[aot] fig15a: {report['fig15a']['jiagu']:.3f} overall")
+        convergence_experiment(specs, report)
+        print("[aot] fig15b done")
+        model_comparison(Xtr, ytr, Xte, yte, report)
+        print("[aot] fig16 done")
+        # Fig. 17a: function- vs instance-granularity training cost + dims
+        Xg, yg = gsight_dataset(specs, 8000, seed=41)
+        gs = RandomForestRegressor(N_TREES, DEPTH, min_samples_leaf=2,
+                                   feature_frac=0.3, n_bins=128,
+                                   seed=3).fit(Xg, np.log(yg) - np.log(Xg[:, 0]))
+        Xg_te, yg_te = gsight_dataset(specs, 1200, seed=43)
+        report["fig17a"] = {
+            "jiagu": {"dims": int(Xtr.shape[1]), "fit_seconds": rf.fit_seconds},
+            "gsight": {"dims": int(Xg.shape[1]), "fit_seconds": gs.fit_seconds},
+        }
+        report["fig15a"]["gsight"] = relative_error(
+            np.exp(gs.predict(Xg_te)) * Xg_te[:, 0], yg_te
+        )
+        with open(f"{out}/model_comparison.json", "w") as f:
+            json.dump(report, f, indent=1)
+        print("[aot] model_comparison.json written")
+
+    with open(f"{out}/aot.stamp", "w") as f:
+        f.write(f"built in {time.perf_counter() - t_start:.1f}s\n")
+    print(f"[aot] done in {time.perf_counter() - t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

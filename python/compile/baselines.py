@@ -1,0 +1,201 @@
+"""Comparison predictors for Figs. 15-17: linear, ESP-like ridge,
+gradient-boosted trees, and MLP-2/3/4 — all trained on the same dataset as
+the RFR, all from scratch (no sklearn in the image).
+
+Emitted into ``artifacts/model_comparison.json`` at `make artifacts`; the
+Rust benches (fig15/fig16/fig17) print the paper-style rows from it.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from .forest import RandomForestRegressor, _Node
+
+
+# ---------------------------------------------------------------------------
+# Linear / ridge models.
+# ---------------------------------------------------------------------------
+
+class LinearRegression:
+    """Ordinary least squares with intercept (ridge eps for stability)."""
+
+    name = "linear"
+
+    def __init__(self, l2: float = 1e-6) -> None:
+        self.l2 = l2
+
+    def fit(self, X, y):
+        t0 = time.perf_counter()
+        A = np.hstack([X, np.ones((len(X), 1))])
+        eye = np.eye(A.shape[1]) * self.l2
+        eye[-1, -1] = 0.0
+        self.w = np.linalg.solve(A.T @ A + eye, A.T @ y)
+        self.fit_seconds = time.perf_counter() - t0
+        return self
+
+    def predict(self, X):
+        return np.hstack([X, np.ones((len(X), 1))]) @ self.w
+
+
+class EspRidge:
+    """ESP-like predictor [Mishra et al., ICAC'17]: ridge regression over a
+    quadratic feature expansion (pairwise products of a top-k feature
+    subset), which is the spirit of ESP's polynomial basis + regularised
+    regression."""
+
+    name = "esp"
+
+    def __init__(self, l2: float = 1.0, top_k: int = 16) -> None:
+        self.l2 = l2
+        self.top_k = top_k
+
+    def _expand(self, X):
+        Xs = X[:, self.sel]
+        quad = np.einsum("ni,nj->nij", Xs, Xs)[
+            :, self.tri[0], self.tri[1]
+        ]
+        return np.hstack([X, quad, np.ones((len(X), 1))])
+
+    def fit(self, X, y):
+        t0 = time.perf_counter()
+        corr = np.abs(np.corrcoef(X, y, rowvar=False)[:-1, -1])
+        corr = np.nan_to_num(corr)
+        self.sel = np.argsort(-corr)[: self.top_k]
+        self.tri = np.triu_indices(self.top_k)
+        A = self._expand(X)
+        eye = np.eye(A.shape[1]) * self.l2
+        eye[-1, -1] = 0.0
+        self.w = np.linalg.solve(A.T @ A + eye, A.T @ y)
+        self.fit_seconds = time.perf_counter() - t0
+        return self
+
+    def predict(self, X):
+        return self._expand(X) @ self.w
+
+
+# ---------------------------------------------------------------------------
+# Gradient-boosted trees (XGBoost stand-in) reusing the histogram CART.
+# ---------------------------------------------------------------------------
+
+class GradientBoostedTrees:
+    """Least-squares gradient boosting over shallow histogram-CART trees."""
+
+    name = "xgboost"
+
+    def __init__(
+        self, n_rounds: int = 80, max_depth: int = 4, lr: float = 0.1, seed: int = 0
+    ) -> None:
+        self.n_rounds = n_rounds
+        self.max_depth = max_depth
+        self.lr = lr
+        self.seed = seed
+
+    def fit(self, X, y):
+        t0 = time.perf_counter()
+        self.base = float(np.mean(y))
+        resid = y - self.base
+        self.stages: list[RandomForestRegressor] = []
+        for r in range(self.n_rounds):
+            stage = RandomForestRegressor(
+                n_trees=1,
+                max_depth=self.max_depth,
+                min_samples_leaf=8,
+                feature_frac=0.8,
+                bootstrap_frac=1.0,
+                seed=self.seed + r,
+            ).fit(X, resid)
+            resid = resid - self.lr * stage.predict(X)
+            self.stages.append(stage)
+        self.fit_seconds = time.perf_counter() - t0
+        return self
+
+    def predict(self, X):
+        out = np.full(len(X), self.base)
+        for stage in self.stages:
+            out += self.lr * stage.predict(X)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# MLPs (JAX, adam) — the paper's MLP-2/3/4 comparison points.
+# ---------------------------------------------------------------------------
+
+class Mlp:
+    def __init__(self, n_layers: int, hidden: int = 64, epochs: int = 400,
+                 lr: float = 1e-3, seed: int = 0) -> None:
+        self.name = f"mlp{n_layers}"
+        self.n_layers = n_layers
+        self.hidden = hidden
+        self.epochs = epochs
+        self.lr = lr
+        self.seed = seed
+
+    def fit(self, X, y):
+        import jax
+        import jax.numpy as jnp
+
+        t0 = time.perf_counter()
+        self._xm, self._xs = X.mean(0), X.std(0) + 1e-9
+        self._ym, self._ys = y.mean(), y.std() + 1e-9
+        Xn = jnp.asarray((X - self._xm) / self._xs, dtype=jnp.float32)
+        yn = jnp.asarray((y - self._ym) / self._ys, dtype=jnp.float32)
+
+        key = jax.random.PRNGKey(self.seed)
+        dims = [X.shape[1]] + [self.hidden] * (self.n_layers - 1) + [1]
+        params = []
+        for i in range(len(dims) - 1):
+            key, k = jax.random.split(key)
+            w = jax.random.normal(k, (dims[i], dims[i + 1])) * jnp.sqrt(2.0 / dims[i])
+            params.append((w, jnp.zeros(dims[i + 1])))
+
+        def fwd(params, x):
+            for w, b in params[:-1]:
+                x = jax.nn.relu(x @ w + b)
+            w, b = params[-1]
+            return (x @ w + b)[:, 0]
+
+        def loss(params, x, y):
+            return jnp.mean((fwd(params, x) - y) ** 2)
+
+        # hand-rolled adam to avoid an optax dependency
+        grad = jax.jit(jax.grad(loss))
+        lossj = jax.jit(loss)
+        m = [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params]
+        v = [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params]
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        for t in range(1, self.epochs + 1):
+            g = grad(params, Xn, yn)
+            new_p, new_m, new_v = [], [], []
+            for (pw, pb), (gw, gb), (mw, mb), (vw, vb) in zip(params, g, m, v):
+                mw = b1 * mw + (1 - b1) * gw
+                mb = b1 * mb + (1 - b1) * gb
+                vw = b2 * vw + (1 - b2) * gw**2
+                vb = b2 * vb + (1 - b2) * gb**2
+                mhw, mhb = mw / (1 - b1**t), mb / (1 - b1**t)
+                vhw, vhb = vw / (1 - b2**t), vb / (1 - b2**t)
+                pw = pw - self.lr * mhw / (jnp.sqrt(vhw) + eps)
+                pb = pb - self.lr * mhb / (jnp.sqrt(vhb) + eps)
+                new_p.append((pw, pb))
+                new_m.append((mw, mb))
+                new_v.append((vw, vb))
+            params, m, v = new_p, new_m, new_v
+        self.params = params
+        self._fwd = jax.jit(fwd)
+        self.fit_seconds = time.perf_counter() - t0
+        return self
+
+    def predict(self, X):
+        import jax.numpy as jnp
+
+        Xn = jnp.asarray((X - self._xm) / self._xs, dtype=jnp.float32)
+        yn = np.asarray(self._fwd(self.params, Xn))
+        return yn * self._ys + self._ym
+
+
+def relative_error(pred_ms: np.ndarray, truth_ms: np.ndarray) -> float:
+    """Paper's error metric: mean |P̂ - P| / P."""
+    return float(np.mean(np.abs(pred_ms - truth_ms) / truth_ms))

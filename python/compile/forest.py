@@ -1,0 +1,230 @@
+"""Random Forest Regression — the paper's predictor (§4.1) — from scratch.
+
+The image ships no sklearn, so this is a self-contained histogram-based
+CART + bagging implementation in numpy.  It is the *training* half; the
+*inference* half is the Pallas kernel (`kernels/forest_kernel.py`) running
+over the flattened perfect-tree tensors this module emits.
+
+Design notes:
+  * Histogram splits (quantile-binned, <=64 bins) keep training O(n·F·D)
+    with one C-speed ``np.bincount`` per (node, split-search).
+  * Trees are grown to a fixed max depth and then *flattened into perfect
+    binary trees*: internal arrays ``feature[T, 2^D-1]``/``threshold[T,
+    2^D-1]`` and ``leaf[T, 2^D]``.  Early leaves are padded with
+    (feature=0, threshold=+inf) internal nodes so traversal always walks
+    exactly D steps — the fixed-shape layout the Pallas kernel (and the
+    MXU-era TPU memory system) wants.
+  * Targets are trained in log-space by the caller (relative-error metric,
+    heavy-tailed latencies).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+POS_INF = np.float32(np.inf)
+
+
+@dataclass
+class _Node:
+    feature: int = 0
+    threshold: float = float("inf")
+    left: "_Node | None" = None
+    right: "_Node | None" = None
+    value: float = 0.0
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.left is None
+
+
+def _quantile_bins(X: np.ndarray, n_bins: int) -> list[np.ndarray]:
+    """Per-feature bin edges at training-set quantiles (dedup'd)."""
+    edges = []
+    qs = np.linspace(0.0, 1.0, n_bins + 1)[1:-1]
+    for f in range(X.shape[1]):
+        e = np.unique(np.quantile(X[:, f], qs))
+        edges.append(e.astype(np.float64))
+    return edges
+
+
+class RandomForestRegressor:
+    """Bagged histogram-CART ensemble.
+
+    Parameters mirror the usual API surface: ``n_trees``, ``max_depth``,
+    ``min_samples_leaf``, ``feature_frac`` (per-split feature subsampling),
+    ``bootstrap_frac`` (per-tree row subsampling).
+    """
+
+    def __init__(
+        self,
+        n_trees: int = 48,
+        max_depth: int = 8,
+        min_samples_leaf: int = 4,
+        feature_frac: float = 0.6,
+        bootstrap_frac: float = 0.8,
+        n_bins: int = 48,
+        seed: int = 0,
+    ) -> None:
+        self.n_trees = n_trees
+        self.max_depth = max_depth
+        self.min_samples_leaf = min_samples_leaf
+        self.feature_frac = feature_frac
+        self.bootstrap_frac = bootstrap_frac
+        self.n_bins = n_bins
+        self.seed = seed
+        self.trees: list[_Node] = []
+        self.fit_seconds: float = 0.0
+
+    # -- training ----------------------------------------------------------
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "RandomForestRegressor":
+        t0 = time.perf_counter()
+        X = np.asarray(X, dtype=np.float64)
+        y = np.asarray(y, dtype=np.float64)
+        n, F = X.shape
+        self._edges = _quantile_bins(X, self.n_bins)
+        # binned[i, f] in [0, len(edges[f])]
+        binned = np.empty((n, F), dtype=np.int32)
+        for f in range(F):
+            binned[:, f] = np.searchsorted(self._edges[f], X[:, f], side="right")
+        rng = np.random.default_rng(self.seed)
+        self.trees = []
+        n_boot = max(8, int(self.bootstrap_frac * n))
+        for _ in range(self.n_trees):
+            idx = rng.integers(0, n, size=n_boot)
+            self.trees.append(
+                self._grow(binned[idx], y[idx], depth=0, rng=rng)
+            )
+        self.fit_seconds = time.perf_counter() - t0
+        return self
+
+    def _grow(self, binned: np.ndarray, y: np.ndarray, depth: int, rng) -> _Node:
+        n, F = binned.shape
+        node = _Node(value=float(y.mean()))
+        if depth >= self.max_depth or n < 2 * self.min_samples_leaf or np.ptp(y) == 0.0:
+            return node
+        n_feat = max(1, int(self.feature_frac * F))
+        feats = rng.choice(F, size=n_feat, replace=False)
+        best = self._best_split(binned, y, feats)
+        if best is None:
+            return node
+        f, b = best
+        mask = binned[:, f] <= b
+        nl = int(mask.sum())
+        if nl < self.min_samples_leaf or n - nl < self.min_samples_leaf:
+            return node
+        node.feature = int(f)
+        # threshold: right edge of bin b (edges[f][b] separates <=b from >b)
+        node.threshold = float(self._edges[f][b]) if b < len(self._edges[f]) else float("inf")
+        node.left = self._grow(binned[mask], y[mask], depth + 1, rng)
+        node.right = self._grow(binned[~mask], y[~mask], depth + 1, rng)
+        return node
+
+    def _best_split(self, binned, y, feats):
+        """Vectorised variance-reduction split search over chosen features.
+
+        One bincount pass builds per-(feature, bin) counts and y-sums; the
+        best split maximises sum_L^2/n_L + sum_R^2/n_R.
+        """
+        n, _ = binned.shape
+        nb = self.n_bins + 1  # bins are 0..len(edges); len(edges) <= n_bins-1
+        sub = binned[:, feats]  # (n, f)
+        fcount = len(feats)
+        flat = (sub + (np.arange(fcount, dtype=np.int32) * nb)[None, :]).ravel()
+        counts = np.bincount(flat, minlength=fcount * nb).reshape(fcount, nb)
+        sums = np.bincount(
+            flat, weights=np.repeat(y, fcount), minlength=fcount * nb
+        ).reshape(fcount, nb)
+        cl = np.cumsum(counts, axis=1)
+        sl = np.cumsum(sums, axis=1)
+        nl = cl[:, :-1].astype(np.float64)
+        nr = n - nl
+        valid = (nl >= self.min_samples_leaf) & (nr >= self.min_samples_leaf)
+        if not valid.any():
+            return None
+        syl = sl[:, :-1]
+        syr = sl[:, -1:] - syl
+        with np.errstate(divide="ignore", invalid="ignore"):
+            gain = np.where(valid, syl**2 / nl + syr**2 / nr, -np.inf)
+        fi, b = np.unravel_index(int(np.argmax(gain)), gain.shape)
+        if not np.isfinite(gain[fi, b]):
+            return None
+        # reject zero-gain splits (all y equal or no separation)
+        base = (y.sum() ** 2) / n
+        if gain[fi, b] <= base + 1e-12:
+            return None
+        return int(feats[fi]), int(b)
+
+    # -- inference (reference path; the fast path is the Pallas kernel) ----
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X, dtype=np.float64)
+        out = np.zeros(len(X), dtype=np.float64)
+        for tree in self.trees:
+            for i, row in enumerate(X):
+                node = tree
+                while not node.is_leaf:
+                    node = node.left if row[node.feature] <= node.threshold else node.right
+                out[i] += node.value
+        return out / len(self.trees)
+
+    # -- flattening to perfect-tree tensors --------------------------------
+
+    def flatten(self) -> dict[str, np.ndarray]:
+        """Flatten to perfect depth-D tensors for the Pallas kernel.
+
+        Internal node i has children 2i+1 / 2i+2 (level order).  A leaf
+        reached early pads its whole subtree with (feature=0,
+        threshold=+inf) so comparisons always go left, and replicates its
+        value across the covered leaf slots.
+        """
+        D = self.max_depth
+        n_internal = 2**D - 1
+        n_leaves = 2**D
+        T = len(self.trees)
+        feat = np.zeros((T, n_internal), dtype=np.int32)
+        thr = np.full((T, n_internal), POS_INF, dtype=np.float32)
+        leaf = np.zeros((T, n_leaves), dtype=np.float32)
+
+        def fill(t: int, node: _Node, pos: int, depth: int) -> None:
+            if depth == D:
+                leaf[t, pos - n_internal] = np.float32(node.value)
+                return
+            if node.is_leaf:
+                # pad: always-left internal node, same leaf value below
+                feat[t, pos] = 0
+                thr[t, pos] = POS_INF
+                fill(t, node, 2 * pos + 1, depth + 1)
+                fill(t, node, 2 * pos + 2, depth + 1)
+            else:
+                feat[t, pos] = node.feature
+                thr[t, pos] = np.float32(node.threshold)
+                fill(t, node.left, 2 * pos + 1, depth + 1)
+                fill(t, node.right, 2 * pos + 2, depth + 1)
+
+        for t, tree in enumerate(self.trees):
+            fill(t, tree, 0, 0)
+        return {"feature": feat, "threshold": thr, "leaf": leaf}
+
+
+def flat_predict(flat: dict[str, np.ndarray], X: np.ndarray) -> np.ndarray:
+    """Numpy oracle over the flattened tensors (used by tests to pin the
+    flattening semantics independently of the jnp reference)."""
+    feat, thr, leaf = flat["feature"], flat["threshold"], flat["leaf"]
+    T, n_internal = feat.shape
+    D = int(np.log2(n_internal + 1))
+    B = X.shape[0]
+    idx = np.zeros((B, T), dtype=np.int64)
+    Xf = X.astype(np.float32)
+    for _ in range(D):
+        f = feat[np.arange(T)[None, :], idx]  # (B,T)
+        t = thr[np.arange(T)[None, :], idx]
+        xv = np.take_along_axis(Xf, f, axis=1)
+        idx = 2 * idx + 1 + (xv > t)
+    leaf_idx = idx - n_internal
+    vals = leaf[np.arange(T)[None, :], leaf_idx]
+    return vals.mean(axis=1).astype(np.float64)

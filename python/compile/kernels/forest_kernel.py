@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: batched random-forest traversal.
+
+The forest is stored as perfect depth-D binary trees (see
+``forest.RandomForestRegressor.flatten``):
+
+    feature   int32  [T, 2^D - 1]   split feature per internal node
+    threshold f32    [T, 2^D - 1]   split threshold (+inf pads early leaves)
+    leaf      f32    [T, 2^D]       leaf values (log-latency)
+
+Traversal is D data-dependent gather steps, vectorised over (batch, tree):
+
+    idx <- 0
+    repeat D times:
+        f   <- feature[t, idx];  thr <- threshold[t, idx]
+        idx <- 2*idx + 1 + (x[b, f] > thr)
+    y[b] <- mean_t leaf[t, idx - (2^D - 1)]
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the whole forest lives in
+VMEM (T=64, D=10 → ~0.8 MB), the batch is tiled by BlockSpec so each grid
+step streams one block of feature rows HBM→VMEM; the walk is VPU/gather
+bound (no MXU).  ``interpret=True`` is mandatory on this CPU image — real
+TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _forest_block_kernel(x_ref, feat_ref, thr_ref, leaf_ref, o_ref, *, depth: int):
+    """One batch block: walk all T trees for every row in the block."""
+    x = x_ref[...]            # [Bblk, F] f32
+    feat = feat_ref[...]      # [T, 2^D-1] i32
+    thr = thr_ref[...]        # [T, 2^D-1] f32
+    leaf = leaf_ref[...]      # [T, 2^D] f32
+    n_trees = feat.shape[0]
+    n_internal = feat.shape[1]
+    bblk = x.shape[0]
+
+    tree_ids = jax.lax.broadcasted_iota(jnp.int32, (bblk, n_trees), 1)
+    idx = jnp.zeros((bblk, n_trees), dtype=jnp.int32)
+    for _ in range(depth):
+        f = feat[tree_ids, idx]                      # [B, T] gather
+        t = thr[tree_ids, idx]                       # [B, T]
+        xv = jnp.take_along_axis(x, f, axis=1)       # [B, T]
+        idx = 2 * idx + 1 + (xv > t).astype(jnp.int32)
+    vals = leaf[tree_ids, idx - n_internal]          # [B, T]
+    o_ref[...] = jnp.mean(vals, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def forest_predict(x, feature, threshold, leaf, *, block_b: int = 128):
+    """Mean-of-trees forest inference over a feature batch.
+
+    Args:
+      x:         f32[B, F] (B must be a multiple of ``block_b``; the L2
+                 wrapper pads).
+      feature:   i32[T, 2^D - 1]
+      threshold: f32[T, 2^D - 1]
+      leaf:      f32[T, 2^D]
+      block_b:   batch tile (grid dimension).
+
+    Returns f32[B] per-row ensemble means (log-latency domain).
+    """
+    b, f_dim = x.shape
+    n_internal = feature.shape[1]
+    depth = int(n_internal + 1).bit_length() - 1
+    assert 2**depth - 1 == n_internal, "forest must be perfect depth-D trees"
+    block_b = min(block_b, b)
+    assert b % block_b == 0, f"batch {b} not a multiple of block {block_b}"
+
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        functools.partial(_forest_block_kernel, depth=depth),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, f_dim), lambda i: (i, 0)),
+            pl.BlockSpec(feature.shape, lambda i: (0, 0)),
+            pl.BlockSpec(threshold.shape, lambda i: (0, 0)),
+            pl.BlockSpec(leaf.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,  # CPU image constraint; see module docstring
+    )(x, feature, threshold, leaf)

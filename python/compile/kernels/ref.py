@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the forest-traversal kernel (no Pallas).
+
+Semantics must match ``forest_kernel.forest_predict`` exactly; pytest +
+hypothesis assert allclose across random forests, shapes and dtypes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def forest_predict_ref(x, feature, threshold, leaf):
+    """Reference mean-of-trees traversal. Shapes as in forest_kernel."""
+    b = x.shape[0]
+    n_trees, n_internal = feature.shape
+    depth = int(n_internal + 1).bit_length() - 1
+    tree_ids = jnp.broadcast_to(jnp.arange(n_trees, dtype=jnp.int32), (b, n_trees))
+    idx = jnp.zeros((b, n_trees), dtype=jnp.int32)
+    for _ in range(depth):
+        f = feature[tree_ids, idx]
+        t = threshold[tree_ids, idx]
+        xv = jnp.take_along_axis(x, f, axis=1)
+        idx = 2 * idx + 1 + (xv > t).astype(jnp.int32)
+    vals = leaf[tree_ids, idx - n_internal]
+    return jnp.mean(vals, axis=1)

@@ -1,0 +1,75 @@
+"""L2: the predictor compute graph Jiagu's scheduler calls at runtime.
+
+``predict_latency`` is the full graph that gets AOT-lowered to HLO text
+(one executable per batch-size variant) and executed from the Rust hot
+path via PJRT:
+
+    features  --standardise-->  forest traversal (L1 Pallas kernel)
+              --mean over trees (log domain)--> exp --> latency in ms
+
+Forest parameters and normalisation stats are *runtime inputs*, not baked
+constants, so the Rust coordinator can hot-swap an incrementally retrained
+forest (paper §6, "retrain the model periodically") without recompiling.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.forest_kernel import forest_predict
+from .kernels.ref import forest_predict_ref
+
+#: Batch tile for the Pallas traversal kernel.  Every AOT batch variant is
+#: a multiple of the smallest variant, which caps the tile.
+KERNEL_BLOCK_B = 64
+
+
+def standardise(x, mean, std):
+    """Feature z-scoring; std is pre-clamped away from zero at export."""
+    return (x - mean) / std
+
+
+def predict_latency(x, mean, std, feature, threshold, leaf):
+    """Predict per-row P90 latency (ms).
+
+    The forest is trained on **log-slowdown** = log(latency / solo): the
+    per-function scale is factored out through the known solo latency
+    (feature 0), so the trees spend all their capacity on the interference
+    surface.  The graph multiplies back: latency = solo · exp(forest(x)).
+
+    Args:
+      x:         f32[B, F] raw feature rows (see datagen.feature_vector);
+                 x[:, 0] is the target's solo latency (ms).
+      mean, std: f32[F] standardisation stats.
+      feature:   i32[T, 2^D-1] forest split features.
+      threshold: f32[T, 2^D-1] forest split thresholds (standardised space).
+      leaf:      f32[T, 2^D] leaf values in log-slowdown space.
+
+    Returns a 1-tuple (f32[B],) — lowered with return_tuple=True for the
+    Rust loader (see aot.py).
+    """
+    xn = standardise(x, mean, std)
+    block = min(KERNEL_BLOCK_B, x.shape[0])
+    log_slowdown = forest_predict(xn, feature, threshold, leaf, block_b=block)
+    return (x[:, 0] * jnp.exp(log_slowdown),)
+
+
+def predict_latency_ref(x, mean, std, feature, threshold, leaf):
+    """Same graph with the pure-jnp traversal (correctness oracle)."""
+    xn = standardise(x, mean, std)
+    return (x[:, 0] * jnp.exp(forest_predict_ref(xn, feature, threshold, leaf)),)
+
+
+def lower_predict(batch: int, n_features: int, n_trees: int, depth: int):
+    """jax.jit(...).lower the predict graph at fixed shapes."""
+    n_internal = 2**depth - 1
+    specs = (
+        jax.ShapeDtypeStruct((batch, n_features), jnp.float32),   # x
+        jax.ShapeDtypeStruct((n_features,), jnp.float32),         # mean
+        jax.ShapeDtypeStruct((n_features,), jnp.float32),         # std
+        jax.ShapeDtypeStruct((n_trees, n_internal), jnp.int32),   # feature
+        jax.ShapeDtypeStruct((n_trees, n_internal), jnp.float32), # threshold
+        jax.ShapeDtypeStruct((n_trees, 2**depth), jnp.float32),   # leaf
+    )
+    return jax.jit(predict_latency).lower(*specs)

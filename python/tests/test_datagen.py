@@ -1,0 +1,103 @@
+"""Ground-truth interference model + feature contract tests (the Python
+half of the cross-language golden-vector check)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import datagen
+
+
+def test_catalog_is_deterministic():
+    a = datagen.make_catalog(6, seed=7)
+    b = datagen.make_catalog(6, seed=7)
+    for sa, sb in zip(a, b):
+        assert sa.name == sb.name
+        assert sa.profile == sb.profile
+        assert sa.solo_latency_ms == sb.solo_latency_ms
+
+
+def test_six_named_archetypes_then_generated():
+    cat = datagen.make_catalog(10, seed=7)
+    names = [s.name for s in cat]
+    assert names[:6] == ["rnn", "img_resize", "linpack", "log_proc", "chameleon", "gzip"]
+    assert all(n.startswith("fn_") for n in names[6:])
+
+
+def test_qos_is_1_2x_solo():
+    for s in datagen.make_catalog(6, seed=7):
+        assert abs(s.qos_latency_ms - 1.2 * s.solo_latency_ms) < 1e-9
+
+
+def test_latency_monotone_in_concurrency():
+    specs = datagen.make_catalog(6, seed=7)
+    prev = 0.0
+    for n in range(1, 25):
+        lat = datagen.ground_truth_latency(specs[:1], [n], [0], 0)
+        assert lat > prev
+        prev = lat
+
+
+def test_cached_pressure_fraction():
+    specs = datagen.make_catalog(6, seed=7)
+    full = datagen.ground_truth_latency(specs[:1], [10], [0], 0)
+    with_cached = datagen.ground_truth_latency(specs[:1], [10], [5], 0)
+    one_more = datagen.ground_truth_latency(specs[:1], [11], [0], 0)
+    # 5 cached instances = 0.5 saturated equivalents
+    assert full < with_cached < one_more
+
+
+def test_single_function_capacity_band():
+    """Capacities must exceed the request-packing limit of 12 (the
+    overcommitment headroom Fig. 13 depends on) but stay bounded."""
+    for s in datagen.make_catalog(6, seed=7):
+        cap = 0
+        for n in range(1, 40):
+            if datagen.ground_truth_latency([s], [n], [0], 0) <= s.qos_latency_ms:
+                cap = n
+            else:
+                break
+        assert 12 <= cap <= 25, f"{s.name}: capacity {cap} out of band"
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_feature_vector_contract(seed):
+    rng = np.random.default_rng(seed)
+    specs = datagen.make_catalog(6, seed=7)
+    k = int(rng.integers(1, 7))
+    chosen = [specs[i] for i in rng.choice(6, size=k, replace=False)]
+    sat = [int(rng.integers(0, 10)) for _ in range(k)]
+    cached = [int(rng.integers(0, 4)) for _ in range(k)]
+    t = int(rng.integers(0, k))
+    row = datagen.feature_vector(chosen, sat, cached, t)
+    assert len(row) == datagen.N_FEATURES
+    assert row[0] == chosen[t].solo_latency_ms
+    assert row[14] == float(sat[t])
+    assert row[15] == float(cached[t])
+    assert row[-2] == float(sum(sat))
+    assert row[-1] == float(sum(cached))
+    # aggregate profile = sum of count-weighted profiles
+    agg = np.zeros(13)
+    for spec, ns in zip(chosen, sat):
+        agg += ns * np.asarray(spec.profile)
+    np.testing.assert_allclose(row[16:29], agg, rtol=1e-12)
+
+
+def test_golden_vectors_selfconsistent():
+    specs = datagen.make_catalog(6, seed=7)
+    cases = datagen.golden_vectors(specs, 16, seed=3)
+    for c in cases:
+        sub = [specs[[s.name for s in specs].index(n)] for n in c["functions"]]
+        lat = datagen.ground_truth_latency(sub, c["sat"], c["cached"], c["target"])
+        assert abs(lat - c["latency_ms"]) < 1e-9
+
+
+def test_dataset_in_operating_band():
+    specs = datagen.make_catalog(6, seed=7)
+    X, y, names = datagen.sample_dataset(specs, 500, seed=1)
+    assert X.shape[1] == datagen.N_FEATURES
+    assert (y > 0).all()
+    # every labelled row's target had saturated instances
+    assert (X[:, 14] >= 1).all()
+    # total saturated bounded by the sampler's cap
+    assert (X[:, -2] <= 44).all()

@@ -1,0 +1,113 @@
+"""L1 correctness: Pallas forest-traversal kernel vs the pure-jnp oracle —
+the core correctness signal of the compile path.
+
+Hypothesis sweeps random forests, batch sizes and feature dims; the numpy
+`flat_predict` traversal pins the flattening semantics a third way.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.forest import RandomForestRegressor, flat_predict
+from compile.kernels.forest_kernel import forest_predict
+from compile.kernels.ref import forest_predict_ref
+
+
+def random_flat_forest(rng, n_trees, depth, n_features):
+    """Random perfect-tree tensors (not necessarily from training)."""
+    n_internal = 2**depth - 1
+    n_leaves = 2**depth
+    feature = rng.integers(0, n_features, size=(n_trees, n_internal)).astype(np.int32)
+    threshold = rng.normal(0, 1, size=(n_trees, n_internal)).astype(np.float32)
+    # sprinkle +inf pads like real flattened trees have
+    pad = rng.random(size=threshold.shape) < 0.2
+    threshold[pad] = np.float32(np.inf)
+    leaf = rng.normal(3.0, 1.0, size=(n_trees, n_leaves)).astype(np.float32)
+    return feature, threshold, leaf
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    n_trees=st.integers(1, 12),
+    depth=st.integers(1, 7),
+    n_features=st.integers(2, 50),
+    batch=st.sampled_from([1, 2, 3, 8, 17, 64]),
+)
+def test_kernel_matches_ref_on_random_forests(seed, n_trees, depth, n_features, batch):
+    rng = np.random.default_rng(seed)
+    feature, threshold, leaf = random_flat_forest(rng, n_trees, depth, n_features)
+    x = rng.normal(0, 2, size=(batch, n_features)).astype(np.float32)
+    got = forest_predict(
+        jnp.asarray(x), jnp.asarray(feature), jnp.asarray(threshold), jnp.asarray(leaf),
+        block_b=min(batch, 64),
+    )
+    want = forest_predict_ref(
+        jnp.asarray(x), jnp.asarray(feature), jnp.asarray(threshold), jnp.asarray(leaf)
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kernel_matches_numpy_flat_predict(seed):
+    """Kernel vs the numpy traversal over a *trained* forest — ties kernel
+    semantics to the actual training artifacts."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(0, 1, size=(300, 8))
+    y = X[:, 0] * 2.0 + np.sin(X[:, 1]) + 0.1 * rng.normal(size=300)
+    rf = RandomForestRegressor(n_trees=6, max_depth=5, seed=seed % 1000).fit(X, y)
+    flat = rf.flatten()
+    xq = rng.normal(0, 1, size=(64, 8)).astype(np.float32)
+    got = forest_predict(
+        jnp.asarray(xq),
+        jnp.asarray(flat["feature"]),
+        jnp.asarray(flat["threshold"]),
+        jnp.asarray(flat["leaf"]),
+    )
+    want = flat_predict(flat, xq)
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float64), want, rtol=1e-5)
+
+
+def test_kernel_grid_blocks_are_independent():
+    """Multiple grid blocks must produce identical results to one block."""
+    rng = np.random.default_rng(0)
+    feature, threshold, leaf = random_flat_forest(rng, 4, 4, 10)
+    x = rng.normal(0, 1, size=(128, 10)).astype(np.float32)
+    a = forest_predict(
+        jnp.asarray(x), jnp.asarray(feature), jnp.asarray(threshold),
+        jnp.asarray(leaf), block_b=128,
+    )
+    b = forest_predict(
+        jnp.asarray(x), jnp.asarray(feature), jnp.asarray(threshold),
+        jnp.asarray(leaf), block_b=32,
+    )
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_kernel_rejects_non_perfect_forest():
+    rng = np.random.default_rng(0)
+    feature, threshold, leaf = random_flat_forest(rng, 2, 3, 5)
+    x = rng.normal(size=(4, 5)).astype(np.float32)
+    with pytest.raises(AssertionError):
+        forest_predict(
+            jnp.asarray(x),
+            jnp.asarray(feature[:, :-1]),  # not 2^D - 1 nodes
+            jnp.asarray(threshold[:, :-1]),
+            jnp.asarray(leaf),
+        )
+
+
+def test_inf_thresholds_always_go_left():
+    """+inf padding must route every row to the left subtree."""
+    feature = np.zeros((1, 3), dtype=np.int32)
+    threshold = np.full((1, 3), np.inf, dtype=np.float32)
+    leaf = np.array([[7.0, 1.0, 2.0, 3.0]], dtype=np.float32)
+    x = np.array([[1e20], [-1e20], [0.0]], dtype=np.float32)
+    got = forest_predict(
+        jnp.asarray(x), jnp.asarray(feature), jnp.asarray(threshold), jnp.asarray(leaf),
+        block_b=3,
+    )
+    np.testing.assert_allclose(np.asarray(got), [7.0, 7.0, 7.0])

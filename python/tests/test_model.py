@@ -1,0 +1,113 @@
+"""L2 graph tests: the predict_latency graph semantics, lowering to HLO
+text, and the end-to-end train->flatten->graph consistency."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import datagen
+from compile.forest import RandomForestRegressor, flat_predict
+from compile.model import (
+    lower_predict,
+    predict_latency,
+    predict_latency_ref,
+    standardise,
+)
+from compile.aot import to_hlo_text
+
+
+def _trained_setup(seed=0, n=1500):
+    specs = datagen.make_catalog(6, seed=7)
+    X, y, _ = datagen.sample_dataset(specs, n, seed=seed)
+    t = np.log(y) - np.log(X[:, 0])
+    rf = RandomForestRegressor(n_trees=8, max_depth=6, seed=1).fit(X, t)
+    flat = rf.flatten()
+    mean = X.mean(axis=0)
+    std = np.maximum(X.std(axis=0), 1e-6)
+    feat = flat["feature"]
+    thr = flat["threshold"].astype(np.float64)
+    thr_n = np.where(np.isfinite(thr), (thr - mean[feat]) / std[feat], np.inf).astype(
+        np.float32
+    )
+    return specs, X, mean, std, feat, thr_n, flat
+
+
+def test_graph_equals_numpy_pipeline():
+    """kernel graph (standardise -> traverse -> exp * solo) must equal the
+    numpy traversal run in the same standardised space.
+
+    (Comparing against *raw-space* traversal instead is only approximate:
+    rows that sit exactly on a split threshold can flip branches under
+    f32 standardisation rounding — the deployed pipeline is consistent
+    because trainer, artifacts and runtime all share the standardised
+    thresholds.)"""
+    specs, X, mean, std, feat, thr_n, flat = _trained_setup()
+    Xq = X[:64].astype(np.float32)
+    args = (
+        jnp.asarray(Xq),
+        jnp.asarray(mean, jnp.float32),
+        jnp.asarray(std, jnp.float32),
+        jnp.asarray(feat),
+        jnp.asarray(thr_n),
+        jnp.asarray(flat["leaf"]),
+    )
+    (graph_out,) = predict_latency(*args)
+    flat_n = {"feature": feat, "threshold": thr_n, "leaf": flat["leaf"]}
+    # standardise in f32, same as the graph (f64 rounding flips branches
+    # for rows that sit exactly on a split)
+    xq_std = (Xq - mean.astype(np.float32)) / std.astype(np.float32)
+    numpy_out = np.exp(flat_predict(flat_n, xq_std)) * Xq[:, 0]
+    np.testing.assert_allclose(np.asarray(graph_out), numpy_out, rtol=2e-3)
+
+
+def test_kernel_and_ref_graphs_agree():
+    specs, X, mean, std, feat, thr_n, flat = _trained_setup(seed=3)
+    Xq = X[:32].astype(np.float32)
+    args = (
+        jnp.asarray(Xq),
+        jnp.asarray(mean, jnp.float32),
+        jnp.asarray(std, jnp.float32),
+        jnp.asarray(feat),
+        jnp.asarray(thr_n),
+        jnp.asarray(flat["leaf"]),
+    )
+    (a,) = predict_latency(*args)
+    (b,) = predict_latency_ref(*args)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_standardise_is_zscore():
+    x = jnp.asarray([[2.0, 4.0]])
+    out = standardise(x, jnp.asarray([1.0, 2.0]), jnp.asarray([0.5, 2.0]))
+    np.testing.assert_allclose(np.asarray(out), [[2.0, 1.0]])
+
+
+@settings(max_examples=4, deadline=None)
+@given(batch=st.sampled_from([1, 8, 64]))
+def test_lowering_emits_parseable_hlo_text(batch):
+    lowered = lower_predict(batch, datagen.N_FEATURES, 8, 6)
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # parameter order contract with the Rust loader: x, mean, std,
+    # feature, threshold, leaf
+    assert f"f32[{batch},{datagen.N_FEATURES}]" in text
+    assert "s32[8,63]" in text  # feature tensor [T, 2^D-1]
+    assert "f32[8,64]" in text  # leaf tensor [T, 2^D]
+
+
+def test_predictions_positive_and_scale_with_solo():
+    """Output must scale linearly in the solo-latency feature (the graph
+    multiplies it back in)."""
+    specs, X, mean, std, feat, thr_n, flat = _trained_setup(seed=5)
+    row = X[:1].astype(np.float32).copy()
+    args = lambda r: (
+        jnp.asarray(r),
+        jnp.asarray(mean, jnp.float32),
+        jnp.asarray(std, jnp.float32),
+        jnp.asarray(feat),
+        jnp.asarray(thr_n),
+        jnp.asarray(flat["leaf"]),
+    )
+    (base,) = predict_latency_ref(*args(row))
+    assert float(base[0]) > 0.0

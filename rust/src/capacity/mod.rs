@@ -1,0 +1,340 @@
+//! Capacity tables — the heart of pre-decision scheduling (§4.2–§4.4).
+//!
+//! For every node, and for every function deployed there, Jiagu
+//! precomputes a **capacity**: the maximum number of that function's
+//! saturated instances that can run on the node such that *every*
+//! colocated function's predicted P90 latency still meets its QoS
+//! (asynchronous-update refinement, §4.3) — evaluated with the current
+//! neighbour counts held fixed (Fig. 7).
+//!
+//! The capacity sweep batches all `(candidate concurrency × colocated
+//! function)` feature rows into a single predictor invocation
+//! (concurrency-aware refinement, §4.4; Fig. 17b shows batched inference
+//! is nearly flat in the row count), so computing one function's capacity
+//! costs *one* model inference.
+
+use crate::catalog::{Catalog, FunctionId};
+use crate::interference::NodeMix;
+use crate::model::features::FeatureBuilder;
+use crate::runtime::Predictor;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Tunables for the capacity computation.
+#[derive(Debug, Clone)]
+pub struct CapacityConfig {
+    /// Highest candidate concurrency swept per function. Bounds the
+    /// batched sweep; physical memory also caps deployment density.
+    pub max_candidates: u32,
+    /// Hard per-node instance cap from *actual* memory use (overcommitted
+    /// nodes still cannot exceed physical memory).
+    pub max_instances_per_node: u32,
+    /// Admission margin: a candidate is feasible when predicted latency
+    /// <= `qos_headroom` x QoS bound.  The paper predicts the p90 tail
+    /// "accordingly" to keep violations < 10%; with a mean-latency
+    /// predictor the equivalent is leaving headroom for prediction error
+    /// + measurement noise at the packing boundary.
+    pub qos_headroom: f64,
+}
+
+impl Default for CapacityConfig {
+    fn default() -> Self {
+        Self { max_candidates: 22, max_instances_per_node: 40, qos_headroom: 0.95 }
+    }
+}
+
+/// One capacity entry: "`capacity` instances of this function fit under
+/// the neighbour mix observed at `mix_version`".
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CapacityEntry {
+    pub capacity: u32,
+    /// Node-mix version the entry was computed under (staleness tracking).
+    pub mix_version: u64,
+}
+
+/// Per-node capacity table plus a monotonically increasing mix version.
+///
+/// The version counts placement/eviction/release events on the node; an
+/// entry computed at an older version is *stale* but still used by the
+/// fast path (the asynchronous update refreshes it off the critical
+/// path — that staleness window is the design's accepted risk, §4.3).
+#[derive(Debug, Clone, Default)]
+pub struct CapacityTable {
+    entries: HashMap<FunctionId, CapacityEntry>,
+    version: u64,
+}
+
+impl CapacityTable {
+    pub fn get(&self, f: FunctionId) -> Option<CapacityEntry> {
+        self.entries.get(&f).copied()
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Record a node-mix change (placement, eviction, release, ...).
+    pub fn bump_version(&mut self) -> u64 {
+        self.version += 1;
+        self.version
+    }
+
+    pub fn insert(&mut self, f: FunctionId, capacity: u32, mix_version: u64) {
+        self.entries.insert(f, CapacityEntry { capacity, mix_version });
+    }
+
+    pub fn remove(&mut self, f: FunctionId) {
+        self.entries.remove(&f);
+    }
+
+    /// Replace the whole table (asynchronous update completion).
+    pub fn replace(&mut self, entries: HashMap<FunctionId, CapacityEntry>) {
+        self.entries = entries;
+    }
+
+    pub fn is_stale(&self, f: FunctionId) -> bool {
+        self.get(f).map(|e| e.mix_version != self.version).unwrap_or(true)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&FunctionId, &CapacityEntry)> {
+        self.entries.iter()
+    }
+}
+
+/// Compute the capacity of `target` on a node with mix `mix`.
+///
+/// Sweeps candidate concurrency `1..=max` in one batched inference: for
+/// each candidate `c`, predicts the latency of every function that would
+/// have saturated instances (target at `c`, neighbours unchanged), and
+/// returns the largest `c` whose predictions *all* meet QoS, scanning
+/// upward until the first infeasible candidate (ground-truth interference
+/// is monotone in concurrency; the predictor tracks it closely).
+///
+/// Returns 0 if even one instance violates someone's QoS.
+pub fn compute_capacity(
+    cat: &Catalog,
+    mix: &NodeMix,
+    target: FunctionId,
+    predictor: &dyn Predictor,
+    cfg: &CapacityConfig,
+) -> Result<u32> {
+    // neighbour entries with the target removed
+    let neighbours: Vec<(FunctionId, u32, u32)> = mix
+        .entries
+        .iter()
+        .filter(|(f, _, _)| *f != target)
+        .copied()
+        .collect();
+    let target_cached = mix
+        .entries
+        .iter()
+        .find(|(f, _, _)| *f == target)
+        .map(|(_, _, c)| *c)
+        .unwrap_or(0);
+    let neighbour_sat: u32 = neighbours.iter().map(|(_, s, _)| *s).sum();
+    let neighbour_cached: u32 = neighbours.iter().map(|(_, _, c)| *c).sum();
+    let room = cfg
+        .max_instances_per_node
+        .saturating_sub(neighbour_sat + neighbour_cached + target_cached);
+    let max_c = cfg.max_candidates.min(room);
+    if max_c == 0 {
+        return Ok(0);
+    }
+
+    // functions whose QoS must hold: target + all neighbours with sat > 0
+    let mut qos_targets: Vec<FunctionId> = vec![target];
+    qos_targets.extend(neighbours.iter().filter(|(_, s, _)| *s > 0).map(|(f, _, _)| *f));
+
+    // one batched inference over (candidate, qos-target) rows
+    let mut rows: Vec<Vec<f32>> = Vec::with_capacity(max_c as usize * qos_targets.len());
+    let mut candidate_mix = NodeMix::new(
+        neighbours
+            .iter()
+            .copied()
+            .chain(std::iter::once((target, 0, target_cached)))
+            .collect(),
+    );
+    let target_slot = candidate_mix.entries.len() - 1;
+    let mut row = Vec::with_capacity(crate::model::N_FEATURES);
+    for c in 1..=max_c {
+        candidate_mix.entries[target_slot].1 = c;
+        let builder = FeatureBuilder::new(cat, &candidate_mix);
+        for f in &qos_targets {
+            builder.row_into(*f, &mut row);
+            rows.push(row.clone());
+        }
+    }
+    let preds = predictor.predict(&rows)?;
+
+    // largest feasible prefix
+    let per_c = qos_targets.len();
+    let mut capacity = 0u32;
+    'outer: for c in 1..=max_c {
+        let base = (c - 1) as usize * per_c;
+        for (i, f) in qos_targets.iter().enumerate() {
+            if preds[base + i] as f64 > cfg.qos_headroom * cat.get(*f).qos_latency_ms {
+                break 'outer;
+            }
+        }
+        capacity = c;
+    }
+    Ok(capacity)
+}
+
+/// Recompute the full capacity table of a node (asynchronous update body):
+/// one capacity sweep per function present in the mix.
+pub fn compute_all_capacities(
+    cat: &Catalog,
+    mix: &NodeMix,
+    predictor: &dyn Predictor,
+    cfg: &CapacityConfig,
+    mix_version: u64,
+) -> Result<HashMap<FunctionId, CapacityEntry>> {
+    let mut out = HashMap::new();
+    for (f, _, _) in &mix.entries {
+        let cap = compute_capacity(cat, mix, *f, predictor, cfg)?;
+        out.insert(*f, CapacityEntry { capacity: cap, mix_version });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::tests::test_catalog;
+    use crate::interference;
+    use crate::runtime::InferenceStats;
+
+    /// Oracle predictor: returns ground-truth latency (no model error).
+    pub(crate) struct OraclePredictor {
+        pub cat: Catalog,
+        pub stats: InferenceStats,
+    }
+
+    impl OraclePredictor {
+        pub fn new(cat: Catalog) -> Self {
+            Self { cat, stats: InferenceStats::default() }
+        }
+
+        /// Decode a feature row back into a prediction via ground truth.
+        /// Rows were built by FeatureBuilder, so we recover the target by
+        /// matching solo latency (unique per function in test catalogs)
+        /// and re-derive the mix from the aggregate profile — instead we
+        /// cheat: the row's aggregate totals are enough because the test
+        /// catalog profiles are all-ones, making aggregates ambiguous.
+        /// So this oracle is only used through `predict_mix` below.
+        fn target_of(&self, row: &[f32]) -> FunctionId {
+            let solo = row[0] as f64;
+            (0..self.cat.len())
+                .min_by(|a, b| {
+                    let da = (self.cat.get(*a).solo_latency_ms - solo).abs();
+                    let db = (self.cat.get(*b).solo_latency_ms - solo).abs();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap()
+        }
+    }
+
+    impl Predictor for OraclePredictor {
+        fn predict(&self, rows: &[Vec<f32>]) -> Result<Vec<f32>> {
+            // Reconstruct per-row latency from (target sat/cached counts +
+            // totals) assuming a *single-function* or known-mix node; the
+            // capacity tests below only use single-function sweeps where
+            // the row describes the full mix exactly.
+            self.stats.record(rows.len(), 0);
+            Ok(rows
+                .iter()
+                .map(|row| {
+                    let target = self.target_of(row);
+                    let t_sat = row[14] as u32;
+                    let t_cached = row[15] as u32;
+                    let tot_sat = row[42] as u32;
+                    let tot_cached = row[43] as u32;
+                    // everything that isn't the target is "other" — model
+                    // it as more instances of the same target function
+                    // (exact for single-function mixes).
+                    let mix = NodeMix::new(vec![(
+                        target,
+                        t_sat + (tot_sat - t_sat),
+                        t_cached + (tot_cached - t_cached),
+                    )]);
+                    interference::ground_truth_latency(&self.cat, &mix, target) as f32
+                })
+                .collect())
+        }
+
+        fn stats(&self) -> &InferenceStats {
+            &self.stats
+        }
+
+        fn n_features(&self) -> usize {
+            crate::model::N_FEATURES
+        }
+    }
+
+    #[test]
+    fn single_function_capacity_matches_ground_truth() {
+        let cat = test_catalog();
+        let oracle = OraclePredictor::new(cat.clone());
+        let cfg = CapacityConfig { qos_headroom: 1.0, ..Default::default() };
+        for f in 0..cat.len() {
+            let mix = NodeMix::new(vec![(f, 1, 0)]);
+            let cap = compute_capacity(&cat, &mix, f, &oracle, &cfg).unwrap();
+            // check against brute-force ground truth
+            let mut truth = 0;
+            for c in 1..=cfg.max_candidates {
+                let m = NodeMix::new(vec![(f, c, 0)]);
+                if interference::ground_truth_latency(&cat, &m, f)
+                    <= cat.get(f).qos_latency_ms
+                {
+                    truth = c;
+                } else {
+                    break;
+                }
+            }
+            assert_eq!(cap, truth, "function {f}");
+            assert!(cap >= 1, "QoS=1.2x solo must admit at least 1 instance");
+        }
+    }
+
+    #[test]
+    fn capacity_is_one_inference_per_function() {
+        let cat = test_catalog();
+        let oracle = OraclePredictor::new(cat.clone());
+        let cfg = CapacityConfig::default();
+        let mix = NodeMix::new(vec![(0, 2, 0)]);
+        compute_capacity(&cat, &mix, 0, &oracle, &cfg).unwrap();
+        let (calls, rows, _) = oracle.stats.snapshot();
+        assert_eq!(calls, 1, "sweep must be a single batched inference");
+        assert!(rows >= cfg.max_candidates as u64 / 2);
+    }
+
+    #[test]
+    fn room_cap_limits_capacity() {
+        let cat = test_catalog();
+        let oracle = OraclePredictor::new(cat.clone());
+        let cfg = CapacityConfig { max_instances_per_node: 3, ..Default::default() };
+        let mix = NodeMix::new(vec![(0, 1, 0)]);
+        let cap = compute_capacity(&cat, &mix, 0, &oracle, &cfg).unwrap();
+        assert!(cap <= 3);
+    }
+
+    #[test]
+    fn table_staleness_tracking() {
+        let mut table = CapacityTable::default();
+        let v = table.bump_version();
+        table.insert(0, 5, v);
+        assert!(!table.is_stale(0));
+        table.bump_version();
+        assert!(table.is_stale(0));
+        assert!(table.is_stale(1), "missing entry is stale");
+    }
+}

@@ -1,0 +1,355 @@
+//! Cluster state: nodes, instances and resource accounting.
+//!
+//! This is the substrate under both the scheduler (which reads node mixes
+//! to compute capacities) and the simulator (which drives instance
+//! lifecycles).  Instances move through:
+//!
+//! ```text
+//!  Starting ──(init done)──> Saturated <──(release / logical cold start)──> Cached
+//!      ▲                          │                                            │
+//!      └────── real cold start ───┴──────────── eviction ◄────────────────────┘
+//! ```
+//!
+//! "Saturated" means the router counts the instance as serving load (the
+//! paper's saturated instances); "Cached" instances are routed around but
+//! kept warm (dual-staged scaling, §5).
+
+use crate::catalog::{Catalog, FunctionId};
+use crate::interference::NodeMix;
+use std::collections::HashMap;
+
+/// Node identifier (dense index into [`Cluster::nodes`]).
+pub type NodeId = usize;
+
+/// Instance identifier, unique across the cluster lifetime.
+pub type InstanceId = u64;
+
+/// Lifecycle state of one instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstanceState {
+    /// Cold start in progress (scheduling + init); not yet serving.
+    Starting,
+    /// Serving requests; counted at full interference pressure.
+    Saturated,
+    /// Routed around but warm (dual-staged scaling stage 1).
+    Cached,
+}
+
+/// One function instance placed on a node.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub id: InstanceId,
+    pub function: FunctionId,
+    pub node: NodeId,
+    pub state: InstanceState,
+    /// Virtual time (ms) the instance was created.
+    pub created_ms: f64,
+    /// Virtual time (ms) of the last state change (keep-alive bookkeeping).
+    pub state_since_ms: f64,
+}
+
+/// Per-node instance sets and request-based resource accounting.
+#[derive(Debug, Clone, Default)]
+pub struct Node {
+    pub instances: Vec<InstanceId>,
+    /// Sum of configured requests of *all* instances (K8s-style view).
+    pub requested_milli_cpu: u64,
+    pub requested_mem_mb: u64,
+}
+
+/// The whole cluster: nodes + instance table.
+#[derive(Debug)]
+pub struct Cluster {
+    pub nodes: Vec<Node>,
+    instances: HashMap<InstanceId, Instance>,
+    next_instance: InstanceId,
+    /// Cached per-node (function → (sat, cached)) counts, kept incrementally.
+    mixes: Vec<HashMap<FunctionId, (u32, u32)>>,
+    /// Cluster-wide instance counts per function (any state).
+    global_counts: HashMap<FunctionId, u32>,
+}
+
+impl Cluster {
+    pub fn new(n_nodes: usize) -> Self {
+        Self {
+            nodes: vec![Node::default(); n_nodes],
+            instances: HashMap::new(),
+            next_instance: 0,
+            mixes: vec![HashMap::new(); n_nodes],
+            global_counts: HashMap::new(),
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Grow the cluster (the paper requests new servers when no node fits).
+    pub fn add_node(&mut self) -> NodeId {
+        self.nodes.push(Node::default());
+        self.mixes.push(HashMap::new());
+        self.nodes.len() - 1
+    }
+
+    pub fn instance(&self, id: InstanceId) -> Option<&Instance> {
+        self.instances.get(&id)
+    }
+
+    pub fn instances_len(&self) -> usize {
+        self.instances.len()
+    }
+
+    /// All instances on `node` (unordered).
+    pub fn node_instances(&self, node: NodeId) -> impl Iterator<Item = &Instance> + '_ {
+        self.nodes[node].instances.iter().filter_map(move |id| self.instances.get(id))
+    }
+
+    /// Place a new instance (initially [`InstanceState::Starting`], which
+    /// counts as saturated pressure conservatively once it flips; Starting
+    /// instances are *reserved* in the mix as saturated so concurrent
+    /// schedulings see each other).
+    pub fn place(
+        &mut self,
+        cat: &Catalog,
+        function: FunctionId,
+        node: NodeId,
+        now_ms: f64,
+    ) -> InstanceId {
+        let id = self.next_instance;
+        self.next_instance += 1;
+        let spec = cat.get(function);
+        let inst = Instance {
+            id,
+            function,
+            node,
+            state: InstanceState::Starting,
+            created_ms: now_ms,
+            state_since_ms: now_ms,
+        };
+        self.nodes[node].instances.push(id);
+        self.nodes[node].requested_milli_cpu += spec.milli_cpu;
+        self.nodes[node].requested_mem_mb += spec.mem_mb;
+        let e = self.mixes[node].entry(function).or_insert((0, 0));
+        e.0 += 1; // Starting reserved as saturated
+        *self.global_counts.entry(function).or_insert(0) += 1;
+        self.instances.insert(id, inst);
+        id
+    }
+
+    /// Whether any instance (any state, any node) of `f` exists.
+    pub fn deployed_anywhere(&self, f: FunctionId) -> bool {
+        self.global_counts.get(&f).copied().unwrap_or(0) > 0
+    }
+
+    /// Cluster-wide instance count of `f` (any state).
+    pub fn global_count(&self, f: FunctionId) -> u32 {
+        self.global_counts.get(&f).copied().unwrap_or(0)
+    }
+
+    /// Flip a Starting instance to Saturated (init finished).
+    pub fn mark_ready(&mut self, id: InstanceId, now_ms: f64) {
+        if let Some(inst) = self.instances.get_mut(&id) {
+            debug_assert_eq!(inst.state, InstanceState::Starting);
+            inst.state = InstanceState::Saturated;
+            inst.state_since_ms = now_ms;
+        }
+    }
+
+    /// Dual-staged scaling stage 1: Saturated → Cached ("release").
+    pub fn release(&mut self, id: InstanceId, now_ms: f64) {
+        let inst = self.instances.get_mut(&id).expect("release: unknown instance");
+        assert_eq!(inst.state, InstanceState::Saturated, "release requires Saturated");
+        inst.state = InstanceState::Cached;
+        inst.state_since_ms = now_ms;
+        let e = self.mixes[inst.node].get_mut(&inst.function).unwrap();
+        e.0 -= 1;
+        e.1 += 1;
+    }
+
+    /// Logical cold start: Cached → Saturated (re-route, <1 ms).
+    pub fn reactivate(&mut self, id: InstanceId, now_ms: f64) {
+        let inst = self.instances.get_mut(&id).expect("reactivate: unknown instance");
+        assert_eq!(inst.state, InstanceState::Cached, "reactivate requires Cached");
+        inst.state = InstanceState::Saturated;
+        inst.state_since_ms = now_ms;
+        let e = self.mixes[inst.node].get_mut(&inst.function).unwrap();
+        e.0 += 1;
+        e.1 -= 1;
+    }
+
+    /// Remove an instance entirely (real eviction or failed start).
+    pub fn evict(&mut self, cat: &Catalog, id: InstanceId) -> Option<Instance> {
+        let inst = self.instances.remove(&id)?;
+        let node = &mut self.nodes[inst.node];
+        node.instances.retain(|x| *x != id);
+        let spec = cat.get(inst.function);
+        node.requested_milli_cpu -= spec.milli_cpu;
+        node.requested_mem_mb -= spec.mem_mb;
+        let e = self.mixes[inst.node].get_mut(&inst.function).unwrap();
+        match inst.state {
+            InstanceState::Cached => e.1 -= 1,
+            _ => e.0 -= 1,
+        }
+        if *e == (0, 0) {
+            self.mixes[inst.node].remove(&inst.function);
+        }
+        let g = self.global_counts.get_mut(&inst.function).unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.global_counts.remove(&inst.function);
+        }
+        Some(inst)
+    }
+
+    /// Move a cached instance to another node (on-demand migration).  The
+    /// migrated replica starts Cached on the target.
+    pub fn migrate_cached(
+        &mut self,
+        cat: &Catalog,
+        id: InstanceId,
+        target: NodeId,
+        now_ms: f64,
+    ) {
+        let inst = self.instances.get_mut(&id).expect("migrate: unknown instance");
+        assert_eq!(inst.state, InstanceState::Cached);
+        let src = inst.node;
+        let function = inst.function;
+        let spec = cat.get(function);
+        // remove from source
+        self.nodes[src].instances.retain(|x| *x != id);
+        self.nodes[src].requested_milli_cpu -= spec.milli_cpu;
+        self.nodes[src].requested_mem_mb -= spec.mem_mb;
+        let e = self.mixes[src].get_mut(&function).unwrap();
+        e.1 -= 1;
+        if *e == (0, 0) {
+            self.mixes[src].remove(&function);
+        }
+        // add to target
+        let inst = self.instances.get_mut(&id).unwrap();
+        inst.node = target;
+        inst.state_since_ms = now_ms;
+        self.nodes[target].instances.push(id);
+        self.nodes[target].requested_milli_cpu += spec.milli_cpu;
+        self.nodes[target].requested_mem_mb += spec.mem_mb;
+        let e = self.mixes[target].entry(function).or_insert((0, 0));
+        e.1 += 1;
+    }
+
+    /// The interference mix of a node: (function, saturated+starting,
+    /// cached) triples.  Starting instances count as saturated — the
+    /// scheduler must reserve their pressure before they serve.
+    pub fn mix(&self, node: NodeId) -> NodeMix {
+        let mut entries: Vec<(FunctionId, u32, u32)> = self.mixes[node]
+            .iter()
+            .map(|(f, (s, c))| (*f, *s, *c))
+            .collect();
+        entries.sort_unstable_by_key(|(f, _, _)| *f);
+        NodeMix::new(entries)
+    }
+
+    /// (saturated+starting, cached) counts of `function` on `node`.
+    pub fn counts(&self, node: NodeId, function: FunctionId) -> (u32, u32) {
+        self.mixes[node].get(&function).copied().unwrap_or((0, 0))
+    }
+
+    /// Instances of `function` on `node` in a given state.
+    pub fn find_instances(
+        &self,
+        node: NodeId,
+        function: FunctionId,
+        state: InstanceState,
+    ) -> Vec<InstanceId> {
+        self.node_instances(node)
+            .filter(|i| i.function == function && i.state == state)
+            .map(|i| i.id)
+            .collect()
+    }
+
+    /// Whether a node has zero instances (candidate for scale-in).
+    pub fn node_empty(&self, node: NodeId) -> bool {
+        self.nodes[node].instances.is_empty()
+    }
+
+    /// Debug invariant check: mixes match the instance table (tests).
+    pub fn check_invariants(&self) -> anyhow::Result<()> {
+        for (n, _) in self.nodes.iter().enumerate() {
+            let mut counted: HashMap<FunctionId, (u32, u32)> = HashMap::new();
+            for inst in self.node_instances(n) {
+                let e = counted.entry(inst.function).or_insert((0, 0));
+                match inst.state {
+                    InstanceState::Cached => e.1 += 1,
+                    _ => e.0 += 1,
+                }
+            }
+            anyhow::ensure!(
+                counted == self.mixes[n],
+                "node {n}: mix cache {:?} != actual {:?}",
+                self.mixes[n],
+                counted
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::tests::test_catalog;
+
+    #[test]
+    fn place_ready_release_reactivate_evict_roundtrip() {
+        let cat = test_catalog();
+        let mut cl = Cluster::new(2);
+        let id = cl.place(&cat, 0, 0, 0.0);
+        assert_eq!(cl.counts(0, 0), (1, 0));
+        cl.mark_ready(id, 1.0);
+        cl.release(id, 2.0);
+        assert_eq!(cl.counts(0, 0), (0, 1));
+        cl.reactivate(id, 3.0);
+        assert_eq!(cl.counts(0, 0), (1, 0));
+        cl.evict(&cat, id);
+        assert_eq!(cl.counts(0, 0), (0, 0));
+        assert!(cl.node_empty(0));
+        cl.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn requested_resources_tracked() {
+        let cat = test_catalog();
+        let mut cl = Cluster::new(1);
+        let a = cl.place(&cat, 0, 0, 0.0);
+        let _b = cl.place(&cat, 1, 0, 0.0);
+        assert_eq!(cl.nodes[0].requested_milli_cpu, 8000);
+        cl.evict(&cat, a);
+        assert_eq!(cl.nodes[0].requested_milli_cpu, 4000);
+    }
+
+    #[test]
+    fn migrate_cached_moves_pressure() {
+        let cat = test_catalog();
+        let mut cl = Cluster::new(2);
+        let id = cl.place(&cat, 2, 0, 0.0);
+        cl.mark_ready(id, 0.0);
+        cl.release(id, 1.0);
+        cl.migrate_cached(&cat, id, 1, 2.0);
+        assert_eq!(cl.counts(0, 2), (0, 0));
+        assert_eq!(cl.counts(1, 2), (0, 1));
+        assert_eq!(cl.instance(id).unwrap().node, 1);
+        cl.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn mix_sorted_and_complete() {
+        let cat = test_catalog();
+        let mut cl = Cluster::new(1);
+        for f in [2usize, 0, 1] {
+            for _ in 0..2 {
+                let id = cl.place(&cat, f, 0, 0.0);
+                cl.mark_ready(id, 0.0);
+            }
+        }
+        let mix = cl.mix(0);
+        assert_eq!(mix.entries, vec![(0, 2, 0), (1, 2, 0), (2, 2, 0)]);
+    }
+}

@@ -1,0 +1,203 @@
+//! Run configuration: cluster size, scheduler choice, autoscaler tuning,
+//! cold-start model and simulation horizon.  Loadable from a JSON file or
+//! assembled programmatically; `rust/src/main.rs` maps CLI flags onto it.
+
+use crate::autoscaler::AutoscalerConfig;
+use crate::capacity::CapacityConfig;
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Which scheduler drives a run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    Jiagu,
+    Kubernetes,
+    Gsight,
+    Owl,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "jiagu" => Self::Jiagu,
+            "kubernetes" | "k8s" => Self::Kubernetes,
+            "gsight" => Self::Gsight,
+            "owl" => Self::Owl,
+            _ => bail!("unknown scheduler {s:?} (jiagu|k8s|gsight|owl)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Jiagu => "jiagu",
+            Self::Kubernetes => "kubernetes",
+            Self::Gsight => "gsight",
+            Self::Owl => "owl",
+        }
+    }
+}
+
+/// Instance-initialisation latency model (Table 2 / Figs. 11b-c).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InitModel {
+    /// Container fork [Molecule, ASPLOS'22]: ~8.4 ms.
+    Cfork,
+    /// Plain Docker: ~85.5 ms.
+    Docker,
+    /// Fixed custom latency (ms).
+    Fixed(f64),
+}
+
+impl InitModel {
+    pub fn latency_ms(&self) -> f64 {
+        match self {
+            Self::Cfork => 8.4,
+            Self::Docker => 85.5,
+            Self::Fixed(ms) => *ms,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "cfork" => Self::Cfork,
+            "docker" => Self::Docker,
+            other => match other.parse::<f64>() {
+                Ok(ms) => Self::Fixed(ms),
+                Err(_) => bail!("unknown init model {s:?} (cfork|docker|<ms>)"),
+            },
+        })
+    }
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub scheduler: SchedulerKind,
+    pub n_nodes: usize,
+    pub autoscaler: AutoscalerConfig,
+    pub capacity: CapacityConfig,
+    pub init_model: InitModel,
+    /// Virtual seconds to simulate.
+    pub duration_s: usize,
+    /// Ground-truth measurement noise σ applied per QoS window.
+    pub measurement_noise: f64,
+    /// RNG seed for the simulator's noise streams.
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            scheduler: SchedulerKind::Jiagu,
+            n_nodes: 23, // paper: 24 machines, 1 control plane
+            autoscaler: AutoscalerConfig::default(),
+            capacity: CapacityConfig::default(),
+            init_model: InitModel::Cfork,
+            duration_s: 1800,
+            measurement_noise: 0.05,
+            seed: 42,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Paper variants (§7.1): Jiagu-45 (default), Jiagu-30, Jiagu-NoDS.
+    pub fn jiagu_45() -> Self {
+        Self::default()
+    }
+
+    pub fn jiagu_30() -> Self {
+        let mut c = Self::default();
+        c.autoscaler.release_duration_s = 30.0;
+        c
+    }
+
+    pub fn jiagu_nods() -> Self {
+        let mut c = Self::default();
+        c.autoscaler.dual_staged = false;
+        c.autoscaler.migration = false;
+        c
+    }
+
+    pub fn with_scheduler(kind: SchedulerKind) -> Self {
+        let mut c = Self::default();
+        c.scheduler = kind;
+        if kind != SchedulerKind::Jiagu {
+            // dual-staged scaling is Jiagu's mechanism; baselines use the
+            // traditional keep-alive autoscaler
+            c.autoscaler.dual_staged = false;
+            c.autoscaler.migration = false;
+        }
+        c
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let j = Json::parse_file(path)?;
+        let mut c = Self::default();
+        if let Some(v) = j.opt("scheduler") {
+            c.scheduler = SchedulerKind::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.opt("n_nodes") {
+            c.n_nodes = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("duration_s") {
+            c.duration_s = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("seed") {
+            c.seed = v.as_f64()? as u64;
+        }
+        if let Some(v) = j.opt("init_model") {
+            c.init_model = InitModel::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.opt("release_duration_s") {
+            c.autoscaler.release_duration_s = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("keepalive_duration_s") {
+            c.autoscaler.keepalive_duration_s = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("dual_staged") {
+            c.autoscaler.dual_staged = v.as_bool()?;
+        }
+        if let Some(v) = j.opt("migration") {
+            c.autoscaler.migration = v.as_bool()?;
+        }
+        if let Some(v) = j.opt("max_candidates") {
+            c.capacity.max_candidates = v.as_usize()? as u32;
+        }
+        if let Some(v) = j.opt("max_instances_per_node") {
+            c.capacity.max_instances_per_node = v.as_usize()? as u32;
+        }
+        if let Some(v) = j.opt("measurement_noise") {
+            c.measurement_noise = v.as_f64()?;
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variants_match_paper() {
+        assert_eq!(RunConfig::jiagu_30().autoscaler.release_duration_s, 30.0);
+        assert_eq!(RunConfig::jiagu_45().autoscaler.release_duration_s, 45.0);
+        assert!(!RunConfig::jiagu_nods().autoscaler.dual_staged);
+        assert!(!RunConfig::with_scheduler(SchedulerKind::Gsight).autoscaler.dual_staged);
+    }
+
+    #[test]
+    fn init_model_latencies() {
+        assert_eq!(InitModel::Cfork.latency_ms(), 8.4);
+        assert_eq!(InitModel::Docker.latency_ms(), 85.5);
+        assert_eq!(InitModel::parse("12.5").unwrap().latency_ms(), 12.5);
+        assert!(InitModel::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn scheduler_kind_parse() {
+        assert_eq!(SchedulerKind::parse("K8S").unwrap(), SchedulerKind::Kubernetes);
+        assert!(SchedulerKind::parse("nope").is_err());
+    }
+}

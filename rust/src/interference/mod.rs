@@ -1,0 +1,189 @@
+//! Ground-truth interference model — the simulator's stand-in for real
+//! hardware contention.
+//!
+//! Bit-for-bit mirror of `python/compile/datagen.py` (f64, same literals):
+//! the Python side generates the predictor's *training labels* from this
+//! formula (plus independent measurement noise); this Rust side generates
+//! the *runtime truth* the scheduler's predictions are judged against.
+//! `tests/interference_golden.rs` cross-checks the two against
+//! `artifacts/interference_check.json`.
+//!
+//! Model (see DESIGN.md "Substitutions"):
+//!
+//! ```text
+//! u_r       = Σ_f (sat_f + 0.10·cached_f) · pressure_f[r] / capacity_r
+//! g(u)      = 0.18·u² + [u > 0.8] · 2.2·(u − 0.8)²
+//! acc       = Σ_r sens[r] · g(u_r)
+//! slowdown  = 1 + acc + 0.55·acc²
+//! latency   = base_latency · slowdown
+//! ```
+
+use crate::catalog::{Catalog, FunctionId};
+
+/// Table-3 profile metric names (order matters — feature layout contract).
+pub const PROFILE_METRICS: [&str; 13] = [
+    "mcpu",
+    "instructions",
+    "ipc",
+    "ctx_switches",
+    "mlp",
+    "l1d_mpki",
+    "l1i_mpki",
+    "l2_mpki",
+    "llc_mpki",
+    "dtlb_mpki",
+    "itlb_mpki",
+    "branch_mpki",
+    "mem_bw",
+];
+
+/// Hidden contended node resources.
+pub const RESOURCES: [&str; 6] = ["cpu", "membw", "llc", "l1", "tlb", "branch"];
+
+/// Per-resource node capacity in abstract pressure units.
+pub const RESOURCE_CAPACITY: [f64; 6] = [48.0, 48.0, 48.0, 48.0, 48.0, 48.0];
+
+/// Pressure of a cached (routed-around) instance relative to saturated.
+pub const CACHED_PRESSURE_FACTOR: f64 = 0.10;
+
+/// Per-resource contention penalty `g(u)`.
+#[inline]
+pub fn penalty(u: f64) -> f64 {
+    let mut base = 0.18 * u * u;
+    let knee = u - 0.8;
+    if knee > 0.0 {
+        base += 2.2 * knee * knee;
+    }
+    base
+}
+
+/// Latency multiplier given per-resource utilisation and sensitivity.
+pub fn slowdown(util: &[f64], sens: &[f64]) -> f64 {
+    debug_assert_eq!(util.len(), sens.len());
+    let mut acc = 0.0;
+    for (u, s) in util.iter().zip(sens) {
+        acc += s * penalty(*u);
+    }
+    1.0 + acc + 0.55 * acc * acc
+}
+
+/// Utilisation of a node hosting a single saturated instance (solo run).
+pub fn utilisation_single(pressure: &[f64]) -> Vec<f64> {
+    pressure
+        .iter()
+        .zip(RESOURCE_CAPACITY.iter())
+        .map(|(p, c)| p / c)
+        .collect()
+}
+
+/// A node mix: per-function saturated/cached instance counts.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NodeMix {
+    /// (function, saturated count, cached count); functions are unique.
+    pub entries: Vec<(FunctionId, u32, u32)>,
+}
+
+impl NodeMix {
+    pub fn new(entries: Vec<(FunctionId, u32, u32)>) -> Self {
+        Self { entries }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.iter().all(|(_, s, c)| *s == 0 && *c == 0)
+    }
+
+    pub fn total_sat(&self) -> u32 {
+        self.entries.iter().map(|(_, s, _)| *s).sum()
+    }
+
+    pub fn total_cached(&self) -> u32 {
+        self.entries.iter().map(|(_, _, c)| *c).sum()
+    }
+}
+
+/// Per-resource utilisation of a node under `mix`.
+pub fn node_utilisation(cat: &Catalog, mix: &NodeMix) -> Vec<f64> {
+    let n_res = cat.resources.len();
+    let mut util = vec![0.0; n_res];
+    for (fid, sat, cached) in &mix.entries {
+        let spec = cat.get(*fid);
+        let weight = *sat as f64 + cat.cached_pressure_factor * *cached as f64;
+        for r in 0..n_res {
+            util[r] += weight * spec.pressure[r];
+        }
+    }
+    for r in 0..n_res {
+        util[r] /= cat.resource_capacity[r];
+    }
+    util
+}
+
+/// Ground-truth P90 latency (ms) of `target` under `mix` (deterministic;
+/// the simulator layers sampling noise on top).
+pub fn ground_truth_latency(cat: &Catalog, mix: &NodeMix, target: FunctionId) -> f64 {
+    let util = node_utilisation(cat, mix);
+    let spec = cat.get(target);
+    spec.base_latency_ms * slowdown(&util, &spec.sensitivity)
+}
+
+/// Whether every function with saturated instances in `mix` meets QoS
+/// under the ground-truth model (used by tests and the oracle scheduler).
+pub fn mix_meets_qos(cat: &Catalog, mix: &NodeMix) -> bool {
+    mix.entries.iter().all(|(fid, sat, _)| {
+        *sat == 0 || ground_truth_latency(cat, mix, *fid) <= cat.get(*fid).qos_latency_ms
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn penalty_is_monotonic_and_kneed() {
+        assert_eq!(penalty(0.0), 0.0);
+        assert!(penalty(0.5) < penalty(0.8));
+        // knee: slope increases sharply past 0.8
+        let below = penalty(0.8) - penalty(0.7);
+        let above = penalty(1.1) - penalty(1.0);
+        assert!(above > 3.0 * below);
+    }
+
+    #[test]
+    fn slowdown_at_zero_load_is_one() {
+        assert_eq!(slowdown(&[0.0; 6], &[1.0; 6]), 1.0);
+    }
+
+    #[test]
+    fn slowdown_superlinear_in_acc() {
+        let s1 = slowdown(&[0.5; 6], &[0.5; 6]);
+        let s2 = slowdown(&[1.0; 6], &[0.5; 6]);
+        // doubling utilisation more than doubles the excess slowdown
+        assert!((s2 - 1.0) > 2.0 * (s1 - 1.0));
+    }
+
+    #[test]
+    fn cached_instances_contribute_fractional_pressure() {
+        let cat = crate::catalog::Catalog::from_functions(vec![
+            crate::catalog::tests::test_spec("a", 50.0),
+        ]);
+        let sat = node_utilisation(&cat, &NodeMix::new(vec![(0, 10, 0)]));
+        let mixed = node_utilisation(&cat, &NodeMix::new(vec![(0, 10, 5)]));
+        let more = node_utilisation(&cat, &NodeMix::new(vec![(0, 10, 10)]));
+        assert!(mixed[0] > sat[0]);
+        // 10 cached instances == 1 saturated-instance equivalent (factor 0.10)
+        assert!((more[0] - (sat[0] + sat[0] / 10.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_grows_with_density() {
+        let cat = crate::catalog::Catalog::from_functions(vec![
+            crate::catalog::tests::test_spec("a", 50.0),
+        ]);
+        let mut prev = 0.0;
+        for n in 1..20 {
+            let lat = ground_truth_latency(&cat, &NodeMix::new(vec![(0, n, 0)]), 0);
+            assert!(lat > prev, "latency must increase with colocation");
+            prev = lat;
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! # Jiagu — QoS-aware serverless scheduling, reproduced
+//!
+//! Reproduction of *"Jiagu: Optimizing Serverless Computing Resource
+//! Utilization with Harmonized Efficiency and Practicability"* (2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the serverless control plane: pre-decision
+//!   scheduler with per-node [`capacity`] tables, [`autoscaler`] with
+//!   dual-staged scaling, request [`router`], [`cluster`] state, baseline
+//!   schedulers, a discrete-event [`sim`]ulator and trace generators.
+//! * **L2 (JAX, build time)** — the latency predictor compute graph,
+//!   AOT-lowered to HLO text at `make artifacts`.
+//! * **L1 (Pallas, build time)** — the random-forest traversal kernel.
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! AOT artifacts through PJRT (`xla` crate) and serves batched predictions
+//! to the scheduler.
+//!
+//! Start with [`sim::Simulation`] (end-to-end) or `examples/quickstart.rs`.
+
+pub mod autoscaler;
+pub mod capacity;
+pub mod catalog;
+pub mod cluster;
+pub mod config;
+pub mod interference;
+pub mod metrics;
+pub mod model;
+pub mod router;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod traces;
+pub mod util;
+
+/// Repo-relative artifacts directory fallback used by examples/benches.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("JIAGU_ARTIFACTS") {
+        return dir.into();
+    }
+    // walk up from cwd until an `artifacts/` directory is found
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("meta.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! `jiagu` — launcher for the reproduced serverless control plane.
+//!
+//! Subcommands (hand-rolled CLI; no clap offline):
+//!
+//! ```text
+//! jiagu run   [--scheduler jiagu|k8s|gsight|owl] [--trace A|B|C|D|timer|worst]
+//!             [--release 45] [--no-ds] [--no-migration] [--duration 1800]
+//!             [--init cfork|docker|<ms>] [--native] [--config file.json]
+//! jiagu compare [--duration 900]      # all schedulers on trace A
+//! jiagu info                          # artifacts + model summary
+//! ```
+
+use anyhow::{bail, Context, Result};
+use jiagu::config::{InitModel, RunConfig, SchedulerKind};
+use jiagu::sim::{load_predictor, Simulation};
+use jiagu::traces;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+    switches: std::collections::HashSet<String>,
+}
+
+fn parse_args() -> Args {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::HashMap::new();
+    let mut switches = std::collections::HashSet::new();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            // value-taking flag if the next token isn't a flag
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                switches.insert(name.to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { positional, flags, switches }
+}
+
+fn build_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.flags.get("config") {
+        Some(path) => RunConfig::load(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(s) = args.flags.get("scheduler") {
+        cfg.scheduler = SchedulerKind::parse(s)?;
+        if cfg.scheduler != SchedulerKind::Jiagu {
+            cfg.autoscaler.dual_staged = false;
+            cfg.autoscaler.migration = false;
+        }
+    }
+    if let Some(v) = args.flags.get("release") {
+        cfg.autoscaler.release_duration_s = v.parse().context("--release")?;
+    }
+    if let Some(v) = args.flags.get("duration") {
+        cfg.duration_s = v.parse().context("--duration")?;
+    }
+    if let Some(v) = args.flags.get("init") {
+        cfg.init_model = InitModel::parse(v)?;
+    }
+    if let Some(v) = args.flags.get("nodes") {
+        cfg.n_nodes = v.parse().context("--nodes")?;
+    }
+    if let Some(v) = args.flags.get("seed") {
+        cfg.seed = v.parse().context("--seed")?;
+    }
+    if args.switches.contains("no-ds") {
+        cfg.autoscaler.dual_staged = false;
+        cfg.autoscaler.migration = false;
+    }
+    if args.switches.contains("no-migration") {
+        cfg.autoscaler.migration = false;
+    }
+    Ok(cfg)
+}
+
+fn make_trace(
+    cat: &jiagu::catalog::Catalog,
+    name: &str,
+    duration: usize,
+) -> Result<traces::TraceSet> {
+    Ok(match name {
+        "A" | "B" | "C" | "D" => {
+            let idx = (name.as_bytes()[0] - b'A') as usize;
+            traces::paper_traces(cat, duration).swap_remove(idx)
+        }
+        "timer" => traces::timer_trace(cat, duration, 60),
+        "worst" => traces::worstcase_trace(cat, duration, 90, 20),
+        _ => bail!("unknown trace {name:?} (A|B|C|D|timer|worst)"),
+    })
+}
+
+fn print_report(r: &jiagu::sim::RunReport) {
+    println!("== run report: {} on {} ({}s) ==", r.scheduler, r.trace, r.duration_s);
+    println!("  density (inst/node, time-weighted): {:.3}", r.density);
+    println!("  QoS violation rate:                 {:.2}%", r.qos_violation_rate * 100.0);
+    println!(
+        "  scheduling cost: mean {:.3} ms, p99 {:.3} ms over {} calls",
+        r.scheduling_ms_mean, r.scheduling_ms_p99, r.schedule_calls
+    );
+    println!(
+        "  cold start:      mean {:.3} ms, p99 {:.3} ms over {} instances",
+        r.cold_start_ms_mean, r.cold_start_ms_p99, r.instances_started
+    );
+    println!(
+        "  inferences: {:.2}/schedule critical ({} critical, {} async)",
+        r.inferences_per_schedule, r.critical_inferences, r.async_inferences
+    );
+    println!(
+        "  paths: {} fast / {} slow; logical cold starts {}, migrations {}",
+        r.fast_decisions, r.slow_decisions, r.logical_cold_starts, r.migrations
+    );
+    println!(
+        "  released {} / evicted {}; peak nodes {}",
+        r.released, r.evicted, r.peak_nodes
+    );
+}
+
+fn run() -> Result<()> {
+    let args = parse_args();
+    let artifacts = jiagu::artifacts_dir();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("run") | None => {
+            let cfg = build_config(&args)?;
+            let cat = jiagu::catalog::Catalog::load(&artifacts.join("functions.json"))?;
+            let trace_name = args.flags.get("trace").map(|s| s.as_str()).unwrap_or("A");
+            let trace = make_trace(&cat, trace_name, cfg.duration_s)?;
+            let native = args.switches.contains("native");
+            let predictor = load_predictor(&artifacts, native)?;
+            let sim = Simulation::new(cat, cfg, predictor);
+            let report = sim.run(&trace)?;
+            print_report(&report);
+        }
+        Some("compare") => {
+            let cat = jiagu::catalog::Catalog::load(&artifacts.join("functions.json"))?;
+            let duration: usize = args
+                .flags
+                .get("duration")
+                .map(|v| v.parse())
+                .transpose()?
+                .unwrap_or(900);
+            let trace = make_trace(&cat, "A", duration)?;
+            let native = args.switches.contains("native");
+            let predictor = load_predictor(&artifacts, native)?;
+            for kind in [
+                SchedulerKind::Kubernetes,
+                SchedulerKind::Owl,
+                SchedulerKind::Gsight,
+                SchedulerKind::Jiagu,
+            ] {
+                let mut cfg = RunConfig::with_scheduler(kind);
+                cfg.duration_s = duration;
+                let sim = Simulation::new(cat.clone(), cfg, predictor.clone());
+                let report = sim.run(&trace)?;
+                print_report(&report);
+            }
+        }
+        Some("info") => {
+            let cat = jiagu::catalog::Catalog::load(&artifacts.join("functions.json"))?;
+            println!("artifacts: {}", artifacts.display());
+            println!("catalog: {} functions", cat.len());
+            for f in &cat.functions {
+                println!(
+                    "  {:<12} solo {:7.1} ms  qos {:7.1} ms  sat {:6.1} rps",
+                    f.name, f.solo_latency_ms, f.qos_latency_ms, f.saturated_rps
+                );
+            }
+            let predictor = load_predictor(&artifacts, false)?;
+            println!("predictor: PJRT, {} features", predictor.n_features());
+        }
+        Some(other) => bail!("unknown subcommand {other:?} (run|compare|info)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,216 @@
+//! Evaluation metrics: density, QoS violation rate, scheduling cost and
+//! cold-start accounting — the quantities behind Figs. 11–14 and Table 2.
+
+use crate::catalog::{Catalog, FunctionId};
+
+/// Streaming percentile estimator: exact over a retained sample vector
+/// (sample counts here are small enough to keep everything).
+#[derive(Debug, Default, Clone)]
+pub struct Samples {
+    values: Vec<f64>,
+}
+
+impl Samples {
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            0.0
+        } else {
+            self.values.iter().sum::<f64>() / self.values.len() as f64
+        }
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.values.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+        sorted[idx]
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+}
+
+/// Function-density tracker (Fig. 13).
+///
+/// Density = instance-seconds ÷ active-node-seconds, i.e. the
+/// time-weighted average number of deployed instances per in-use node;
+/// the benches normalise it by the K8s scheduler's value (= 1.0).
+#[derive(Debug, Default)]
+pub struct DensityTracker {
+    instance_seconds: f64,
+    node_seconds: f64,
+}
+
+impl DensityTracker {
+    /// Record one tick: `instances` deployed (any state), `active_nodes`
+    /// hosting at least one instance, over `dt` seconds.
+    pub fn record(&mut self, instances: usize, active_nodes: usize, dt_s: f64) {
+        self.instance_seconds += instances as f64 * dt_s;
+        self.node_seconds += active_nodes as f64 * dt_s;
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.node_seconds == 0.0 {
+            0.0
+        } else {
+            self.instance_seconds / self.node_seconds
+        }
+    }
+}
+
+/// QoS violation accounting (Fig. 14a): per function, requests served vs
+/// requests whose window latency exceeded the QoS bound.
+#[derive(Debug, Default)]
+pub struct QosTracker {
+    /// per function: (violating requests, total requests)
+    per_function: Vec<(f64, f64)>,
+}
+
+impl QosTracker {
+    pub fn new(n_functions: usize) -> Self {
+        Self { per_function: vec![(0.0, 0.0); n_functions] }
+    }
+
+    /// Record a measurement window: `requests` served by function `f` at
+    /// measured `latency_ms` against its QoS bound.
+    pub fn record(&mut self, cat: &Catalog, f: FunctionId, requests: f64, latency_ms: f64) {
+        let e = &mut self.per_function[f];
+        e.1 += requests;
+        if latency_ms > cat.get(f).qos_latency_ms {
+            e.0 += requests;
+        }
+    }
+
+    /// Violation rate of one function.
+    pub fn rate(&self, f: FunctionId) -> f64 {
+        let (v, t) = self.per_function[f];
+        if t == 0.0 {
+            0.0
+        } else {
+            v / t
+        }
+    }
+
+    /// Overall violation rate (request-weighted, the paper's metric).
+    pub fn overall(&self) -> f64 {
+        let (v, t) = self
+            .per_function
+            .iter()
+            .fold((0.0, 0.0), |(av, at), (v, t)| (av + v, at + t));
+        if t == 0.0 {
+            0.0
+        } else {
+            v / t
+        }
+    }
+}
+
+/// Scheduling + cold-start cost accounting (Figs. 11/12, Table 2).
+#[derive(Debug, Default)]
+pub struct CostTracker {
+    /// Critical-path decision cost per scheduling call (ms).
+    pub scheduling_ms: Samples,
+    /// Cold-start latency per instance (scheduling + init, ms).
+    pub cold_start_ms: Samples,
+    /// Model inferences on the critical path.
+    pub critical_inferences: u64,
+    /// Model inferences off the critical path (async updates).
+    pub async_inferences: u64,
+    /// Scheduling calls.
+    pub calls: u64,
+    /// Individual instances cold-started.
+    pub instances_started: u64,
+    /// Fast-path / slow-path decision counts.
+    pub fast_decisions: u64,
+    pub slow_decisions: u64,
+}
+
+impl CostTracker {
+    pub fn record_schedule(
+        &mut self,
+        res: &crate::scheduler::ScheduleResult,
+        init_latency_ms: f64,
+    ) {
+        let decision_ms = res.decision_nanos as f64 / 1e6;
+        self.scheduling_ms.push(decision_ms);
+        self.calls += 1;
+        self.critical_inferences += res.critical_inferences;
+        self.async_inferences += res.async_inferences;
+        if res.path() == crate::scheduler::Path::Slow {
+            self.slow_decisions += 1;
+        } else {
+            self.fast_decisions += 1;
+        }
+        for _ in &res.placements {
+            self.cold_start_ms.push(decision_ms + init_latency_ms);
+            self.instances_started += 1;
+        }
+    }
+
+    /// Inferences per scheduling call (Figs. 11a/12 middle series).
+    pub fn inferences_per_schedule(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.critical_inferences as f64 / self.calls as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::tests::test_catalog;
+
+    #[test]
+    fn density_weighted_by_duration() {
+        let mut d = DensityTracker::default();
+        d.record(10, 2, 30.0); // 5 per node for 30 s
+        d.record(20, 2, 10.0); // 10 per node for 10 s
+        // (10*30 + 20*10) / (2*30 + 2*10) = 500/80 = 6.25
+        assert!((d.density() - 6.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn qos_rates() {
+        let cat = test_catalog();
+        let mut q = QosTracker::new(cat.len());
+        let qos0 = cat.get(0).qos_latency_ms;
+        q.record(&cat, 0, 90.0, qos0 * 0.9); // ok
+        q.record(&cat, 0, 10.0, qos0 * 1.5); // violated
+        assert!((q.rate(0) - 0.1).abs() < 1e-12);
+        assert!((q.overall() - 0.1).abs() < 1e-12);
+        assert_eq!(q.rate(1), 0.0);
+    }
+
+    #[test]
+    fn percentiles_exact() {
+        let mut s = Samples::default();
+        for v in 1..=100 {
+            s.push(v as f64);
+        }
+        assert!((s.percentile(0.5) - 50.0).abs() <= 1.0);
+        assert_eq!(s.percentile(1.0), 100.0);
+        assert!((s.mean() - 50.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,132 @@
+//! The 44-dim predictor feature row (contract with the Python trainer).
+//!
+//! ```text
+//! [ P_solo(A), R_A[13], C_A_sat, C_A_cached,
+//!   Σ_i C_i_sat·R_i [13], Σ_i C_i_cached·R_i [13],
+//!   Σ C_i_sat, Σ C_i_cached ]
+//! ```
+
+use crate::catalog::{Catalog, FunctionId};
+use crate::interference::NodeMix;
+
+/// Total feature dimensionality (1 + 13 + 2 + 13 + 13 + 2).
+pub const N_FEATURES: usize = 44;
+
+const N_PROFILE: usize = 13;
+
+/// Build one feature row for (node mix, target function).
+pub fn feature_row(cat: &Catalog, mix: &NodeMix, target: FunctionId) -> Vec<f32> {
+    let b = FeatureBuilder::new(cat, mix);
+    b.row(target)
+}
+
+/// Reusable builder: aggregates the mix once, then emits one row per
+/// target function — the capacity sweep asks for many rows over the same
+/// mix, so the O(mix) aggregation is hoisted out of the per-row path.
+pub struct FeatureBuilder<'a> {
+    cat: &'a Catalog,
+    mix: &'a NodeMix,
+    agg_sat: [f64; N_PROFILE],
+    agg_cached: [f64; N_PROFILE],
+    tot_sat: f64,
+    tot_cached: f64,
+}
+
+impl<'a> FeatureBuilder<'a> {
+    pub fn new(cat: &'a Catalog, mix: &'a NodeMix) -> Self {
+        let mut agg_sat = [0.0; N_PROFILE];
+        let mut agg_cached = [0.0; N_PROFILE];
+        let mut tot_sat = 0.0;
+        let mut tot_cached = 0.0;
+        for (fid, sat, cached) in &mix.entries {
+            let prof = &cat.get(*fid).profile;
+            for j in 0..N_PROFILE {
+                agg_sat[j] += *sat as f64 * prof[j];
+                agg_cached[j] += *cached as f64 * prof[j];
+            }
+            tot_sat += *sat as f64;
+            tot_cached += *cached as f64;
+        }
+        Self { cat, mix, agg_sat, agg_cached, tot_sat, tot_cached }
+    }
+
+    /// Counts of the target function within the mix (0 if absent).
+    fn target_counts(&self, target: FunctionId) -> (f64, f64) {
+        self.mix
+            .entries
+            .iter()
+            .find(|(fid, _, _)| *fid == target)
+            .map(|(_, s, c)| (*s as f64, *c as f64))
+            .unwrap_or((0.0, 0.0))
+    }
+
+    /// Emit the row for `target` into a fresh Vec.
+    pub fn row(&self, target: FunctionId) -> Vec<f32> {
+        let mut out = Vec::with_capacity(N_FEATURES);
+        self.row_into(target, &mut out);
+        out
+    }
+
+    /// Emit the row for `target` into `out` (cleared first) — the
+    /// allocation-free hot-path variant used by the capacity sweep.
+    pub fn row_into(&self, target: FunctionId, out: &mut Vec<f32>) {
+        out.clear();
+        let spec = self.cat.get(target);
+        let (t_sat, t_cached) = self.target_counts(target);
+        out.push(spec.solo_latency_ms as f32);
+        out.extend(spec.profile.iter().map(|v| *v as f32));
+        out.push(t_sat as f32);
+        out.push(t_cached as f32);
+        out.extend(self.agg_sat.iter().map(|v| *v as f32));
+        out.extend(self.agg_cached.iter().map(|v| *v as f32));
+        out.push(self.tot_sat as f32);
+        out.push(self.tot_cached as f32);
+        debug_assert_eq!(out.len(), N_FEATURES);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::{tests::test_spec, Catalog};
+
+    fn cat2() -> Catalog {
+        Catalog::from_functions(vec![test_spec("a", 50.0), test_spec("b", 20.0)])
+    }
+
+    #[test]
+    fn row_has_contract_dims_and_solo_head() {
+        let cat = cat2();
+        let mix = NodeMix::new(vec![(0, 3, 1), (1, 2, 0)]);
+        let row = feature_row(&cat, &mix, 0);
+        assert_eq!(row.len(), N_FEATURES);
+        assert_eq!(row[0], cat.get(0).solo_latency_ms as f32);
+        // target concurrency slots
+        assert_eq!(row[14], 3.0);
+        assert_eq!(row[15], 1.0);
+        // totals at the tail
+        assert_eq!(row[N_FEATURES - 2], 5.0);
+        assert_eq!(row[N_FEATURES - 1], 1.0);
+    }
+
+    #[test]
+    fn absent_target_has_zero_concurrency() {
+        let cat = cat2();
+        let mix = NodeMix::new(vec![(1, 4, 2)]);
+        let row = feature_row(&cat, &mix, 0);
+        assert_eq!(row[14], 0.0);
+        assert_eq!(row[15], 0.0);
+        // but the aggregate still sees the neighbours
+        assert_eq!(row[N_FEATURES - 2], 4.0);
+    }
+
+    #[test]
+    fn builder_rows_match_one_shot() {
+        let cat = cat2();
+        let mix = NodeMix::new(vec![(0, 2, 1), (1, 5, 3)]);
+        let b = FeatureBuilder::new(&cat, &mix);
+        for t in 0..2 {
+            assert_eq!(b.row(t), feature_row(&cat, &mix, t));
+        }
+    }
+}

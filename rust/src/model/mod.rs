@@ -1,0 +1,12 @@
+//! Model-facing glue: the feature builder shared with the Python trainer.
+//!
+//! `features::feature_row` mirrors `python/compile/datagen.py::
+//! feature_vector` exactly (layout documented in `artifacts/meta.json`);
+//! `rust/tests/golden.rs` cross-checks rows against the golden vectors
+//! emitted at `make artifacts`.
+
+pub mod features;
+pub mod monitor;
+
+pub use features::{feature_row, FeatureBuilder, N_FEATURES};
+pub use monitor::AccuracyMonitor;

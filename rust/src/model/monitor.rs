@@ -1,0 +1,143 @@
+//! Online prediction-accuracy monitoring and the unpredictability
+//! fallback (§6): "if the prediction error does not converge after
+//! several iterations, Jiagu disables overcommitment and uses [a]
+//! traditional conservative QoS-unaware policy to schedule the instances
+//! of the unpredictable function on separate nodes".
+//!
+//! The simulator feeds (predicted, measured) pairs per function; the
+//! monitor keeps an exponential moving average of relative error and
+//! flags functions whose error stays above threshold once enough samples
+//! accumulated.  A flagged function can recover (the paper retrains
+//! periodically): if the EMA drops back under half the threshold it is
+//! un-flagged.
+
+use crate::catalog::FunctionId;
+
+/// Per-function online error state.
+#[derive(Debug, Clone, Copy)]
+struct ErrState {
+    ema: f64,
+    samples: u64,
+    flagged: bool,
+}
+
+impl Default for ErrState {
+    fn default() -> Self {
+        Self { ema: 0.0, samples: 0, flagged: false }
+    }
+}
+
+/// Tracks per-function prediction error and unpredictability flags.
+#[derive(Debug)]
+pub struct AccuracyMonitor {
+    state: Vec<ErrState>,
+    /// EMA smoothing factor.
+    pub alpha: f64,
+    /// Error level above which a function is deemed unpredictable.
+    pub threshold: f64,
+    /// Minimum samples before a function may be flagged.
+    pub min_samples: u64,
+}
+
+impl AccuracyMonitor {
+    pub fn new(n_functions: usize) -> Self {
+        Self {
+            state: vec![ErrState::default(); n_functions],
+            alpha: 0.15,
+            threshold: 0.35,
+            min_samples: 5,
+        }
+    }
+
+    /// Record one (predicted, measured) observation for `f`.
+    pub fn record(&mut self, f: FunctionId, predicted_ms: f64, measured_ms: f64) {
+        if measured_ms <= 0.0 {
+            return;
+        }
+        let err = (predicted_ms - measured_ms).abs() / measured_ms;
+        let s = &mut self.state[f];
+        s.samples += 1;
+        s.ema = if s.samples == 1 { err } else { s.ema + self.alpha * (err - s.ema) };
+        if s.samples >= self.min_samples {
+            if s.ema > self.threshold {
+                s.flagged = true;
+            } else if s.ema < 0.5 * self.threshold {
+                // hysteresis: recover only once clearly back in band
+                s.flagged = false;
+            }
+        }
+    }
+
+    /// Current error EMA of `f`.
+    pub fn error(&self, f: FunctionId) -> f64 {
+        self.state[f].ema
+    }
+
+    pub fn samples(&self, f: FunctionId) -> u64 {
+        self.state[f].samples
+    }
+
+    /// Whether `f` should fall back to conservative isolated scheduling.
+    pub fn is_unpredictable(&self, f: FunctionId) -> bool {
+        self.state[f].flagged
+    }
+
+    /// All currently flagged functions.
+    pub fn unpredictable(&self) -> Vec<FunctionId> {
+        self.state
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.flagged)
+            .map(|(f, _)| f)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accurate_function_never_flags() {
+        let mut m = AccuracyMonitor::new(2);
+        for _ in 0..50 {
+            m.record(0, 102.0, 100.0);
+        }
+        assert!(!m.is_unpredictable(0));
+        assert!(m.error(0) < 0.05);
+    }
+
+    #[test]
+    fn diverging_function_flags_after_min_samples() {
+        let mut m = AccuracyMonitor::new(1);
+        for i in 0..20 {
+            m.record(0, 60.0, 100.0); // 40% error
+            if (i as u64) < m.min_samples - 1 {
+                assert!(!m.is_unpredictable(0), "needs min samples first");
+            }
+        }
+        assert!(m.is_unpredictable(0));
+        assert_eq!(m.unpredictable(), vec![0]);
+    }
+
+    #[test]
+    fn flag_recovers_with_hysteresis() {
+        let mut m = AccuracyMonitor::new(1);
+        for _ in 0..20 {
+            m.record(0, 50.0, 100.0);
+        }
+        assert!(m.is_unpredictable(0));
+        // model retrained: error drops — must fall under half threshold
+        for _ in 0..60 {
+            m.record(0, 99.0, 100.0);
+        }
+        assert!(!m.is_unpredictable(0));
+    }
+
+    #[test]
+    fn zero_or_negative_measurements_ignored() {
+        let mut m = AccuracyMonitor::new(1);
+        m.record(0, 50.0, 0.0);
+        assert_eq!(m.samples(0), 0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Request router: dispatches load across a function's instances.
+//!
+//! The router load-balances over **saturated** instances only; **cached**
+//! instances (dual-staged scaling) are excluded from the routing set the
+//! same way the paper's K8s-Service label trick removes them.  A "logical
+//! cold start" is just re-adding a cached instance to the routing set —
+//! the <1 ms operation the autoscaler prefers over a real cold start.
+
+use crate::catalog::FunctionId;
+use crate::cluster::{Cluster, InstanceId, InstanceState};
+use std::collections::HashMap;
+
+/// Routing table: function → serving (saturated) instances.
+#[derive(Debug, Default)]
+pub struct Router {
+    serving: HashMap<FunctionId, Vec<InstanceId>>,
+    /// Count of re-route operations (logical cold starts, releases).
+    pub reroutes: u64,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Instances currently receiving traffic for `f`.
+    pub fn serving(&self, f: FunctionId) -> &[InstanceId] {
+        self.serving.get(&f).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn serving_count(&self, f: FunctionId) -> usize {
+        self.serving(f).len()
+    }
+
+    /// Add a newly started (or logically cold-started) instance.
+    pub fn add(&mut self, f: FunctionId, id: InstanceId) {
+        let v = self.serving.entry(f).or_default();
+        debug_assert!(!v.contains(&id));
+        v.push(id);
+        self.reroutes += 1;
+    }
+
+    /// Remove an instance from the routing set (release or eviction).
+    /// Returns whether it was serving.
+    pub fn remove(&mut self, f: FunctionId, id: InstanceId) -> bool {
+        if let Some(v) = self.serving.get_mut(&f) {
+            let before = v.len();
+            v.retain(|x| *x != id);
+            if v.len() != before {
+                self.reroutes += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Per-instance RPS under equal load balancing of `total_rps`.
+    pub fn per_instance_rps(&self, f: FunctionId, total_rps: f64) -> f64 {
+        let n = self.serving_count(f);
+        if n == 0 {
+            0.0
+        } else {
+            total_rps / n as f64
+        }
+    }
+
+    /// Consistency check against cluster state: the routing set must be
+    /// exactly the saturated instances of each function.
+    pub fn check_consistent(&self, cluster: &Cluster) -> anyhow::Result<()> {
+        use anyhow::ensure;
+        for (f, serving) in &self.serving {
+            for id in serving {
+                let inst = cluster
+                    .instance(*id)
+                    .ok_or_else(|| anyhow::anyhow!("routing to evicted instance {id}"))?;
+                ensure!(
+                    inst.state == InstanceState::Saturated,
+                    "instance {id} routed but {:?}",
+                    inst.state
+                );
+                ensure!(inst.function == *f, "instance {id} routed to wrong function");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_remove_balance() {
+        let mut r = Router::new();
+        r.add(0, 1);
+        r.add(0, 2);
+        assert_eq!(r.serving_count(0), 2);
+        assert_eq!(r.per_instance_rps(0, 100.0), 50.0);
+        assert!(r.remove(0, 1));
+        assert!(!r.remove(0, 1), "double remove is a no-op");
+        assert_eq!(r.per_instance_rps(0, 100.0), 100.0);
+        assert_eq!(r.per_instance_rps(1, 100.0), 0.0);
+    }
+
+    #[test]
+    fn reroute_counting() {
+        let mut r = Router::new();
+        r.add(0, 1);
+        r.remove(0, 1);
+        assert_eq!(r.reroutes, 2);
+    }
+}

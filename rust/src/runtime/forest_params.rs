@@ -1,0 +1,171 @@
+//! Flattened random-forest parameters loaded from `artifacts/forest.json`.
+//!
+//! Layout matches `python/compile/forest.py::flatten`: perfect depth-D
+//! binary trees with level-order internal arrays and a dense leaf array.
+//! Thresholds are already standardised (the HLO graph z-scores features
+//! before traversal), with `1e30` standing in for +inf padding.
+
+use crate::util::json::Json;
+use anyhow::{ensure, Result};
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct ForestParams {
+    pub n_trees: usize,
+    pub depth: usize,
+    pub n_features: usize,
+    /// `[T][2^D - 1]` split feature indices (level order).
+    pub feature: Vec<Vec<i32>>,
+    /// `[T][2^D - 1]` standardised split thresholds (1e30 = +inf pad).
+    pub threshold: Vec<Vec<f32>>,
+    /// `[T][2^D]` leaf values in log-latency space.
+    pub leaf: Vec<Vec<f32>>,
+    /// `[F]` feature standardisation mean.
+    pub mean: Vec<f32>,
+    /// `[F]` feature standardisation std (clamped away from 0).
+    pub std: Vec<f32>,
+    /// Held-out relative error recorded at training time (Fig. 15a).
+    pub test_error: f64,
+    /// Wall-clock training time recorded at training time (Fig. 17a).
+    pub fit_seconds: f64,
+}
+
+impl ForestParams {
+    pub fn load(path: &Path) -> Result<Self> {
+        let j = Json::parse_file(path)?;
+        let params = Self::from_json(&j)?;
+        params.validate()?;
+        Ok(params)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mat_f32 = |key: &str| -> Result<Vec<Vec<f32>>> {
+            j.get(key)?
+                .as_arr()?
+                .iter()
+                .map(|row| row.f32_vec())
+                .collect()
+        };
+        let mat_i32 = |key: &str| -> Result<Vec<Vec<i32>>> {
+            j.get(key)?
+                .as_arr()?
+                .iter()
+                .map(|row| row.i32_vec())
+                .collect()
+        };
+        Ok(Self {
+            n_trees: j.get("n_trees")?.as_usize()?,
+            depth: j.get("depth")?.as_usize()?,
+            n_features: j.get("n_features")?.as_usize()?,
+            feature: mat_i32("feature")?,
+            threshold: mat_f32("threshold")?,
+            leaf: mat_f32("leaf")?,
+            mean: j.get("mean")?.f32_vec()?,
+            std: j.get("std")?.f32_vec()?,
+            test_error: j.opt("test_error").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0),
+            fit_seconds: j.opt("fit_seconds").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0),
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let n_internal = (1usize << self.depth) - 1;
+        let n_leaves = 1usize << self.depth;
+        ensure!(self.feature.len() == self.n_trees, "feature rows != n_trees");
+        ensure!(self.threshold.len() == self.n_trees, "threshold rows != n_trees");
+        ensure!(self.leaf.len() == self.n_trees, "leaf rows != n_trees");
+        ensure!(self.mean.len() == self.n_features, "mean len != n_features");
+        ensure!(self.std.len() == self.n_features, "std len != n_features");
+        for t in 0..self.n_trees {
+            ensure!(self.feature[t].len() == n_internal, "tree {t} internal size");
+            ensure!(self.threshold[t].len() == n_internal, "tree {t} threshold size");
+            ensure!(self.leaf[t].len() == n_leaves, "tree {t} leaf size");
+            for &f in &self.feature[t] {
+                ensure!(
+                    (f as usize) < self.n_features,
+                    "tree {t} split feature {f} out of range"
+                );
+            }
+        }
+        ensure!(self.std.iter().all(|s| *s > 0.0), "std must be positive");
+        Ok(())
+    }
+
+    /// Number of internal nodes per tree.
+    pub fn n_internal(&self) -> usize {
+        (1 << self.depth) - 1
+    }
+
+    /// Flat row-major copies for literal/buffer creation.
+    pub fn flat_feature(&self) -> Vec<i32> {
+        self.feature.iter().flatten().copied().collect()
+    }
+
+    pub fn flat_threshold(&self) -> Vec<f32> {
+        self.threshold.iter().flatten().copied().collect()
+    }
+
+    pub fn flat_leaf(&self) -> Vec<f32> {
+        self.leaf.iter().flatten().copied().collect()
+    }
+
+    /// Standardise one feature row in place (z-score).
+    pub fn standardise(&self, row: &mut [f32]) {
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = (*v - self.mean[i]) / self.std[i];
+        }
+    }
+
+    /// A tiny synthetic forest for dependency-free tests: `n_trees` stumps
+    /// that split on feature 0 around 0.0 (standardised) and return
+    /// log-slowdowns `lo`/`hi` (prediction = solo_latency * exp(leaf)).
+    pub fn synthetic_stub(n_features: usize, lo: f32, hi: f32) -> Self {
+        let depth = 2;
+        let n_internal = 3;
+        let _n_leaves = 4;
+        let n_trees = 4;
+        Self {
+            n_trees,
+            depth,
+            n_features,
+            feature: vec![vec![0; n_internal]; n_trees],
+            threshold: vec![vec![0.0, 1e30, 1e30]; n_trees],
+            leaf: vec![vec![lo, lo, hi, hi]; n_trees],
+            mean: vec![0.0; n_features],
+            std: vec![1.0; n_features],
+            test_error: 0.0,
+            fit_seconds: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_stub_validates() {
+        ForestParams::synthetic_stub(44, 1.0, 2.0).validate().unwrap();
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let src = r#"{
+            "n_trees": 1, "depth": 1, "n_features": 2,
+            "feature": [[1]], "threshold": [[0.5]], "leaf": [[1.0, 2.0]],
+            "mean": [0.0, 0.0], "std": [1.0, 1.0],
+            "test_error": 0.1, "fit_seconds": 3.2
+        }"#;
+        let p = ForestParams::from_json(&Json::parse(src).unwrap()).unwrap();
+        p.validate().unwrap();
+        assert_eq!(p.feature[0], vec![1]);
+        assert_eq!(p.leaf[0], vec![1.0, 2.0]);
+        assert_eq!(p.test_error, 0.1);
+    }
+
+    #[test]
+    fn validate_rejects_bad_feature_index() {
+        let mut p = ForestParams::synthetic_stub(4, 0.0, 1.0);
+        p.feature[0][0] = 99;
+        assert!(p.validate().is_err());
+    }
+}

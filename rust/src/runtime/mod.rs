@@ -1,0 +1,58 @@
+//! PJRT runtime: loads the AOT-compiled predictor and serves batched
+//! inference to the scheduler.
+//!
+//! `make artifacts` (Python, build time only) lowers the L2 JAX graph —
+//! feature standardisation → Pallas forest traversal → exp — to **HLO
+//! text**, one module per batch-size variant (`model_b{1,8,64,256}.hlo.txt`).
+//! This module compiles each variant once on the PJRT CPU client at
+//! startup, uploads the forest parameters to device buffers once, and then
+//! serves predictions by padding each request batch up to the smallest
+//! compiled variant that fits.
+//!
+//! HLO *text* (not serialized `HloModuleProto`) is the interchange format:
+//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids.
+
+mod forest_params;
+mod native;
+mod predictor;
+
+pub use forest_params::ForestParams;
+pub use native::NativeForest;
+pub use predictor::{NativeForestPredictor, PjrtPredictor, Predictor};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Global counters for model-inference accounting (Figs. 11/12 report
+/// inferences-per-schedule; the schedulers bump these).
+#[derive(Debug, Default)]
+pub struct InferenceStats {
+    /// Number of predictor invocations (each is one batched PJRT execute).
+    pub calls: AtomicU64,
+    /// Total rows across all invocations.
+    pub rows: AtomicU64,
+    /// Cumulative wall-clock nanoseconds spent inside the predictor.
+    pub nanos: AtomicU64,
+}
+
+impl InferenceStats {
+    pub fn record(&self, rows: usize, nanos: u64) {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        self.nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.calls.load(Ordering::Relaxed),
+            self.rows.load(Ordering::Relaxed),
+            self.nanos.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn reset(&self) {
+        self.calls.store(0, Ordering::Relaxed);
+        self.rows.store(0, Ordering::Relaxed);
+        self.nanos.store(0, Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,56 @@
+//! Pure-Rust forest evaluation.
+//!
+//! Semantically identical to the PJRT path (validated against
+//! `artifacts/predict_check.json`).  Used as (a) a perf baseline for the
+//! runtime benches, (b) a dependency-free predictor for unit tests and
+//! proptest so the full coordinator can be exercised without artifacts.
+
+use super::forest_params::ForestParams;
+
+/// Traverses the perfect-tree tensors directly on the CPU.
+#[derive(Debug, Clone)]
+pub struct NativeForest {
+    params: ForestParams,
+    n_internal: usize,
+}
+
+impl NativeForest {
+    pub fn new(params: ForestParams) -> Self {
+        let n_internal = params.n_internal();
+        Self { params, n_internal }
+    }
+
+    pub fn params(&self) -> &ForestParams {
+        &self.params
+    }
+
+    /// Predict latency (ms) for a batch of raw (un-standardised) feature
+    /// rows, each of length `n_features`.
+    pub fn predict(&self, rows: &[Vec<f32>]) -> Vec<f32> {
+        rows.iter().map(|r| self.predict_one(r)).collect()
+    }
+
+    pub fn predict_one(&self, row: &[f32]) -> f32 {
+        debug_assert_eq!(row.len(), self.params.n_features);
+        // standardise once into a stack-friendly buffer
+        let mut x = [0f32; 128];
+        let x = &mut x[..row.len()];
+        for i in 0..row.len() {
+            x[i] = (row[i] - self.params.mean[i]) / self.params.std[i];
+        }
+        let mut acc = 0f64;
+        for t in 0..self.params.n_trees {
+            let feat = &self.params.feature[t];
+            let thr = &self.params.threshold[t];
+            let mut idx = 0usize;
+            for _ in 0..self.params.depth {
+                let f = feat[idx] as usize;
+                let go_right = x[f] > thr[idx];
+                idx = 2 * idx + 1 + go_right as usize;
+            }
+            acc += self.params.leaf[t][idx - self.n_internal] as f64;
+        }
+        // leaves are log-slowdown; latency = solo (raw feature 0) * exp(.)
+        row[0] * (acc / self.params.n_trees as f64).exp() as f32
+    }
+}

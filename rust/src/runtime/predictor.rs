@@ -1,0 +1,248 @@
+//! The PJRT-backed predictor: compile-once, pad-and-execute-batched.
+
+use super::forest_params::ForestParams;
+use super::native::NativeForest;
+use super::InferenceStats;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+use std::time::Instant;
+
+/// A latency predictor: raw feature rows in, P90 latency (ms) out.
+///
+/// Two implementations: [`PjrtPredictor`] (the production path — AOT HLO
+/// through the PJRT CPU client) and [`NativeForest`] via this blanket impl
+/// (tests / perf baseline).
+pub trait Predictor: Send + Sync {
+    /// Batched prediction; one output per input row.
+    fn predict(&self, rows: &[Vec<f32>]) -> Result<Vec<f32>>;
+
+    /// Inference accounting shared with the schedulers.
+    fn stats(&self) -> &InferenceStats;
+
+    fn n_features(&self) -> usize;
+}
+
+impl Predictor for NativeForestPredictor {
+    fn predict(&self, rows: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let t0 = Instant::now();
+        let out = self.forest.predict(rows);
+        self.stats.record(rows.len(), t0.elapsed().as_nanos() as u64);
+        Ok(out)
+    }
+
+    fn stats(&self) -> &InferenceStats {
+        &self.stats
+    }
+
+    fn n_features(&self) -> usize {
+        self.forest.params().n_features
+    }
+}
+
+/// [`NativeForest`] wrapped with inference accounting.
+pub struct NativeForestPredictor {
+    forest: NativeForest,
+    stats: InferenceStats,
+}
+
+impl NativeForestPredictor {
+    pub fn new(params: ForestParams) -> Self {
+        Self { forest: NativeForest::new(params), stats: InferenceStats::default() }
+    }
+}
+
+/// One compiled batch-size variant.
+struct Variant {
+    batch: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The production predictor: executes the AOT HLO modules on the PJRT CPU
+/// client.  Thread-safe behind a mutex (PJRT executions are serialized per
+/// client anyway on the single-device CPU backend).
+pub struct PjrtPredictor {
+    client: xla::PjRtClient,
+    variants: Vec<Variant>, // sorted ascending by batch
+    /// Device buffers for (mean, std, feature, threshold, leaf), uploaded
+    /// once and shared by every variant; only the feature batch is
+    /// transferred per call.
+    fixed: Vec<xla::PjRtBuffer>,
+    /// Host literals backing `fixed`.  MUST outlive the buffers: the
+    /// TfrtCpuClient copies literals host->device *asynchronously* on a
+    /// worker thread; dropping the literal before the copy lands is a
+    /// use-after-free (observed as a flaky SIGSEGV in
+    /// `AbstractTfrtCpuBuffer::CopyFromLiteral`).
+    fixed_literals: Vec<xla::Literal>,
+    params: ForestParams,
+    stats: InferenceStats,
+    lock: std::sync::Mutex<()>,
+}
+
+// SAFETY: the `xla` crate wraps PJRT handles in `Rc` + raw pointers and is
+// therefore not auto-Send/Sync, but the underlying PJRT CPU client is
+// thread-safe and this type upholds the required discipline itself:
+// `client`/`variants` are only touched (a) in `load`/`swap_forest`, which
+// take exclusive access, and (b) in `run`, which is serialised behind
+// `lock`.  The internal `Rc` refcounts are never mutated concurrently
+// because no `PjRtClient` clone ever escapes this struct.
+unsafe impl Send for PjrtPredictor {}
+unsafe impl Sync for PjrtPredictor {}
+
+impl PjrtPredictor {
+    /// Load `forest.json` + every `model_b*.hlo.txt` under `artifacts_dir`.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let params = ForestParams::load(&artifacts_dir.join("forest.json"))?;
+        let meta = crate::util::json::Json::parse_file(&artifacts_dir.join("meta.json"))
+            .context("reading meta.json — run `make artifacts` first")?;
+        let batches: Vec<usize> = meta
+            .get("batch_variants")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<_>>()?;
+        let client = xla::PjRtClient::cpu()?;
+        // NOTE: compile *all* modules before the first host->device
+        // transfer — interleaving `buffer_from_host_literal` with
+        // `compile` segfaults inside xla_extension 0.5.1 (empirically
+        // reproducible; the buffers clobber state the compiler reuses).
+        let mut variants = Vec::new();
+        for b in batches {
+            let path = artifacts_dir.join(format!("model_b{b}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            variants.push(Variant { batch: b, exe });
+        }
+        variants.sort_by_key(|v| v.batch);
+        if variants.is_empty() {
+            bail!("no model_b*.hlo.txt variants found in {}", artifacts_dir.display());
+        }
+        let (fixed, fixed_literals) = Self::upload_fixed(&client, &params)?;
+        Ok(Self {
+            client,
+            variants,
+            fixed,
+            fixed_literals,
+            params,
+            stats: InferenceStats::default(),
+            lock: std::sync::Mutex::new(()),
+        })
+    }
+
+    /// Upload (mean, std, feature, threshold, leaf) once. HLO parameter
+    /// order follows `model.predict_latency`: x, mean, std, feature,
+    /// threshold, leaf — `fixed` holds params 1..5.  Returns the buffers
+    /// *and* the backing literals, which the caller must keep alive (see
+    /// `fixed_literals`).
+    fn upload_fixed(
+        client: &xla::PjRtClient,
+        p: &ForestParams,
+    ) -> Result<(Vec<xla::PjRtBuffer>, Vec<xla::Literal>)> {
+        let n_int = p.n_internal() as i64;
+        let n_leaf = (1i64 << p.depth) as i64;
+        let t = p.n_trees as i64;
+        let lits = vec![
+            xla::Literal::vec1(&p.mean),
+            xla::Literal::vec1(&p.std),
+            xla::Literal::vec1(&p.flat_feature()).reshape(&[t, n_int])?,
+            xla::Literal::vec1(&p.flat_threshold()).reshape(&[t, n_int])?,
+            xla::Literal::vec1(&p.flat_leaf()).reshape(&[t, n_leaf])?,
+        ];
+        let bufs = lits
+            .iter()
+            .map(|l| Ok(client.buffer_from_host_literal(None, l)?))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((bufs, lits))
+    }
+
+    pub fn params(&self) -> &ForestParams {
+        &self.params
+    }
+
+    /// Batch sizes of the compiled variants (ascending).
+    pub fn batch_variants(&self) -> Vec<usize> {
+        self.variants.iter().map(|v| v.batch).collect()
+    }
+
+    /// Hot-swap a retrained forest (the paper's periodic retraining, §6):
+    /// re-upload parameter buffers without recompiling the executables.
+    pub fn swap_forest(&mut self, params: ForestParams) -> Result<()> {
+        anyhow::ensure!(
+            params.n_trees == self.params.n_trees
+                && params.depth == self.params.depth
+                && params.n_features == self.params.n_features,
+            "retrained forest must keep the compiled shapes"
+        );
+        let (fixed, fixed_literals) = Self::upload_fixed(&self.client, &params)?;
+        // drop the old buffers only after the new upload is in flight;
+        // the old literals stay alive until this assignment completes
+        self.fixed = fixed;
+        self.fixed_literals = fixed_literals;
+        self.params = params;
+        Ok(())
+    }
+
+    /// Execute one batch over the compiled variants with **greedy
+    /// chunking**: take the largest variant that fits the remainder, so
+    /// an 84-row sweep runs as 64+16+8(pad 4) instead of one padded
+    /// 256-row call.  (§Perf: this cut the capacity sweep ~2.6x — padding
+    /// waste dominated the PJRT execution time.)
+    fn run(&self, rows: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let f = self.params.n_features;
+        let mut out = Vec::with_capacity(rows.len());
+        let mut off = 0;
+        while off < rows.len() {
+            let remaining = rows.len() - off;
+            // largest variant <= remaining, else the smallest that fits
+            let v = self
+                .variants
+                .iter()
+                .rev()
+                .find(|v| v.batch <= remaining)
+                .or_else(|| self.variants.iter().find(|v| v.batch >= remaining))
+                .unwrap_or_else(|| self.variants.last().unwrap());
+            let chunk = remaining.min(v.batch);
+            // pad to the variant's batch
+            let mut flat = vec![0f32; v.batch * f];
+            for (i, row) in rows[off..off + chunk].iter().enumerate() {
+                anyhow::ensure!(row.len() == f, "feature row has wrong dim");
+                flat[i * f..(i + 1) * f].copy_from_slice(row);
+            }
+            let x = self
+                .client
+                .buffer_from_host_buffer(&flat, &[v.batch, f], None)?;
+            let mut args: Vec<&xla::PjRtBuffer> = vec![&x];
+            args.extend(self.fixed.iter());
+            let result = v.exe.execute_b(&args)?[0][0].to_literal_sync()?;
+            let tuple = result.to_tuple1()?; // lowered with return_tuple=True
+            let vals = tuple.to_vec::<f32>()?;
+            out.extend_from_slice(&vals[..chunk]);
+            off += chunk;
+        }
+        Ok(out)
+    }
+}
+
+impl Predictor for PjrtPredictor {
+    fn predict(&self, rows: &[Vec<f32>]) -> Result<Vec<f32>> {
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let _guard = self.lock.lock().unwrap();
+        let t0 = Instant::now();
+        let out = self.run(rows)?;
+        self.stats.record(rows.len(), t0.elapsed().as_nanos() as u64);
+        Ok(out)
+    }
+
+    fn stats(&self) -> &InferenceStats {
+        &self.stats
+    }
+
+    fn n_features(&self) -> usize {
+        self.params.n_features
+    }
+}

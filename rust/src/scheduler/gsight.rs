@@ -1,0 +1,209 @@
+//! Gsight-style baseline: a model-based QoS-aware scheduler that runs
+//! inference **on the critical path of every decision** (the comparison
+//! point for Figs. 11/12 and Table 2).
+//!
+//! Port notes: Gsight [SC'21] predicts per-instance performance under
+//! partial interference with an incremental global model and validates
+//! candidate placements at schedule time.  Our port keeps that decision
+//! structure — per-instance scheduling, QoS validation of the target plus
+//! all colocated functions via a synchronous batched inference per
+//! candidate node — while sharing Jiagu's predictor so the *policy*
+//! difference (when inference happens), not model quality, drives the
+//! comparison (same substitution the paper made with its own port).
+
+use super::{candidate_order, Placement, ScheduleResult, Scheduler};
+use crate::catalog::{Catalog, FunctionId};
+use crate::cluster::{Cluster, NodeId};
+use crate::interference::NodeMix;
+use crate::model::features::FeatureBuilder;
+use crate::runtime::Predictor;
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+pub struct GsightScheduler {
+    predictor: Arc<dyn Predictor>,
+    /// Per-node instance cap from actual memory (same bound Jiagu uses).
+    pub max_instances_per_node: u32,
+    /// Same admission margin Jiagu's capacity sweep applies.
+    pub qos_headroom: f64,
+}
+
+impl GsightScheduler {
+    /// Candidate nodes validated per decision (one batched inference).
+    const CANDIDATE_FANOUT: usize = 24;
+
+    pub fn new(predictor: Arc<dyn Predictor>) -> Self {
+        Self { predictor, max_instances_per_node: 40, qos_headroom: 0.95 }
+    }
+
+    /// Feature rows + QoS bounds for "mix + one more saturated instance
+    /// of `function`" on one node.
+    fn candidate_rows(
+        &self,
+        cat: &Catalog,
+        mix: &NodeMix,
+        function: FunctionId,
+        rows: &mut Vec<Vec<f32>>,
+        qos: &mut Vec<f64>,
+    ) -> usize {
+        let mut entries = mix.entries.clone();
+        match entries.iter_mut().find(|(f, _, _)| *f == function) {
+            Some(e) => e.1 += 1,
+            None => entries.push((function, 1, 0)),
+        }
+        let candidate = NodeMix::new(entries);
+        let builder = FeatureBuilder::new(cat, &candidate);
+        let mut n = 0;
+        for (f, sat, _) in &candidate.entries {
+            if *sat == 0 {
+                continue;
+            }
+            let mut r = Vec::with_capacity(crate::model::N_FEATURES);
+            builder.row_into(*f, &mut r);
+            rows.push(r);
+            qos.push(self.qos_headroom * cat.get(*f).qos_latency_ms);
+            n += 1;
+        }
+        n
+    }
+
+    /// Validate the top candidate nodes with **one** batched inference
+    /// (the port's per-decision cost is therefore ~1 model call — the
+    /// structure the paper's 21.78 ms average reflects) and return the
+    /// first feasible node.
+    fn pick_node(
+        &self,
+        cat: &Catalog,
+        cluster: &Cluster,
+        function: FunctionId,
+        exclude: Option<NodeId>,
+    ) -> Result<Option<NodeId>> {
+        let mut candidates: Vec<NodeId> = candidate_order(cluster, function)
+            .into_iter()
+            .filter(|n| Some(*n) != exclude)
+            .filter(|n| {
+                (cluster.nodes[*n].instances.len() as u32) < self.max_instances_per_node
+            })
+            .take(Self::CANDIDATE_FANOUT)
+            .collect();
+        if candidates.is_empty() {
+            return Ok(None);
+        }
+        let mut rows = Vec::new();
+        let mut qos = Vec::new();
+        let mut spans = Vec::new();
+        for node in &candidates {
+            let n = self.candidate_rows(cat, &cluster.mix(*node), function, &mut rows, &mut qos);
+            spans.push(n);
+        }
+        let preds = self.predictor.predict(&rows)?;
+        let mut off = 0;
+        for (i, n) in spans.iter().enumerate() {
+            let ok = (off..off + n).all(|j| (preds[j] as f64) <= qos[j]);
+            if ok {
+                return Ok(Some(candidates.swap_remove(i)));
+            }
+            off += n;
+        }
+        Ok(None)
+    }
+}
+
+impl Scheduler for GsightScheduler {
+    fn name(&self) -> &'static str {
+        "gsight"
+    }
+
+    fn schedule(
+        &mut self,
+        cat: &Catalog,
+        cluster: &mut Cluster,
+        function: FunctionId,
+        count: u32,
+        now_ms: f64,
+    ) -> Result<ScheduleResult> {
+        let mut res = ScheduleResult::default();
+        let t0 = Instant::now();
+        let (calls0, _, _) = self.predictor.stats().snapshot();
+        // per-instance decisions: no pre-decision, no batching
+        for _ in 0..count {
+            let node = match self.pick_node(cat, cluster, function, None)? {
+                Some(n) => n,
+                None => {
+                    let node = cluster.add_node();
+                    res.nodes_added += 1;
+                    // still validate (solo on an empty node is trivially
+                    // feasible, but the policy pays the inference)
+                    let _ = self.pick_node(cat, cluster, function, None)?;
+                    node
+                }
+            };
+            let id = cluster.place(cat, function, node, now_ms);
+            res.placements.push(Placement { instance: id, node });
+        }
+        let (calls1, _, _) = self.predictor.stats().snapshot();
+        res.critical_inferences = calls1 - calls0;
+        res.slow_path_used = true;
+        res.decision_nanos = t0.elapsed().as_nanos() as u64;
+        Ok(res)
+    }
+
+    fn on_node_changed(
+        &mut self,
+        _cat: &Catalog,
+        _cluster: &Cluster,
+        _node: NodeId,
+        _now_ms: f64,
+    ) -> Result<u64> {
+        Ok(0) // stateless: nothing to refresh
+    }
+
+    fn find_feasible_node(
+        &mut self,
+        cat: &Catalog,
+        cluster: &Cluster,
+        function: FunctionId,
+        exclude: NodeId,
+    ) -> Result<Option<NodeId>> {
+        self.pick_node(cat, cluster, function, Some(exclude))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::tests::test_catalog;
+    use crate::runtime::{ForestParams, NativeForestPredictor};
+
+    #[test]
+    fn every_decision_pays_inference() {
+        let cat = test_catalog();
+        // slowdown 1.05x solo: always admits
+        let pred: Arc<dyn Predictor> = Arc::new(NativeForestPredictor::new(
+            ForestParams::synthetic_stub(crate::model::N_FEATURES, 0.05, 0.05),
+        ));
+        let mut cluster = Cluster::new(2);
+        let mut s = GsightScheduler::new(pred);
+        let r = s.schedule(&cat, &mut cluster, 0, 4, 0.0).unwrap();
+        assert_eq!(r.placements.len(), 4);
+        // one inference per instance minimum (no pre-decision batching)
+        assert!(r.critical_inferences >= 4, "got {}", r.critical_inferences);
+        assert_eq!(r.path(), super::super::Path::Slow);
+    }
+
+    #[test]
+    fn rejects_overloaded_node_and_spills() {
+        let cat = test_catalog();
+        // predictor that always predicts QoS violation (huge log-slowdown)
+        let pred: Arc<dyn Predictor> = Arc::new(NativeForestPredictor::new(
+            ForestParams::synthetic_stub(crate::model::N_FEATURES, 20.0, 20.0),
+        ));
+        let mut cluster = Cluster::new(1);
+        let mut s = GsightScheduler::new(pred);
+        let r = s.schedule(&cat, &mut cluster, 0, 2, 0.0).unwrap();
+        // nothing validates, so each instance forces a fresh node
+        assert_eq!(r.nodes_added, 2);
+        assert_eq!(r.placements.len(), 2);
+    }
+}

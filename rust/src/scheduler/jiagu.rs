@@ -1,0 +1,408 @@
+//! The Jiagu pre-decision scheduler (§4).
+//!
+//! * **Fast path**: the incoming function already has a capacity entry on
+//!   a candidate node → decide by comparing `capacity` with the current
+//!   instance count.  No model inference on the critical path.
+//! * **Slow path**: no entry → one batched capacity sweep (one inference)
+//!   on the critical path, then decide.
+//! * **Asynchronous update** (§4.3): every placement/eviction triggers a
+//!   full-table recompute *off* the critical path; entries therefore
+//!   already encode neighbour QoS validation, so placement never needs a
+//!   synchronous validation step.
+//! * **Concurrency-aware batching** (§4.4): a spike of `count` instances
+//!   of one function is admitted with a single table check and triggers a
+//!   single asynchronous update.
+
+use super::{candidate_order, Placement, ScheduleResult, Scheduler};
+use crate::capacity::{self, CapacityConfig, CapacityTable};
+use crate::catalog::{Catalog, FunctionId};
+use crate::cluster::{Cluster, NodeId};
+use crate::runtime::Predictor;
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+pub struct JiaguScheduler {
+    predictor: Arc<dyn Predictor>,
+    cfg: CapacityConfig,
+    tables: Vec<CapacityTable>,
+    /// Count of fast/slow path decisions (Fig. 11/12 accounting).
+    pub fast_decisions: u64,
+    pub slow_decisions: u64,
+    /// Functions under the §6 unpredictability fallback: scheduled
+    /// conservatively on nodes dedicated to that function, packed only to
+    /// the QoS-unaware request limit (no overcommitment).
+    isolated: std::collections::HashSet<FunctionId>,
+}
+
+impl JiaguScheduler {
+    pub fn new(predictor: Arc<dyn Predictor>, cfg: CapacityConfig, n_nodes: usize) -> Self {
+        Self {
+            predictor,
+            cfg,
+            tables: vec![CapacityTable::default(); n_nodes],
+            fast_decisions: 0,
+            slow_decisions: 0,
+            isolated: std::collections::HashSet::new(),
+        }
+    }
+
+    /// Apply / clear the §6 unpredictability fallback for a function.
+    pub fn set_isolated(&mut self, f: FunctionId, isolated: bool) {
+        if isolated {
+            self.isolated.insert(f);
+        } else {
+            self.isolated.remove(&f);
+        }
+    }
+
+    pub fn is_isolated(&self, f: FunctionId) -> bool {
+        self.isolated.contains(&f)
+    }
+
+    /// Conservative path for unpredictable functions: place only on nodes
+    /// hosting nothing but `function`, packed to the request limit.
+    fn schedule_isolated(
+        &mut self,
+        cat: &Catalog,
+        cluster: &mut Cluster,
+        function: FunctionId,
+        count: u32,
+        now_ms: f64,
+        res: &mut ScheduleResult,
+    ) {
+        let limit = cat.request_packing_limit(function);
+        let mut remaining = count;
+        while remaining > 0 {
+            let node = (0..cluster.n_nodes())
+                .find(|n| {
+                    let mix = cluster.mix(*n);
+                    let dedicated = mix
+                        .entries
+                        .iter()
+                        .all(|(f, s, c)| *f == function || s + c == 0);
+                    let total = cluster.nodes[*n].instances.len() as u32;
+                    dedicated && total < limit
+                })
+                .unwrap_or_else(|| {
+                    res.nodes_added += 1;
+                    cluster.add_node()
+                });
+            if self.tables.len() < cluster.n_nodes() {
+                self.ensure_tables(cluster.n_nodes());
+            }
+            let fit = (limit - cluster.nodes[node].instances.len() as u32).min(remaining);
+            let fit = fit.max(1);
+            for _ in 0..fit.min(remaining) {
+                let id = cluster.place(cat, function, node, now_ms);
+                res.placements.push(Placement { instance: id, node });
+            }
+            remaining -= fit.min(remaining);
+        }
+    }
+
+    pub fn capacity_table(&self, node: NodeId) -> &CapacityTable {
+        &self.tables[node]
+    }
+
+    pub fn config(&self) -> &CapacityConfig {
+        &self.cfg
+    }
+
+    fn ensure_tables(&mut self, n_nodes: usize) {
+        while self.tables.len() < n_nodes {
+            self.tables.push(CapacityTable::default());
+        }
+    }
+
+    /// Asynchronous update body: recompute the node's capacity table
+    /// under its current mix.  Entries are kept for (a) every function in
+    /// the node's mix and (b) previously tabled functions still deployed
+    /// *somewhere* in the cluster — their next arrival here then hits the
+    /// fast path.  Functions fully scaled to zero cluster-wide drop out
+    /// (which is what makes the paper's 0↔1-concurrency worst case all
+    /// slow paths).  Returns (nanos, inferences).
+    fn async_update(
+        &mut self,
+        cat: &Catalog,
+        cluster: &Cluster,
+        node: NodeId,
+    ) -> Result<(u64, u64)> {
+        let t0 = Instant::now();
+        let (calls0, _, _) = self.predictor.stats().snapshot();
+        let mix = cluster.mix(node);
+        let version = self.tables[node].bump_version();
+        let mut targets: Vec<crate::catalog::FunctionId> =
+            mix.entries.iter().map(|(f, _, _)| *f).collect();
+        for (f, _) in self.tables[node].iter() {
+            if !targets.contains(f) && cluster.deployed_anywhere(*f) {
+                targets.push(*f);
+            }
+        }
+        let mut entries = std::collections::HashMap::new();
+        for f in targets {
+            let cap =
+                capacity::compute_capacity(cat, &mix, f, self.predictor.as_ref(), &self.cfg)?;
+            entries.insert(f, capacity::CapacityEntry { capacity: cap, mix_version: version });
+        }
+        self.tables[node].replace(entries);
+        let (calls1, _, _) = self.predictor.stats().snapshot();
+        Ok((t0.elapsed().as_nanos() as u64, calls1 - calls0))
+    }
+}
+
+impl Scheduler for JiaguScheduler {
+    fn name(&self) -> &'static str {
+        "jiagu"
+    }
+
+    fn as_jiagu_mut(&mut self) -> Option<&mut JiaguScheduler> {
+        Some(self)
+    }
+
+    fn schedule(
+        &mut self,
+        cat: &Catalog,
+        cluster: &mut Cluster,
+        function: FunctionId,
+        count: u32,
+        now_ms: f64,
+    ) -> Result<ScheduleResult> {
+        self.ensure_tables(cluster.n_nodes());
+        let mut res = ScheduleResult::default();
+        let t0 = Instant::now();
+        if self.isolated.contains(&function) {
+            // §6 fallback: no prediction, dedicated nodes, request packing
+            self.schedule_isolated(cat, cluster, function, count, now_ms, &mut res);
+            self.fast_decisions += 1;
+            res.decision_nanos = t0.elapsed().as_nanos() as u64;
+            return Ok(res);
+        }
+        let mut remaining = count;
+        let mut touched: Vec<NodeId> = Vec::new();
+
+        'placing: while remaining > 0 {
+            for node in candidate_order(cluster, function) {
+                let (sat, cached) = cluster.counts(node, function);
+                let current = sat + cached;
+                // fast path: existing entry admits (current + batch)?
+                let cap = match self.tables[node].get(function) {
+                    Some(e) => e.capacity,
+                    None => {
+                        // slow path: one batched sweep on the critical path
+                        let mix = cluster.mix(node);
+                        let (c0, _, _) = self.predictor.stats().snapshot();
+                        let cap = capacity::compute_capacity(
+                            cat,
+                            &mix,
+                            function,
+                            self.predictor.as_ref(),
+                            &self.cfg,
+                        )?;
+                        let (c1, _, _) = self.predictor.stats().snapshot();
+                        res.critical_inferences += c1 - c0;
+                        res.slow_path_used = true;
+                        let v = self.tables[node].version();
+                        self.tables[node].insert(function, cap, v);
+                        cap
+                    }
+                };
+                if cap > current {
+                    let fit = (cap - current).min(remaining);
+                    for _ in 0..fit {
+                        let id = cluster.place(cat, function, node, now_ms);
+                        res.placements.push(Placement { instance: id, node });
+                    }
+                    remaining -= fit;
+                    if !touched.contains(&node) {
+                        touched.push(node);
+                    }
+                    if remaining == 0 {
+                        break 'placing;
+                    }
+                }
+            }
+            // nothing fits anywhere: grow the cluster (paper §6)
+            let _node = cluster.add_node();
+            self.ensure_tables(cluster.n_nodes());
+            res.nodes_added += 1;
+        }
+
+        if res.slow_path_used {
+            self.slow_decisions += 1;
+        } else {
+            self.fast_decisions += 1;
+        }
+        res.decision_nanos = t0.elapsed().as_nanos() as u64;
+
+        // one asynchronous update per touched node — off the critical path
+        for node in touched {
+            self.tables[node].bump_version();
+            let (nanos, inf) = self.async_update(cat, cluster, node)?;
+            res.async_nanos += nanos;
+            res.async_inferences += inf;
+        }
+        Ok(res)
+    }
+
+    fn on_node_changed(
+        &mut self,
+        cat: &Catalog,
+        cluster: &Cluster,
+        node: NodeId,
+        _now_ms: f64,
+    ) -> Result<u64> {
+        self.ensure_tables(cluster.n_nodes());
+        self.tables[node].bump_version();
+        let (nanos, _) = self.async_update(cat, cluster, node)?;
+        Ok(nanos)
+    }
+
+    /// Conversion admission: one more *saturated* instance of `function`
+    /// must stay within the node's capacity entry (slow-path sweep if the
+    /// entry is missing).
+    fn find_feasible_conversion(
+        &mut self,
+        cat: &Catalog,
+        cluster: &Cluster,
+        node: NodeId,
+        function: FunctionId,
+    ) -> Result<bool> {
+        self.ensure_tables(cluster.n_nodes());
+        let (sat, _) = cluster.counts(node, function);
+        let cap = match self.tables[node].get(function) {
+            Some(e) => e.capacity,
+            None => {
+                let mix = cluster.mix(node);
+                let cap = capacity::compute_capacity(
+                    cat,
+                    &mix,
+                    function,
+                    self.predictor.as_ref(),
+                    &self.cfg,
+                )?;
+                let v = self.tables[node].version();
+                self.tables[node].insert(function, cap, v);
+                cap
+            }
+        };
+        Ok(sat < cap)
+    }
+
+    /// Cached instances beyond what the capacity entry would readmit are
+    /// stranded: `sat + cached > capacity` ⇒ `sat + cached − max(cap, sat)`
+    /// of them can never convert back on this node.
+    fn stranded_cached(
+        &mut self,
+        _cat: &Catalog,
+        _cluster: &Cluster,
+        node: NodeId,
+        function: FunctionId,
+        sat: u32,
+        cached: u32,
+    ) -> Result<u32> {
+        self.ensure_tables(node + 1);
+        let cap = match self.tables[node].get(function) {
+            Some(e) => e.capacity,
+            None => return Ok(0), // no entry yet: nothing known to strand
+        };
+        Ok((sat + cached).saturating_sub(cap.max(sat)))
+    }
+
+    fn find_feasible_node(
+        &mut self,
+        cat: &Catalog,
+        cluster: &Cluster,
+        function: FunctionId,
+        exclude: NodeId,
+    ) -> Result<Option<NodeId>> {
+        self.ensure_tables(cluster.n_nodes());
+        for node in candidate_order(cluster, function) {
+            if node == exclude {
+                continue;
+            }
+            let (sat, cached) = cluster.counts(node, function);
+            let current = sat + cached;
+            let cap = match self.tables[node].get(function) {
+                Some(e) => e.capacity,
+                None => {
+                    let mix = cluster.mix(node);
+                    let cap = capacity::compute_capacity(
+                        cat,
+                        &mix,
+                        function,
+                        self.predictor.as_ref(),
+                        &self.cfg,
+                    )?;
+                    let v = self.tables[node].version();
+                    self.tables[node].insert(function, cap, v);
+                    cap
+                }
+            };
+            if cap > current {
+                return Ok(Some(node));
+            }
+        }
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::tests::test_catalog;
+    use crate::runtime::{ForestParams, NativeForestPredictor};
+
+    fn stub_predictor() -> Arc<dyn Predictor> {
+        // stub forest predicts slowdown exp(0.05) = 1.05x solo — always
+        // under the 1.2x QoS bound, so capacity = config cap
+        Arc::new(NativeForestPredictor::new(ForestParams::synthetic_stub(
+            crate::model::N_FEATURES,
+            0.05,
+            0.05,
+        )))
+    }
+
+    #[test]
+    fn first_schedule_is_slow_then_fast() {
+        let cat = test_catalog();
+        let mut cluster = Cluster::new(2);
+        let mut s = JiaguScheduler::new(stub_predictor(), CapacityConfig::default(), 2);
+        let r1 = s.schedule(&cat, &mut cluster, 0, 1, 0.0).unwrap();
+        assert_eq!(r1.path(), super::super::Path::Slow);
+        assert_eq!(r1.placements.len(), 1);
+        // table now warm: next call must be fast with zero critical inferences
+        let r2 = s.schedule(&cat, &mut cluster, 0, 1, 1.0).unwrap();
+        assert_eq!(r2.path(), super::super::Path::Fast);
+        assert_eq!(r2.critical_inferences, 0);
+        assert!(r2.async_inferences > 0, "async update still runs");
+    }
+
+    #[test]
+    fn spike_is_batched_single_update() {
+        let cat = test_catalog();
+        let mut cluster = Cluster::new(2);
+        let mut s = JiaguScheduler::new(stub_predictor(), CapacityConfig::default(), 2);
+        s.schedule(&cat, &mut cluster, 0, 1, 0.0).unwrap();
+        let before_fast = s.fast_decisions;
+        // spike of 5: one fast decision, placements all on one node
+        let r = s.schedule(&cat, &mut cluster, 0, 5, 1.0).unwrap();
+        assert_eq!(r.placements.len(), 5);
+        assert_eq!(s.fast_decisions, before_fast + 1);
+        let nodes: std::collections::HashSet<_> =
+            r.placements.iter().map(|p| p.node).collect();
+        assert_eq!(nodes.len(), 1, "batch lands on one node");
+    }
+
+    #[test]
+    fn grows_cluster_when_full() {
+        let cat = test_catalog();
+        let mut cluster = Cluster::new(1);
+        let cfg = CapacityConfig { max_candidates: 4, max_instances_per_node: 4, ..Default::default() };
+        let mut s = JiaguScheduler::new(stub_predictor(), cfg, 1);
+        let r = s.schedule(&cat, &mut cluster, 0, 10, 0.0).unwrap();
+        assert_eq!(r.placements.len(), 10);
+        assert!(r.nodes_added >= 2, "needed extra nodes: {}", r.nodes_added);
+        cluster.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,123 @@
+//! Kubernetes-style baseline: QoS-unaware bin packing by *configured
+//! resource requests* (the production default the paper normalises
+//! density = 1.0 against).
+//!
+//! MostAllocated-style packing: among nodes with room for the request,
+//! pick the one with the highest requested-CPU utilisation, so instances
+//! pack tightly and the density baseline is exactly the request-based
+//! packing limit.
+
+use super::{Placement, ScheduleResult, Scheduler};
+use crate::catalog::{Catalog, FunctionId};
+use crate::cluster::{Cluster, NodeId};
+use anyhow::Result;
+use std::time::Instant;
+
+#[derive(Default)]
+pub struct KubernetesScheduler;
+
+impl KubernetesScheduler {
+    pub fn new() -> Self {
+        Self
+    }
+
+    fn fits(cat: &Catalog, cluster: &Cluster, node: NodeId, function: FunctionId) -> bool {
+        let spec = cat.get(function);
+        let n = &cluster.nodes[node];
+        n.requested_milli_cpu + spec.milli_cpu <= cat.node_milli_cpu
+            && n.requested_mem_mb + spec.mem_mb <= cat.node_mem_mb
+    }
+
+    fn pick(cat: &Catalog, cluster: &Cluster, function: FunctionId) -> Option<NodeId> {
+        (0..cluster.n_nodes())
+            .filter(|n| Self::fits(cat, cluster, *n, function))
+            .max_by_key(|n| cluster.nodes[*n].requested_milli_cpu)
+    }
+}
+
+impl Scheduler for KubernetesScheduler {
+    fn name(&self) -> &'static str {
+        "kubernetes"
+    }
+
+    fn schedule(
+        &mut self,
+        cat: &Catalog,
+        cluster: &mut Cluster,
+        function: FunctionId,
+        count: u32,
+        now_ms: f64,
+    ) -> Result<ScheduleResult> {
+        let mut res = ScheduleResult::default();
+        let t0 = Instant::now();
+        for _ in 0..count {
+            let node = match Self::pick(cat, cluster, function) {
+                Some(n) => n,
+                None => {
+                    res.nodes_added += 1;
+                    cluster.add_node()
+                }
+            };
+            let id = cluster.place(cat, function, node, now_ms);
+            res.placements.push(Placement { instance: id, node });
+        }
+        res.decision_nanos = t0.elapsed().as_nanos() as u64;
+        Ok(res)
+    }
+
+    fn on_node_changed(
+        &mut self,
+        _cat: &Catalog,
+        _cluster: &Cluster,
+        _node: NodeId,
+        _now_ms: f64,
+    ) -> Result<u64> {
+        Ok(0)
+    }
+
+    fn find_feasible_node(
+        &mut self,
+        cat: &Catalog,
+        cluster: &Cluster,
+        function: FunctionId,
+        exclude: NodeId,
+    ) -> Result<Option<NodeId>> {
+        Ok((0..cluster.n_nodes())
+            .filter(|n| *n != exclude && Self::fits(cat, cluster, *n, function))
+            .max_by_key(|n| cluster.nodes[*n].requested_milli_cpu))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::tests::test_catalog;
+
+    #[test]
+    fn packs_exactly_request_limit_per_node() {
+        let cat = test_catalog();
+        let mut cluster = Cluster::new(1);
+        let mut s = KubernetesScheduler::new();
+        let r = s.schedule(&cat, &mut cluster, 0, 25, 0.0).unwrap();
+        assert_eq!(r.placements.len(), 25);
+        // 12 per node (48000/4000) -> 25 instances need 3 nodes
+        assert_eq!(cluster.n_nodes(), 3);
+        assert_eq!(cluster.nodes[0].instances.len(), 12);
+        assert_eq!(cluster.nodes[1].instances.len(), 12);
+        assert_eq!(cluster.nodes[2].instances.len(), 1);
+    }
+
+    #[test]
+    fn respects_memory_bound() {
+        let mut cat = test_catalog();
+        // make memory the binding resource: 128GB/20GB = 6 per node
+        for f in &mut cat.functions {
+            f.mem_mb = 20 * 1024;
+        }
+        let mut cluster = Cluster::new(1);
+        let mut s = KubernetesScheduler::new();
+        s.schedule(&cat, &mut cluster, 1, 7, 0.0).unwrap();
+        assert_eq!(cluster.nodes[0].instances.len(), 6);
+        assert_eq!(cluster.n_nodes(), 2);
+    }
+}

@@ -1,0 +1,169 @@
+//! Instance schedulers: Jiagu (pre-decision) and the paper's baselines.
+//!
+//! | Scheduler | Decision basis | Model inference on critical path? |
+//! |---|---|---|
+//! | [`JiaguScheduler`] | capacity-table lookup (fast path) / one batched sweep (slow path) | fast path: none |
+//! | [`GsightScheduler`] | per-decision QoS validation | every decision |
+//! | [`OwlScheduler`] | historical pairwise colocation table, ≤2 functions/node | none (profiled offline) |
+//! | [`KubernetesScheduler`] | requested-resource bin packing | none (QoS-unaware) |
+//!
+//! All decisions are timed with a monotonic clock; the simulator injects
+//! the measured wall-clock cost into the virtual cold-start timeline, so
+//! the Fig. 11/12 scheduling-cost comparisons measure *real code*, not
+//! modelled constants.
+
+mod gsight;
+mod jiagu;
+mod kubernetes;
+mod owl;
+
+pub use gsight::GsightScheduler;
+pub use jiagu::JiaguScheduler;
+pub use kubernetes::KubernetesScheduler;
+pub use owl::OwlScheduler;
+
+use crate::catalog::{Catalog, FunctionId};
+use crate::cluster::{Cluster, InstanceId, NodeId};
+use anyhow::Result;
+
+/// Which code path produced a decision (Figs. 11/12 accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Path {
+    /// Capacity-table lookup only (Jiagu).
+    Fast,
+    /// Model inference on the critical path.
+    Slow,
+    /// No model at all (K8s / Owl).
+    Heuristic,
+}
+
+/// One placed instance.
+#[derive(Debug, Clone, Copy)]
+pub struct Placement {
+    pub instance: InstanceId,
+    pub node: NodeId,
+}
+
+/// Outcome of one scheduling call (possibly placing several instances —
+/// concurrency-aware batching schedules a whole spike at once).
+#[derive(Debug, Clone, Default)]
+pub struct ScheduleResult {
+    pub placements: Vec<Placement>,
+    /// Worst path taken across the call.
+    pub slow_path_used: bool,
+    /// Wall-clock nanoseconds on the scheduling critical path.
+    pub decision_nanos: u64,
+    /// Wall-clock nanoseconds spent off the critical path (asynchronous
+    /// capacity-table updates).
+    pub async_nanos: u64,
+    /// Model inferences on the critical path.
+    pub critical_inferences: u64,
+    /// Model inferences off the critical path (asynchronous updates).
+    pub async_inferences: u64,
+    /// Nodes added because nothing fit.
+    pub nodes_added: u32,
+}
+
+impl ScheduleResult {
+    pub fn path(&self) -> Path {
+        if self.critical_inferences > 0 || self.slow_path_used {
+            Path::Slow
+        } else {
+            Path::Fast
+        }
+    }
+}
+
+/// A scheduler places new instances onto nodes and keeps whatever internal
+/// state it needs in sync with cluster events.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Downcast hook: the simulator toggles the §6 unpredictability
+    /// fallback, which only the Jiagu scheduler implements.
+    fn as_jiagu_mut(&mut self) -> Option<&mut JiaguScheduler> {
+        None
+    }
+
+    /// Place `count` new instances of `function`.  Implementations may
+    /// grow the cluster if nothing fits.  Instances are created in the
+    /// `Starting` state; the caller drives init completion.
+    fn schedule(
+        &mut self,
+        cat: &Catalog,
+        cluster: &mut Cluster,
+        function: FunctionId,
+        count: u32,
+        now_ms: f64,
+    ) -> Result<ScheduleResult>;
+
+    /// Notify that a node's mix changed outside scheduling (eviction,
+    /// release, reactivate, migration) so internal state can refresh.
+    /// Returns nanoseconds of off-critical-path work performed.
+    fn on_node_changed(
+        &mut self,
+        cat: &Catalog,
+        cluster: &Cluster,
+        node: NodeId,
+        now_ms: f64,
+    ) -> Result<u64>;
+
+    /// Pick a node able to host one more saturated instance of `function`
+    /// (used by the autoscaler's on-demand migration).  Must not place.
+    fn find_feasible_node(
+        &mut self,
+        cat: &Catalog,
+        cluster: &Cluster,
+        function: FunctionId,
+        exclude: NodeId,
+    ) -> Result<Option<NodeId>>;
+
+    /// Can `node` convert one cached instance of `function` back to
+    /// saturated without violating QoS (logical cold start admission)?
+    /// QoS-unaware schedulers admit unconditionally.
+    fn find_feasible_conversion(
+        &mut self,
+        _cat: &Catalog,
+        _cluster: &Cluster,
+        _node: NodeId,
+        _function: FunctionId,
+    ) -> Result<bool> {
+        Ok(true)
+    }
+
+    /// How many of `cached` cached instances of `function` on `node` are
+    /// *stranded* — could no longer be converted back to saturated because
+    /// the node's capacity shrank (§5 on-demand migration).  QoS-unaware
+    /// schedulers never strand instances.
+    fn stranded_cached(
+        &mut self,
+        _cat: &Catalog,
+        _cluster: &Cluster,
+        _node: NodeId,
+        _function: FunctionId,
+        _sat: u32,
+        _cached: u32,
+    ) -> Result<u32> {
+        Ok(0)
+    }
+}
+
+/// Shared helper: order candidate nodes for a function — nodes already
+/// hosting it first (likely fast path + locality, §6 node filter), then by
+/// total instances descending (pack tighter), empty nodes last.
+pub(crate) fn candidate_order(
+    cluster: &Cluster,
+    function: FunctionId,
+) -> Vec<NodeId> {
+    let mut nodes: Vec<NodeId> = (0..cluster.n_nodes()).collect();
+    nodes.sort_by_key(|n| {
+        let (sat, cached) = cluster.counts(*n, function);
+        let hosts = sat + cached > 0;
+        let total = cluster.nodes[*n].instances.len();
+        // hosting nodes first (0), then non-empty (1), then empty (2);
+        // within a class, fuller nodes first
+        let class = if hosts { 0 } else if total > 0 { 1 } else { 2 };
+        (class, usize::MAX - total)
+    });
+    nodes
+}

@@ -1,0 +1,240 @@
+//! Owl-style baseline [SoCC'22]: historical-information scheduling.
+//!
+//! Owl profiles *pairs* of functions at varying instance counts on
+//! dedicated servers and records the co-location limits it observed; at
+//! schedule time it only consults that history (fast), and it never
+//! colocates more than **two distinct functions** per node — the
+//! limitation the paper calls out in Fig. 13.
+//!
+//! Port notes: real Owl measures pairs on real hardware.  Our substrate's
+//! "profiling run" queries the ground-truth interference model with
+//! measurement noise — the same information a dedicated profiling node
+//! would produce — and is memoized into the pair table.  Profiling cost
+//! is counted (`profiling_samples`) for Table 1's O(n²k) scaling.
+
+use super::{Placement, ScheduleResult, Scheduler};
+use crate::catalog::{Catalog, FunctionId};
+use crate::cluster::{Cluster, NodeId};
+use crate::interference::{self, NodeMix};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub struct OwlScheduler {
+    /// max feasible count of `a` colocated with `b_count` instances of
+    /// `b`: `pair_cap[(a, b)][b_count] = max a_count` (0 = none).
+    pair_cap: HashMap<(FunctionId, FunctionId), Vec<u32>>,
+    /// Solo capacity per function.
+    solo_cap: HashMap<FunctionId, u32>,
+    /// Ground-truth queries spent profiling (Table 1 accounting).
+    pub profiling_samples: u64,
+    max_count: u32,
+    noise_sigma: f64,
+    /// Same admission margin the QoS-aware schedulers use: a profiled
+    /// colocation is feasible when measured latency <= headroom x QoS.
+    qos_headroom: f64,
+    rng: Rng,
+}
+
+impl OwlScheduler {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            pair_cap: HashMap::new(),
+            solo_cap: HashMap::new(),
+            profiling_samples: 0,
+            max_count: 28,
+            noise_sigma: 0.05,
+            qos_headroom: 0.95,
+            rng: Rng::seed_from(seed),
+        }
+    }
+
+    /// "Measure" a colocation on a profiling node: ground truth + noise.
+    fn measure(&mut self, cat: &Catalog, mix: &NodeMix, target: FunctionId) -> f64 {
+        self.profiling_samples += 1;
+        let truth = interference::ground_truth_latency(cat, mix, target);
+        truth * (1.0 + self.rng.normal_ms(0.0, self.noise_sigma))
+    }
+
+    fn profile_solo(&mut self, cat: &Catalog, f: FunctionId) -> u32 {
+        if let Some(c) = self.solo_cap.get(&f) {
+            return *c;
+        }
+        let mut cap = 0;
+        for n in 1..=self.max_count {
+            let mix = NodeMix::new(vec![(f, n, 0)]);
+            if self.measure(cat, &mix, f) <= self.qos_headroom * cat.get(f).qos_latency_ms {
+                cap = n;
+            } else {
+                break;
+            }
+        }
+        self.solo_cap.insert(f, cap);
+        cap
+    }
+
+    /// Max feasible `a_count` for each `b_count` in 0..=max (profiled once
+    /// per ordered pair — the O(n²k) table).
+    fn profile_pair(&mut self, cat: &Catalog, a: FunctionId, b: FunctionId) {
+        if self.pair_cap.contains_key(&(a, b)) {
+            return;
+        }
+        let mut caps = Vec::with_capacity(self.max_count as usize + 1);
+        for b_count in 0..=self.max_count {
+            let mut cap = 0;
+            for a_count in 1..=self.max_count {
+                let mix = NodeMix::new(vec![(a, a_count, 0), (b, b_count, 0)]);
+                let a_ok =
+                    self.measure(cat, &mix, a) <= self.qos_headroom * cat.get(a).qos_latency_ms;
+                let b_ok = b_count == 0
+                    || self.measure(cat, &mix, b)
+                        <= self.qos_headroom * cat.get(b).qos_latency_ms;
+                if a_ok && b_ok {
+                    cap = a_count;
+                } else {
+                    break;
+                }
+            }
+            caps.push(cap);
+        }
+        self.pair_cap.insert((a, b), caps);
+    }
+
+    /// Historical feasibility of adding one `function` instance to a node.
+    /// None = colocation combination outside Owl's history model
+    /// (>2 distinct functions).
+    fn admits(&mut self, cat: &Catalog, cluster: &Cluster, node: NodeId, f: FunctionId) -> Option<bool> {
+        let mix = cluster.mix(node);
+        let mut others: Vec<(FunctionId, u32)> = mix
+            .entries
+            .iter()
+            .filter(|(g, s, c)| *g != f && s + c > 0)
+            .map(|(g, s, c)| (*g, s + c))
+            .collect();
+        let (sat, cached) = cluster.counts(node, f);
+        let mine = sat + cached;
+        match others.len() {
+            0 => {
+                let cap = self.profile_solo(cat, f);
+                Some(mine < cap)
+            }
+            1 => {
+                let (g, g_count) = others.pop().unwrap();
+                self.profile_pair(cat, f, g);
+                let caps = &self.pair_cap[&(f, g)];
+                let g_idx = (g_count.min(self.max_count)) as usize;
+                Some(mine < caps[g_idx])
+            }
+            _ => None, // Owl never schedules >2 distinct functions together
+        }
+    }
+}
+
+impl Scheduler for OwlScheduler {
+    fn name(&self) -> &'static str {
+        "owl"
+    }
+
+    fn schedule(
+        &mut self,
+        cat: &Catalog,
+        cluster: &mut Cluster,
+        function: FunctionId,
+        count: u32,
+        now_ms: f64,
+    ) -> Result<ScheduleResult> {
+        let mut res = ScheduleResult::default();
+        let t0 = Instant::now();
+        for _ in 0..count {
+            let mut chosen = None;
+            for node in super::candidate_order(cluster, function) {
+                if self.admits(cat, cluster, node, function) == Some(true) {
+                    chosen = Some(node);
+                    break;
+                }
+            }
+            let node = chosen.unwrap_or_else(|| {
+                res.nodes_added += 1;
+                cluster.add_node()
+            });
+            let id = cluster.place(cat, function, node, now_ms);
+            res.placements.push(Placement { instance: id, node });
+        }
+        res.decision_nanos = t0.elapsed().as_nanos() as u64;
+        Ok(res)
+    }
+
+    fn on_node_changed(
+        &mut self,
+        _cat: &Catalog,
+        _cluster: &Cluster,
+        _node: NodeId,
+        _now_ms: f64,
+    ) -> Result<u64> {
+        Ok(0)
+    }
+
+    fn find_feasible_node(
+        &mut self,
+        cat: &Catalog,
+        cluster: &Cluster,
+        function: FunctionId,
+        exclude: NodeId,
+    ) -> Result<Option<NodeId>> {
+        for node in super::candidate_order(cluster, function) {
+            if node != exclude && self.admits(cat, cluster, node, function) == Some(true) {
+                return Ok(Some(node));
+            }
+        }
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::tests::test_catalog;
+
+    #[test]
+    fn never_colocates_three_functions() {
+        let cat = test_catalog();
+        let mut cluster = Cluster::new(1);
+        let mut s = OwlScheduler::new(7);
+        s.schedule(&cat, &mut cluster, 0, 2, 0.0).unwrap();
+        s.schedule(&cat, &mut cluster, 1, 2, 0.0).unwrap();
+        s.schedule(&cat, &mut cluster, 2, 2, 0.0).unwrap();
+        for n in 0..cluster.n_nodes() {
+            let distinct = cluster.mix(n).entries.len();
+            assert!(distinct <= 2, "node {n} has {distinct} functions");
+        }
+    }
+
+    #[test]
+    fn profiling_is_memoized() {
+        let cat = test_catalog();
+        let mut cluster = Cluster::new(1);
+        let mut s = OwlScheduler::new(7);
+        s.schedule(&cat, &mut cluster, 0, 3, 0.0).unwrap();
+        let after_first = s.profiling_samples;
+        assert!(after_first > 0);
+        s.schedule(&cat, &mut cluster, 0, 3, 1.0).unwrap();
+        assert_eq!(s.profiling_samples, after_first, "solo profile reused");
+    }
+
+    #[test]
+    fn respects_profiled_capacity() {
+        let cat = test_catalog();
+        let mut cluster = Cluster::new(1);
+        let mut s = OwlScheduler::new(7);
+        // schedule far more than one node's capacity; Owl must spill
+        let r = s.schedule(&cat, &mut cluster, 0, 40, 0.0).unwrap();
+        assert_eq!(r.placements.len(), 40);
+        assert!(cluster.n_nodes() >= 2);
+        let cap = s.solo_cap[&0];
+        for n in 0..cluster.n_nodes() {
+            let (sat, _) = cluster.counts(n, 0);
+            assert!(sat <= cap, "node {n}: {sat} > profiled cap {cap}");
+        }
+    }
+}

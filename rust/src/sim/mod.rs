@@ -1,0 +1,260 @@
+//! Discrete-event cluster simulation — the testbed substitute.
+//!
+//! Virtual time advances in 1-second ticks driven by a trace.  Each tick:
+//!
+//! 1. due cold starts complete (instances flip Starting → Saturated and
+//!    join the routing set),
+//! 2. the autoscaler evaluates every function (dual-staged scaling),
+//! 3. QoS is measured: for every (node, function) with saturated
+//!    instances, the ground-truth interference model yields the window's
+//!    P90 latency (plus measurement noise), judged against the QoS bound,
+//! 4. density/cost metrics accumulate.
+//!
+//! **Scheduling cost is real, not modelled**: scheduler decisions execute
+//! the actual capacity-table / PJRT-inference code and their measured
+//! wall-clock time is injected into the virtual cold-start timeline
+//! (DESIGN.md "Scheduling-cost measurement model").  Only the instance
+//! *init* latency (cfork 8.4 ms / docker 85.5 ms) is a constant from the
+//! literature.
+
+use crate::autoscaler::Autoscaler;
+use crate::catalog::Catalog;
+use crate::cluster::{Cluster, InstanceId};
+use crate::config::{RunConfig, SchedulerKind};
+use crate::interference;
+use crate::metrics::{CostTracker, DensityTracker, QosTracker};
+use crate::model::AccuracyMonitor;
+use crate::router::Router;
+use crate::runtime::Predictor;
+use crate::scheduler::{
+    GsightScheduler, JiaguScheduler, KubernetesScheduler, OwlScheduler, Scheduler,
+};
+use crate::traces::TraceSet;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Aggregated outcome of one simulated run.
+#[derive(Debug)]
+pub struct RunReport {
+    pub scheduler: String,
+    pub trace: String,
+    pub duration_s: usize,
+    pub density: f64,
+    pub qos_violation_rate: f64,
+    pub per_function_violation: Vec<f64>,
+    pub scheduling_ms_mean: f64,
+    pub scheduling_ms_p99: f64,
+    pub cold_start_ms_mean: f64,
+    pub cold_start_ms_p99: f64,
+    pub inferences_per_schedule: f64,
+    pub critical_inferences: u64,
+    pub async_inferences: u64,
+    pub schedule_calls: u64,
+    pub instances_started: u64,
+    pub fast_decisions: u64,
+    pub slow_decisions: u64,
+    pub logical_cold_starts: u64,
+    pub real_after_release: u64,
+    pub migrations: u64,
+    pub released: u64,
+    pub evicted: u64,
+    pub peak_nodes: usize,
+    pub async_nanos: u64,
+    /// Functions under the §6 unpredictability fallback at run end.
+    pub isolated_functions: Vec<usize>,
+}
+
+impl RunReport {
+    /// Fraction of re-route-driven scale-ups served logically (Fig. 14b).
+    pub fn logical_fraction(&self) -> f64 {
+        let total = self.logical_cold_starts + self.real_after_release;
+        if total == 0 {
+            1.0
+        } else {
+            self.logical_cold_starts as f64 / total as f64
+        }
+    }
+}
+
+/// The simulation driver.
+pub struct Simulation {
+    pub cat: Catalog,
+    pub cfg: RunConfig,
+    predictor: Arc<dyn Predictor>,
+}
+
+impl Simulation {
+    pub fn new(cat: Catalog, cfg: RunConfig, predictor: Arc<dyn Predictor>) -> Self {
+        Self { cat, cfg, predictor }
+    }
+
+    fn make_scheduler(&self) -> Box<dyn Scheduler> {
+        match self.cfg.scheduler {
+            SchedulerKind::Jiagu => Box::new(JiaguScheduler::new(
+                self.predictor.clone(),
+                self.cfg.capacity.clone(),
+                self.cfg.n_nodes,
+            )),
+            SchedulerKind::Kubernetes => Box::new(KubernetesScheduler::new()),
+            SchedulerKind::Gsight => Box::new(GsightScheduler::new(self.predictor.clone())),
+            SchedulerKind::Owl => Box::new(OwlScheduler::new(self.cfg.seed ^ 0x071)),
+        }
+    }
+
+    /// Run the full trace; returns the aggregated report.
+    pub fn run(&self, trace: &TraceSet) -> Result<RunReport> {
+        let mut cluster = Cluster::new(self.cfg.n_nodes);
+        let mut router = Router::new();
+        let mut sched = self.make_scheduler();
+        let mut autoscaler = Autoscaler::new(self.cfg.autoscaler.clone(), self.cat.len());
+        let mut rng = Rng::seed_from(self.cfg.seed);
+
+        let mut density = DensityTracker::default();
+        let mut qos = QosTracker::new(self.cat.len());
+        let mut costs = CostTracker::default();
+        let mut pending: Vec<(f64, InstanceId)> = Vec::new(); // (ready_ms, id)
+        // §6 online accuracy monitoring: every `monitor_every` ticks the
+        // deployed model's prediction for each active (node, function) is
+        // compared against the measured window latency; functions whose
+        // error will not converge fall back to isolated scheduling.
+        let mut monitor = AccuracyMonitor::new(self.cat.len());
+        let monitor_every = 30usize;
+        let mut logical_cold_starts = 0u64;
+        let mut real_after_release = 0u64;
+        let mut migrations = 0u64;
+        let mut released = 0u64;
+        let mut evicted = 0u64;
+        let mut async_nanos = 0u64;
+        let mut peak_nodes = self.cfg.n_nodes;
+        let init_ms = self.cfg.init_model.latency_ms();
+
+        let duration = trace.duration_s().min(self.cfg.duration_s);
+        for t in 0..duration {
+            let now_ms = t as f64 * 1000.0;
+
+            // 1. complete due cold starts
+            pending.retain(|(ready_ms, id)| {
+                if *ready_ms <= now_ms {
+                    if let Some(inst) = cluster.instance(*id) {
+                        let f = inst.function;
+                        cluster.mark_ready(*id, now_ms);
+                        router.add(f, *id);
+                    }
+                    false
+                } else {
+                    true
+                }
+            });
+
+            // 2. autoscaler tick (may schedule -> real decisions timed)
+            let loads = trace.loads_at(t);
+            let outcome = autoscaler.tick(
+                &self.cat,
+                &mut cluster,
+                &mut router,
+                sched.as_mut(),
+                &loads,
+                now_ms,
+            )?;
+            logical_cold_starts += outcome.logical_cold_starts as u64;
+            real_after_release += outcome.real_after_release as u64;
+            migrations += outcome.migrations as u64;
+            released += outcome.released as u64;
+            evicted += (outcome.evicted + outcome.evicted_direct) as u64;
+            for res in &outcome.schedule_results {
+                costs.record_schedule(res, init_ms);
+                async_nanos += res.async_nanos;
+                let ready_ms = now_ms + res.decision_nanos as f64 / 1e6 + init_ms;
+                for p in &res.placements {
+                    pending.push((ready_ms, p.instance));
+                }
+            }
+
+            // 3. QoS measurement per (node, function) window
+            let monitor_tick = t % monitor_every == monitor_every - 1;
+            for node in 0..cluster.n_nodes() {
+                let mix = cluster.mix(node);
+                if mix.is_empty() {
+                    continue;
+                }
+                for (f, sat, _) in &mix.entries {
+                    if *sat == 0 {
+                        continue;
+                    }
+                    let truth = interference::ground_truth_latency(&self.cat, &mix, *f);
+                    let measured =
+                        truth * (1.0 + rng.normal_ms(0.0, self.cfg.measurement_noise));
+                    // requests this window ≈ serving share of the live load
+                    let serving_total = router.serving_count(*f).max(1) as f64;
+                    let requests = loads[*f] * (*sat as f64 / serving_total).min(1.0);
+                    if requests > 0.0 {
+                        qos.record(&self.cat, *f, requests, measured);
+                    }
+                    if monitor_tick {
+                        let row = crate::model::feature_row(&self.cat, &mix, *f);
+                        if let Ok(pred) = self.predictor.predict(std::slice::from_ref(&row)) {
+                            monitor.record(*f, pred[0] as f64, measured);
+                        }
+                    }
+                }
+            }
+            if monitor_tick {
+                if let Some(jiagu) = sched.as_jiagu_mut() {
+                    for f in 0..self.cat.len() {
+                        jiagu.set_isolated(f, monitor.is_unpredictable(f));
+                    }
+                }
+            }
+
+            // 4. density accounting
+            let active_nodes =
+                (0..cluster.n_nodes()).filter(|n| !cluster.node_empty(*n)).count();
+            density.record(cluster.instances_len(), active_nodes.max(1), 1.0);
+            peak_nodes = peak_nodes.max(cluster.n_nodes());
+        }
+
+        let per_function_violation =
+            (0..self.cat.len()).map(|f| qos.rate(f)).collect();
+        let isolated_functions = monitor.unpredictable();
+        Ok(RunReport {
+            scheduler: sched.name().to_string(),
+            trace: trace.name.clone(),
+            duration_s: duration,
+            density: density.density(),
+            qos_violation_rate: qos.overall(),
+            per_function_violation,
+            scheduling_ms_mean: costs.scheduling_ms.mean(),
+            scheduling_ms_p99: costs.scheduling_ms.percentile(0.99),
+            cold_start_ms_mean: costs.cold_start_ms.mean(),
+            cold_start_ms_p99: costs.cold_start_ms.percentile(0.99),
+            inferences_per_schedule: costs.inferences_per_schedule(),
+            critical_inferences: costs.critical_inferences,
+            async_inferences: costs.async_inferences,
+            schedule_calls: costs.calls,
+            instances_started: costs.instances_started,
+            fast_decisions: costs.fast_decisions,
+            slow_decisions: costs.slow_decisions,
+            logical_cold_starts,
+            real_after_release,
+            migrations,
+            released,
+            evicted,
+            peak_nodes,
+            async_nanos,
+            isolated_functions,
+        })
+    }
+}
+
+/// Convenience: build the simulation's predictor from artifacts (PJRT) or
+/// fall back to the native forest when `native` is set.
+pub fn load_predictor(artifacts: &std::path::Path, native: bool) -> Result<Arc<dyn Predictor>> {
+    if native {
+        let params =
+            crate::runtime::ForestParams::load(&artifacts.join("forest.json"))?;
+        Ok(Arc::new(crate::runtime::NativeForestPredictor::new(params)))
+    } else {
+        Ok(Arc::new(crate::runtime::PjrtPredictor::load(artifacts)?))
+    }
+}

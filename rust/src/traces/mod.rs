@@ -1,0 +1,298 @@
+//! Workload traces: per-function request-rate series driving the
+//! simulator, plus the statistics behind Figs. 3 and 6.
+//!
+//! Substitution note (DESIGN.md): the paper replays Huawei Cloud
+//! production traces.  We generate synthetic series with the properties
+//! the evaluation depends on — diurnal swings compressed into the sim
+//! horizon, heavy-tailed per-function scale, short-interval burstiness
+//! (the Azure-trace CV >10 observation), and load spikes — from a seeded
+//! RNG, four independent sets (A–D) from four seeds, mirroring the
+//! paper's four regional trace sets.
+
+use crate::catalog::Catalog;
+use crate::util::rng::Rng;
+
+/// One function's load series: RPS sampled once per second.
+#[derive(Debug, Clone)]
+pub struct FunctionTrace {
+    pub rps: Vec<f64>,
+}
+
+impl FunctionTrace {
+    pub fn duration_s(&self) -> usize {
+        self.rps.len()
+    }
+
+    pub fn at(&self, second: usize) -> f64 {
+        self.rps.get(second).copied().unwrap_or(0.0)
+    }
+
+    pub fn peak(&self) -> f64 {
+        self.rps.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.rps.is_empty() {
+            0.0
+        } else {
+            self.rps.iter().sum::<f64>() / self.rps.len() as f64
+        }
+    }
+}
+
+/// A complete workload: one series per catalog function.
+#[derive(Debug, Clone)]
+pub struct TraceSet {
+    pub name: String,
+    pub functions: Vec<FunctionTrace>,
+}
+
+impl TraceSet {
+    pub fn duration_s(&self) -> usize {
+        self.functions.iter().map(|f| f.duration_s()).max().unwrap_or(0)
+    }
+
+    /// Load vector at `second` (one entry per function).
+    pub fn loads_at(&self, second: usize) -> Vec<f64> {
+        self.functions.iter().map(|f| f.at(second)).collect()
+    }
+}
+
+/// Parameters for the real-world-like generator.
+#[derive(Debug, Clone)]
+pub struct RealWorldParams {
+    pub duration_s: usize,
+    /// Mean peak concurrency (saturated instances at peak) per function.
+    pub peak_concurrency: f64,
+    /// "Diurnal" period compressed into the sim horizon (s).
+    pub day_period_s: f64,
+    /// Per-second multiplicative jitter σ.
+    pub jitter_sigma: f64,
+    /// Probability per second of a 2–4× burst starting (lasting 10–40 s).
+    pub burst_prob: f64,
+}
+
+impl Default for RealWorldParams {
+    fn default() -> Self {
+        Self {
+            duration_s: 1800,
+            peak_concurrency: 24.0,
+            day_period_s: 600.0,
+            jitter_sigma: 0.12,
+            burst_prob: 0.004,
+        }
+    }
+}
+
+/// Generate one of the A–D real-world-like trace sets.
+pub fn realworld(cat: &Catalog, params: &RealWorldParams, seed: u64) -> TraceSet {
+    let mut rng = Rng::seed_from(seed);
+    let mut functions = Vec::with_capacity(cat.len());
+    for f in 0..cat.len() {
+        let sat_rps = cat.get(f).saturated_rps;
+        // heavy-tailed per-function scale: some functions dominate
+        let scale = params.peak_concurrency * (0.25 + 1.5 * rng.f64() * rng.f64());
+        let phase = rng.f64() * std::f64::consts::TAU;
+        let period = params.day_period_s * rng.range_f64(0.8, 1.25);
+        let mut rps = Vec::with_capacity(params.duration_s);
+        let mut burst_left = 0usize;
+        let mut burst_gain = 1.0;
+        for t in 0..params.duration_s {
+            let diurnal = 0.55 + 0.45 * ((t as f64 / period) * std::f64::consts::TAU + phase).sin();
+            if burst_left == 0 && rng.f64() < params.burst_prob {
+                burst_left = rng.range_u64(10, 40) as usize;
+                burst_gain = rng.range_f64(2.0, 4.0);
+            }
+            let burst = if burst_left > 0 {
+                burst_left -= 1;
+                burst_gain
+            } else {
+                1.0
+            };
+            let jitter = (1.0 + rng.normal_ms(0.0, params.jitter_sigma)).max(0.05);
+            let v = (scale * diurnal * burst * jitter * sat_rps).max(0.0);
+            rps.push(v);
+        }
+        functions.push(FunctionTrace { rps });
+    }
+    TraceSet { name: format!("trace-{seed}"), functions }
+}
+
+/// The four paper-style trace sets A–D.
+pub fn paper_traces(cat: &Catalog, duration_s: usize) -> Vec<TraceSet> {
+    let params = RealWorldParams { duration_s, ..Default::default() };
+    ["A", "B", "C", "D"]
+        .iter()
+        .zip([101u64, 202, 303, 404])
+        .map(|(name, seed)| {
+            let mut t = realworld(cat, &params, seed);
+            t.name = format!("Trace {name}");
+            t
+        })
+        .collect()
+}
+
+/// Fig. 11 best case: a single function scaled up/down at a fixed period
+/// ("timer trace").  Load alternates between `hi` and `lo` concurrency so
+/// the autoscaler keeps creating instances of the *same* function — after
+/// the first slow path, every scheduling hits the capacity table.
+pub fn timer_trace(cat: &Catalog, duration_s: usize, period_s: usize) -> TraceSet {
+    let mut functions = vec![FunctionTrace { rps: vec![0.0; duration_s] }; cat.len()];
+    let sat = cat.get(0).saturated_rps;
+    let rps = &mut functions[0].rps;
+    for t in 0..duration_s {
+        let phase = (t / period_s) % 2;
+        rps[t] = if phase == 0 { 2.0 * sat } else { 10.0 * sat };
+    }
+    TraceSet { name: "timer".into(), functions }
+}
+
+/// Fig. 11 worst case: every function's concurrency flips between 0 and 1
+/// with gaps longer than the keep-alive, so *every* cold start finds the
+/// function absent from all capacity tables → slow path every time.
+pub fn worstcase_trace(
+    cat: &Catalog,
+    duration_s: usize,
+    gap_s: usize,
+    on_s: usize,
+) -> TraceSet {
+    let mut functions = Vec::with_capacity(cat.len());
+    for f in 0..cat.len() {
+        let sat = cat.get(f).saturated_rps;
+        let cycle = gap_s + on_s;
+        // stagger functions so schedulings interleave
+        let offset = f * cycle / cat.len().max(1);
+        let mut rps = vec![0.0; duration_s];
+        for (t, v) in rps.iter_mut().enumerate() {
+            if (t + cycle - offset % cycle) % cycle < on_s {
+                *v = 0.9 * sat; // exactly one instance expected
+            }
+        }
+        functions.push(FunctionTrace { rps });
+    }
+    TraceSet { name: "worstcase".into(), functions }
+}
+
+// ---------------------------------------------------------------------------
+// Trace statistics (Figs. 3 / 6).
+// ---------------------------------------------------------------------------
+
+/// Fig. 3: per-instance RPS of the hottest function over time, normalised
+/// by its saturated RPS (the fluctuation the autoscaler chases).
+pub fn per_instance_load_series(cat: &Catalog, trace: &TraceSet) -> Vec<f64> {
+    let hottest = (0..trace.functions.len())
+        .max_by(|a, b| {
+            let ma = trace.functions[*a].mean();
+            let mb = trace.functions[*b].mean();
+            ma.partial_cmp(&mb).unwrap()
+        })
+        .unwrap_or(0);
+    let sat = cat.get(hottest).saturated_rps;
+    trace.functions[hottest]
+        .rps
+        .iter()
+        .map(|rps| {
+            let instances = (rps / sat).ceil().max(1.0);
+            (rps / instances) / sat
+        })
+        .collect()
+}
+
+/// Fig. 6a: instance-weighted CDF of function concurrency.  Returns
+/// (concurrency, cumulative instance fraction) points.
+pub fn concurrency_cdf(cat: &Catalog, traces: &[TraceSet]) -> Vec<(u32, f64)> {
+    // concurrency of a function = time-averaged expected instances
+    let mut conc: Vec<u32> = Vec::new();
+    for trace in traces {
+        for (f, ft) in trace.functions.iter().enumerate() {
+            let sat = cat.get(f).saturated_rps;
+            let mean_inst = ft.rps.iter().map(|r| (r / sat).ceil()).sum::<f64>()
+                / ft.rps.len().max(1) as f64;
+            conc.push(mean_inst.round().max(0.0) as u32);
+        }
+    }
+    conc.sort_unstable();
+    let total: u64 = conc.iter().map(|c| *c as u64).sum();
+    let mut out = Vec::new();
+    let mut acc = 0u64;
+    let mut i = 0;
+    while i < conc.len() {
+        let c = conc[i];
+        while i < conc.len() && conc[i] == c {
+            acc += conc[i] as u64;
+            i += 1;
+        }
+        out.push((c, acc as f64 / total.max(1) as f64));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::tests::test_catalog;
+
+    #[test]
+    fn realworld_is_deterministic_per_seed() {
+        let cat = test_catalog();
+        let p = RealWorldParams { duration_s: 100, ..Default::default() };
+        let a = realworld(&cat, &p, 5);
+        let b = realworld(&cat, &p, 5);
+        assert_eq!(a.functions[0].rps, b.functions[0].rps);
+        let c = realworld(&cat, &p, 6);
+        assert_ne!(a.functions[0].rps, c.functions[0].rps);
+    }
+
+    #[test]
+    fn realworld_loads_nonnegative_and_fluctuating() {
+        let cat = test_catalog();
+        let p = RealWorldParams { duration_s: 600, ..Default::default() };
+        let t = realworld(&cat, &p, 1);
+        for f in &t.functions {
+            assert!(f.rps.iter().all(|v| *v >= 0.0));
+            assert!(f.peak() > f.mean(), "series must fluctuate");
+        }
+    }
+
+    #[test]
+    fn timer_trace_alternates() {
+        let cat = test_catalog();
+        let t = timer_trace(&cat, 120, 30);
+        assert!(t.functions[0].at(0) < t.functions[0].at(45));
+        // only function 0 is active
+        for f in 1..t.functions.len() {
+            assert_eq!(t.functions[f].peak(), 0.0);
+        }
+    }
+
+    #[test]
+    fn worstcase_concurrency_is_zero_or_one() {
+        let cat = test_catalog();
+        let t = worstcase_trace(&cat, 600, 90, 20);
+        for (f, ft) in t.functions.iter().enumerate() {
+            let sat = cat.get(f).saturated_rps;
+            for rps in &ft.rps {
+                let exp = (rps / sat).ceil() as u32;
+                assert!(exp <= 1, "worst case must expect 0 or 1 instances");
+            }
+            assert!(ft.peak() > 0.0, "every function must fire sometimes");
+        }
+    }
+
+    #[test]
+    fn concurrency_cdf_monotone_to_one() {
+        let cat = test_catalog();
+        let traces = vec![realworld(
+            &cat,
+            &RealWorldParams { duration_s: 200, ..Default::default() },
+            9,
+        )];
+        let cdf = concurrency_cdf(&cat, &traces);
+        assert!(!cdf.is_empty());
+        for w in cdf.windows(2) {
+            assert!(w[0].0 < w[1].0);
+            assert!(w[0].1 <= w[1].1 + 1e-12);
+        }
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-9);
+    }
+}

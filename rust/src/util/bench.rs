@@ -1,0 +1,144 @@
+//! Tiny timing harness for the `cargo bench` binaries (harness = false).
+//!
+//! Hand-rolled criterion stand-in: warmup, fixed-duration measurement,
+//! percentile summary, and aligned table output so every bench prints the
+//! rows/series of the paper table or figure it regenerates.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmarked operation.
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Summary {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.p50_ns / 1e6
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.p99_ns / 1e6
+    }
+}
+
+/// Measure `f` repeatedly for ~`budget` after `warmup` iterations.
+pub fn bench<F: FnMut()>(warmup: u32, budget: Duration, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(1024);
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.is_empty() {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if samples.len() >= 200_000 {
+            break;
+        }
+    }
+    summarize(&samples)
+}
+
+/// Summarize raw nanosecond samples.
+pub fn summarize(samples: &[f64]) -> Summary {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| {
+        let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+        sorted[idx]
+    };
+    Summary {
+        iters: sorted.len() as u64,
+        mean_ns: sorted.iter().sum::<f64>() / sorted.len() as f64,
+        p50_ns: pct(0.50),
+        p99_ns: pct(0.99),
+        min_ns: sorted[0],
+        max_ns: sorted[sorted.len() - 1],
+    }
+}
+
+/// Aligned table printer for paper-style output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n== {title} ==");
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// `fmt` helpers for table cells.
+pub fn ms(v: f64) -> String {
+    format!("{v:.3}ms")
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+pub fn ratio(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0u64;
+        let s = bench(2, Duration::from_millis(10), || n += 1);
+        assert!(s.iters > 0);
+        assert_eq!(n, s.iters + 2);
+        assert!(s.min_ns <= s.p50_ns && s.p50_ns <= s.max_ns);
+    }
+
+    #[test]
+    fn summarize_percentiles() {
+        let samples: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        let s = summarize(&samples);
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.max_ns, 100.0);
+        assert!((s.p50_ns - 50.0).abs() <= 1.0);
+        assert!((s.mean_ns - 50.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,10 @@
+//! From-scratch utility substrate.
+//!
+//! The build image resolves only the `xla` crate closure offline, so the
+//! pieces a project would normally take as dependencies are implemented
+//! here: a JSON parser/writer ([`json`]), deterministic PRNGs ([`rng`]),
+//! and a tiny timing harness for the `cargo bench` binaries ([`bench`]).
+
+pub mod bench;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,231 @@
+//! Property tests over the coordinator: random event sequences must
+//! preserve the cluster/router/scheduler invariants regardless of
+//! scheduler choice.  (Hand-rolled generators over the crate's seeded RNG
+//! — no proptest offline; every failure reports its seed.)
+
+use jiagu::autoscaler::{Autoscaler, AutoscalerConfig};
+use jiagu::capacity::CapacityConfig;
+use jiagu::catalog::{Catalog, FunctionSpec};
+use jiagu::cluster::{Cluster, InstanceState};
+use jiagu::interference;
+use jiagu::router::Router;
+use jiagu::runtime::{ForestParams, NativeForestPredictor};
+use jiagu::scheduler::{
+    GsightScheduler, JiaguScheduler, KubernetesScheduler, OwlScheduler, Scheduler,
+};
+use jiagu::util::rng::Rng;
+use std::sync::Arc;
+
+fn test_catalog(n: usize, seed: u64) -> Catalog {
+    let mut rng = Rng::seed_from(seed);
+    let mut specs = Vec::new();
+    for i in 0..n {
+        let base = rng.range_f64(20.0, 120.0);
+        let pressure: Vec<f64> = (0..6).map(|_| rng.range_f64(0.5, 3.0)).collect();
+        let sensitivity: Vec<f64> = (0..6).map(|_| rng.range_f64(0.05, 0.4)).collect();
+        let solo = interference::slowdown(
+            &interference::utilisation_single(&pressure),
+            &sensitivity,
+        ) * base;
+        specs.push(FunctionSpec {
+            name: format!("fn{i}"),
+            profile: (0..13).map(|_| rng.range_f64(0.5, 5.0)).collect(),
+            solo_latency_ms: solo,
+            saturated_rps: 2500.0 / base,
+            qos_latency_ms: 1.2 * solo,
+            milli_cpu: 4000,
+            mem_mb: 10 * 1024,
+            pressure,
+            sensitivity,
+            base_latency_ms: base,
+        });
+    }
+    Catalog::from_functions(specs)
+}
+
+fn stub_predictor(log_latency: f32) -> Arc<NativeForestPredictor> {
+    Arc::new(NativeForestPredictor::new(ForestParams::synthetic_stub(
+        jiagu::model::N_FEATURES,
+        log_latency,
+        log_latency,
+    )))
+}
+
+fn schedulers(seed: u64) -> Vec<Box<dyn Scheduler>> {
+    vec![
+        Box::new(JiaguScheduler::new(stub_predictor(0.05), CapacityConfig::default(), 4)),
+        Box::new(KubernetesScheduler::new()),
+        Box::new(GsightScheduler::new(stub_predictor(0.05))),
+        Box::new(OwlScheduler::new(seed)),
+    ]
+}
+
+/// Random schedule/evict sequences keep cluster invariants for every
+/// scheduler implementation.
+#[test]
+fn random_schedule_evict_sequences_keep_invariants() {
+    for seed in 0..8u64 {
+        let cat = test_catalog(5, seed);
+        for mut sched in schedulers(seed) {
+            let mut rng = Rng::seed_from(seed * 31 + 7);
+            let mut cluster = Cluster::new(4);
+            let mut live: Vec<u64> = Vec::new();
+            for step in 0..120 {
+                let now = step as f64 * 250.0;
+                if rng.f64() < 0.6 || live.is_empty() {
+                    let f = rng.below(cat.len() as u64) as usize;
+                    let count = rng.range_u64(1, 4) as u32;
+                    let res = sched.schedule(&cat, &mut cluster, f, count, now).unwrap();
+                    assert_eq!(
+                        res.placements.len(),
+                        count as usize,
+                        "{}: all requested instances placed",
+                        sched.name()
+                    );
+                    for p in &res.placements {
+                        cluster.mark_ready(p.instance, now);
+                        live.push(p.instance);
+                    }
+                } else {
+                    let idx = rng.below(live.len() as u64) as usize;
+                    let id = live.swap_remove(idx);
+                    let node = cluster.instance(id).unwrap().node;
+                    cluster.evict(&cat, id).unwrap();
+                    sched.on_node_changed(&cat, &cluster, node, now).unwrap();
+                }
+                cluster.check_invariants().unwrap_or_else(|e| {
+                    panic!("{} seed {seed} step {step}: {e}", sched.name())
+                });
+            }
+        }
+    }
+}
+
+/// The dual-staged autoscaler keeps router/cluster consistent under a
+/// random load signal, and only ever routes to saturated instances.
+#[test]
+fn autoscaler_random_loads_keep_router_consistent() {
+    for seed in 0..6u64 {
+        let cat = test_catalog(4, seed + 100);
+        let mut cluster = Cluster::new(4);
+        let mut router = Router::new();
+        let mut sched =
+            JiaguScheduler::new(stub_predictor(0.05), CapacityConfig::default(), 4);
+        let mut autoscaler = Autoscaler::new(
+            AutoscalerConfig {
+                release_duration_s: 5.0,
+                keepalive_duration_s: 12.0,
+                dual_staged: true,
+                migration: true,
+            },
+            cat.len(),
+        );
+        let mut rng = Rng::seed_from(seed ^ 0xbeef);
+        let mut loads = vec![0.0; cat.len()];
+        for t in 0..180usize {
+            let now = t as f64 * 1000.0;
+            // random walk loads, occasionally dropping to zero
+            for (f, load) in loads.iter_mut().enumerate() {
+                let sat = cat.get(f).saturated_rps;
+                if rng.f64() < 0.05 {
+                    *load = 0.0;
+                } else {
+                    *load = (*load + rng.normal_ms(0.0, 1.5) * sat).clamp(0.0, 10.0 * sat);
+                }
+            }
+            let out = autoscaler
+                .tick(&cat, &mut cluster, &mut router, &mut sched, &loads, now)
+                .unwrap();
+            // new instances become ready next tick
+            for id in out.cold_started {
+                cluster.mark_ready(id, now);
+                let f = cluster.instance(id).unwrap().function;
+                router.add(f, id);
+            }
+            cluster.check_invariants().unwrap();
+            router.check_consistent(&cluster).unwrap();
+        }
+    }
+}
+
+/// NoDS (traditional keep-alive) never produces cached instances; DS
+/// produces them and converts some back logically.
+#[test]
+fn dual_staged_vs_nods_state_machines() {
+    let cat = test_catalog(3, 55);
+    for (ds, expect_cached) in [(true, true), (false, false)] {
+        let mut cluster = Cluster::new(3);
+        let mut router = Router::new();
+        let mut sched =
+            JiaguScheduler::new(stub_predictor(0.05), CapacityConfig::default(), 3);
+        let mut autoscaler = Autoscaler::new(
+            AutoscalerConfig {
+                release_duration_s: 3.0,
+                // keep cached instances alive across the low half-wave
+                // (20 s) so the next high phase finds them
+                keepalive_duration_s: 30.0,
+                dual_staged: ds,
+                migration: ds,
+            },
+            cat.len(),
+        );
+        let mut saw_cached = false;
+        let mut saw_logical = false;
+        for t in 0..120usize {
+            let now = t as f64 * 1000.0;
+            // square-wave load: high for 20s, low for 20s
+            let high = (t / 20) % 2 == 0;
+            let loads: Vec<f64> = (0..cat.len())
+                .map(|f| {
+                    let sat = cat.get(f).saturated_rps;
+                    if high {
+                        6.0 * sat
+                    } else {
+                        1.5 * sat
+                    }
+                })
+                .collect();
+            let out = autoscaler
+                .tick(&cat, &mut cluster, &mut router, &mut sched, &loads, now)
+                .unwrap();
+            saw_logical |= out.logical_cold_starts > 0;
+            for id in out.cold_started {
+                cluster.mark_ready(id, now);
+                let f = cluster.instance(id).unwrap().function;
+                router.add(f, id);
+            }
+            for n in 0..cluster.n_nodes() {
+                for f in 0..cat.len() {
+                    if !cluster.find_instances(n, f, InstanceState::Cached).is_empty() {
+                        saw_cached = true;
+                    }
+                }
+            }
+            router.check_consistent(&cluster).unwrap();
+        }
+        assert_eq!(saw_cached, expect_cached, "dual_staged={ds}");
+        if ds {
+            assert!(saw_logical, "square wave must trigger logical cold starts");
+        }
+    }
+}
+
+/// Owl never exceeds two distinct functions per node over random workloads.
+#[test]
+fn owl_two_function_invariant_under_random_load() {
+    for seed in 0..4u64 {
+        let cat = test_catalog(6, seed + 41);
+        let mut cluster = Cluster::new(3);
+        let mut sched = OwlScheduler::new(seed);
+        let mut rng = Rng::seed_from(seed);
+        for step in 0..80 {
+            let f = rng.below(cat.len() as u64) as usize;
+            sched
+                .schedule(&cat, &mut cluster, f, rng.range_u64(1, 3) as u32, step as f64)
+                .unwrap();
+            for n in 0..cluster.n_nodes() {
+                assert!(cluster.mix(n).entries.len() <= 2);
+            }
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Cross-language golden-vector tests: the Rust mirrors of the ground
+//! truth interference model and the feature builder must match the Python
+//! originals bit-for-bit (f64) / to f32 rounding (features).
+//!
+//! Vectors come from `artifacts/interference_check.json`, emitted by
+//! `make artifacts`.  Tests skip (with a loud message) when artifacts are
+//! absent so `cargo test` still runs on a fresh checkout.
+
+use jiagu::catalog::Catalog;
+use jiagu::interference::{ground_truth_latency, node_utilisation, NodeMix};
+use jiagu::model::feature_row;
+use jiagu::util::json::Json;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = jiagu::artifacts_dir();
+    if dir.join("interference_check.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn load(dir: &std::path::Path) -> (Catalog, Vec<Json>) {
+    let cat = Catalog::load(&dir.join("functions.json")).unwrap();
+    let cases = Json::parse_file(&dir.join("interference_check.json"))
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .to_vec();
+    (cat, cases)
+}
+
+fn mix_of(cat: &Catalog, case: &Json) -> (NodeMix, usize) {
+    let names = case.get("functions").unwrap().str_vec().unwrap();
+    let sat = case.get("sat").unwrap().f64_vec().unwrap();
+    let cached = case.get("cached").unwrap().f64_vec().unwrap();
+    let target_pos = case.get("target").unwrap().as_usize().unwrap();
+    let mut entries = Vec::new();
+    let mut target_fid = 0;
+    for (i, name) in names.iter().enumerate() {
+        let fid = cat.id_of(name).expect("golden function in catalog");
+        entries.push((fid, sat[i] as u32, cached[i] as u32));
+        if i == target_pos {
+            target_fid = fid;
+        }
+    }
+    (NodeMix::new(entries), target_fid)
+}
+
+#[test]
+fn ground_truth_latency_matches_python_exactly() {
+    let Some(dir) = artifacts() else { return };
+    let (cat, cases) = load(&dir);
+    assert!(cases.len() >= 32);
+    for case in &cases {
+        let (mix, target) = mix_of(&cat, case);
+        let want = case.get("latency_ms").unwrap().as_f64().unwrap();
+        let got = ground_truth_latency(&cat, &mix, target);
+        let rel = (got - want).abs() / want.max(1e-12);
+        assert!(rel < 1e-12, "latency mismatch: got {got}, want {want}");
+    }
+}
+
+#[test]
+fn node_utilisation_matches_python_exactly() {
+    let Some(dir) = artifacts() else { return };
+    let (cat, cases) = load(&dir);
+    for case in &cases {
+        let (mix, _) = mix_of(&cat, case);
+        let want = case.get("utilisation").unwrap().f64_vec().unwrap();
+        let got = node_utilisation(&cat, &mix);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-12, "utilisation mismatch: {got:?} vs {want:?}");
+        }
+    }
+}
+
+#[test]
+fn feature_rows_match_python_to_f32() {
+    let Some(dir) = artifacts() else { return };
+    let (cat, cases) = load(&dir);
+    for case in &cases {
+        let (mix, target) = mix_of(&cat, case);
+        let want = case.get("features").unwrap().f32_vec().unwrap();
+        let got = feature_row(&cat, &mix, target);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            let denom = w.abs().max(1.0);
+            assert!(
+                (g - w).abs() / denom < 1e-6,
+                "feature {i}: got {g}, want {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn catalog_packing_limit_is_twelve() {
+    // the Fig. 13 density baseline: 48000 mCPU node / 4000 mCPU request
+    let Some(dir) = artifacts() else { return };
+    let (cat, _) = load(&dir);
+    for f in 0..cat.len() {
+        assert_eq!(cat.request_packing_limit(f), 12);
+    }
+}

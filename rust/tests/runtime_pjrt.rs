@@ -1,0 +1,117 @@
+//! Runtime integration: the PJRT path (AOT HLO through the CPU client)
+//! must reproduce the Python reference predictions and agree with the
+//! pure-Rust forest traversal.
+
+use jiagu::runtime::{ForestParams, NativeForest, PjrtPredictor, Predictor};
+use jiagu::util::json::Json;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = jiagu::artifacts_dir();
+    if dir.join("meta.json").exists() && dir.join("model_b1.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn check_rows(dir: &std::path::Path) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let j = Json::parse_file(&dir.join("predict_check.json")).unwrap();
+    let x: Vec<Vec<f32>> = j
+        .get("x")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.f32_vec().unwrap())
+        .collect();
+    let want = j.get("expected_ms").unwrap().f32_vec().unwrap();
+    (x, want)
+}
+
+#[test]
+fn pjrt_matches_python_reference() {
+    let Some(dir) = artifacts() else { return };
+    let (x, want) = check_rows(&dir);
+    let pred = PjrtPredictor::load(&dir).unwrap();
+    let got = pred.predict(&x).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        let rel = (g - w).abs() / w.abs().max(1e-6);
+        assert!(rel < 1e-4, "PJRT {g} vs python {w}");
+    }
+}
+
+#[test]
+fn native_forest_matches_pjrt() {
+    let Some(dir) = artifacts() else { return };
+    let (x, _) = check_rows(&dir);
+    let pjrt = PjrtPredictor::load(&dir).unwrap();
+    let native = NativeForest::new(ForestParams::load(&dir.join("forest.json")).unwrap());
+    let a = pjrt.predict(&x).unwrap();
+    let b = native.predict(&x);
+    for (g, w) in a.iter().zip(&b) {
+        let rel = (g - w).abs() / w.abs().max(1e-6);
+        assert!(rel < 1e-4, "pjrt {g} vs native {w}");
+    }
+}
+
+#[test]
+fn batching_pads_and_chunks_correctly() {
+    let Some(dir) = artifacts() else { return };
+    let (x, _) = check_rows(&dir);
+    let pred = PjrtPredictor::load(&dir).unwrap();
+    // single-row calls == batched call, row by row
+    let batched = pred.predict(&x).unwrap();
+    for (i, row) in x.iter().take(5).enumerate() {
+        let single = pred.predict(std::slice::from_ref(row)).unwrap();
+        let rel = (single[0] - batched[i]).abs() / batched[i].abs().max(1e-6);
+        assert!(rel < 1e-5, "row {i}: {} vs {}", single[0], batched[i]);
+    }
+    // oversized batch (> largest variant) must chunk transparently
+    let mut big = Vec::new();
+    while big.len() < 300 {
+        big.extend(x.iter().cloned());
+    }
+    big.truncate(300);
+    let out = pred.predict(&big).unwrap();
+    assert_eq!(out.len(), 300);
+    for i in 0..x.len().min(300) {
+        let rel = (out[i] - batched[i]).abs() / batched[i].abs().max(1e-6);
+        assert!(rel < 1e-5);
+    }
+}
+
+#[test]
+fn inference_stats_accumulate() {
+    let Some(dir) = artifacts() else { return };
+    let (x, _) = check_rows(&dir);
+    let pred = PjrtPredictor::load(&dir).unwrap();
+    pred.predict(&x[..3]).unwrap();
+    pred.predict(&x[..1]).unwrap();
+    let (calls, rows, nanos) = pred.stats().snapshot();
+    assert_eq!(calls, 2);
+    assert_eq!(rows, 4);
+    assert!(nanos > 0);
+}
+
+#[test]
+fn forest_swap_changes_predictions() {
+    let Some(dir) = artifacts() else { return };
+    let (x, _) = check_rows(&dir);
+    let mut pred = PjrtPredictor::load(&dir).unwrap();
+    let before = pred.predict(&x[..2]).unwrap();
+    // retrained stand-in: same shapes, all leaves shifted by +ln(2)
+    let mut params = ForestParams::load(&dir.join("forest.json")).unwrap();
+    for row in &mut params.leaf {
+        for v in row {
+            *v += std::f32::consts::LN_2;
+        }
+    }
+    pred.swap_forest(params).unwrap();
+    let after = pred.predict(&x[..2]).unwrap();
+    for (b, a) in before.iter().zip(&after) {
+        let ratio = a / b;
+        assert!((ratio - 2.0).abs() < 1e-3, "leaf shift must double output: {ratio}");
+    }
+}
