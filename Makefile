@@ -1,0 +1,52 @@
+# Jiagu reproduction — build/test entry points.
+#
+# The default flow is pure Rust: `make artifacts` trains and serialises
+# every artifact natively (no Python), `make test` / `make bench` consume
+# them. `make artifacts-jax` is the optional Python/JAX path that
+# additionally lowers the predictor to HLO for the `pjrt` feature and
+# computes the full model-comparison baselines.
+
+CARGO ?= cargo
+PYTHON ?= python3
+ARTIFACTS_DIR ?= artifacts
+
+.PHONY: artifacts artifacts-jax build test bench bench-smoke fmt-check clippy ci clean
+
+# Regenerate unconditionally.
+artifacts:
+	$(CARGO) run --release --bin jiagu-gen-artifacts -- --out-dir $(ARTIFACTS_DIR)
+
+# Generate only when missing (dependency for test/bench).
+$(ARTIFACTS_DIR)/meta.json:
+	$(CARGO) run --release --bin jiagu-gen-artifacts -- --out-dir $(ARTIFACTS_DIR)
+
+artifacts-jax:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
+
+build:
+	$(CARGO) build --release
+
+test: $(ARTIFACTS_DIR)/meta.json
+	$(CARGO) test -q
+
+bench: $(ARTIFACTS_DIR)/meta.json
+	$(CARGO) bench
+
+# One sim-driven bench at a short horizon — the CI guard that keeps the
+# fig11-fig17 harness from rotting.
+bench-smoke: $(ARTIFACTS_DIR)/meta.json
+	JIAGU_BENCH_DURATION=60 JIAGU_NATIVE=1 $(CARGO) bench --bench fig13_density
+
+fmt-check:
+	$(CARGO) fmt --all -- --check
+
+# Lints the lib + bins (the tier-1 surface); benches/tests/examples are
+# exercised by `make test` / `make bench-smoke` instead.
+clippy:
+	$(CARGO) clippy -- -D warnings
+
+ci: build fmt-check clippy test bench-smoke
+
+clean:
+	$(CARGO) clean
+	rm -rf $(ARTIFACTS_DIR)

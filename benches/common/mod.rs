@@ -30,8 +30,9 @@ pub struct Bench {
 
 #[allow(dead_code)]
 impl Bench {
-    /// Load artifacts + the PJRT predictor (set JIAGU_NATIVE=1 to use the
-    /// pure-Rust forest instead, e.g. for scheduler-only profiling).
+    /// Load artifacts + the predictor: PJRT when the `pjrt` feature is
+    /// compiled in, otherwise the pure-Rust forest (set JIAGU_NATIVE=1 to
+    /// force the native forest, e.g. for scheduler-only profiling).
     pub fn load() -> Self {
         let artifacts = jiagu::artifacts_dir();
         let cat = Catalog::load(&artifacts.join("functions.json"))

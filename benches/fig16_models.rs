@@ -5,6 +5,10 @@
 //! Paper: RFR sits in the best tier (with low training cost and natural
 //! incremental retraining); linear regression is the clear loser because
 //! interference is non-linear.
+//!
+//! The baseline-model rows come from the Python pipeline
+//! (`make artifacts-jax`); the native generator only trains the deployed
+//! RFR, so missing rows are reported as absent rather than crashing.
 
 mod common;
 
@@ -14,20 +18,30 @@ use jiagu::util::json::Json;
 fn main() {
     let b = Bench::load();
     let j = Json::parse_file(&b.artifacts.join("model_comparison.json"))
-        .expect("model_comparison.json — run `make artifacts`");
+        .expect("model_comparison.json — run `make artifacts` (or `make artifacts-jax`)");
     let fig16 = j.get("fig16").unwrap();
     let mut t = Table::new(&["model", "error", "training time", "input dims"]);
     let order = ["jiagu_rfr", "xgboost", "esp", "mlp2", "mlp3", "mlp4", "linear"];
+    let mut missing = Vec::new();
     for name in order {
-        let m = fig16.get(name).unwrap();
+        let Some(m) = fig16.opt(name) else {
+            missing.push(name);
+            continue;
+        };
         t.row(&[
             name.to_string(),
             format!("{:.1}%", 100.0 * m.get("error").unwrap().as_f64().unwrap()),
             format!("{:.1}s", m.get("fit_seconds").unwrap().as_f64().unwrap()),
-            format!("{}", m.get("dims").unwrap().as_usize().unwrap()),
+            m.get("dims").unwrap().as_usize().unwrap().to_string(),
         ]);
     }
     t.print("Fig. 16: prediction error per model class (paper: RFR best tier; linear worst)");
+    if !missing.is_empty() {
+        println!(
+            "\n(not in this artifact set: {} — regenerate with `make artifacts-jax` for the full baseline line-up)",
+            missing.join(", ")
+        );
+    }
     println!("\nNote: all models share the same features + log-slowdown target; only the model class varies.");
     println!("RFR additionally supports incremental retraining (the §6 periodic-retrain loop), unlike the closed-form fits.");
 }

@@ -2,9 +2,10 @@
 //!
 //! (a) training time + input dimensionality: Jiagu's function-granularity
 //! features (44 dims) vs Gsight-style instance-granularity (404 dims) —
-//! from `artifacts/model_comparison.json`.
+//! from `artifacts/model_comparison.json` (the Gsight row needs
+//! `make artifacts-jax`; natively generated artifacts carry the Jiagu row).
 //! (b) inference cost vs number of batched inputs, *measured live*
-//! through the PJRT runtime (paper: only ~+2 ms going to 100 inputs —
+//! through the loaded predictor (paper: only ~+2 ms going to 100 inputs —
 //! batched capacity sweeps are nearly free).
 
 mod common;
@@ -17,13 +18,20 @@ use std::time::Duration;
 fn main() {
     let b = Bench::load();
     let j = Json::parse_file(&b.artifacts.join("model_comparison.json"))
-        .expect("model_comparison.json — run `make artifacts`");
+        .expect("model_comparison.json — run `make artifacts` (or `make artifacts-jax`)");
 
     // (a)
     let a = j.get("fig17a").unwrap();
     let mut t = Table::new(&["model", "input dims", "training time"]);
     for name in ["jiagu", "gsight"] {
-        let m = a.get(name).unwrap();
+        let Some(m) = a.opt(name) else {
+            t.row(&[
+                format!("{name} granularity"),
+                "n/a".to_string(),
+                "n/a (artifacts-jax only)".to_string(),
+            ]);
+            continue;
+        };
         t.row(&[
             format!("{name} granularity"),
             m.get("dims").unwrap().as_usize().unwrap().to_string(),
@@ -32,7 +40,7 @@ fn main() {
     }
     t.print("Fig. 17a: training time and dimensionality (paper: function-granularity is ~10x smaller and faster)");
 
-    // (b) measured PJRT inference latency vs batch size
+    // (b) measured inference latency vs batch size
     let mut rng = Rng::seed_from(5);
     let n_feat = b.predictor.n_features();
     let mut t2 = Table::new(&["batch rows", "mean", "p99", "per-row"]);
@@ -60,5 +68,5 @@ fn main() {
             );
         }
     }
-    t2.print("Fig. 17b: PJRT inference latency vs batched inputs (measured live)");
+    t2.print("Fig. 17b: predictor inference latency vs batched inputs (measured live)");
 }

@@ -34,8 +34,12 @@ fn main() {
             builder.row_into(0, &mut row);
             std::hint::black_box(&row);
         });
-        t.row(&["feature row (row_into)".into(),
-            format!("{:.0}ns", s.mean_ns), format!("{:.0}ns", s.p50_ns), format!("{:.0}ns", s.p99_ns)]);
+        t.row(&[
+            "feature row (row_into)".into(),
+            format!("{:.0}ns", s.mean_ns),
+            format!("{:.0}ns", s.p50_ns),
+            format!("{:.0}ns", s.p99_ns),
+        ]);
     }
 
     // 2. native forest single prediction
@@ -45,8 +49,12 @@ fn main() {
         let s = bench(100, budget, || {
             std::hint::black_box(native.predict_one(&row));
         });
-        t.row(&["native forest x1".into(),
-            format!("{:.0}ns", s.mean_ns), format!("{:.0}ns", s.p50_ns), format!("{:.0}ns", s.p99_ns)]);
+        t.row(&[
+            "native forest x1".into(),
+            format!("{:.0}ns", s.mean_ns),
+            format!("{:.0}ns", s.p50_ns),
+            format!("{:.0}ns", s.p99_ns),
+        ]);
     }
 
     // 3. PJRT predictor at sweep batch (capacity sweep row count)
@@ -56,14 +64,22 @@ fn main() {
         let s = bench(5, budget, || {
             b.predictor.predict(&rows).unwrap();
         });
-        t.row(&["pjrt predict x84 (sweep batch)".into(),
-            format!("{:.3}ms", s.mean_ms()), format!("{:.3}ms", s.p50_ms()), format!("{:.3}ms", s.p99_ms())]);
+        t.row(&[
+            "predictor x84 (sweep batch)".into(),
+            format!("{:.3}ms", s.mean_ms()),
+            format!("{:.3}ms", s.p50_ms()),
+            format!("{:.3}ms", s.p99_ms()),
+        ]);
         let rows1 = rows[..1].to_vec();
         let s = bench(5, budget, || {
             b.predictor.predict(&rows1).unwrap();
         });
-        t.row(&["pjrt predict x1".into(),
-            format!("{:.3}ms", s.mean_ms()), format!("{:.3}ms", s.p50_ms()), format!("{:.3}ms", s.p99_ms())]);
+        t.row(&[
+            "predictor x1".into(),
+            format!("{:.3}ms", s.mean_ms()),
+            format!("{:.3}ms", s.p50_ms()),
+            format!("{:.3}ms", s.p99_ms()),
+        ]);
     }
 
     // 4. capacity sweep (slow path body)
@@ -71,8 +87,12 @@ fn main() {
         let s = bench(5, budget, || {
             capacity::compute_capacity(&b.cat, &mix, 0, b.predictor.as_ref(), &cfg).unwrap();
         });
-        t.row(&["capacity sweep (slow path)".into(),
-            format!("{:.3}ms", s.mean_ms()), format!("{:.3}ms", s.p50_ms()), format!("{:.3}ms", s.p99_ms())]);
+        t.row(&[
+            "capacity sweep (slow path)".into(),
+            format!("{:.3}ms", s.mean_ms()),
+            format!("{:.3}ms", s.p50_ms()),
+            format!("{:.3}ms", s.p99_ms()),
+        ]);
     }
 
     // 5. fast-path schedule decision (table hit), including placement +
@@ -96,10 +116,18 @@ fn main() {
         }
         let d = common::summarize(&decision_ns);
         let a = common::summarize(&async_ns);
-        t.row(&["schedule decision (mixed fast/slow)".into(),
-            format!("{:.3}ms", d.mean_ns / 1e6), format!("{:.3}ms", d.p50_ns / 1e6), format!("{:.3}ms", d.p99_ns / 1e6)]);
-        t.row(&["async update (off critical path)".into(),
-            format!("{:.3}ms", a.mean_ns / 1e6), format!("{:.3}ms", a.p50_ns / 1e6), format!("{:.3}ms", a.p99_ns / 1e6)]);
+        t.row(&[
+            "schedule decision (mixed fast/slow)".into(),
+            format!("{:.3}ms", d.mean_ns / 1e6),
+            format!("{:.3}ms", d.p50_ns / 1e6),
+            format!("{:.3}ms", d.p99_ns / 1e6),
+        ]);
+        t.row(&[
+            "async update (off critical path)".into(),
+            format!("{:.3}ms", a.mean_ns / 1e6),
+            format!("{:.3}ms", a.p50_ns / 1e6),
+            format!("{:.3}ms", a.p99_ns / 1e6),
+        ]);
     }
 
     t.print("Hot-path microbenchmarks (see EXPERIMENTS.md §Perf)");

@@ -1,0 +1,599 @@
+//! Native artifact generation — the zero-dependency replacement for the
+//! Python `make artifacts` pipeline.
+//!
+//! The Python/JAX toolchain (`python/compile/aot.py`) remains the path
+//! that lowers the predictor to HLO for the PJRT runtime, but nothing in
+//! the default build can assume it exists: the offline image has no JAX
+//! and CI machines have no Python deps.  This module regenerates every
+//! artifact the Rust side actually consumes —
+//!
+//! * `functions.json`            synthetic catalog + hidden ground truth
+//! * `interference_check.json`   golden vectors for the golden tests
+//! * `forest.json`               trained + flattened random forest
+//! * `predict_check.json`        feature rows → expected predictions
+//! * `meta.json`                 shared contract (dims, layouts, batches)
+//! * `model_comparison.json`     the natively computable Fig. 15/16/17a rows
+//!
+//! — in pure Rust, deterministic for a given [`GenConfig`] (all sampling
+//! goes through [`crate::util::rng::Rng`]; no wall-clock values are
+//! written to the deterministic files, so equal seeds produce
+//! byte-identical JSON).  The generation logic mirrors
+//! `python/compile/datagen.py`; numeric streams differ from numpy's, so
+//! natively generated artifacts are self-consistent rather than
+//! bit-identical to the Python ones.
+
+pub mod trainer;
+
+use crate::catalog::{Catalog, FunctionSpec};
+use crate::interference::{self, NodeMix, PROFILE_METRICS, RESOURCES};
+use crate::model::{feature_row, N_FEATURES};
+use crate::runtime::NativeForest;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::rng::Rng;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// Node/instance sizing shared with `python/compile/datagen.py`.
+pub const NODE_MILLI_CPU: u64 = 48_000;
+pub const NODE_MEM_MB: u64 = 128 * 1024;
+pub const INSTANCE_MILLI_CPU: u64 = 4_000;
+pub const INSTANCE_MEM_MB: u64 = 10 * 1024;
+pub const QOS_FACTOR: f64 = 1.2;
+
+/// Global sensitivity scale (datagen.SENS_SCALE).
+const SENS_SCALE: f64 = 0.35;
+const N_PROFILE: usize = PROFILE_METRICS.len();
+
+/// Compiled batch-size variants advertised in `meta.json` (consumed by
+/// the PJRT runtime when the HLO artifacts exist).
+const BATCH_VARIANTS: [usize; 7] = [1, 8, 16, 32, 64, 128, 256];
+
+/// All knobs of one generation run.  [`GenConfig::default`] mirrors the
+/// Python pipeline's hyperparameters; [`GenConfig::quick`] is a small
+/// configuration for tests and fast dev loops.
+#[derive(Debug, Clone)]
+pub struct GenConfig {
+    /// Base seed; the catalog, train, test and golden streams derive from
+    /// it with fixed offsets.
+    pub seed: u64,
+    pub n_functions: usize,
+    pub train_rows: usize,
+    pub test_rows: usize,
+    /// Multiplicative label noise σ (tail-latency measurement jitter).
+    pub noise_sigma: f64,
+    pub n_trees: usize,
+    pub depth: usize,
+    pub min_samples_leaf: usize,
+    pub feature_frac: f64,
+    pub bootstrap_frac: f64,
+    pub n_bins: usize,
+    pub golden_cases: usize,
+    /// Also write `model_comparison.json` (split-half + per-function
+    /// errors; carries real fit wall-clock, so it is the one
+    /// non-deterministic output).
+    pub model_comparison: bool,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        Self {
+            seed: 7,
+            n_functions: 6,
+            train_rows: 20_000,
+            test_rows: 2_000,
+            noise_sigma: 0.05,
+            n_trees: 64,
+            depth: 10,
+            min_samples_leaf: 2,
+            feature_frac: 0.7,
+            bootstrap_frac: 0.8,
+            n_bins: 128,
+            golden_cases: 64,
+            model_comparison: true,
+        }
+    }
+}
+
+impl GenConfig {
+    /// Small budget for tests and fast iteration (seconds even in debug).
+    pub fn quick() -> Self {
+        Self {
+            train_rows: 3_000,
+            test_rows: 400,
+            n_trees: 16,
+            depth: 8,
+            golden_cases: 48,
+            ..Self::default()
+        }
+    }
+}
+
+/// Summary of one generation run (for logging and tests).
+#[derive(Debug, Clone)]
+pub struct GenReport {
+    pub n_functions: usize,
+    pub train_rows: usize,
+    /// Held-out mean relative error of the trained forest.
+    pub test_error: f64,
+    /// Wall-clock spent in `fit` (only recorded in model_comparison.json).
+    pub fit_seconds: f64,
+}
+
+/// Generate every native artifact into `out_dir`.
+pub fn generate(out_dir: &Path, cfg: &GenConfig) -> Result<GenReport> {
+    ensure!(cfg.n_functions > 0, "catalog cannot be empty");
+    ensure!(cfg.depth >= 1 && cfg.depth <= 16, "depth out of range");
+    ensure!(cfg.n_bins >= 2, "need at least 2 histogram bins");
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+
+    // -- catalog + golden vectors ----------------------------------------
+    let specs = make_catalog(cfg.n_functions, cfg.seed);
+    let cat = Catalog::from_functions(specs);
+    cat.validate()?;
+    write_json(&out_dir.join("functions.json"), &catalog_to_json(&cat))?;
+    let golden = golden_vectors(&cat, cfg.golden_cases, cfg.seed.wrapping_add(92));
+    write_json(&out_dir.join("interference_check.json"), &golden)?;
+
+    // -- datasets ---------------------------------------------------------
+    let train = sample_dataset(&cat, cfg.train_rows, cfg.seed.wrapping_add(4), cfg.noise_sigma);
+    let test = sample_dataset(&cat, cfg.test_rows, cfg.seed.wrapping_add(6), cfg.noise_sigma);
+
+    // -- forest: target is the log-slowdown (latency / solo) --------------
+    let targets: Vec<f64> = train
+        .y
+        .iter()
+        .zip(&train.x)
+        .map(|(y, row)| y.ln() - (row[0] as f64).ln())
+        .collect();
+    let t0 = std::time::Instant::now();
+    let params = trainer::train_forest(&train.x, &targets, cfg)?;
+    let fit_seconds = t0.elapsed().as_secs_f64();
+    let forest = NativeForest::new(params.clone());
+
+    let pred: Vec<f32> = forest.predict(&test.x);
+    let test_error = relative_error(&pred, &test.y);
+    ensure!(
+        test_error.is_finite() && test_error < 0.6,
+        "trained forest failed the sanity bar: test error {test_error:.3}"
+    );
+    write_json(&out_dir.join("forest.json"), &forest_to_json(&params, test_error))?;
+
+    // -- predict_check golden vectors -------------------------------------
+    let check_n = test.x.len().min(64);
+    let check_rows = &test.x[..check_n];
+    let expected = forest.predict(check_rows);
+    let check = obj(vec![
+        ("x", f32_mat_json(check_rows)),
+        ("expected_ms", arr(expected.iter().map(|v| num(*v as f64)))),
+    ]);
+    write_json(&out_dir.join("predict_check.json"), &check)?;
+
+    // -- meta --------------------------------------------------------------
+    let meta = obj(vec![
+        ("n_features", num(N_FEATURES as f64)),
+        ("n_profile_metrics", num(N_PROFILE as f64)),
+        ("profile_metrics", arr(PROFILE_METRICS.iter().map(|m| s(m)))),
+        ("n_trees", num(cfg.n_trees as f64)),
+        ("depth", num(cfg.depth as f64)),
+        ("batch_variants", arr(BATCH_VARIANTS.iter().map(|b| num(*b as f64)))),
+        (
+            "feature_layout",
+            arr([
+                "solo_latency_ms",
+                "target_profile[13]",
+                "target_sat",
+                "target_cached",
+                "agg_sat_profile[13]",
+                "agg_cached_profile[13]",
+                "total_sat",
+                "total_cached",
+            ]
+            .iter()
+            .map(|v| s(v))),
+        ),
+        ("target", s("p90_latency_ms")),
+        ("train_rows", num(cfg.train_rows as f64)),
+        ("label_noise_sigma", num(cfg.noise_sigma)),
+        ("generator", s("native")),
+        ("seed", num(cfg.seed as f64)),
+    ]);
+    write_json(&out_dir.join("meta.json"), &meta)?;
+
+    // -- natively computable model-comparison rows ------------------------
+    if cfg.model_comparison {
+        let mc = model_comparison(&pred, &test, test_error, fit_seconds);
+        write_json(&out_dir.join("model_comparison.json"), &mc)?;
+    }
+
+    Ok(GenReport {
+        n_functions: cfg.n_functions,
+        train_rows: train.x.len(),
+        test_error,
+        fit_seconds,
+    })
+}
+
+/// Paper's error metric: mean |P̂ − P| / P.
+pub fn relative_error(pred: &[f32], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let total: f64 = pred
+        .iter()
+        .zip(truth)
+        .map(|(p, t)| ((*p as f64) - t).abs() / t)
+        .sum();
+    total / truth.len() as f64
+}
+
+// ---------------------------------------------------------------------------
+// Catalog synthesis (datagen.make_catalog mirror).
+// ---------------------------------------------------------------------------
+
+/// The six named archetypes (ServerlessBench/FunctionBench stand-ins).
+/// Columns = RESOURCES: cpu, membw, llc, l1, tlb, branch.
+#[rustfmt::skip]
+const ARCHETYPES: [(&str, [f64; 6], [f64; 6], f64); 6] = [
+    ("rnn",        [2.8, 0.9, 1.2, 0.8, 0.6, 2.6], [0.9, 0.3, 0.5, 0.3, 0.2, 1.0], 118.0),
+    ("img_resize", [1.6, 3.2, 2.6, 0.9, 0.7, 0.5], [0.5, 1.1, 0.9, 0.3, 0.2, 0.2],  62.0),
+    ("linpack",    [3.4, 1.4, 0.8, 2.4, 0.5, 0.4], [1.2, 0.5, 0.3, 0.8, 0.2, 0.2],  41.0),
+    ("log_proc",   [1.2, 1.1, 1.0, 1.3, 2.8, 1.2], [0.4, 0.4, 0.4, 0.5, 1.0, 0.4],  23.0),
+    ("chameleon",  [2.0, 1.8, 2.9, 1.1, 1.0, 1.1], [0.7, 0.6, 1.0, 0.4, 0.4, 0.4],  84.0),
+    ("gzip",       [2.6, 2.7, 1.4, 0.9, 0.8, 0.7], [0.9, 0.9, 0.5, 0.3, 0.3, 0.3],  35.0),
+];
+
+/// Derive the observable Table-3 profile as noisy correlates of the
+/// hidden pressure vector (datagen._profile_from_pressure mirror).
+fn profile_from_pressure(pressure: &[f64], rng: &mut Rng) -> Vec<f64> {
+    let (cpu, membw, llc, l1, tlb, branch) = (
+        pressure[0], pressure[1], pressure[2], pressure[3], pressure[4], pressure[5],
+    );
+    let mut n = |sigma: f64| rng.normal_ms(1.0, sigma);
+    vec![
+        1000.0 * (0.4 + 0.75 * cpu) * n(0.05),
+        1e9 * (0.2 + 0.5 * cpu + 0.2 * l1) * n(0.05),
+        (2.6 - 0.25 * membw - 0.2 * llc) * n(0.04),
+        900.0 * (0.3 + 0.5 * tlb) * n(0.08),
+        (1.0 + 1.3 * membw * 0.4) * n(0.05),
+        (2.0 + 9.0 * l1 * 0.4) * n(0.06),
+        (1.0 + 5.0 * l1 * 0.3 + 2.0 * branch * 0.2) * n(0.06),
+        (1.0 + 6.0 * llc * 0.35) * n(0.06),
+        (0.3 + 2.5 * llc * 0.4 + 1.0 * membw * 0.2) * n(0.06),
+        (0.2 + 1.8 * tlb * 0.4) * n(0.07),
+        (0.1 + 0.9 * tlb * 0.3) * n(0.07),
+        (0.5 + 4.0 * branch * 0.4) * n(0.06),
+        1000.0 * (0.3 + 2.2 * membw) * n(0.05),
+    ]
+}
+
+/// Generate a catalog: the six named archetypes first, then functions
+/// sampled around the archetype cloud so larger catalogs stay in
+/// distribution yet are all distinct.
+pub fn make_catalog(n_functions: usize, seed: u64) -> Vec<FunctionSpec> {
+    let mut rng = Rng::seed_from(seed);
+    let mut specs = Vec::with_capacity(n_functions);
+    for i in 0..n_functions {
+        let (name, pressure, sensitivity, base) = if i < ARCHETYPES.len() {
+            let (name, p, sv, base) = &ARCHETYPES[i];
+            let sens: Vec<f64> = sv.iter().map(|v| v * SENS_SCALE).collect();
+            (name.to_string(), p.to_vec(), sens, *base)
+        } else {
+            let (_, p, sv, base) = &ARCHETYPES[rng.below(ARCHETYPES.len() as u64) as usize];
+            let pressure: Vec<f64> =
+                p.iter().map(|v| (v * rng.range_f64(0.6, 1.5)).max(0.2)).collect();
+            let sens: Vec<f64> = sv
+                .iter()
+                .map(|v| (v * SENS_SCALE * rng.range_f64(0.6, 1.5)).max(0.02))
+                .collect();
+            let base = base * rng.range_f64(0.5, 1.8);
+            (format!("fn_{i:03}"), pressure, sens, base)
+        };
+        let profile = profile_from_pressure(&pressure, &mut rng);
+        let solo = interference::slowdown(
+            &interference::utilisation_single(&pressure),
+            &sensitivity,
+        ) * base;
+        specs.push(FunctionSpec {
+            name,
+            profile,
+            solo_latency_ms: solo,
+            saturated_rps: (2500.0 / base * 100.0).round() / 100.0,
+            qos_latency_ms: QOS_FACTOR * solo,
+            milli_cpu: INSTANCE_MILLI_CPU,
+            mem_mb: INSTANCE_MEM_MB,
+            pressure,
+            sensitivity,
+            base_latency_ms: base,
+        });
+    }
+    specs
+}
+
+// ---------------------------------------------------------------------------
+// Training-set sampling (datagen.sample_dataset mirror).
+// ---------------------------------------------------------------------------
+
+/// One labelled dataset: feature rows, noisy latency labels (ms), and the
+/// target function's name per row.
+pub struct Dataset {
+    pub x: Vec<Vec<f32>>,
+    pub y: Vec<f64>,
+    pub names: Vec<String>,
+}
+
+/// Sample random node mixes and label every present function.  Coverage
+/// bounds must exceed every reachable QoS-capacity (see the note in
+/// datagen.py), otherwise the capacity sweep extrapolates past the trees'
+/// training range.
+pub fn sample_dataset(cat: &Catalog, n_samples: usize, seed: u64, noise_sigma: f64) -> Dataset {
+    const MAX_COLOCATED: usize = 6;
+    const MAX_SAT: u64 = 24;
+    const MAX_CACHED: u64 = 5;
+    const MAX_TOTAL_SAT: u32 = 44;
+    let mut rng = Rng::seed_from(seed);
+    let mut out = Dataset { x: Vec::new(), y: Vec::new(), names: Vec::new() };
+    while out.x.len() < n_samples {
+        let kmax = MAX_COLOCATED.min(cat.len()) as u64;
+        let k = rng.range_u64(1, kmax) as usize;
+        let chosen = rng.choose_k(cat.len(), k);
+        let sat: Vec<u32> = (0..k).map(|_| rng.range_u64(0, MAX_SAT) as u32).collect();
+        let cached: Vec<u32> = (0..k).map(|_| rng.range_u64(0, MAX_CACHED) as u32).collect();
+        let tot_sat: u32 = sat.iter().sum();
+        let tot_cached: u32 = cached.iter().sum();
+        if tot_sat + tot_cached == 0 || tot_sat > MAX_TOTAL_SAT {
+            continue;
+        }
+        let mix = NodeMix::new(
+            chosen.iter().enumerate().map(|(i, f)| (*f, sat[i], cached[i])).collect(),
+        );
+        for t in 0..k {
+            if sat[t] == 0 {
+                continue;
+            }
+            let fid = chosen[t];
+            let truth = interference::ground_truth_latency(cat, &mix, fid);
+            let noisy = (truth * (1.0 + rng.normal_ms(0.0, noise_sigma))).max(truth * 1e-3);
+            out.x.push(feature_row(cat, &mix, fid));
+            out.y.push(noisy);
+            out.names.push(cat.get(fid).name.clone());
+            if out.x.len() == n_samples {
+                break;
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Golden vectors (datagen.golden_vectors mirror).
+// ---------------------------------------------------------------------------
+
+/// Random node mixes with exact ground-truth latencies + feature rows,
+/// serialised in the layout `rust/tests/golden.rs` consumes.
+pub fn golden_vectors(cat: &Catalog, n_cases: usize, seed: u64) -> Json {
+    let mut rng = Rng::seed_from(seed);
+    let mut cases = Vec::with_capacity(n_cases);
+    for _ in 0..n_cases {
+        let kmax = 6.min(cat.len()) as u64;
+        let k = rng.range_u64(1, kmax) as usize;
+        let mut chosen = rng.choose_k(cat.len(), k);
+        chosen.sort_unstable();
+        let mut sat: Vec<u32> = (0..k).map(|_| rng.range_u64(0, 12) as u32).collect();
+        let cached: Vec<u32> = (0..k).map(|_| rng.range_u64(0, 4) as u32).collect();
+        if sat.iter().sum::<u32>() == 0 {
+            sat[0] = 1;
+        }
+        let target_pos = rng.below(k as u64) as usize;
+        let mix = NodeMix::new(
+            chosen.iter().enumerate().map(|(i, f)| (*f, sat[i], cached[i])).collect(),
+        );
+        let target_fid = chosen[target_pos];
+        cases.push(obj(vec![
+            ("functions", arr(chosen.iter().map(|f| s(&cat.get(*f).name)))),
+            ("sat", arr(sat.iter().map(|v| num(*v as f64)))),
+            ("cached", arr(cached.iter().map(|v| num(*v as f64)))),
+            ("target", num(target_pos as f64)),
+            (
+                "utilisation",
+                arr(interference::node_utilisation(cat, &mix).into_iter().map(num)),
+            ),
+            ("latency_ms", num(interference::ground_truth_latency(cat, &mix, target_fid))),
+            ("features", arr(feature_row(cat, &mix, target_fid).iter().map(|v| num(*v as f64)))),
+        ]));
+    }
+    Json::Arr(cases)
+}
+
+// ---------------------------------------------------------------------------
+// JSON serialisation.
+// ---------------------------------------------------------------------------
+
+fn f32_mat_json(rows: &[Vec<f32>]) -> Json {
+    arr(rows.iter().map(|r| arr(r.iter().map(|v| num(*v as f64)))))
+}
+
+fn catalog_to_json(cat: &Catalog) -> Json {
+    obj(vec![
+        ("profile_metrics", arr(PROFILE_METRICS.iter().map(|m| s(m)))),
+        ("resources", arr(RESOURCES.iter().map(|r| s(r)))),
+        (
+            "resource_capacity",
+            arr(interference::RESOURCE_CAPACITY.iter().map(|c| num(*c))),
+        ),
+        ("cached_pressure_factor", num(interference::CACHED_PRESSURE_FACTOR)),
+        ("node_milli_cpu", num(NODE_MILLI_CPU as f64)),
+        ("node_mem_mb", num(NODE_MEM_MB as f64)),
+        ("qos_factor", num(QOS_FACTOR)),
+        (
+            "functions",
+            arr(cat.functions.iter().map(|f| {
+                obj(vec![
+                    ("name", s(&f.name)),
+                    ("profile", arr(f.profile.iter().map(|v| num(*v)))),
+                    ("solo_latency_ms", num(f.solo_latency_ms)),
+                    ("saturated_rps", num(f.saturated_rps)),
+                    ("qos_latency_ms", num(f.qos_latency_ms)),
+                    ("milli_cpu", num(f.milli_cpu as f64)),
+                    ("mem_mb", num(f.mem_mb as f64)),
+                    ("pressure", arr(f.pressure.iter().map(|v| num(*v)))),
+                    ("sensitivity", arr(f.sensitivity.iter().map(|v| num(*v)))),
+                    ("base_latency_ms", num(f.base_latency_ms)),
+                ])
+            })),
+        ),
+    ])
+}
+
+fn forest_to_json(params: &crate::runtime::ForestParams, test_error: f64) -> Json {
+    // +inf padding is serialised as 1e30 (the Python contract); fit
+    // wall-clock is deliberately NOT written so equal seeds give
+    // byte-identical files (it lives in model_comparison.json instead).
+    obj(vec![
+        ("n_trees", num(params.n_trees as f64)),
+        ("depth", num(params.depth as f64)),
+        ("n_features", num(params.n_features as f64)),
+        (
+            "feature",
+            arr(params.feature.iter().map(|row| arr(row.iter().map(|v| num(*v as f64))))),
+        ),
+        (
+            "threshold",
+            arr(params
+                .threshold
+                .iter()
+                .map(|row| arr(row.iter().map(|v| num(*v as f64))))),
+        ),
+        (
+            "leaf",
+            arr(params.leaf.iter().map(|row| arr(row.iter().map(|v| num(*v as f64))))),
+        ),
+        ("mean", arr(params.mean.iter().map(|v| num(*v as f64)))),
+        ("std", arr(params.std.iter().map(|v| num(*v as f64)))),
+        ("test_error", num(test_error)),
+    ])
+}
+
+fn model_comparison(pred: &[f32], test: &Dataset, test_error: f64, fit_seconds: f64) -> Json {
+    let half = pred.len() / 2;
+    let err_1 = relative_error(&pred[..half], &test.y[..half]);
+    let err_2 = relative_error(&pred[half..], &test.y[half..]);
+    let mut names: Vec<&String> = test.names.iter().collect();
+    names.sort_unstable();
+    names.dedup();
+    let per_function = obj(names
+        .iter()
+        .map(|name| {
+            let (mut total, mut count) = (0.0, 0usize);
+            for i in 0..pred.len() {
+                if &test.names[i] == *name {
+                    total += ((pred[i] as f64) - test.y[i]).abs() / test.y[i];
+                    count += 1;
+                }
+            }
+            (name.as_str(), num(if count == 0 { 0.0 } else { total / count as f64 }))
+        })
+        .collect());
+    obj(vec![
+        ("generator", s("native")),
+        (
+            "fig15a",
+            obj(vec![
+                ("jiagu", num(test_error)),
+                ("jiagu_split1", num(err_1)),
+                ("jiagu_split2", num(err_2)),
+                ("per_function", per_function),
+            ]),
+        ),
+        (
+            "fig16",
+            obj(vec![(
+                "jiagu_rfr",
+                obj(vec![
+                    ("error", num(test_error)),
+                    ("fit_seconds", num(fit_seconds)),
+                    ("dims", num(N_FEATURES as f64)),
+                ]),
+            )]),
+        ),
+        (
+            "fig17a",
+            obj(vec![(
+                "jiagu",
+                obj(vec![
+                    ("dims", num(N_FEATURES as f64)),
+                    ("fit_seconds", num(fit_seconds)),
+                ]),
+            )]),
+        ),
+    ])
+}
+
+fn write_json(path: &Path, j: &Json) -> Result<()> {
+    let mut text = j.to_string();
+    text.push('\n');
+    std::fs::write(path, text).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_matches_archetype_contract() {
+        let specs = make_catalog(8, 7);
+        assert_eq!(specs.len(), 8);
+        assert_eq!(specs[0].name, "rnn");
+        assert_eq!(specs[5].name, "gzip");
+        assert_eq!(specs[6].name, "fn_006");
+        let cat = Catalog::from_functions(specs);
+        cat.validate().unwrap();
+        for f in 0..cat.len() {
+            // same request sizing for every function (paper §7.1)
+            assert_eq!(cat.request_packing_limit(f), 12);
+        }
+    }
+
+    #[test]
+    fn make_catalog_is_deterministic() {
+        let a = make_catalog(10, 42);
+        let b = make_catalog(10, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.profile, y.profile);
+            assert_eq!(x.solo_latency_ms, y.solo_latency_ms);
+        }
+        let c = make_catalog(10, 43);
+        assert_ne!(a[6].base_latency_ms, c[6].base_latency_ms);
+    }
+
+    #[test]
+    fn dataset_respects_bounds_and_layout() {
+        let cat = Catalog::from_functions(make_catalog(6, 7));
+        let d = sample_dataset(&cat, 200, 11, 0.05);
+        assert_eq!(d.x.len(), 200);
+        assert_eq!(d.y.len(), 200);
+        assert_eq!(d.names.len(), 200);
+        for (row, y) in d.x.iter().zip(&d.y) {
+            assert_eq!(row.len(), N_FEATURES);
+            assert!(*y > 0.0);
+            // total saturated instances within the documented range
+            let tot_sat = row[N_FEATURES - 2];
+            assert!(tot_sat >= 1.0 && tot_sat <= 44.0, "total sat {tot_sat}");
+        }
+    }
+
+    #[test]
+    fn golden_vectors_roundtrip_through_json() {
+        let cat = Catalog::from_functions(make_catalog(6, 7));
+        let golden = golden_vectors(&cat, 16, 99);
+        let parsed = Json::parse(&golden.to_string()).unwrap();
+        let cases = parsed.as_arr().unwrap();
+        assert_eq!(cases.len(), 16);
+        for case in cases {
+            let want = case.get("latency_ms").unwrap().as_f64().unwrap();
+            assert!(want > 0.0 && want.is_finite());
+            let feats = case.get("features").unwrap().f32_vec().unwrap();
+            assert_eq!(feats.len(), N_FEATURES);
+        }
+    }
+}

@@ -1,0 +1,358 @@
+//! Histogram-based random-forest training in pure Rust — the native port
+//! of `python/compile/forest.py` (bagged CART, quantile-binned splits,
+//! perfect-tree flattening).
+//!
+//! Semantics mirror the Python trainer:
+//!
+//! * per-feature bin edges at training-set quantiles (deduplicated);
+//! * splits maximise `sum_L²/n_L + sum_R²/n_R` (variance reduction with
+//!   the constant term dropped), rejecting zero-gain splits;
+//! * trees grow to a fixed max depth and are flattened into perfect
+//!   binary trees: early leaves pad their subtree with
+//!   `(feature=0, threshold=+inf)` internal nodes (comparisons always go
+//!   left) and replicate the leaf value across the covered slots;
+//! * split thresholds are found in raw feature space and standardised at
+//!   the end (`thr' = (thr − mean[f]) / std[f]`), because the runtime
+//!   z-scores features before traversal.
+//!
+//! Determinism: all sampling goes through [`crate::util::rng::Rng`]
+//! seeded from the generation config; no wall-clock enters the output.
+
+use super::GenConfig;
+use crate::runtime::ForestParams;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+
+/// Train a forest on raw feature rows `x` (one row per sample) against
+/// log-slowdown targets `y`, returning flattened, standardised
+/// [`ForestParams`] ready for [`crate::runtime::NativeForest`].
+pub fn train_forest(x: &[Vec<f32>], y: &[f64], cfg: &GenConfig) -> Result<ForestParams> {
+    let n = x.len();
+    ensure!(n >= 16, "need at least 16 training rows, got {n}");
+    ensure!(y.len() == n, "targets/rows length mismatch");
+    let n_features = x[0].len();
+    ensure!(x.iter().all(|r| r.len() == n_features), "ragged feature rows");
+    ensure!(y.iter().all(|v| v.is_finite()), "non-finite training target");
+
+    // -- per-feature stats, bin edges and binned matrix -------------------
+    let mut mean = vec![0.0f64; n_features];
+    let mut std = vec![0.0f64; n_features];
+    let mut edges: Vec<Vec<f64>> = Vec::with_capacity(n_features);
+    let mut binned = vec![0u16; n * n_features];
+    let mut col = vec![0.0f64; n];
+    for f in 0..n_features {
+        for (i, row) in x.iter().enumerate() {
+            col[i] = row[f] as f64;
+        }
+        let m = col.iter().sum::<f64>() / n as f64;
+        let var = col.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / n as f64;
+        mean[f] = m;
+        std[f] = var.sqrt().max(1e-6);
+        let e = quantile_edges(&col, cfg.n_bins);
+        for (i, row) in x.iter().enumerate() {
+            let v = row[f] as f64;
+            binned[i * n_features + f] = e.partition_point(|edge| *edge <= v) as u16;
+        }
+        edges.push(e);
+    }
+
+    // -- grow the bagged ensemble -----------------------------------------
+    let n_internal = (1usize << cfg.depth) - 1;
+    let n_leaves = 1usize << cfg.depth;
+    let grower = Grower {
+        binned: &binned,
+        edges: &edges,
+        y,
+        n_features,
+        max_depth: cfg.depth,
+        min_leaf: cfg.min_samples_leaf.max(1),
+        n_feat_sub: ((cfg.feature_frac * n_features as f64) as usize).max(1),
+        n_bins: cfg.n_bins,
+        n_internal,
+    };
+    let mut rng = Rng::seed_from(cfg.seed.wrapping_add(3));
+    let n_boot = ((cfg.bootstrap_frac * n as f64) as usize).max(8);
+    let mut feature = Vec::with_capacity(cfg.n_trees);
+    let mut threshold_raw = Vec::with_capacity(cfg.n_trees);
+    let mut leaf = Vec::with_capacity(cfg.n_trees);
+    for _ in 0..cfg.n_trees {
+        let idx: Vec<u32> = (0..n_boot).map(|_| rng.below(n as u64) as u32).collect();
+        let mut feat_t = vec![0i32; n_internal];
+        let mut thr_t = vec![f64::INFINITY; n_internal];
+        let mut leaf_t = vec![0f32; n_leaves];
+        grower.grow(idx, 0, 0, &mut rng, &mut feat_t, &mut thr_t, &mut leaf_t);
+        feature.push(feat_t);
+        threshold_raw.push(thr_t);
+        leaf.push(leaf_t);
+    }
+
+    // -- standardise thresholds into the runtime's z-scored space ---------
+    let threshold: Vec<Vec<f32>> = threshold_raw
+        .iter()
+        .zip(&feature)
+        .map(|(thr_t, feat_t)| {
+            thr_t
+                .iter()
+                .zip(feat_t)
+                .map(|(t, f)| {
+                    if t.is_finite() {
+                        ((t - mean[*f as usize]) / std[*f as usize]) as f32
+                    } else {
+                        1e30f32
+                    }
+                })
+                .collect()
+        })
+        .collect();
+
+    let params = ForestParams {
+        n_trees: cfg.n_trees,
+        depth: cfg.depth,
+        n_features,
+        feature,
+        threshold,
+        leaf,
+        mean: mean.iter().map(|v| *v as f32).collect(),
+        std: std.iter().map(|v| *v as f32).collect(),
+        test_error: 0.0,
+        fit_seconds: 0.0,
+    };
+    params.validate()?;
+    Ok(params)
+}
+
+/// Per-feature bin edges at training-set quantiles (linear interpolation,
+/// exact duplicates removed) — `forest._quantile_bins` mirror.
+fn quantile_edges(col: &[f64], n_bins: usize) -> Vec<f64> {
+    let mut sorted = col.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let n = sorted.len();
+    let mut edges: Vec<f64> = Vec::with_capacity(n_bins.saturating_sub(1));
+    for j in 1..n_bins {
+        let q = j as f64 / n_bins as f64;
+        let pos = q * (n - 1) as f64;
+        let lo = pos.floor() as usize;
+        let frac = pos - lo as f64;
+        let v = if lo + 1 < n {
+            sorted[lo] + (sorted[lo + 1] - sorted[lo]) * frac
+        } else {
+            sorted[lo]
+        };
+        if v > edges.last().copied().unwrap_or(f64::NEG_INFINITY) {
+            edges.push(v);
+        }
+    }
+    edges
+}
+
+/// Recursive CART grower writing directly into one tree's perfect-shape
+/// arrays (`feat`/`thr` level-ordered internal nodes, `leaf` dense).
+struct Grower<'a> {
+    /// `n × F` row-major quantile-bin indices.
+    binned: &'a [u16],
+    edges: &'a [Vec<f64>],
+    y: &'a [f64],
+    n_features: usize,
+    max_depth: usize,
+    min_leaf: usize,
+    n_feat_sub: usize,
+    n_bins: usize,
+    n_internal: usize,
+}
+
+impl Grower<'_> {
+    fn grow(
+        &self,
+        idx: Vec<u32>,
+        pos: usize,
+        depth: usize,
+        rng: &mut Rng,
+        feat: &mut [i32],
+        thr: &mut [f64],
+        leaf: &mut [f32],
+    ) {
+        let n = idx.len();
+        let mean = idx.iter().map(|i| self.y[*i as usize]).sum::<f64>() / n as f64;
+        let spread = {
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for i in &idx {
+                let v = self.y[*i as usize];
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            hi - lo
+        };
+        if depth >= self.max_depth || n < 2 * self.min_leaf || spread == 0.0 {
+            self.pad(pos, depth, mean as f32, feat, thr, leaf);
+            return;
+        }
+        let feats = rng.choose_k(self.n_features, self.n_feat_sub);
+        let Some((best_f, best_b)) = self.best_split(&idx, &feats) else {
+            self.pad(pos, depth, mean as f32, feat, thr, leaf);
+            return;
+        };
+        let (left, right): (Vec<u32>, Vec<u32>) = idx
+            .iter()
+            .copied()
+            .partition(|i| self.binned[*i as usize * self.n_features + best_f] as usize <= best_b);
+        if left.len() < self.min_leaf || right.len() < self.min_leaf {
+            self.pad(pos, depth, mean as f32, feat, thr, leaf);
+            return;
+        }
+        feat[pos] = best_f as i32;
+        thr[pos] = if best_b < self.edges[best_f].len() {
+            self.edges[best_f][best_b]
+        } else {
+            f64::INFINITY
+        };
+        self.grow(left, 2 * pos + 1, depth + 1, rng, feat, thr, leaf);
+        self.grow(right, 2 * pos + 2, depth + 1, rng, feat, thr, leaf);
+    }
+
+    /// Variance-reduction split search over the chosen features: one
+    /// histogram pass per feature, then a prefix scan over bins.  Returns
+    /// `(feature, bin)` of the best valid split, or `None` when no split
+    /// beats the parent (`gain ≤ (Σy)²/n + 1e-12`, the zero-gain guard).
+    fn best_split(&self, idx: &[u32], feats: &[usize]) -> Option<(usize, usize)> {
+        let n = idx.len() as f64;
+        let total: f64 = idx.iter().map(|i| self.y[*i as usize]).sum();
+        let nb = self.n_bins + 1;
+        let mut best = None;
+        let mut best_gain = total * total / n + 1e-12;
+        let mut counts = vec![0u32; nb];
+        let mut sums = vec![0f64; nb];
+        for &f in feats {
+            counts.fill(0);
+            sums.fill(0.0);
+            for i in idx {
+                let b = self.binned[*i as usize * self.n_features + f] as usize;
+                counts[b] += 1;
+                sums[b] += self.y[*i as usize];
+            }
+            let mut count_left = 0usize;
+            let mut sum_left = 0f64;
+            for b in 0..nb - 1 {
+                count_left += counts[b] as usize;
+                sum_left += sums[b];
+                let count_right = idx.len() - count_left;
+                if count_left < self.min_leaf || count_right < self.min_leaf {
+                    continue;
+                }
+                let sum_right = total - sum_left;
+                let gain = sum_left * sum_left / count_left as f64
+                    + sum_right * sum_right / count_right as f64;
+                if gain > best_gain {
+                    best_gain = gain;
+                    best = Some((f, b));
+                }
+            }
+        }
+        best
+    }
+
+    /// Fill the perfect-tree subtree under `pos` for an early leaf:
+    /// always-left internal padding plus the replicated leaf value.
+    fn pad(
+        &self,
+        pos: usize,
+        depth: usize,
+        value: f32,
+        feat: &mut [i32],
+        thr: &mut [f64],
+        leaf: &mut [f32],
+    ) {
+        if depth == self.max_depth {
+            leaf[pos - self.n_internal] = value;
+            return;
+        }
+        feat[pos] = 0;
+        thr[pos] = f64::INFINITY;
+        self.pad(2 * pos + 1, depth + 1, value, feat, thr, leaf);
+        self.pad(2 * pos + 2, depth + 1, value, feat, thr, leaf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeForest;
+
+    /// y = step on feature 1 plus a linear term on feature 0 — an easy
+    /// target a depth-limited forest must fit well.
+    fn toy_dataset(n: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<f64>) {
+        let mut rng = Rng::seed_from(seed);
+        let mut x = Vec::with_capacity(n);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let a = rng.range_f64(0.1, 4.0);
+            let b = rng.range_f64(-1.0, 1.0);
+            let c = rng.range_f64(0.0, 1.0); // noise-free distractor
+            x.push(vec![a as f32, b as f32, c as f32]);
+            y.push(0.25 * a + if b > 0.2 { 1.0 } else { 0.0 });
+        }
+        (x, y)
+    }
+
+    fn toy_config() -> GenConfig {
+        GenConfig {
+            n_trees: 12,
+            depth: 6,
+            min_samples_leaf: 2,
+            feature_frac: 1.0,
+            n_bins: 32,
+            ..GenConfig::default()
+        }
+    }
+
+    #[test]
+    fn learns_a_simple_function() {
+        let (x, y) = toy_dataset(2_000, 9);
+        let params = train_forest(&x, &y, &toy_config()).unwrap();
+        assert_eq!(params.n_features, 3);
+        let forest = NativeForest::new(params);
+        // NativeForest semantics: latency = row[0] * exp(leaf mean), so
+        // compare in the model's own output space against the same
+        // transform of the true target.
+        let (xt, yt) = toy_dataset(256, 10);
+        let mut err = 0.0;
+        for (row, target) in xt.iter().zip(&yt) {
+            let want = row[0] as f64 * target.exp();
+            let got = forest.predict_one(row) as f64;
+            err += (got - want).abs() / want;
+        }
+        err /= yt.len() as f64;
+        assert!(err < 0.08, "toy-function fit error too high: {err:.4}");
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let (x, y) = toy_dataset(1_000, 21);
+        let a = train_forest(&x, &y, &toy_config()).unwrap();
+        let b = train_forest(&x, &y, &toy_config()).unwrap();
+        assert_eq!(a.feature, b.feature);
+        assert_eq!(a.threshold, b.threshold);
+        assert_eq!(a.leaf, b.leaf);
+    }
+
+    #[test]
+    fn quantile_edges_are_sorted_and_unique() {
+        let col: Vec<f64> = (0..500).map(|i| (i % 50) as f64).collect();
+        let e = quantile_edges(&col, 64);
+        assert!(!e.is_empty());
+        for w in e.windows(2) {
+            assert!(w[0] < w[1], "edges must be strictly increasing");
+        }
+        // constant column → no usable edges
+        assert!(quantile_edges(&vec![3.0; 100], 64).is_empty());
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        let (x, y) = toy_dataset(8, 1);
+        assert!(train_forest(&x, &y, &toy_config()).is_err());
+        let (x, mut y) = toy_dataset(100, 1);
+        y[3] = f64::NAN;
+        assert!(train_forest(&x, &y, &toy_config()).is_err());
+    }
+}

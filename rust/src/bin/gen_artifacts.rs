@@ -1,0 +1,84 @@
+//! `jiagu-gen-artifacts` — generate every artifact the Rust stack
+//! consumes, natively and deterministically (no Python/JAX required).
+//!
+//! ```text
+//! jiagu-gen-artifacts [--out-dir DIR] [--seed 7] [--functions 6]
+//!                     [--train-rows 20000] [--test-rows 2000]
+//!                     [--trees 64] [--depth 10] [--quick]
+//!                     [--no-model-comparison]
+//! ```
+//!
+//! Defaults mirror the Python pipeline's hyperparameters; `--quick`
+//! switches to a small budget for dev loops (tests use an even smaller
+//! in-process configuration).  The HLO modules for the optional PJRT
+//! runtime still come from `make artifacts-jax`.
+
+use anyhow::{bail, Context, Result};
+use jiagu::artifacts::{generate, GenConfig};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    // --quick is a baseline, not a positional override: apply it first so
+    // explicit sizing flags win regardless of where they appear.
+    let mut cfg = if raw.iter().any(|a| a == "--quick") {
+        GenConfig::quick()
+    } else {
+        GenConfig::default()
+    };
+    let mut out_dir: Option<std::path::PathBuf> = None;
+    let mut args = raw.into_iter();
+    while let Some(a) = args.next() {
+        let mut value = |name: &str| {
+            args.next().with_context(|| format!("{name} expects a value"))
+        };
+        match a.as_str() {
+            "--out-dir" => out_dir = Some(value("--out-dir")?.into()),
+            "--seed" => cfg.seed = value("--seed")?.parse().context("--seed")?,
+            "--functions" => {
+                cfg.n_functions = value("--functions")?.parse().context("--functions")?
+            }
+            "--train-rows" => {
+                cfg.train_rows = value("--train-rows")?.parse().context("--train-rows")?
+            }
+            "--test-rows" => {
+                cfg.test_rows = value("--test-rows")?.parse().context("--test-rows")?
+            }
+            "--trees" => cfg.n_trees = value("--trees")?.parse().context("--trees")?,
+            "--depth" => cfg.depth = value("--depth")?.parse().context("--depth")?,
+            "--quick" => {} // applied before parsing; see above
+            "--no-model-comparison" => cfg.model_comparison = false,
+            "--help" | "-h" => {
+                println!(
+                    "jiagu-gen-artifacts [--out-dir DIR] [--seed N] [--functions N] \
+                     [--train-rows N] [--test-rows N] [--trees N] [--depth N] \
+                     [--quick] [--no-model-comparison]"
+                );
+                return Ok(());
+            }
+            other => bail!("unknown flag {other:?} (see --help)"),
+        }
+    }
+    let out_dir = out_dir.unwrap_or_else(jiagu::artifacts_dir);
+    eprintln!(
+        "[gen] generating artifacts in {} (seed {}, {} fns, {} train rows, T={} D={})",
+        out_dir.display(),
+        cfg.seed,
+        cfg.n_functions,
+        cfg.train_rows,
+        cfg.n_trees,
+        cfg.depth
+    );
+    let report = generate(&out_dir, &cfg)?;
+    eprintln!(
+        "[gen] done: {} functions, {} train rows, forest test error {:.3}, fit {:.1}s",
+        report.n_functions, report.train_rows, report.test_error, report.fit_seconds
+    );
+    Ok(())
+}

@@ -182,7 +182,8 @@ fn run() -> Result<()> {
                 );
             }
             let predictor = load_predictor(&artifacts, false)?;
-            println!("predictor: PJRT, {} features", predictor.n_features());
+            let backend = if cfg!(feature = "pjrt") { "pjrt" } else { "native" };
+            println!("predictor: {backend}, {} features", predictor.n_features());
         }
         Some(other) => bail!("unknown subcommand {other:?} (run|compare|info)"),
     }

@@ -1,5 +1,9 @@
-//! PJRT runtime: loads the AOT-compiled predictor and serves batched
+//! Predictor runtime: loads the trained forest and serves batched
 //! inference to the scheduler.
+//!
+//! Two interchangeable backends sit behind [`Predictor`]: the pure-Rust
+//! [`NativeForest`] traversal (always available, the default build) and
+//! the PJRT/XLA path below (behind the off-by-default `pjrt` feature).
 //!
 //! `make artifacts` (Python, build time only) lowers the L2 JAX graph —
 //! feature standardisation → Pallas forest traversal → exp — to **HLO
@@ -19,7 +23,9 @@ mod predictor;
 
 pub use forest_params::ForestParams;
 pub use native::NativeForest;
-pub use predictor::{NativeForestPredictor, PjrtPredictor, Predictor};
+#[cfg(feature = "pjrt")]
+pub use predictor::PjrtPredictor;
+pub use predictor::{NativeForestPredictor, Predictor};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

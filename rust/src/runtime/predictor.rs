@@ -1,9 +1,15 @@
-//! The PJRT-backed predictor: compile-once, pad-and-execute-batched.
+//! The predictors behind the [`Predictor`] trait: the always-available
+//! pure-Rust [`NativeForestPredictor`] and (behind the off-by-default
+//! `pjrt` feature) the PJRT-backed [`PjrtPredictor`]:
+//! compile-once, pad-and-execute-batched.
 
 use super::forest_params::ForestParams;
 use super::native::NativeForest;
 use super::InferenceStats;
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, bail, Context};
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
 use std::time::Instant;
@@ -53,6 +59,7 @@ impl NativeForestPredictor {
 }
 
 /// One compiled batch-size variant.
+#[cfg(feature = "pjrt")]
 struct Variant {
     batch: usize,
     exe: xla::PjRtLoadedExecutable,
@@ -61,6 +68,7 @@ struct Variant {
 /// The production predictor: executes the AOT HLO modules on the PJRT CPU
 /// client.  Thread-safe behind a mutex (PJRT executions are serialized per
 /// client anyway on the single-device CPU backend).
+#[cfg(feature = "pjrt")]
 pub struct PjrtPredictor {
     client: xla::PjRtClient,
     variants: Vec<Variant>, // sorted ascending by batch
@@ -86,9 +94,12 @@ pub struct PjrtPredictor {
 // take exclusive access, and (b) in `run`, which is serialised behind
 // `lock`.  The internal `Rc` refcounts are never mutated concurrently
 // because no `PjRtClient` clone ever escapes this struct.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for PjrtPredictor {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for PjrtPredictor {}
 
+#[cfg(feature = "pjrt")]
 impl PjrtPredictor {
     /// Load `forest.json` + every `model_b*.hlo.txt` under `artifacts_dir`.
     pub fn load(artifacts_dir: &Path) -> Result<Self> {
@@ -226,6 +237,7 @@ impl PjrtPredictor {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Predictor for PjrtPredictor {
     fn predict(&self, rows: &[Vec<f32>]) -> Result<Vec<f32>> {
         if rows.is_empty() {

@@ -398,7 +398,11 @@ mod tests {
     fn grows_cluster_when_full() {
         let cat = test_catalog();
         let mut cluster = Cluster::new(1);
-        let cfg = CapacityConfig { max_candidates: 4, max_instances_per_node: 4, ..Default::default() };
+        let cfg = CapacityConfig {
+            max_candidates: 4,
+            max_instances_per_node: 4,
+            ..Default::default()
+        };
         let mut s = JiaguScheduler::new(stub_predictor(), cfg, 1);
         let r = s.schedule(&cat, &mut cluster, 0, 10, 0.0).unwrap();
         assert_eq!(r.placements.len(), 10);

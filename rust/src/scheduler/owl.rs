@@ -104,7 +104,13 @@ impl OwlScheduler {
     /// Historical feasibility of adding one `function` instance to a node.
     /// None = colocation combination outside Owl's history model
     /// (>2 distinct functions).
-    fn admits(&mut self, cat: &Catalog, cluster: &Cluster, node: NodeId, f: FunctionId) -> Option<bool> {
+    fn admits(
+        &mut self,
+        cat: &Catalog,
+        cluster: &Cluster,
+        node: NodeId,
+        f: FunctionId,
+    ) -> Option<bool> {
         let mix = cluster.mix(node);
         let mut others: Vec<(FunctionId, u32)> = mix
             .entries

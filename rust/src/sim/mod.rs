@@ -247,14 +247,22 @@ impl Simulation {
     }
 }
 
-/// Convenience: build the simulation's predictor from artifacts (PJRT) or
-/// fall back to the native forest when `native` is set.
+/// Convenience: build the simulation's predictor from artifacts — PJRT
+/// when compiled in (`--features pjrt`) and not overridden, otherwise the
+/// pure-Rust forest.  Both run the same flattened trees; a build without
+/// the feature logs once and serves the native forest so every example,
+/// bench and test stays runnable on the artifacts `jiagu-gen-artifacts`
+/// produces natively.
 pub fn load_predictor(artifacts: &std::path::Path, native: bool) -> Result<Arc<dyn Predictor>> {
-    if native {
-        let params =
-            crate::runtime::ForestParams::load(&artifacts.join("forest.json"))?;
-        Ok(Arc::new(crate::runtime::NativeForestPredictor::new(params)))
-    } else {
-        Ok(Arc::new(crate::runtime::PjrtPredictor::load(artifacts)?))
+    #[cfg(feature = "pjrt")]
+    if !native {
+        return Ok(Arc::new(crate::runtime::PjrtPredictor::load(artifacts)?));
     }
+    if !native {
+        eprintln!(
+            "note: built without the `pjrt` feature; serving predictions from the native forest"
+        );
+    }
+    let params = crate::runtime::ForestParams::load(&artifacts.join("forest.json"))?;
+    Ok(Arc::new(crate::runtime::NativeForestPredictor::new(params)))
 }

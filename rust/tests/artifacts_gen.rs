@@ -1,0 +1,147 @@
+//! Integration tests for the native artifact generator: byte-level
+//! determinism for equal seeds, and a full round-trip through the same
+//! loaders the benches/tests/examples use (`Catalog::load`,
+//! `ForestParams::load`, `load_predictor(native)`).
+//!
+//! Unlike `golden.rs`/`e2e_sim.rs` these tests generate into a fresh
+//! temp directory, so they are self-contained and never skip.
+
+use jiagu::artifacts::{generate, GenConfig};
+use jiagu::catalog::Catalog;
+use jiagu::interference::{ground_truth_latency, node_utilisation, NodeMix};
+use jiagu::runtime::{ForestParams, Predictor};
+use jiagu::sim::load_predictor;
+use jiagu::util::json::Json;
+use std::path::PathBuf;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("jiagu-gen-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Small-but-meaningful budget: big enough that training finds real
+/// structure (the generator's sanity bar requires it), small enough to
+/// stay fast in debug builds.
+fn tiny_config() -> GenConfig {
+    GenConfig {
+        seed: 11,
+        train_rows: 1_500,
+        test_rows: 250,
+        n_trees: 12,
+        depth: 7,
+        golden_cases: 40,
+        model_comparison: true,
+        ..GenConfig::default()
+    }
+}
+
+const DETERMINISTIC_FILES: [&str; 5] = [
+    "meta.json",
+    "functions.json",
+    "forest.json",
+    "interference_check.json",
+    "predict_check.json",
+];
+
+#[test]
+fn same_seed_gives_byte_identical_artifacts() {
+    let a = tmp_dir("det-a");
+    let b = tmp_dir("det-b");
+    let c = tmp_dir("det-c");
+    generate(&a, &tiny_config()).unwrap();
+    generate(&b, &tiny_config()).unwrap();
+    generate(&c, &GenConfig { seed: 12, ..tiny_config() }).unwrap();
+    for f in DETERMINISTIC_FILES {
+        let x = std::fs::read(a.join(f)).unwrap();
+        let y = std::fs::read(b.join(f)).unwrap();
+        assert!(!x.is_empty(), "{f} must not be empty");
+        assert_eq!(x, y, "{f} must be byte-identical for equal seeds");
+    }
+    // a different seed must actually move the data
+    let x = std::fs::read(a.join("forest.json")).unwrap();
+    let z = std::fs::read(c.join("forest.json")).unwrap();
+    assert_ne!(x, z, "different seeds must give different forests");
+    for d in [a, b, c] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+#[test]
+fn generated_artifacts_roundtrip_through_loaders() {
+    let dir = tmp_dir("roundtrip");
+    let report = generate(&dir, &tiny_config()).unwrap();
+    assert_eq!(report.n_functions, 6);
+    assert!(
+        report.test_error.is_finite() && report.test_error < 0.5,
+        "forest must fit the interference surface: err {:.3}",
+        report.test_error
+    );
+
+    // catalog loads and validates through the production loader
+    let cat = Catalog::load(&dir.join("functions.json")).unwrap();
+    assert_eq!(cat.len(), 6);
+    assert!(cat.id_of("rnn").is_some());
+
+    // forest params load, validate, and agree with the meta contract
+    let params = ForestParams::load(&dir.join("forest.json")).unwrap();
+    assert_eq!(params.n_features, jiagu::model::N_FEATURES);
+    assert!(params.test_error > 0.0, "test_error must be recorded");
+    let meta = Json::parse_file(&dir.join("meta.json")).unwrap();
+    assert_eq!(meta.get("n_trees").unwrap().as_usize().unwrap(), params.n_trees);
+    assert_eq!(meta.get("depth").unwrap().as_usize().unwrap(), params.depth);
+
+    // the native predictor over reloaded artifacts reproduces the
+    // predict_check expectations exactly (f32 round-trips are lossless)
+    let predictor = load_predictor(&dir, true).unwrap();
+    let j = Json::parse_file(&dir.join("predict_check.json")).unwrap();
+    let x: Vec<Vec<f32>> = j
+        .get("x")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.f32_vec().unwrap())
+        .collect();
+    let want = j.get("expected_ms").unwrap().f32_vec().unwrap();
+    let got = predictor.predict(&x).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        let rel = (g - w).abs() / w.abs().max(1e-6);
+        assert!(rel < 1e-6, "predict_check row {i}: {g} vs {w}");
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn generated_golden_vectors_match_the_rust_mirror() {
+    // the same invariant golden.rs checks on repo artifacts, applied to a
+    // fresh self-contained generation
+    let dir = tmp_dir("golden");
+    generate(&dir, &tiny_config()).unwrap();
+    let cat = Catalog::load(&dir.join("functions.json")).unwrap();
+    let cases = Json::parse_file(&dir.join("interference_check.json")).unwrap();
+    let cases = cases.as_arr().unwrap();
+    assert!(cases.len() >= 32);
+    for case in cases {
+        let names = case.get("functions").unwrap().str_vec().unwrap();
+        let sat = case.get("sat").unwrap().f64_vec().unwrap();
+        let cached = case.get("cached").unwrap().f64_vec().unwrap();
+        let target_pos = case.get("target").unwrap().as_usize().unwrap();
+        let entries: Vec<(usize, u32, u32)> = names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (cat.id_of(n).unwrap(), sat[i] as u32, cached[i] as u32))
+            .collect();
+        let target = entries[target_pos].0;
+        let mix = NodeMix::new(entries);
+        let want = case.get("latency_ms").unwrap().as_f64().unwrap();
+        let got = ground_truth_latency(&cat, &mix, target);
+        assert!((got - want).abs() / want.max(1e-12) < 1e-12, "{got} vs {want}");
+        let want_util = case.get("utilisation").unwrap().f64_vec().unwrap();
+        for (g, w) in node_utilisation(&cat, &mix).iter().zip(&want_util) {
+            assert!((g - w).abs() < 1e-12);
+        }
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}

@@ -1,0 +1,193 @@
+//! Offline stand-in for the `anyhow` crate, exposing the 1.x API subset
+//! this workspace uses: [`Error`], [`Result`], the [`Context`] extension
+//! trait, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! The build image resolves no crates.io index (see
+//! `rust/src/util/rng.rs` for the same constraint on `rand`), so the real
+//! crate cannot be fetched at build time. This vendored version keeps the
+//! call sites source-compatible:
+//!
+//! * `Error` is an opaque message chain. `Display` shows the outermost
+//!   message; the alternate form (`{:#}`) joins the whole chain with
+//!   `": "`, matching anyhow's formatting contract that `main.rs` relies
+//!   on for `error: {e:#}` output.
+//! * Like the real crate, `Error` deliberately does **not** implement
+//!   `std::error::Error` — that is what makes the blanket
+//!   `From<E: std::error::Error>` conversion (and therefore `?` on
+//!   foreign error types) coherent.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the same default-parameter shape as
+/// the real crate, so `Result<T>` and `collect::<Result<Vec<_>>>()` work.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error message chain; `chain[0]` is the outermost context, the last
+/// element the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (what `Context` delegates to).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(|| ...)` to
+/// results. The single `E: Into<Error>` bound covers both foreign
+/// `std::error::Error` types (via the blanket `From` above) and
+/// `anyhow::Error` itself (via the reflexive `From<T> for T`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any printable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_port(s: &str) -> Result<u16> {
+        let port: u16 = s.parse().context("parsing port")?;
+        ensure!(port > 0, "port must be nonzero, got {port}");
+        Ok(port)
+    }
+
+    #[test]
+    fn question_mark_converts_foreign_errors() {
+        let err = parse_port("notanumber").unwrap_err();
+        assert_eq!(format!("{err}"), "parsing port");
+        assert!(format!("{err:#}").starts_with("parsing port: "));
+    }
+
+    #[test]
+    fn ensure_and_bail_format_messages() {
+        let err = parse_port("0").unwrap_err();
+        assert_eq!(format!("{err}"), "port must be nonzero, got 0");
+        fn f() -> Result<()> {
+            bail!("boom {}", 42);
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "boom 42");
+    }
+
+    #[test]
+    fn with_context_chains() {
+        let base: Result<()> = Err(anyhow!("root"));
+        let err = base.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(format!("{err}"), "outer 1");
+        assert_eq!(format!("{err:#}"), "outer 1: root");
+        assert_eq!(err.root_cause(), "root");
+    }
+}
