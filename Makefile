@@ -10,7 +10,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts artifacts-jax build test bench bench-smoke fmt-check clippy ci clean
+.PHONY: artifacts artifacts-jax build test bench bench-smoke fmt-check clippy doc ci clean
 
 # Regenerate unconditionally.
 artifacts:
@@ -45,7 +45,12 @@ fmt-check:
 clippy:
 	$(CARGO) clippy -- -D warnings
 
-ci: build fmt-check clippy test bench-smoke
+# Rustdoc gate: the plan/commit ControlPlane API is public surface; broken
+# intra-doc links or missing docs fail the build.
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
+
+ci: build fmt-check clippy doc test bench-smoke
 
 clean:
 	$(CARGO) clean

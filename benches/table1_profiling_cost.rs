@@ -60,7 +60,8 @@ fn main() {
         let mut cluster = jiagu::cluster::Cluster::new(4);
         let mut owl = OwlScheduler::new(7);
         for f in 0..b.cat.len() {
-            owl.schedule(&b.cat, &mut cluster, f, 4, 0.0).unwrap();
+            let plan = owl.schedule(&b.cat, &cluster, f, 4, 0.0).unwrap();
+            let _ = plan.commit(&b.cat, &mut cluster, 0.0);
         }
         println!(
             "\nmeasured: Owl profiling samples after touching all {} functions: {} (pair table, memoized)",

@@ -1,6 +1,7 @@
 //! Dual-staged scaling walkthrough (§5, Fig. 10): a square-wave load
 //! drives release → logical cold start → migration → real eviction, and
-//! the demo prints the state machine as it happens.
+//! the demo prints the state machine as it happens — driven tick by tick
+//! through the steppable `ControlPlane` engine.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example dual_staged_demo
@@ -8,11 +9,10 @@
 
 use anyhow::Result;
 use jiagu::autoscaler::{Autoscaler, AutoscalerConfig};
-use jiagu::capacity::CapacityConfig;
 use jiagu::catalog::Catalog;
 use jiagu::cluster::{Cluster, InstanceState};
-use jiagu::router::Router;
-use jiagu::scheduler::JiaguScheduler;
+use jiagu::config::RunConfig;
+use jiagu::controlplane::ControlPlane;
 use jiagu::sim::load_predictor;
 
 fn count_state(cluster: &Cluster, f: usize, state: InstanceState) -> usize {
@@ -26,24 +26,24 @@ fn main() -> Result<()> {
     let cat = Catalog::load(&artifacts.join("functions.json"))?;
     let predictor = load_predictor(&artifacts, false)?;
 
-    let mut cluster = Cluster::new(4);
-    let mut router = Router::new();
-    let mut sched = JiaguScheduler::new(predictor, CapacityConfig::default(), 4);
-    let mut autoscaler = Autoscaler::new(
-        AutoscalerConfig {
-            release_duration_s: 10.0, // compressed for the demo
-            keepalive_duration_s: 30.0,
-            dual_staged: true,
-            migration: true,
-        },
-        cat.len(),
-    );
+    let mut cfg = RunConfig::jiagu_45();
+    cfg.n_nodes = 4;
+    cfg.autoscaler = AutoscalerConfig {
+        release_duration_s: 10.0, // compressed for the demo
+        keepalive_duration_s: 30.0,
+        dual_staged: true,
+        migration: true,
+    };
+    let mut cp = ControlPlane::new(cat.clone(), cfg, predictor);
 
     let f = cat.id_of("gzip").unwrap();
     let sat_rps = cat.get(f).saturated_rps;
     println!("function: gzip (saturated at {sat_rps:.1} rps/instance)");
     println!("release after 10 s of lower load; eviction after 30 s\n");
-    println!("{:>5} {:>8} {:>9} {:>7} {:>7}  events", "t(s)", "rps", "expected", "serving", "cached");
+    println!(
+        "{:>5} {:>8} {:>9} {:>7} {:>7}  events",
+        "t(s)", "rps", "expected", "serving", "cached"
+    );
 
     let mut loads = vec![0.0; cat.len()];
     for t in 0..90usize {
@@ -54,26 +54,32 @@ fn main() -> Result<()> {
             25..=54 => 3.0 * sat_rps,
             _ => 7.0 * sat_rps,
         } * 0.95;
-        let out = autoscaler.tick(&cat, &mut cluster, &mut router, &mut sched, &loads, now)?;
-        for id in &out.cold_started {
-            cluster.mark_ready(*id, now);
-            router.add(f, *id);
-        }
+        let ev = cp.step(now, &loads)?;
+        let started: usize = ev.scheduled.iter().map(|c| c.placements.len()).sum();
         let mut events = Vec::new();
-        if !out.cold_started.is_empty() {
-            events.push(format!("{} real cold starts", out.cold_started.len()));
+        if started > 0 {
+            events.push(format!("{started} real cold starts planned+committed"));
         }
-        if out.logical_cold_starts > 0 {
-            events.push(format!("{} LOGICAL cold starts (<1ms re-route)", out.logical_cold_starts));
+        if ev.cold_starts_completed > 0 {
+            events.push(format!("{} cold starts completed", ev.cold_starts_completed));
         }
-        if out.released > 0 {
-            events.push(format!("{} released -> cached", out.released));
+        if ev.logical_cold_starts > 0 {
+            events.push(format!(
+                "{} LOGICAL cold starts (<1ms re-route)",
+                ev.logical_cold_starts
+            ));
         }
-        if out.evicted > 0 {
-            events.push(format!("{} cached evicted", out.evicted));
+        if ev.released > 0 {
+            events.push(format!("{} released -> cached", ev.released));
         }
-        if out.migrations > 0 {
-            events.push(format!("{} cached migrated", out.migrations));
+        if ev.evicted > 0 {
+            events.push(format!("{} cached evicted", ev.evicted));
+        }
+        if ev.migrations > 0 {
+            events.push(format!("{} cached migrated", ev.migrations));
+        }
+        if ev.deferred_completed > 0 {
+            events.push(format!("{} async refreshes landed", ev.deferred_completed));
         }
         if !events.is_empty() || t % 15 == 0 {
             println!(
@@ -81,12 +87,12 @@ fn main() -> Result<()> {
                 t,
                 loads[f],
                 Autoscaler::expected_instances(&cat, f, loads[f]),
-                router.serving_count(f),
-                count_state(&cluster, f, InstanceState::Cached),
+                cp.router().serving_count(f),
+                count_state(cp.cluster(), f, InstanceState::Cached),
                 events.join("; ")
             );
         }
     }
-    println!("\nrouter re-routes total: {}", router.reroutes);
+    println!("\nrouter re-routes total: {}", cp.router().reroutes);
     Ok(())
 }

@@ -1,5 +1,7 @@
 //! Quickstart: load the AOT predictor, build a small cluster, and watch
-//! pre-decision scheduling work — slow path once, fast path afterwards.
+//! plan/commit pre-decision scheduling work — slow path once, fast path
+//! afterwards, with the asynchronous table refresh as explicit deferred
+//! work and a free dry-run at the end.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
@@ -24,40 +26,79 @@ fn main() -> Result<()> {
     let mut cluster = Cluster::new(3);
     let mut sched = JiaguScheduler::new(predictor.clone(), CapacityConfig::default(), 3);
 
-    // 1. first instance of `rnn`: no capacity entry anywhere -> slow path
+    // 1. first instance of `rnn`: no capacity entry anywhere -> slow path.
+    //    schedule() only *plans*; the cluster moves when we commit.
     let rnn = cat.id_of("rnn").unwrap();
-    let r1 = sched.schedule(&cat, &mut cluster, rnn, 1, 0.0)?;
+    let plan1 = sched.schedule(&cat, &cluster, rnn, 1, 0.0)?;
     println!(
-        "schedule #1 (rnn x1):  path={:?}  decision={:.3} ms  critical inferences={}",
-        r1.path(),
-        r1.decision_nanos as f64 / 1e6,
-        r1.critical_inferences
+        "plan #1 (rnn x1):      path={:?}  decision={:.3} ms  critical inferences={}",
+        plan1.path(),
+        plan1.decision_nanos as f64 / 1e6,
+        plan1.critical_inferences
     );
+    let c1 = plan1.commit(&cat, &mut cluster, 0.0);
+    let node = c1.placements[0].node;
+
+    // the §4.3 asynchronous update is deferred work: computed off the
+    // critical path now, visible only once the engine completes it
+    if let Some(update) = sched.on_node_changed(&cat, &cluster, node, 0.0)? {
+        println!(
+            "  async refresh: {:.3} ms / {} inferences off-path; landing it now",
+            update.nanos as f64 / 1e6,
+            update.inferences
+        );
+        sched.complete_deferred(update);
+    }
 
     // 2. spike of 4 more rnn instances: capacity table hit -> fast path,
-    //    batched into one decision + one asynchronous update
-    let r2 = sched.schedule(&cat, &mut cluster, rnn, 4, 1000.0)?;
+    //    batched into one decision
+    let plan2 = sched.schedule(&cat, &cluster, rnn, 4, 1000.0)?;
     println!(
-        "schedule #2 (rnn x4):  path={:?}  decision={:.3} ms  critical inferences={} (async {})",
-        r2.path(),
-        r2.decision_nanos as f64 / 1e6,
-        r2.critical_inferences,
-        r2.async_inferences
+        "plan #2 (rnn x4):      path={:?}  decision={:.3} ms  critical inferences={}",
+        plan2.path(),
+        plan2.decision_nanos as f64 / 1e6,
+        plan2.critical_inferences
     );
+    let c2 = plan2.commit(&cat, &mut cluster, 1000.0);
+    for touched in c2.touched_nodes() {
+        if let Some(update) = sched.on_node_changed(&cat, &cluster, touched, 1000.0)? {
+            sched.complete_deferred(update);
+        }
+    }
 
     // 3. a different function lands next to it: slow path for gzip only
     let gzip = cat.id_of("gzip").unwrap();
-    let r3 = sched.schedule(&cat, &mut cluster, gzip, 2, 2000.0)?;
+    let plan3 = sched.schedule(&cat, &cluster, gzip, 2, 2000.0)?;
     println!(
-        "schedule #3 (gzip x2): path={:?}  decision={:.3} ms  critical inferences={}",
-        r3.path(),
-        r3.decision_nanos as f64 / 1e6,
-        r3.critical_inferences
+        "plan #3 (gzip x2):     path={:?}  decision={:.3} ms  critical inferences={}",
+        plan3.path(),
+        plan3.decision_nanos as f64 / 1e6,
+        plan3.critical_inferences
     );
+    let c3 = plan3.commit(&cat, &mut cluster, 2000.0);
+    for touched in c3.touched_nodes() {
+        if let Some(update) = sched.on_node_changed(&cat, &cluster, touched, 2000.0)? {
+            sched.complete_deferred(update);
+        }
+    }
+
+    // 4. plan/commit makes what-if probes free: plan a 40-instance spike,
+    //    read the answer, and drop the plan — the cluster is untouched
+    let what_if = sched.schedule(&cat, &cluster, rnn, 40, 3000.0)?;
+    println!(
+        "what-if (rnn x40):     {} placements would need {} new nodes — plan dropped",
+        what_if.placements_planned(),
+        what_if.nodes_added()
+    );
+    let instances_before = cluster.instances_len();
+    drop(what_if);
+    assert_eq!(cluster.instances_len(), instances_before);
 
     // show the capacity table of the node everything landed on
-    let node = r1.placements[0].node;
-    println!("\ncapacity table of node {node} (under current mix {:?}):", cluster.mix(node).entries);
+    println!(
+        "\ncapacity table of node {node} (under current mix {:?}):",
+        cluster.mix(node).entries
+    );
     for (f, entry) in sched.capacity_table(node).iter() {
         println!(
             "  {:12}  capacity {:2}   (currently {} sat)",

@@ -3,6 +3,12 @@
 //! AOT predictor over PJRT → simulated cluster — on a real-world-like
 //! trace, reporting the paper's headline metrics.
 //!
+//! The second half drives [`jiagu::controlplane::ControlPlane`] step by
+//! step in a *closed loop*: each tick's offered load reacts to the
+//! previous tick's measured QoS (an adversarial burst chases the worst
+//! window).  A trace fixed up-front — all `Simulation::run` can consume —
+//! cannot express that feedback coupling.
+//!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_trace -- [--duration 1800] [--trace A]
 //! ```
@@ -11,6 +17,7 @@
 
 use anyhow::Result;
 use jiagu::config::{RunConfig, SchedulerKind};
+use jiagu::controlplane::ControlPlane;
 use jiagu::sim::{load_predictor, Simulation};
 use jiagu::traces;
 
@@ -70,5 +77,58 @@ fn main() -> Result<()> {
         calls, rows, nanos as f64 / 1e6, nanos as f64 / 1e6 / calls.max(1) as f64
     );
     println!("simulated {duration} s in {wall:.1} s wall-clock");
+
+    // -- step-driven closed loop: the load chases the measured QoS -------
+    //
+    // Each tick, the function with the worst measured window latency
+    // (relative to its QoS bound) gets a 1.6x adversarial burst on top of
+    // the trace, and everything scheduled is observed live.  The burst
+    // depends on *this run's* measurements — no pre-computed trace could
+    // encode it.
+    let horizon = duration.min(420);
+    println!("\n== step-driven scenario: QoS-chasing burst ({horizon} s) ==");
+    let mut cfg = RunConfig::jiagu_45();
+    cfg.duration_s = horizon;
+    let mut cp = ControlPlane::new(cat.clone(), cfg, predictor.clone());
+    let mut loads = trace.loads_at(0);
+    let mut bursts = 0u64;
+    let mut plans = 0u64;
+    let mut submitted = 0u64;
+    let mut completed = 0u64;
+    let mut peak_in_flight = 0usize;
+    for t in 0..horizon {
+        let now_ms = t as f64 * 1000.0;
+        let ev = cp.step(now_ms, &loads)?;
+        plans += ev.scheduled.len() as u64;
+        submitted += ev.deferred_submitted as u64;
+        completed += ev.deferred_completed as u64;
+        peak_in_flight = peak_in_flight.max(cp.deferred_in_flight());
+        // feedback: next tick's offered load reacts to this tick's QoS
+        loads = trace.loads_at((t + 1).min(trace.duration_s() - 1));
+        let worst = ev
+            .qos
+            .iter()
+            .max_by(|a, b| {
+                let ra = a.measured_ms / cat.get(a.function).qos_latency_ms;
+                let rb = b.measured_ms / cat.get(b.function).qos_latency_ms;
+                ra.partial_cmp(&rb).unwrap()
+            })
+            .map(|w| w.function);
+        if let Some(f) = worst {
+            loads[f] *= 1.6;
+            bursts += 1;
+        }
+    }
+    println!("  adversarial bursts injected:   {bursts}");
+    println!("  plans committed:               {plans}");
+    println!(
+        "  async refreshes:               {submitted} submitted / {completed} landed (peak {} in flight)",
+        peak_in_flight
+    );
+    println!(
+        "  cluster after feedback storm:  {} instances on {} nodes",
+        cp.cluster().instances_len(),
+        cp.cluster().n_nodes()
+    );
     Ok(())
 }

@@ -15,6 +15,12 @@
 //! from nodes whose capacity shrank so a later conversion never needs a
 //! real cold start (Fig. 14b).
 //!
+//! Scale-ups go through the plan/commit scheduler API: the autoscaler
+//! asks the scheduler for a [`Plan`] against the read-only cluster,
+//! commits it, and records the scheduler's asynchronous refreshes as
+//! [`DeferredUpdate`]s in its [`TickOutcome`] — the control-plane engine
+//! decides *when* that deferred work lands in virtual time.
+//!
 //! With `dual_staged = false` the release stage is disabled and the
 //! autoscaler degenerates to the traditional keep-alive design (the
 //! Jiagu-NoDS / baseline configuration).
@@ -22,7 +28,7 @@
 use crate::catalog::{Catalog, FunctionId};
 use crate::cluster::{Cluster, InstanceId, InstanceState};
 use crate::router::Router;
-use crate::scheduler::{ScheduleResult, Scheduler};
+use crate::scheduler::{CommittedPlan, DeferredUpdate, Plan, Scheduler};
 use anyhow::Result;
 
 /// Autoscaler tunables (defaults follow the paper: 45 s release, 60 s
@@ -52,7 +58,7 @@ impl Default for AutoscalerConfig {
     }
 }
 
-/// What a tick did (the simulator turns these into events/metrics).
+/// What a tick did (the engine turns these into events/metrics).
 #[derive(Debug, Default)]
 pub struct TickOutcome {
     /// Cached instances converted back to saturated (<1 ms re-route).
@@ -60,8 +66,11 @@ pub struct TickOutcome {
     /// Newly placed instances (Starting); the caller schedules their
     /// readiness after scheduling cost + init latency.
     pub cold_started: Vec<InstanceId>,
-    /// Per-scheduling-call results for cost accounting.
-    pub schedule_results: Vec<ScheduleResult>,
+    /// Committed scheduling plans for cost accounting.
+    pub scheduled: Vec<CommittedPlan>,
+    /// Asynchronous refreshes the scheduler submitted this tick; the
+    /// engine completes them at their virtual-time due point.
+    pub deferred: Vec<DeferredUpdate>,
     /// Saturated → Cached transitions this tick.
     pub released: u32,
     /// Cached instances evicted this tick.
@@ -80,12 +89,29 @@ impl TickOutcome {
     fn merge(&mut self, other: TickOutcome) {
         self.logical_cold_starts += other.logical_cold_starts;
         self.cold_started.extend(other.cold_started);
-        self.schedule_results.extend(other.schedule_results);
+        self.scheduled.extend(other.scheduled);
+        self.deferred.extend(other.deferred);
         self.released += other.released;
         self.evicted += other.evicted;
         self.evicted_direct += other.evicted_direct;
         self.migrations += other.migrations;
         self.real_after_release += other.real_after_release;
+    }
+
+    /// Record a committed node change: ask the scheduler for its refresh
+    /// and keep it as deferred work.
+    fn notify(
+        &mut self,
+        sched: &mut dyn Scheduler,
+        cat: &Catalog,
+        cluster: &Cluster,
+        node: usize,
+        now_ms: f64,
+    ) -> Result<()> {
+        if let Some(update) = sched.on_node_changed(cat, cluster, node, now_ms)? {
+            self.deferred.push(update);
+        }
+        Ok(())
     }
 }
 
@@ -118,7 +144,8 @@ impl Autoscaler {
     /// One autoscaler evaluation over all functions.
     ///
     /// `loads[f]` is the live RPS of function `f`; `now_ms` is virtual
-    /// time.  Mutates cluster/router; scheduling goes through `sched`.
+    /// time.  Mutates cluster/router; scheduling is planned by `sched`
+    /// and committed here.
     pub fn tick(
         &mut self,
         cat: &Catalog,
@@ -138,6 +165,29 @@ impl Autoscaler {
             self.migrate_stranded(cat, cluster, sched, now_ms, &mut out)?;
         }
         Ok(out)
+    }
+
+    /// Plan + commit a scale-up of `need` instances, collecting the
+    /// per-touched-node asynchronous refreshes as deferred work.
+    fn scale_up(
+        &mut self,
+        cat: &Catalog,
+        cluster: &mut Cluster,
+        sched: &mut dyn Scheduler,
+        f: FunctionId,
+        need: u32,
+        now_ms: f64,
+        out: &mut TickOutcome,
+    ) -> Result<()> {
+        let plan: Plan = sched.schedule(cat, cluster, f, need, now_ms)?;
+        let committed = plan.commit(cat, cluster, now_ms);
+        out.cold_started
+            .extend(committed.placements.iter().map(|p| p.instance));
+        for node in committed.touched_nodes() {
+            out.notify(sched, cat, cluster, node, now_ms)?;
+        }
+        out.scheduled.push(committed);
+        Ok(())
     }
 
     fn tick_function(
@@ -175,7 +225,7 @@ impl Autoscaler {
                         router.add(f, id);
                         out.logical_cold_starts += 1;
                         need -= 1;
-                        sched.on_node_changed(cat, cluster, node, now_ms)?;
+                        out.notify(sched, cat, cluster, node, now_ms)?;
                     }
                 }
                 if need > 0 && had_cached {
@@ -185,10 +235,7 @@ impl Autoscaler {
                 }
             }
             if need > 0 {
-                let res = sched.schedule(cat, cluster, f, need, now_ms)?;
-                out.cold_started
-                    .extend(res.placements.iter().map(|p| p.instance));
-                out.schedule_results.push(res);
+                self.scale_up(cat, cluster, sched, f, need, now_ms, &mut out)?;
             }
         } else if expected < serving {
             // sustained surplus → stage 1 release (or direct eviction
@@ -213,7 +260,7 @@ impl Autoscaler {
                         cluster.evict(cat, id);
                         out.evicted_direct += 1;
                     }
-                    sched.on_node_changed(cat, cluster, node, now_ms)?;
+                    out.notify(sched, cat, cluster, node, now_ms)?;
                 }
                 self.state[f].surplus_since_ms = Some(now_ms); // re-arm
             }
@@ -250,7 +297,7 @@ impl Autoscaler {
         for (id, node) in victims {
             cluster.evict(cat, id);
             out.evicted += 1;
-            sched.on_node_changed(cat, cluster, node, now_ms)?;
+            out.notify(sched, cat, cluster, node, now_ms)?;
         }
         Ok(())
     }
@@ -281,8 +328,8 @@ impl Autoscaler {
                     if let Some(target) = sched.find_feasible_node(cat, cluster, f, node)? {
                         cluster.migrate_cached(cat, id, target, now_ms);
                         out.migrations += 1;
-                        sched.on_node_changed(cat, cluster, node, now_ms)?;
-                        sched.on_node_changed(cat, cluster, target, now_ms)?;
+                        out.notify(sched, cat, cluster, node, now_ms)?;
+                        out.notify(sched, cat, cluster, target, now_ms)?;
                     }
                 }
             }

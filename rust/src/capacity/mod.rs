@@ -62,6 +62,9 @@ pub struct CapacityEntry {
 pub struct CapacityTable {
     entries: HashMap<FunctionId, CapacityEntry>,
     version: u64,
+    /// Mix version of the last asynchronous refresh that landed; refreshes
+    /// completing out of order against an older mix are dropped.
+    applied_version: u64,
 }
 
 impl CapacityTable {
@@ -87,9 +90,29 @@ impl CapacityTable {
         self.entries.remove(&f);
     }
 
-    /// Replace the whole table (asynchronous update completion).
-    pub fn replace(&mut self, entries: HashMap<FunctionId, CapacityEntry>) {
+    /// Land an asynchronous refresh computed under `version`: replace the
+    /// whole table, unless a refresh from a newer mix already landed (late
+    /// completions of superseded updates are dropped — the fast path must
+    /// never regress to an older view than the one it already has).
+    /// Entries written synchronously *after* the refresh's snapshot
+    /// (slow-path inserts, `mix_version >= version`) are carried over when
+    /// the snapshot does not know them, so an in-flight refresh never
+    /// erases knowledge the critical path already paid an inference for.
+    pub fn apply_refresh(
+        &mut self,
+        mut entries: HashMap<FunctionId, CapacityEntry>,
+        version: u64,
+    ) {
+        if version < self.applied_version {
+            return;
+        }
+        for (f, e) in &self.entries {
+            if e.mix_version >= version {
+                entries.entry(*f).or_insert(*e);
+            }
+        }
         self.entries = entries;
+        self.applied_version = version;
     }
 
     pub fn is_stale(&self, f: FunctionId) -> bool {
@@ -325,6 +348,42 @@ mod tests {
         let mix = NodeMix::new(vec![(0, 1, 0)]);
         let cap = compute_capacity(&cat, &mix, 0, &oracle, &cfg).unwrap();
         assert!(cap <= 3);
+    }
+
+    #[test]
+    fn refresh_preserves_newer_synchronous_inserts() {
+        let mut table = CapacityTable::default();
+        let v = table.bump_version(); // the refresh's snapshot version
+        // while the refresh is in flight, the critical path slow-paths a
+        // new function onto the node at the current version
+        table.insert(7, 4, table.version());
+        let mut refresh = HashMap::new();
+        refresh.insert(0, CapacityEntry { capacity: 2, mix_version: v });
+        table.apply_refresh(refresh, v);
+        assert_eq!(table.get(0).unwrap().capacity, 2);
+        assert_eq!(
+            table.get(7).unwrap().capacity,
+            4,
+            "a post-snapshot slow-path insert must survive the refresh"
+        );
+    }
+
+    #[test]
+    fn refresh_ordering_drops_superseded_updates() {
+        let mut table = CapacityTable::default();
+        let v1 = table.bump_version();
+        let v2 = table.bump_version();
+        let mut newer = HashMap::new();
+        newer.insert(0, CapacityEntry { capacity: 2, mix_version: v2 });
+        table.apply_refresh(newer, v2);
+        let mut older = HashMap::new();
+        older.insert(0, CapacityEntry { capacity: 9, mix_version: v1 });
+        table.apply_refresh(older, v1);
+        assert_eq!(
+            table.get(0).unwrap().capacity,
+            2,
+            "a superseded refresh must not clobber a newer one"
+        );
     }
 
     #[test]

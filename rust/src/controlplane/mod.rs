@@ -1,0 +1,355 @@
+//! The steppable control-plane engine: cluster + router + scheduler +
+//! autoscaler + deferred-work queue behind one `step` call.
+//!
+//! [`ControlPlane::step`] drives one tick of virtual time:
+//!
+//! 1. **deferred-work drain** — asynchronous capacity refreshes whose
+//!    virtual completion time has arrived land in the scheduler's tables
+//!    ([`Scheduler::complete_deferred`]); anything submitted later this
+//!    tick stays invisible, so fast-path decisions genuinely race the
+//!    update exactly as §4.3 describes,
+//! 2. **cold-start completion** — due instances flip Starting → Saturated
+//!    and join the routing set,
+//! 3. **autoscaler + commit** — dual-staged scaling plans scale-ups
+//!    through [`Scheduler::schedule`] and commits the
+//!    [`Plan`](crate::scheduler::Plan)s; the refreshes the scheduler
+//!    submits are queued here with a due time of `now + measured async
+//!    nanos` in *virtual* time,
+//! 4. **QoS measurement** — per (node, function) window latencies from
+//!    the ground-truth interference model (plus noise), and on monitor
+//!    ticks the §6 accuracy verdicts reach the scheduler as
+//!    [`SchedulerFeedback`].
+//!
+//! Each step emits a [`TickEvents`] record; `sim::Simulation::run` is a
+//! thin fold of those records into a report, and step-driven callers
+//! (examples, what-if tools) can feed back into the next tick's loads —
+//! something a closed run loop cannot express.
+//!
+//! **Determinism**: the virtual completion delay of deferred work is the
+//! *measured* wall-clock cost, clamped to [`MAX_ASYNC_COMPLETION_MS`]
+//! (just under the simulator's 1 s tick).  Under whole-second ticks every
+//! refresh therefore lands exactly one tick after submission no matter
+//! how the wall clock jitters, which keeps replays bit-identical;
+//! finer-grained step drivers observe the real latency.
+
+use crate::autoscaler::Autoscaler;
+use crate::catalog::Catalog;
+use crate::cluster::{Cluster, InstanceId};
+use crate::config::{RunConfig, SchedulerKind};
+use crate::interference;
+use crate::model::AccuracyMonitor;
+use crate::router::Router;
+use crate::runtime::Predictor;
+use crate::scheduler::{
+    CommittedPlan, DeferredUpdate, GsightScheduler, JiaguScheduler, KubernetesScheduler,
+    OwlScheduler, Scheduler, SchedulerFeedback,
+};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Upper bound on the virtual completion delay of one asynchronous
+/// refresh (ms).  Real refreshes cost well under a tick; the clamp only
+/// stops a pathological wall-clock stall from pushing a completion across
+/// extra tick boundaries and breaking seeded-replay determinism.
+pub const MAX_ASYNC_COMPLETION_MS: f64 = 999.0;
+
+/// §6 online accuracy monitoring cadence (ticks between comparisons).
+const MONITOR_EVERY: usize = 30;
+
+/// One QoS measurement window: `requests` of `function` observed at
+/// `measured_ms` (the consumer judges them against the QoS bound).
+#[derive(Debug, Clone, Copy)]
+pub struct QosWindow {
+    pub function: usize,
+    pub requests: f64,
+    pub measured_ms: f64,
+}
+
+/// Everything one control-plane tick did, for the caller to fold into
+/// reports (or react to before the next step).
+#[derive(Debug, Default)]
+pub struct TickEvents {
+    pub now_ms: f64,
+    /// Instances whose cold start completed this tick.
+    pub cold_starts_completed: u32,
+    /// Scheduling plans committed this tick.
+    pub scheduled: Vec<CommittedPlan>,
+    pub logical_cold_starts: u32,
+    pub real_after_release: u32,
+    pub migrations: u32,
+    pub released: u32,
+    pub evicted: u32,
+    pub evicted_direct: u32,
+    /// Asynchronous refreshes submitted / landed this tick.
+    pub deferred_submitted: u32,
+    pub deferred_completed: u32,
+    /// Off-critical-path cost of the refreshes submitted this tick.
+    pub async_nanos: u64,
+    pub async_inferences: u64,
+    /// QoS measurement windows of this tick.
+    pub qos: Vec<QosWindow>,
+    /// Deployed instances (any state) at tick end.
+    pub instances: usize,
+    /// Nodes hosting at least one instance at tick end.
+    pub active_nodes: usize,
+    /// Cluster size at tick end.
+    pub n_nodes: usize,
+}
+
+/// Build the scheduler a run configuration asks for.
+pub fn make_scheduler(cfg: &RunConfig, predictor: &Arc<dyn Predictor>) -> Box<dyn Scheduler> {
+    match cfg.scheduler {
+        SchedulerKind::Jiagu => Box::new(JiaguScheduler::new(
+            predictor.clone(),
+            cfg.capacity.clone(),
+            cfg.n_nodes,
+        )),
+        SchedulerKind::Kubernetes => Box::new(KubernetesScheduler::new()),
+        SchedulerKind::Gsight => Box::new(GsightScheduler::new(predictor.clone())),
+        SchedulerKind::Owl => Box::new(OwlScheduler::new(cfg.seed ^ 0x071)),
+    }
+}
+
+/// The reusable engine: owns all control-plane state and advances it one
+/// `step` at a time.
+pub struct ControlPlane {
+    cat: Catalog,
+    cfg: RunConfig,
+    predictor: Arc<dyn Predictor>,
+    cluster: Cluster,
+    router: Router,
+    sched: Box<dyn Scheduler>,
+    autoscaler: Autoscaler,
+    monitor: AccuracyMonitor,
+    rng: Rng,
+    /// (ready_ms, instance) cold starts in flight.
+    pending: Vec<(f64, InstanceId)>,
+    /// (due_ms, update) asynchronous refreshes in flight, submission
+    /// order.
+    deferred: Vec<(f64, DeferredUpdate)>,
+    init_ms: f64,
+    ticks: usize,
+}
+
+impl ControlPlane {
+    pub fn new(cat: Catalog, cfg: RunConfig, predictor: Arc<dyn Predictor>) -> Self {
+        let sched = make_scheduler(&cfg, &predictor);
+        let n_functions = cat.len();
+        let init_ms = cfg.init_model.latency_ms();
+        Self {
+            cluster: Cluster::new(cfg.n_nodes),
+            router: Router::new(),
+            autoscaler: Autoscaler::new(cfg.autoscaler.clone(), n_functions),
+            monitor: AccuracyMonitor::new(n_functions),
+            rng: Rng::seed_from(cfg.seed),
+            pending: Vec::new(),
+            deferred: Vec::new(),
+            init_ms,
+            ticks: 0,
+            sched,
+            predictor,
+            cat,
+            cfg,
+        }
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    pub fn scheduler(&self) -> &dyn Scheduler {
+        self.sched.as_ref()
+    }
+
+    pub fn scheduler_name(&self) -> &'static str {
+        self.sched.name()
+    }
+
+    pub fn monitor(&self) -> &AccuracyMonitor {
+        &self.monitor
+    }
+
+    /// Asynchronous refreshes submitted but not yet landed.
+    pub fn deferred_in_flight(&self) -> usize {
+        self.deferred.len()
+    }
+
+    /// Cold starts still in flight.
+    pub fn cold_starts_in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Land every deferred refresh due by `now_ms`, in submission order.
+    fn drain_deferred(&mut self, now_ms: f64) -> u32 {
+        let mut completed = 0u32;
+        let (due, rest): (Vec<_>, Vec<_>) = std::mem::take(&mut self.deferred)
+            .into_iter()
+            .partition(|(due_ms, _)| *due_ms <= now_ms);
+        self.deferred = rest;
+        for (_, update) in due {
+            self.sched.complete_deferred(update);
+            completed += 1;
+        }
+        completed
+    }
+
+    /// Advance one tick of virtual time under the offered `loads` (RPS
+    /// per function).  `now_ms` must be monotonically non-decreasing
+    /// across calls.
+    pub fn step(&mut self, now_ms: f64, loads: &[f64]) -> Result<TickEvents> {
+        let mut ev = TickEvents { now_ms, ..Default::default() };
+
+        // 1. asynchronous refreshes whose virtual completion time arrived
+        ev.deferred_completed = self.drain_deferred(now_ms);
+
+        // 2. complete due cold starts
+        let mut pending = std::mem::take(&mut self.pending);
+        pending.retain(|(ready_ms, id)| {
+            if *ready_ms <= now_ms {
+                if let Some(inst) = self.cluster.instance(*id) {
+                    let f = inst.function;
+                    self.cluster.mark_ready(*id, now_ms);
+                    self.router.add(f, *id);
+                    ev.cold_starts_completed += 1;
+                }
+                false
+            } else {
+                true
+            }
+        });
+        self.pending = pending;
+
+        // 3. autoscaler tick: plans are committed, refreshes submitted
+        let outcome = self.autoscaler.tick(
+            &self.cat,
+            &mut self.cluster,
+            &mut self.router,
+            self.sched.as_mut(),
+            loads,
+            now_ms,
+        )?;
+        ev.logical_cold_starts = outcome.logical_cold_starts;
+        ev.real_after_release = outcome.real_after_release;
+        ev.migrations = outcome.migrations;
+        ev.released = outcome.released;
+        ev.evicted = outcome.evicted;
+        ev.evicted_direct = outcome.evicted_direct;
+        for committed in &outcome.scheduled {
+            let ready_ms =
+                now_ms + committed.plan.decision_nanos as f64 / 1e6 + self.init_ms;
+            for p in &committed.placements {
+                self.pending.push((ready_ms, p.instance));
+            }
+        }
+        ev.scheduled = outcome.scheduled;
+        for update in outcome.deferred {
+            ev.deferred_submitted += 1;
+            ev.async_nanos += update.nanos;
+            ev.async_inferences += update.inferences;
+            let delay_ms =
+                (update.nanos.max(1) as f64 / 1e6).min(MAX_ASYNC_COMPLETION_MS);
+            // a pending refresh for the same node is superseded (versions
+            // are monotone per node): it would be discarded on landing
+            // anyway, so drop it at submission — its cost is already
+            // accounted above, and at most one update per node stays
+            // queued
+            self.deferred.retain(|(_, u)| u.node != update.node);
+            self.deferred.push((now_ms + delay_ms, update));
+        }
+
+        // 4. QoS measurement per (node, function) window; on monitor
+        // ticks, feed §6 accuracy verdicts back to the scheduler
+        let monitor_tick = self.ticks % MONITOR_EVERY == MONITOR_EVERY - 1;
+        for node in 0..self.cluster.n_nodes() {
+            let mix = self.cluster.mix(node);
+            if mix.is_empty() {
+                continue;
+            }
+            for (f, sat, _) in &mix.entries {
+                if *sat == 0 {
+                    continue;
+                }
+                let truth = interference::ground_truth_latency(&self.cat, &mix, *f);
+                let measured =
+                    truth * (1.0 + self.rng.normal_ms(0.0, self.cfg.measurement_noise));
+                // requests this window ≈ serving share of the live load
+                let serving_total = self.router.serving_count(*f).max(1) as f64;
+                let requests = loads[*f] * (*sat as f64 / serving_total).min(1.0);
+                if requests > 0.0 {
+                    ev.qos.push(QosWindow { function: *f, requests, measured_ms: measured });
+                }
+                if monitor_tick {
+                    let row = crate::model::feature_row(&self.cat, &mix, *f);
+                    if let Ok(pred) = self.predictor.predict(std::slice::from_ref(&row)) {
+                        self.monitor.record(*f, pred[0] as f64, measured);
+                    }
+                }
+            }
+        }
+        if monitor_tick {
+            for f in 0..self.cat.len() {
+                self.sched.apply_feedback(SchedulerFeedback::Unpredictability {
+                    function: f,
+                    isolated: self.monitor.is_unpredictable(f),
+                });
+            }
+        }
+
+        // 5. tick-end bookkeeping
+        ev.instances = self.cluster.instances_len();
+        ev.active_nodes = (0..self.cluster.n_nodes())
+            .filter(|n| !self.cluster.node_empty(*n))
+            .count();
+        ev.n_nodes = self.cluster.n_nodes();
+        self.ticks += 1;
+        Ok(ev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::tests::test_catalog;
+    use crate::runtime::{ForestParams, NativeForestPredictor};
+
+    fn plane() -> ControlPlane {
+        let cat = test_catalog();
+        let mut cfg = RunConfig::jiagu_45();
+        cfg.n_nodes = 4;
+        let predictor: Arc<dyn Predictor> = Arc::new(NativeForestPredictor::new(
+            ForestParams::synthetic_stub(crate::model::N_FEATURES, 0.05, 0.05),
+        ));
+        ControlPlane::new(cat, cfg, predictor)
+    }
+
+    #[test]
+    fn step_commits_plans_and_defers_refreshes_one_tick() {
+        let cat = test_catalog();
+        let mut loads = vec![0.0; cat.len()];
+        loads[0] = 5.0 * cat.get(0).saturated_rps;
+        let mut cp = plane();
+        let ev = cp.step(0.0, &loads).unwrap();
+        assert!(!ev.scheduled.is_empty(), "scale-up from zero must schedule");
+        assert!(ev.deferred_submitted > 0, "placements submit refreshes");
+        assert_eq!(ev.deferred_completed, 0, "nothing lands within its tick");
+        assert_eq!(cp.deferred_in_flight() as u32, ev.deferred_submitted);
+        let ev2 = cp.step(1000.0, &loads).unwrap();
+        assert_eq!(ev2.deferred_completed, ev.deferred_submitted, "lands next tick");
+        assert!(ev2.cold_starts_completed > 0, "instances become ready");
+    }
+
+    #[test]
+    fn idle_steps_do_nothing() {
+        let mut cp = plane();
+        let loads = vec![0.0; test_catalog().len()];
+        let ev = cp.step(0.0, &loads).unwrap();
+        assert!(ev.scheduled.is_empty());
+        assert_eq!(ev.instances, 0);
+        assert_eq!(cp.cold_starts_in_flight(), 0);
+    }
+}

@@ -36,6 +36,7 @@ pub mod capacity;
 pub mod catalog;
 pub mod cluster;
 pub mod config;
+pub mod controlplane;
 pub mod interference;
 pub mod metrics;
 pub mod model;

@@ -6,6 +6,7 @@
 //! jiagu run   [--scheduler jiagu|k8s|gsight|owl] [--trace A|B|C|D|timer|worst]
 //!             [--release 45] [--no-ds] [--no-migration] [--duration 1800]
 //!             [--init cfork|docker|<ms>] [--native] [--config file.json]
+//!             [--json]                # emit the RunReport as JSON
 //! jiagu compare [--duration 900]      # all schedulers on trace A
 //! jiagu info                          # artifacts + model summary
 //! ```
@@ -106,6 +107,46 @@ fn make_trace(
     })
 }
 
+/// Machine-readable form of a run report (`jiagu run --json`), so bench
+/// trajectories can be captured without scraping the human table.
+fn report_json(r: &jiagu::sim::RunReport) -> jiagu::util::json::Json {
+    use jiagu::util::json::{arr, num, obj, s};
+    obj(vec![
+        ("scheduler", s(&r.scheduler)),
+        ("trace", s(&r.trace)),
+        ("duration_s", num(r.duration_s as f64)),
+        ("density", num(r.density)),
+        ("qos_violation_rate", num(r.qos_violation_rate)),
+        (
+            "per_function_violation",
+            arr(r.per_function_violation.iter().map(|v| num(*v))),
+        ),
+        ("scheduling_ms_mean", num(r.scheduling_ms_mean)),
+        ("scheduling_ms_p99", num(r.scheduling_ms_p99)),
+        ("cold_start_ms_mean", num(r.cold_start_ms_mean)),
+        ("cold_start_ms_p99", num(r.cold_start_ms_p99)),
+        ("inferences_per_schedule", num(r.inferences_per_schedule)),
+        ("critical_inferences", num(r.critical_inferences as f64)),
+        ("async_inferences", num(r.async_inferences as f64)),
+        ("schedule_calls", num(r.schedule_calls as f64)),
+        ("instances_started", num(r.instances_started as f64)),
+        ("fast_decisions", num(r.fast_decisions as f64)),
+        ("slow_decisions", num(r.slow_decisions as f64)),
+        ("logical_cold_starts", num(r.logical_cold_starts as f64)),
+        ("real_after_release", num(r.real_after_release as f64)),
+        ("logical_fraction", num(r.logical_fraction())),
+        ("migrations", num(r.migrations as f64)),
+        ("released", num(r.released as f64)),
+        ("evicted", num(r.evicted as f64)),
+        ("peak_nodes", num(r.peak_nodes as f64)),
+        ("async_nanos", num(r.async_nanos as f64)),
+        (
+            "isolated_functions",
+            arr(r.isolated_functions.iter().map(|f| num(*f as f64))),
+        ),
+    ])
+}
+
 fn print_report(r: &jiagu::sim::RunReport) {
     println!("== run report: {} on {} ({}s) ==", r.scheduler, r.trace, r.duration_s);
     println!("  density (inst/node, time-weighted): {:.3}", r.density);
@@ -145,7 +186,11 @@ fn run() -> Result<()> {
             let predictor = load_predictor(&artifacts, native)?;
             let sim = Simulation::new(cat, cfg, predictor);
             let report = sim.run(&trace)?;
-            print_report(&report);
+            if args.switches.contains("json") {
+                println!("{}", report_json(&report).to_string());
+            } else {
+                print_report(&report);
+            }
         }
         Some("compare") => {
             let cat = jiagu::catalog::Catalog::load(&artifacts.join("functions.json"))?;

@@ -126,6 +126,8 @@ impl QosTracker {
 }
 
 /// Scheduling + cold-start cost accounting (Figs. 11/12, Table 2).
+/// Asynchronous (off-critical-path) refresh costs are tracked by the
+/// control-plane engine, not here — they never touch a cold start.
 #[derive(Debug, Default)]
 pub struct CostTracker {
     /// Critical-path decision cost per scheduling call (ms).
@@ -134,8 +136,6 @@ pub struct CostTracker {
     pub cold_start_ms: Samples,
     /// Model inferences on the critical path.
     pub critical_inferences: u64,
-    /// Model inferences off the critical path (async updates).
-    pub async_inferences: u64,
     /// Scheduling calls.
     pub calls: u64,
     /// Individual instances cold-started.
@@ -148,20 +148,20 @@ pub struct CostTracker {
 impl CostTracker {
     pub fn record_schedule(
         &mut self,
-        res: &crate::scheduler::ScheduleResult,
+        committed: &crate::scheduler::CommittedPlan,
         init_latency_ms: f64,
     ) {
-        let decision_ms = res.decision_nanos as f64 / 1e6;
+        let plan = &committed.plan;
+        let decision_ms = plan.decision_nanos as f64 / 1e6;
         self.scheduling_ms.push(decision_ms);
         self.calls += 1;
-        self.critical_inferences += res.critical_inferences;
-        self.async_inferences += res.async_inferences;
-        if res.path() == crate::scheduler::Path::Slow {
+        self.critical_inferences += plan.critical_inferences;
+        if plan.path() == crate::scheduler::Path::Slow {
             self.slow_decisions += 1;
         } else {
             self.fast_decisions += 1;
         }
-        for _ in &res.placements {
+        for _ in &committed.placements {
             self.cold_start_ms.push(decision_ms + init_latency_ms);
             self.instances_started += 1;
         }

@@ -1,6 +1,6 @@
 //! The predictors behind the [`Predictor`] trait: the always-available
 //! pure-Rust [`NativeForestPredictor`] and (behind the off-by-default
-//! `pjrt` feature) the PJRT-backed [`PjrtPredictor`]:
+//! `pjrt` feature) the PJRT-backed `PjrtPredictor`:
 //! compile-once, pad-and-execute-batched.
 
 use super::forest_params::ForestParams;
@@ -16,9 +16,9 @@ use std::time::Instant;
 
 /// A latency predictor: raw feature rows in, P90 latency (ms) out.
 ///
-/// Two implementations: [`PjrtPredictor`] (the production path — AOT HLO
-/// through the PJRT CPU client) and [`NativeForest`] via this blanket impl
-/// (tests / perf baseline).
+/// Two implementations: `PjrtPredictor` (the production path — AOT HLO
+/// through the PJRT CPU client, behind the `pjrt` feature) and
+/// [`NativeForest`] via this blanket impl (tests / perf baseline).
 pub trait Predictor: Send + Sync {
     /// Batched prediction; one output per input row.
     fn predict(&self, rows: &[Vec<f32>]) -> Result<Vec<f32>>;

@@ -10,8 +10,10 @@
 //! candidate node — while sharing Jiagu's predictor so the *policy*
 //! difference (when inference happens), not model quality, drives the
 //! comparison (same substitution the paper made with its own port).
+//! Planning runs over [`ClusterView`], so every instance of a batch sees
+//! the ones planned before it exactly as committed state.
 
-use super::{candidate_order, Placement, ScheduleResult, Scheduler};
+use super::{candidate_order, ClusterView, DeferredUpdate, Plan, PlanBuilder, Scheduler};
 use crate::catalog::{Catalog, FunctionId};
 use crate::cluster::{Cluster, NodeId};
 use crate::interference::NodeMix;
@@ -72,19 +74,17 @@ impl GsightScheduler {
     /// (the port's per-decision cost is therefore ~1 model call — the
     /// structure the paper's 21.78 ms average reflects) and return the
     /// first feasible node.
-    fn pick_node(
+    fn pick_node<C: ClusterView>(
         &self,
         cat: &Catalog,
-        cluster: &Cluster,
+        view: &C,
         function: FunctionId,
         exclude: Option<NodeId>,
     ) -> Result<Option<NodeId>> {
-        let mut candidates: Vec<NodeId> = candidate_order(cluster, function)
+        let mut candidates: Vec<NodeId> = candidate_order(view, function)
             .into_iter()
             .filter(|n| Some(*n) != exclude)
-            .filter(|n| {
-                (cluster.nodes[*n].instances.len() as u32) < self.max_instances_per_node
-            })
+            .filter(|n| (view.instances_on(*n) as u32) < self.max_instances_per_node)
             .take(Self::CANDIDATE_FANOUT)
             .collect();
         if candidates.is_empty() {
@@ -94,7 +94,7 @@ impl GsightScheduler {
         let mut qos = Vec::new();
         let mut spans = Vec::new();
         for node in &candidates {
-            let n = self.candidate_rows(cat, &cluster.mix(*node), function, &mut rows, &mut qos);
+            let n = self.candidate_rows(cat, &view.mix(*node), function, &mut rows, &mut qos);
             spans.push(n);
         }
         let preds = self.predictor.predict(&rows)?;
@@ -118,35 +118,30 @@ impl Scheduler for GsightScheduler {
     fn schedule(
         &mut self,
         cat: &Catalog,
-        cluster: &mut Cluster,
+        cluster: &Cluster,
         function: FunctionId,
         count: u32,
-        now_ms: f64,
-    ) -> Result<ScheduleResult> {
-        let mut res = ScheduleResult::default();
+        _now_ms: f64,
+    ) -> Result<Plan> {
         let t0 = Instant::now();
         let (calls0, _, _) = self.predictor.stats().snapshot();
+        let mut pb = PlanBuilder::new(cat, cluster);
         // per-instance decisions: no pre-decision, no batching
         for _ in 0..count {
-            let node = match self.pick_node(cat, cluster, function, None)? {
+            let node = match self.pick_node(cat, &pb, function, None)? {
                 Some(n) => n,
                 None => {
-                    let node = cluster.add_node();
-                    res.nodes_added += 1;
+                    let node = pb.add_node();
                     // still validate (solo on an empty node is trivially
                     // feasible, but the policy pays the inference)
-                    let _ = self.pick_node(cat, cluster, function, None)?;
+                    let _ = self.pick_node(cat, &pb, function, None)?;
                     node
                 }
             };
-            let id = cluster.place(cat, function, node, now_ms);
-            res.placements.push(Placement { instance: id, node });
+            pb.place(function, node);
         }
         let (calls1, _, _) = self.predictor.stats().snapshot();
-        res.critical_inferences = calls1 - calls0;
-        res.slow_path_used = true;
-        res.decision_nanos = t0.elapsed().as_nanos() as u64;
-        Ok(res)
+        Ok(pb.finish(true, calls1 - calls0, t0.elapsed().as_nanos() as u64))
     }
 
     fn on_node_changed(
@@ -155,8 +150,8 @@ impl Scheduler for GsightScheduler {
         _cluster: &Cluster,
         _node: NodeId,
         _now_ms: f64,
-    ) -> Result<u64> {
-        Ok(0) // stateless: nothing to refresh
+    ) -> Result<Option<DeferredUpdate>> {
+        Ok(None) // stateless: nothing to refresh
     }
 
     fn find_feasible_node(
@@ -185,11 +180,12 @@ mod tests {
         ));
         let mut cluster = Cluster::new(2);
         let mut s = GsightScheduler::new(pred);
-        let r = s.schedule(&cat, &mut cluster, 0, 4, 0.0).unwrap();
-        assert_eq!(r.placements.len(), 4);
+        let plan = s.schedule(&cat, &cluster, 0, 4, 0.0).unwrap();
         // one inference per instance minimum (no pre-decision batching)
-        assert!(r.critical_inferences >= 4, "got {}", r.critical_inferences);
-        assert_eq!(r.path(), super::super::Path::Slow);
+        assert!(plan.critical_inferences >= 4, "got {}", plan.critical_inferences);
+        assert_eq!(plan.path(), super::super::Path::Slow);
+        let committed = plan.commit(&cat, &mut cluster, 0.0);
+        assert_eq!(committed.placements.len(), 4);
     }
 
     #[test]
@@ -201,9 +197,11 @@ mod tests {
         ));
         let mut cluster = Cluster::new(1);
         let mut s = GsightScheduler::new(pred);
-        let r = s.schedule(&cat, &mut cluster, 0, 2, 0.0).unwrap();
+        let plan = s.schedule(&cat, &cluster, 0, 2, 0.0).unwrap();
         // nothing validates, so each instance forces a fresh node
-        assert_eq!(r.nodes_added, 2);
-        assert_eq!(r.placements.len(), 2);
+        assert_eq!(plan.nodes_added(), 2);
+        let committed = plan.commit(&cat, &mut cluster, 0.0);
+        assert_eq!(committed.placements.len(), 2);
+        assert_eq!(cluster.n_nodes(), 3);
     }
 }

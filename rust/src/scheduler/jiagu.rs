@@ -1,24 +1,34 @@
-//! The Jiagu pre-decision scheduler (§4).
+//! The Jiagu pre-decision scheduler (§4), planning against a read-only
+//! cluster view.
 //!
 //! * **Fast path**: the incoming function already has a capacity entry on
 //!   a candidate node → decide by comparing `capacity` with the current
 //!   instance count.  No model inference on the critical path.
 //! * **Slow path**: no entry → one batched capacity sweep (one inference)
-//!   on the critical path, then decide.
-//! * **Asynchronous update** (§4.3): every placement/eviction triggers a
-//!   full-table recompute *off* the critical path; entries therefore
-//!   already encode neighbour QoS validation, so placement never needs a
-//!   synchronous validation step.
+//!   on the critical path, then decide.  Sweeps for nodes that already
+//!   exist warm the table; sweeps for nodes the plan itself adds stay
+//!   plan-local so a dropped (dry-run) plan leaves no trace.
+//! * **Asynchronous update** (§4.3): every committed placement/eviction
+//!   makes the control plane call [`Scheduler::on_node_changed`], which
+//!   recomputes the node's table *off* the critical path and hands the
+//!   result back as a [`DeferredUpdate`].  Until the engine lands it via
+//!   [`Scheduler::complete_deferred`], the fast path keeps reading the
+//!   stale entries — the staleness window the paper accepts in exchange
+//!   for a lookup-only critical path.
 //! * **Concurrency-aware batching** (§4.4): a spike of `count` instances
 //!   of one function is admitted with a single table check and triggers a
-//!   single asynchronous update.
+//!   single asynchronous update per touched node.
 
-use super::{candidate_order, Placement, ScheduleResult, Scheduler};
+use super::{
+    candidate_order, ClusterView, DeferredUpdate, Plan, PlanBuilder, Scheduler,
+    SchedulerFeedback,
+};
 use crate::capacity::{self, CapacityConfig, CapacityTable};
 use crate::catalog::{Catalog, FunctionId};
 use crate::cluster::{Cluster, NodeId};
 use crate::runtime::Predictor;
 use anyhow::Result;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -32,7 +42,7 @@ pub struct JiaguScheduler {
     /// Functions under the §6 unpredictability fallback: scheduled
     /// conservatively on nodes dedicated to that function, packed only to
     /// the QoS-unaware request limit (no overcommitment).
-    isolated: std::collections::HashSet<FunctionId>,
+    isolated: HashSet<FunctionId>,
 }
 
 impl JiaguScheduler {
@@ -43,7 +53,7 @@ impl JiaguScheduler {
             tables: vec![CapacityTable::default(); n_nodes],
             fast_decisions: 0,
             slow_decisions: 0,
-            isolated: std::collections::HashSet::new(),
+            isolated: HashSet::new(),
         }
     }
 
@@ -60,42 +70,33 @@ impl JiaguScheduler {
         self.isolated.contains(&f)
     }
 
-    /// Conservative path for unpredictable functions: place only on nodes
+    /// Conservative path for unpredictable functions: plan only onto nodes
     /// hosting nothing but `function`, packed to the request limit.
-    fn schedule_isolated(
+    fn plan_isolated(
         &mut self,
         cat: &Catalog,
-        cluster: &mut Cluster,
+        pb: &mut PlanBuilder<'_>,
         function: FunctionId,
         count: u32,
-        now_ms: f64,
-        res: &mut ScheduleResult,
     ) {
         let limit = cat.request_packing_limit(function);
         let mut remaining = count;
         while remaining > 0 {
-            let node = (0..cluster.n_nodes())
+            let node = (0..pb.n_nodes())
                 .find(|n| {
-                    let mix = cluster.mix(*n);
+                    let mix = pb.mix(*n);
                     let dedicated = mix
                         .entries
                         .iter()
                         .all(|(f, s, c)| *f == function || s + c == 0);
-                    let total = cluster.nodes[*n].instances.len() as u32;
+                    let total = pb.instances_on(*n) as u32;
                     dedicated && total < limit
                 })
-                .unwrap_or_else(|| {
-                    res.nodes_added += 1;
-                    cluster.add_node()
-                });
-            if self.tables.len() < cluster.n_nodes() {
-                self.ensure_tables(cluster.n_nodes());
-            }
-            let fit = (limit - cluster.nodes[node].instances.len() as u32).min(remaining);
+                .unwrap_or_else(|| pb.add_node());
+            let fit = (limit - pb.instances_on(node) as u32).min(remaining);
             let fit = fit.max(1);
             for _ in 0..fit.min(remaining) {
-                let id = cluster.place(cat, function, node, now_ms);
-                res.placements.push(Placement { instance: id, node });
+                pb.place(function, node);
             }
             remaining -= fit.min(remaining);
         }
@@ -115,39 +116,42 @@ impl JiaguScheduler {
         }
     }
 
-    /// Asynchronous update body: recompute the node's capacity table
-    /// under its current mix.  Entries are kept for (a) every function in
-    /// the node's mix and (b) previously tabled functions still deployed
-    /// *somewhere* in the cluster — their next arrival here then hits the
-    /// fast path.  Functions fully scaled to zero cluster-wide drop out
-    /// (which is what makes the paper's 0↔1-concurrency worst case all
-    /// slow paths).  Returns (nanos, inferences).
-    fn async_update(
+    /// Capacity of `function` on `node` under the planning view.  A table
+    /// hit is the fast path; a miss runs one batched sweep on the critical
+    /// path (`slow`/`critical` account for it).  Sweep results persist in
+    /// the table for real nodes (§4.2 warm-up) and in `local` for nodes
+    /// the plan itself adds.
+    fn planned_capacity(
         &mut self,
         cat: &Catalog,
-        cluster: &Cluster,
+        pb: &PlanBuilder<'_>,
         node: NodeId,
-    ) -> Result<(u64, u64)> {
-        let t0 = Instant::now();
-        let (calls0, _, _) = self.predictor.stats().snapshot();
-        let mix = cluster.mix(node);
-        let version = self.tables[node].bump_version();
-        let mut targets: Vec<crate::catalog::FunctionId> =
-            mix.entries.iter().map(|(f, _, _)| *f).collect();
-        for (f, _) in self.tables[node].iter() {
-            if !targets.contains(f) && cluster.deployed_anywhere(*f) {
-                targets.push(*f);
+        function: FunctionId,
+        local: &mut HashMap<NodeId, u32>,
+        critical: &mut u64,
+        slow: &mut bool,
+    ) -> Result<u32> {
+        if node < pb.base_nodes() {
+            if let Some(e) = self.tables[node].get(function) {
+                return Ok(e.capacity);
             }
+        } else if let Some(cap) = local.get(&node) {
+            return Ok(*cap);
         }
-        let mut entries = std::collections::HashMap::new();
-        for f in targets {
-            let cap =
-                capacity::compute_capacity(cat, &mix, f, self.predictor.as_ref(), &self.cfg)?;
-            entries.insert(f, capacity::CapacityEntry { capacity: cap, mix_version: version });
+        let mix = pb.mix(node);
+        let (c0, _, _) = self.predictor.stats().snapshot();
+        let cap =
+            capacity::compute_capacity(cat, &mix, function, self.predictor.as_ref(), &self.cfg)?;
+        let (c1, _, _) = self.predictor.stats().snapshot();
+        *critical += c1 - c0;
+        *slow = true;
+        if node < pb.base_nodes() {
+            let v = self.tables[node].version();
+            self.tables[node].insert(function, cap, v);
+        } else {
+            local.insert(node, cap);
         }
-        self.tables[node].replace(entries);
-        let (calls1, _, _) = self.predictor.stats().snapshot();
-        Ok((t0.elapsed().as_nanos() as u64, calls1 - calls0))
+        Ok(cap)
     }
 }
 
@@ -156,106 +160,117 @@ impl Scheduler for JiaguScheduler {
         "jiagu"
     }
 
-    fn as_jiagu_mut(&mut self) -> Option<&mut JiaguScheduler> {
-        Some(self)
+    fn apply_feedback(&mut self, feedback: SchedulerFeedback) {
+        match feedback {
+            SchedulerFeedback::Unpredictability { function, isolated } => {
+                self.set_isolated(function, isolated);
+            }
+        }
     }
 
     fn schedule(
         &mut self,
         cat: &Catalog,
-        cluster: &mut Cluster,
+        cluster: &Cluster,
         function: FunctionId,
         count: u32,
-        now_ms: f64,
-    ) -> Result<ScheduleResult> {
+        _now_ms: f64,
+    ) -> Result<Plan> {
         self.ensure_tables(cluster.n_nodes());
-        let mut res = ScheduleResult::default();
         let t0 = Instant::now();
+        let mut pb = PlanBuilder::new(cat, cluster);
         if self.isolated.contains(&function) {
             // §6 fallback: no prediction, dedicated nodes, request packing
-            self.schedule_isolated(cat, cluster, function, count, now_ms, &mut res);
+            self.plan_isolated(cat, &mut pb, function, count);
             self.fast_decisions += 1;
-            res.decision_nanos = t0.elapsed().as_nanos() as u64;
-            return Ok(res);
+            return Ok(pb.finish(false, 0, t0.elapsed().as_nanos() as u64));
         }
+        let mut critical = 0u64;
+        let mut slow = false;
         let mut remaining = count;
-        let mut touched: Vec<NodeId> = Vec::new();
+        // candidates ranked once per call; nodes the plan adds are
+        // appended instead of re-sorting the whole order per retry
+        let mut order = candidate_order(&pb, function);
+        let mut local: HashMap<NodeId, u32> = HashMap::new();
 
         'placing: while remaining > 0 {
-            for node in candidate_order(cluster, function) {
-                let (sat, cached) = cluster.counts(node, function);
+            for i in 0..order.len() {
+                let node = order[i];
+                let (sat, cached) = pb.counts(node, function);
                 let current = sat + cached;
-                // fast path: existing entry admits (current + batch)?
-                let cap = match self.tables[node].get(function) {
-                    Some(e) => e.capacity,
-                    None => {
-                        // slow path: one batched sweep on the critical path
-                        let mix = cluster.mix(node);
-                        let (c0, _, _) = self.predictor.stats().snapshot();
-                        let cap = capacity::compute_capacity(
-                            cat,
-                            &mix,
-                            function,
-                            self.predictor.as_ref(),
-                            &self.cfg,
-                        )?;
-                        let (c1, _, _) = self.predictor.stats().snapshot();
-                        res.critical_inferences += c1 - c0;
-                        res.slow_path_used = true;
-                        let v = self.tables[node].version();
-                        self.tables[node].insert(function, cap, v);
-                        cap
-                    }
-                };
+                let cap = self.planned_capacity(
+                    cat, &pb, node, function, &mut local, &mut critical, &mut slow,
+                )?;
                 if cap > current {
                     let fit = (cap - current).min(remaining);
                     for _ in 0..fit {
-                        let id = cluster.place(cat, function, node, now_ms);
-                        res.placements.push(Placement { instance: id, node });
+                        pb.place(function, node);
                     }
                     remaining -= fit;
-                    if !touched.contains(&node) {
-                        touched.push(node);
-                    }
                     if remaining == 0 {
                         break 'placing;
                     }
                 }
             }
-            // nothing fits anywhere: grow the cluster (paper §6)
-            let _node = cluster.add_node();
-            self.ensure_tables(cluster.n_nodes());
-            res.nodes_added += 1;
+            // nothing fits anywhere: plan cluster growth (paper §6)
+            let node = pb.add_node();
+            order.push(node);
         }
 
-        if res.slow_path_used {
+        if slow {
             self.slow_decisions += 1;
         } else {
             self.fast_decisions += 1;
         }
-        res.decision_nanos = t0.elapsed().as_nanos() as u64;
-
-        // one asynchronous update per touched node — off the critical path
-        for node in touched {
-            self.tables[node].bump_version();
-            let (nanos, inf) = self.async_update(cat, cluster, node)?;
-            res.async_nanos += nanos;
-            res.async_inferences += inf;
-        }
-        Ok(res)
+        Ok(pb.finish(slow, critical, t0.elapsed().as_nanos() as u64))
     }
 
+    /// Compute the node's asynchronous table refresh (§4.3) from the
+    /// committed mix and return it as deferred work — entries become
+    /// visible only when [`Scheduler::complete_deferred`] lands them.
+    /// Entries are kept for (a) every function in the node's mix and (b)
+    /// previously tabled functions still deployed *somewhere* in the
+    /// cluster — their next arrival here then hits the fast path.
+    /// Functions fully scaled to zero cluster-wide drop out (which is what
+    /// makes the paper's 0↔1-concurrency worst case all slow paths).
     fn on_node_changed(
         &mut self,
         cat: &Catalog,
         cluster: &Cluster,
         node: NodeId,
         _now_ms: f64,
-    ) -> Result<u64> {
+    ) -> Result<Option<DeferredUpdate>> {
         self.ensure_tables(cluster.n_nodes());
-        self.tables[node].bump_version();
-        let (nanos, _) = self.async_update(cat, cluster, node)?;
-        Ok(nanos)
+        let t0 = Instant::now();
+        let (calls0, _, _) = self.predictor.stats().snapshot();
+        let mix = cluster.mix(node);
+        let version = self.tables[node].bump_version();
+        let mut targets: HashSet<FunctionId> =
+            mix.entries.iter().map(|(f, _, _)| *f).collect();
+        for (f, _) in self.tables[node].iter() {
+            if cluster.deployed_anywhere(*f) {
+                targets.insert(*f);
+            }
+        }
+        let mut entries = HashMap::new();
+        for f in targets {
+            let cap =
+                capacity::compute_capacity(cat, &mix, f, self.predictor.as_ref(), &self.cfg)?;
+            entries.insert(f, capacity::CapacityEntry { capacity: cap, mix_version: version });
+        }
+        let (calls1, _, _) = self.predictor.stats().snapshot();
+        Ok(Some(DeferredUpdate {
+            node,
+            nanos: t0.elapsed().as_nanos() as u64,
+            inferences: calls1 - calls0,
+            version,
+            entries,
+        }))
+    }
+
+    fn complete_deferred(&mut self, update: DeferredUpdate) {
+        self.ensure_tables(update.node + 1);
+        self.tables[update.node].apply_refresh(update.entries, update.version);
     }
 
     /// Conversion admission: one more *saturated* instance of `function`
@@ -295,13 +310,13 @@ impl Scheduler for JiaguScheduler {
     fn stranded_cached(
         &mut self,
         _cat: &Catalog,
-        _cluster: &Cluster,
+        cluster: &Cluster,
         node: NodeId,
         function: FunctionId,
         sat: u32,
         cached: u32,
     ) -> Result<u32> {
-        self.ensure_tables(node + 1);
+        self.ensure_tables(cluster.n_nodes());
         let cap = match self.tables[node].get(function) {
             Some(e) => e.capacity,
             None => return Ok(0), // no entry yet: nothing known to strand
@@ -349,9 +364,10 @@ impl Scheduler for JiaguScheduler {
 
 #[cfg(test)]
 mod tests {
+    use super::super::Action;
     use super::*;
     use crate::catalog::tests::test_catalog;
-    use crate::runtime::{ForestParams, NativeForestPredictor};
+    use crate::runtime::{ForestParams, InferenceStats, NativeForestPredictor};
 
     fn stub_predictor() -> Arc<dyn Predictor> {
         // stub forest predicts slowdown exp(0.05) = 1.05x solo — always
@@ -368,14 +384,22 @@ mod tests {
         let cat = test_catalog();
         let mut cluster = Cluster::new(2);
         let mut s = JiaguScheduler::new(stub_predictor(), CapacityConfig::default(), 2);
-        let r1 = s.schedule(&cat, &mut cluster, 0, 1, 0.0).unwrap();
-        assert_eq!(r1.path(), super::super::Path::Slow);
-        assert_eq!(r1.placements.len(), 1);
+        let p1 = s.schedule(&cat, &cluster, 0, 1, 0.0).unwrap();
+        assert_eq!(p1.path(), super::super::Path::Slow);
+        assert_eq!(p1.placements_planned(), 1);
+        let c1 = p1.commit(&cat, &mut cluster, 0.0);
+        // the asynchronous refresh is deferred work: computed now (paying
+        // its inferences off the critical path), landing only on complete
+        let upd = s
+            .on_node_changed(&cat, &cluster, c1.placements[0].node, 0.0)
+            .unwrap()
+            .unwrap();
+        assert!(upd.inferences > 0, "async refresh still pays inferences");
+        s.complete_deferred(upd);
         // table now warm: next call must be fast with zero critical inferences
-        let r2 = s.schedule(&cat, &mut cluster, 0, 1, 1.0).unwrap();
-        assert_eq!(r2.path(), super::super::Path::Fast);
-        assert_eq!(r2.critical_inferences, 0);
-        assert!(r2.async_inferences > 0, "async update still runs");
+        let p2 = s.schedule(&cat, &cluster, 0, 1, 1.0).unwrap();
+        assert_eq!(p2.path(), super::super::Path::Fast);
+        assert_eq!(p2.critical_inferences, 0);
     }
 
     #[test]
@@ -383,15 +407,14 @@ mod tests {
         let cat = test_catalog();
         let mut cluster = Cluster::new(2);
         let mut s = JiaguScheduler::new(stub_predictor(), CapacityConfig::default(), 2);
-        s.schedule(&cat, &mut cluster, 0, 1, 0.0).unwrap();
+        let _ = s.schedule(&cat, &cluster, 0, 1, 0.0).unwrap().commit(&cat, &mut cluster, 0.0);
         let before_fast = s.fast_decisions;
         // spike of 5: one fast decision, placements all on one node
-        let r = s.schedule(&cat, &mut cluster, 0, 5, 1.0).unwrap();
-        assert_eq!(r.placements.len(), 5);
+        let plan = s.schedule(&cat, &cluster, 0, 5, 1.0).unwrap();
+        let committed = plan.commit(&cat, &mut cluster, 1.0);
+        assert_eq!(committed.placements.len(), 5);
         assert_eq!(s.fast_decisions, before_fast + 1);
-        let nodes: std::collections::HashSet<_> =
-            r.placements.iter().map(|p| p.node).collect();
-        assert_eq!(nodes.len(), 1, "batch lands on one node");
+        assert_eq!(committed.touched_nodes().len(), 1, "batch lands on one node");
     }
 
     #[test]
@@ -404,9 +427,93 @@ mod tests {
             ..Default::default()
         };
         let mut s = JiaguScheduler::new(stub_predictor(), cfg, 1);
-        let r = s.schedule(&cat, &mut cluster, 0, 10, 0.0).unwrap();
-        assert_eq!(r.placements.len(), 10);
-        assert!(r.nodes_added >= 2, "needed extra nodes: {}", r.nodes_added);
+        let plan = s.schedule(&cat, &cluster, 0, 10, 0.0).unwrap();
+        assert!(plan.nodes_added() >= 2, "needed extra nodes: {}", plan.nodes_added());
+        let committed = plan.commit(&cat, &mut cluster, 0.0);
+        assert_eq!(committed.placements.len(), 10);
         cluster.check_invariants().unwrap();
+    }
+
+    /// Predictor whose predicted latency grows with the node's total
+    /// saturated count, so capacities shrink as neighbours move in —
+    /// which makes capacity-table staleness observable.
+    struct MixSensitivePredictor {
+        stats: InferenceStats,
+    }
+
+    impl Predictor for MixSensitivePredictor {
+        fn predict(&self, rows: &[Vec<f32>]) -> Result<Vec<f32>> {
+            self.stats.record(rows.len(), 0);
+            // row[0] = target solo latency, row[42] = total saturated on
+            // the node; feasible while 1 + 0.04·tot ≤ 0.95 · 1.2 ⇒ tot ≤ 3
+            Ok(rows.iter().map(|r| r[0] * (1.0 + 0.04 * r[42])).collect())
+        }
+
+        fn stats(&self) -> &InferenceStats {
+            &self.stats
+        }
+
+        fn n_features(&self) -> usize {
+            crate::model::N_FEATURES
+        }
+    }
+
+    #[test]
+    fn fast_path_reads_stale_table_until_deferred_update_lands() {
+        let cat = test_catalog();
+        let mut cluster = Cluster::new(1);
+        let pred: Arc<dyn Predictor> =
+            Arc::new(MixSensitivePredictor { stats: InferenceStats::default() });
+        let mut s = JiaguScheduler::new(pred, CapacityConfig::default(), 1);
+
+        // warm-up: one f0 instance; capacity(f0 | empty node) = 3
+        let _ = s.schedule(&cat, &cluster, 0, 1, 0.0).unwrap().commit(&cat, &mut cluster, 0.0);
+        let warm = s.on_node_changed(&cat, &cluster, 0, 0.0).unwrap().unwrap();
+        s.complete_deferred(warm);
+        assert_eq!(s.capacity_table(0).get(0).unwrap().capacity, 3);
+
+        // two f1 neighbours move in; their refresh is *submitted* but not
+        // yet completed — the table still claims capacity(f0) = 3
+        let _ = s.schedule(&cat, &cluster, 1, 2, 1.0).unwrap().commit(&cat, &mut cluster, 1.0);
+        let pending = s.on_node_changed(&cat, &cluster, 0, 1.0).unwrap().unwrap();
+        assert_eq!(
+            pending.entries.get(&0).unwrap().capacity,
+            1,
+            "the in-flight refresh already knows the shrunken capacity"
+        );
+        assert_eq!(s.capacity_table(0).get(0).unwrap().capacity, 3, "table still stale");
+
+        // fast-path decision inside the staleness window: admits 2 more
+        // f0 under the stale capacity 3 (a fresh table would refuse)
+        let stale = s.schedule(&cat, &cluster, 0, 2, 2.0).unwrap();
+        assert_eq!(stale.path(), super::super::Path::Fast);
+        assert_eq!(stale.critical_inferences, 0);
+        assert!(stale
+            .actions
+            .iter()
+            .all(|a| matches!(a, Action::Place { node: 0, .. })));
+        let _ = stale.commit(&cat, &mut cluster, 2.0);
+
+        // the update lands: capacity(f0) = 1 < 3 running, so the next f0
+        // can no longer fit and must grow the cluster
+        s.complete_deferred(pending);
+        assert_eq!(s.capacity_table(0).get(0).unwrap().capacity, 1);
+        let after = s.schedule(&cat, &cluster, 0, 1, 3.0).unwrap();
+        assert_eq!(after.nodes_added(), 1, "fresh capacity forces growth");
+    }
+
+    #[test]
+    fn feedback_toggles_isolation() {
+        let cat = test_catalog();
+        let cluster = Cluster::new(2);
+        let mut s = JiaguScheduler::new(stub_predictor(), CapacityConfig::default(), 2);
+        s.apply_feedback(SchedulerFeedback::Unpredictability { function: 1, isolated: true });
+        assert!(s.is_isolated(1));
+        // isolated planning never touches the model
+        let plan = s.schedule(&cat, &cluster, 1, 3, 0.0).unwrap();
+        assert_eq!(plan.critical_inferences, 0);
+        assert_eq!(plan.placements_planned(), 3);
+        s.apply_feedback(SchedulerFeedback::Unpredictability { function: 1, isolated: false });
+        assert!(!s.is_isolated(1));
     }
 }

@@ -5,9 +5,10 @@
 //! MostAllocated-style packing: among nodes with room for the request,
 //! pick the one with the highest requested-CPU utilisation, so instances
 //! pack tightly and the density baseline is exactly the request-based
-//! packing limit.
+//! packing limit.  Packing runs over [`ClusterView`], so a planned batch
+//! stacks onto its own placements before spilling to the next node.
 
-use super::{Placement, ScheduleResult, Scheduler};
+use super::{ClusterView, DeferredUpdate, Plan, PlanBuilder, Scheduler};
 use crate::catalog::{Catalog, FunctionId};
 use crate::cluster::{Cluster, NodeId};
 use anyhow::Result;
@@ -21,17 +22,21 @@ impl KubernetesScheduler {
         Self
     }
 
-    fn fits(cat: &Catalog, cluster: &Cluster, node: NodeId, function: FunctionId) -> bool {
+    fn fits<C: ClusterView>(
+        cat: &Catalog,
+        view: &C,
+        node: NodeId,
+        function: FunctionId,
+    ) -> bool {
         let spec = cat.get(function);
-        let n = &cluster.nodes[node];
-        n.requested_milli_cpu + spec.milli_cpu <= cat.node_milli_cpu
-            && n.requested_mem_mb + spec.mem_mb <= cat.node_mem_mb
+        let (cpu, mem) = view.requested(node);
+        cpu + spec.milli_cpu <= cat.node_milli_cpu && mem + spec.mem_mb <= cat.node_mem_mb
     }
 
-    fn pick(cat: &Catalog, cluster: &Cluster, function: FunctionId) -> Option<NodeId> {
-        (0..cluster.n_nodes())
-            .filter(|n| Self::fits(cat, cluster, *n, function))
-            .max_by_key(|n| cluster.nodes[*n].requested_milli_cpu)
+    fn pick<C: ClusterView>(cat: &Catalog, view: &C, function: FunctionId) -> Option<NodeId> {
+        (0..view.n_nodes())
+            .filter(|n| Self::fits(cat, view, *n, function))
+            .max_by_key(|n| view.requested(*n).0)
     }
 }
 
@@ -43,26 +48,21 @@ impl Scheduler for KubernetesScheduler {
     fn schedule(
         &mut self,
         cat: &Catalog,
-        cluster: &mut Cluster,
+        cluster: &Cluster,
         function: FunctionId,
         count: u32,
-        now_ms: f64,
-    ) -> Result<ScheduleResult> {
-        let mut res = ScheduleResult::default();
+        _now_ms: f64,
+    ) -> Result<Plan> {
         let t0 = Instant::now();
+        let mut pb = PlanBuilder::new(cat, cluster);
         for _ in 0..count {
-            let node = match Self::pick(cat, cluster, function) {
+            let node = match Self::pick(cat, &pb, function) {
                 Some(n) => n,
-                None => {
-                    res.nodes_added += 1;
-                    cluster.add_node()
-                }
+                None => pb.add_node(),
             };
-            let id = cluster.place(cat, function, node, now_ms);
-            res.placements.push(Placement { instance: id, node });
+            pb.place(function, node);
         }
-        res.decision_nanos = t0.elapsed().as_nanos() as u64;
-        Ok(res)
+        Ok(pb.finish(false, 0, t0.elapsed().as_nanos() as u64))
     }
 
     fn on_node_changed(
@@ -71,8 +71,8 @@ impl Scheduler for KubernetesScheduler {
         _cluster: &Cluster,
         _node: NodeId,
         _now_ms: f64,
-    ) -> Result<u64> {
-        Ok(0)
+    ) -> Result<Option<DeferredUpdate>> {
+        Ok(None)
     }
 
     fn find_feasible_node(
@@ -98,8 +98,9 @@ mod tests {
         let cat = test_catalog();
         let mut cluster = Cluster::new(1);
         let mut s = KubernetesScheduler::new();
-        let r = s.schedule(&cat, &mut cluster, 0, 25, 0.0).unwrap();
-        assert_eq!(r.placements.len(), 25);
+        let plan = s.schedule(&cat, &cluster, 0, 25, 0.0).unwrap();
+        let committed = plan.commit(&cat, &mut cluster, 0.0);
+        assert_eq!(committed.placements.len(), 25);
         // 12 per node (48000/4000) -> 25 instances need 3 nodes
         assert_eq!(cluster.n_nodes(), 3);
         assert_eq!(cluster.nodes[0].instances.len(), 12);
@@ -116,7 +117,7 @@ mod tests {
         }
         let mut cluster = Cluster::new(1);
         let mut s = KubernetesScheduler::new();
-        s.schedule(&cat, &mut cluster, 1, 7, 0.0).unwrap();
+        let _ = s.schedule(&cat, &cluster, 1, 7, 0.0).unwrap().commit(&cat, &mut cluster, 0.0);
         assert_eq!(cluster.nodes[0].instances.len(), 6);
         assert_eq!(cluster.n_nodes(), 2);
     }

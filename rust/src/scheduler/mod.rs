@@ -1,4 +1,5 @@
-//! Instance schedulers: Jiagu (pre-decision) and the paper's baselines.
+//! Instance schedulers behind the **plan/commit** API: Jiagu
+//! (pre-decision) and the paper's baselines.
 //!
 //! | Scheduler | Decision basis | Model inference on critical path? |
 //! |---|---|---|
@@ -6,6 +7,40 @@
 //! | [`GsightScheduler`] | per-decision QoS validation | every decision |
 //! | [`OwlScheduler`] | historical pairwise colocation table, ≤2 functions/node | none (profiled offline) |
 //! | [`KubernetesScheduler`] | requested-resource bin packing | none (QoS-unaware) |
+//!
+//! ## Plan / commit
+//!
+//! [`Scheduler::schedule`] never mutates the cluster.  It plans against a
+//! read-only [`Cluster`] through a [`PlanBuilder`] — the builder overlays
+//! the placements and node additions planned so far onto the immutable
+//! cluster, so multi-instance batches still see their own effects — and
+//! returns a [`Plan`] of typed [`Action`]s plus critical-path cost
+//! accounting.  [`Plan::commit`] replays the actions onto the cluster and
+//! yields the realised [`CommittedPlan`]; a plan that is never committed
+//! leaves the *cluster* untouched, making what-if probes and
+//! deterministic replay possible.  (Scheduler-internal state still moves
+//! during planning — slow-path sweeps warm capacity tables and decision
+//! counters advance — so dry-runs are free for the cluster, not for the
+//! cost accounting.)
+//!
+//! ## Asynchronous updates are deferred work
+//!
+//! Jiagu's §4.3 capacity-table refresh runs *off* the critical path.  The
+//! API models that honestly: after the control plane commits a mutation
+//! touching a node it calls [`Scheduler::on_node_changed`], which
+//! *computes* the refresh (billing its wall-clock off-path) and returns a
+//! [`DeferredUpdate`] — the new table entries are **not yet visible**.
+//! The engine completes the update at `now + nanos` in virtual time via
+//! [`Scheduler::complete_deferred`]; until then every fast-path decision
+//! genuinely reads the stale table, which is the staleness window the
+//! paper defends (§4.3) and Figs. 11/12 price.
+//!
+//! ## Typed feedback
+//!
+//! The §6 online-accuracy verdicts reach the scheduler through
+//! [`Scheduler::apply_feedback`] ([`SchedulerFeedback`]) instead of a
+//! concrete-type downcast, so alternative QoS-aware schedulers can opt
+//! into the unpredictability fallback without the engine knowing them.
 //!
 //! All decisions are timed with a monotonic clock; the simulator injects
 //! the measured wall-clock cost into the virtual cold-start timeline, so
@@ -22,9 +57,12 @@ pub use jiagu::JiaguScheduler;
 pub use kubernetes::KubernetesScheduler;
 pub use owl::OwlScheduler;
 
+use crate::capacity::CapacityEntry;
 use crate::catalog::{Catalog, FunctionId};
 use crate::cluster::{Cluster, InstanceId, NodeId};
+use crate::interference::NodeMix;
 use anyhow::Result;
+use std::collections::HashMap;
 
 /// Which code path produced a decision (Figs. 11/12 accounting).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -37,34 +75,45 @@ pub enum Path {
     Heuristic,
 }
 
-/// One placed instance.
+/// One placed instance (the realised form of [`Action::Place`]).
 #[derive(Debug, Clone, Copy)]
 pub struct Placement {
     pub instance: InstanceId,
     pub node: NodeId,
 }
 
-/// Outcome of one scheduling call (possibly placing several instances —
-/// concurrency-aware batching schedules a whole spike at once).
+/// One typed scheduling decision inside a [`Plan`].  Node ids refer to the
+/// cluster the plan was computed against; ids at or past its node count
+/// denote nodes the plan itself adds (in [`Action::AddNode`] order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Grow the cluster by one node (the paper requests new servers when
+    /// nothing fits, §6).
+    AddNode,
+    /// Start one instance of `function` on `node`.
+    Place { function: FunctionId, node: NodeId },
+}
+
+/// Outcome of one `schedule` call: the typed decisions plus critical-path
+/// cost accounting.  Nothing has happened to the cluster yet — commit the
+/// plan (or drop it for a dry run).
+#[must_use = "a Plan changes nothing until committed"]
 #[derive(Debug, Clone, Default)]
-pub struct ScheduleResult {
-    pub placements: Vec<Placement>,
-    /// Worst path taken across the call.
+pub struct Plan {
+    pub actions: Vec<Action>,
+    /// Whether any model inference ran on the critical path.
     pub slow_path_used: bool,
     /// Wall-clock nanoseconds on the scheduling critical path.
     pub decision_nanos: u64,
-    /// Wall-clock nanoseconds spent off the critical path (asynchronous
-    /// capacity-table updates).
-    pub async_nanos: u64,
     /// Model inferences on the critical path.
     pub critical_inferences: u64,
-    /// Model inferences off the critical path (asynchronous updates).
-    pub async_inferences: u64,
-    /// Nodes added because nothing fit.
-    pub nodes_added: u32,
+    /// Node count of the cluster the plan was computed against — virtual
+    /// node ids start here, and `commit` refuses a cluster whose size no
+    /// longer matches (stale plans must not remap onto the wrong nodes).
+    base_nodes: usize,
 }
 
-impl ScheduleResult {
+impl Plan {
     pub fn path(&self) -> Path {
         if self.critical_inferences > 0 || self.slow_path_used {
             Path::Slow
@@ -72,44 +121,346 @@ impl ScheduleResult {
             Path::Fast
         }
     }
+
+    /// Number of `Place` actions in the plan.
+    pub fn placements_planned(&self) -> usize {
+        self.actions
+            .iter()
+            .filter(|a| matches!(a, Action::Place { .. }))
+            .count()
+    }
+
+    /// Number of `AddNode` actions in the plan.
+    pub fn nodes_added(&self) -> u32 {
+        self.actions.iter().filter(|a| **a == Action::AddNode).count() as u32
+    }
+
+    /// Actuate the plan: replay its actions onto `cluster` (which must be
+    /// the cluster the plan was computed against, unchanged since).  New
+    /// instances are created in the `Starting` state; the caller drives
+    /// init completion and the per-node asynchronous refreshes.
+    ///
+    /// # Panics
+    ///
+    /// Panics if the cluster's node count no longer matches the one the
+    /// plan was computed against — committing a stale plan would silently
+    /// remap its `AddNode` placements onto unrelated nodes.
+    pub fn commit(self, cat: &Catalog, cluster: &mut Cluster, now_ms: f64) -> CommittedPlan {
+        assert!(
+            self.actions.is_empty() || cluster.n_nodes() == self.base_nodes,
+            "plan computed against {} nodes committed to a cluster with {}",
+            self.base_nodes,
+            cluster.n_nodes()
+        );
+        let base = self.base_nodes;
+        let mut new_nodes: Vec<NodeId> = Vec::new();
+        let mut placements = Vec::with_capacity(self.placements_planned());
+        for action in &self.actions {
+            match action {
+                Action::AddNode => new_nodes.push(cluster.add_node()),
+                Action::Place { function, node } => {
+                    let node = if *node < base {
+                        *node
+                    } else {
+                        new_nodes[*node - base]
+                    };
+                    let id = cluster.place(cat, *function, node, now_ms);
+                    placements.push(Placement { instance: id, node });
+                }
+            }
+        }
+        CommittedPlan { plan: self, placements }
+    }
 }
 
-/// A scheduler places new instances onto nodes and keeps whatever internal
-/// state it needs in sync with cluster events.
+/// A committed [`Plan`] plus the instances it actually created.
+#[derive(Debug, Clone)]
+pub struct CommittedPlan {
+    pub plan: Plan,
+    pub placements: Vec<Placement>,
+}
+
+impl CommittedPlan {
+    /// Nodes the committed plan placed onto, deduplicated in first-touch
+    /// order — each wants one asynchronous refresh (§4.4 batching).
+    pub fn touched_nodes(&self) -> Vec<NodeId> {
+        let mut nodes = Vec::new();
+        for p in &self.placements {
+            if !nodes.contains(&p.node) {
+                nodes.push(p.node);
+            }
+        }
+        nodes
+    }
+}
+
+/// Typed feedback from the control plane to a scheduler (replaces the old
+/// `as_jiagu_mut` concrete-type downcast).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SchedulerFeedback {
+    /// §6 online-accuracy verdict: `isolated = true` moves `function`
+    /// under the conservative unpredictability fallback, `false` lifts it.
+    Unpredictability { function: FunctionId, isolated: bool },
+}
+
+/// An asynchronous capacity-table refresh in flight (§4.3): computed from
+/// a snapshot of the node's mix, billed off the critical path, and
+/// invisible until [`Scheduler::complete_deferred`] lands it.
+#[derive(Debug, Clone)]
+pub struct DeferredUpdate {
+    pub node: NodeId,
+    /// Wall-clock nanoseconds the off-critical-path computation took —
+    /// the engine turns this into the virtual completion delay.
+    pub nanos: u64,
+    /// Model inferences the computation spent.
+    pub inferences: u64,
+    /// Node-mix version the refresh was computed under (stale refreshes
+    /// that complete out of order are dropped).
+    pub version: u64,
+    /// The recomputed capacity entries.
+    pub entries: HashMap<FunctionId, CapacityEntry>,
+}
+
+/// Read-only cluster facts schedulers plan against — implemented by the
+/// live [`Cluster`] and by [`PlanBuilder`] (cluster + planned overlay), so
+/// the same policy code serves both planning and feasibility probes.
+pub trait ClusterView {
+    fn n_nodes(&self) -> usize;
+    /// (saturated+starting, cached) counts of `function` on `node`.
+    fn counts(&self, node: NodeId, function: FunctionId) -> (u32, u32);
+    /// Total instances on `node`, any state.
+    fn instances_on(&self, node: NodeId) -> usize;
+    /// The interference mix of `node` (entries sorted by function id).
+    fn mix(&self, node: NodeId) -> NodeMix;
+    /// Requested (milli-CPU, memory MB) totals on `node`.
+    fn requested(&self, node: NodeId) -> (u64, u64);
+    /// Whether any instance (any state, any node) of `f` exists.
+    fn deployed_anywhere(&self, f: FunctionId) -> bool;
+}
+
+impl ClusterView for Cluster {
+    fn n_nodes(&self) -> usize {
+        Cluster::n_nodes(self)
+    }
+
+    fn counts(&self, node: NodeId, function: FunctionId) -> (u32, u32) {
+        Cluster::counts(self, node, function)
+    }
+
+    fn instances_on(&self, node: NodeId) -> usize {
+        self.nodes[node].instances.len()
+    }
+
+    fn mix(&self, node: NodeId) -> NodeMix {
+        Cluster::mix(self, node)
+    }
+
+    fn requested(&self, node: NodeId) -> (u64, u64) {
+        let n = &self.nodes[node];
+        (n.requested_milli_cpu, n.requested_mem_mb)
+    }
+
+    fn deployed_anywhere(&self, f: FunctionId) -> bool {
+        Cluster::deployed_anywhere(self, f)
+    }
+}
+
+/// The scheduler's working state during one `schedule` call: an immutable
+/// [`Cluster`] plus the placements and node additions planned so far.
+/// Recording a placement updates the overlay, so later decisions in the
+/// same plan observe earlier ones exactly as committed state would.
+pub struct PlanBuilder<'a> {
+    cat: &'a Catalog,
+    cluster: &'a Cluster,
+    actions: Vec<Action>,
+    /// Per-node planned saturated additions (keyed sparsely; covers
+    /// planned virtual nodes too).
+    planned: HashMap<NodeId, HashMap<FunctionId, u32>>,
+    extra_nodes: usize,
+}
+
+impl<'a> PlanBuilder<'a> {
+    pub fn new(cat: &'a Catalog, cluster: &'a Cluster) -> Self {
+        Self {
+            cat,
+            cluster,
+            actions: Vec::new(),
+            planned: HashMap::new(),
+            extra_nodes: 0,
+        }
+    }
+
+    /// Nodes that exist in the underlying cluster (ids below this are
+    /// real; ids at or above are planned by this builder).
+    pub fn base_nodes(&self) -> usize {
+        self.cluster.n_nodes()
+    }
+
+    /// Plan one node addition; returns the id the node will get.
+    pub fn add_node(&mut self) -> NodeId {
+        self.actions.push(Action::AddNode);
+        let id = self.cluster.n_nodes() + self.extra_nodes;
+        self.extra_nodes += 1;
+        id
+    }
+
+    /// Plan one placement of `function` on `node`.
+    pub fn place(&mut self, function: FunctionId, node: NodeId) {
+        self.actions.push(Action::Place { function, node });
+        *self
+            .planned
+            .entry(node)
+            .or_default()
+            .entry(function)
+            .or_insert(0) += 1;
+    }
+
+    /// Placements planned so far.
+    pub fn placed(&self) -> u32 {
+        self.planned
+            .values()
+            .map(|m| m.values().sum::<u32>())
+            .sum()
+    }
+
+    /// Seal the plan with its critical-path accounting.
+    pub fn finish(
+        self,
+        slow_path_used: bool,
+        critical_inferences: u64,
+        decision_nanos: u64,
+    ) -> Plan {
+        Plan {
+            actions: self.actions,
+            slow_path_used,
+            decision_nanos,
+            critical_inferences,
+            base_nodes: self.cluster.n_nodes(),
+        }
+    }
+}
+
+impl ClusterView for PlanBuilder<'_> {
+    fn n_nodes(&self) -> usize {
+        self.cluster.n_nodes() + self.extra_nodes
+    }
+
+    fn counts(&self, node: NodeId, function: FunctionId) -> (u32, u32) {
+        let (sat, cached) = if node < self.cluster.n_nodes() {
+            self.cluster.counts(node, function)
+        } else {
+            (0, 0)
+        };
+        let extra = self
+            .planned
+            .get(&node)
+            .and_then(|m| m.get(&function))
+            .copied()
+            .unwrap_or(0);
+        (sat + extra, cached)
+    }
+
+    fn instances_on(&self, node: NodeId) -> usize {
+        let base = if node < self.cluster.n_nodes() {
+            self.cluster.nodes[node].instances.len()
+        } else {
+            0
+        };
+        let extra: u32 = self
+            .planned
+            .get(&node)
+            .map(|m| m.values().sum())
+            .unwrap_or(0);
+        base + extra as usize
+    }
+
+    fn mix(&self, node: NodeId) -> NodeMix {
+        let mut entries = if node < self.cluster.n_nodes() {
+            self.cluster.mix(node).entries
+        } else {
+            Vec::new()
+        };
+        if let Some(extra) = self.planned.get(&node) {
+            for (f, add) in extra {
+                match entries.iter_mut().find(|(g, _, _)| g == f) {
+                    Some(e) => e.1 += *add,
+                    None => entries.push((*f, *add, 0)),
+                }
+            }
+            entries.sort_unstable_by_key(|(f, _, _)| *f);
+        }
+        NodeMix::new(entries)
+    }
+
+    fn requested(&self, node: NodeId) -> (u64, u64) {
+        let (mut cpu, mut mem) = if node < self.cluster.n_nodes() {
+            let n = &self.cluster.nodes[node];
+            (n.requested_milli_cpu, n.requested_mem_mb)
+        } else {
+            (0, 0)
+        };
+        if let Some(extra) = self.planned.get(&node) {
+            for (f, add) in extra {
+                let spec = self.cat.get(*f);
+                cpu += *add as u64 * spec.milli_cpu;
+                mem += *add as u64 * spec.mem_mb;
+            }
+        }
+        (cpu, mem)
+    }
+
+    fn deployed_anywhere(&self, f: FunctionId) -> bool {
+        self.cluster.deployed_anywhere(f)
+            || self
+                .planned
+                .values()
+                .any(|m| m.get(&f).copied().unwrap_or(0) > 0)
+    }
+}
+
+/// A scheduler plans new instance placements against a read-only cluster
+/// view and keeps whatever internal state it needs in sync with committed
+/// cluster events.
 pub trait Scheduler {
     fn name(&self) -> &'static str;
 
-    /// Downcast hook: the simulator toggles the §6 unpredictability
-    /// fallback, which only the Jiagu scheduler implements.
-    fn as_jiagu_mut(&mut self) -> Option<&mut JiaguScheduler> {
-        None
-    }
-
-    /// Place `count` new instances of `function`.  Implementations may
-    /// grow the cluster if nothing fits.  Instances are created in the
-    /// `Starting` state; the caller drives init completion.
+    /// Plan the placement of `count` new instances of `function`.
+    /// Implementations may plan cluster growth if nothing fits.  The
+    /// cluster is untouched; the caller commits (or drops) the plan.
     fn schedule(
         &mut self,
         cat: &Catalog,
-        cluster: &mut Cluster,
+        cluster: &Cluster,
         function: FunctionId,
         count: u32,
         now_ms: f64,
-    ) -> Result<ScheduleResult>;
+    ) -> Result<Plan>;
 
-    /// Notify that a node's mix changed outside scheduling (eviction,
-    /// release, reactivate, migration) so internal state can refresh.
-    /// Returns nanoseconds of off-critical-path work performed.
+    /// Apply typed control-plane feedback (§6 unpredictability verdicts).
+    /// Schedulers without the corresponding mechanism ignore it.
+    fn apply_feedback(&mut self, _feedback: SchedulerFeedback) {}
+
+    /// Notify that `node`'s committed mix changed (placement, eviction,
+    /// release, reactivate, migration).  Stateful schedulers compute their
+    /// asynchronous refresh *now* (off the critical path, from the current
+    /// mix) and return it as [`DeferredUpdate`] for the engine to land at
+    /// its virtual completion time; stateless schedulers return `None`.
     fn on_node_changed(
         &mut self,
         cat: &Catalog,
         cluster: &Cluster,
         node: NodeId,
         now_ms: f64,
-    ) -> Result<u64>;
+    ) -> Result<Option<DeferredUpdate>>;
+
+    /// Land a refresh previously returned by
+    /// [`Scheduler::on_node_changed`] — only now do its entries become
+    /// visible to the fast path.
+    fn complete_deferred(&mut self, _update: DeferredUpdate) {}
 
     /// Pick a node able to host one more saturated instance of `function`
-    /// (used by the autoscaler's on-demand migration).  Must not place.
+    /// (used by the autoscaler's on-demand migration).  Must not plan or
+    /// place.
     fn find_feasible_node(
         &mut self,
         cat: &Catalog,
@@ -150,20 +501,101 @@ pub trait Scheduler {
 
 /// Shared helper: order candidate nodes for a function — nodes already
 /// hosting it first (likely fast path + locality, §6 node filter), then by
-/// total instances descending (pack tighter), empty nodes last.
-pub(crate) fn candidate_order(
-    cluster: &Cluster,
+/// total instances descending (pack tighter), empty nodes last.  Works
+/// over any [`ClusterView`], so planning overlays rank identically to the
+/// committed cluster.
+pub(crate) fn candidate_order<C: ClusterView + ?Sized>(
+    view: &C,
     function: FunctionId,
 ) -> Vec<NodeId> {
-    let mut nodes: Vec<NodeId> = (0..cluster.n_nodes()).collect();
+    let mut nodes: Vec<NodeId> = (0..view.n_nodes()).collect();
     nodes.sort_by_key(|n| {
-        let (sat, cached) = cluster.counts(*n, function);
+        let (sat, cached) = view.counts(*n, function);
         let hosts = sat + cached > 0;
-        let total = cluster.nodes[*n].instances.len();
+        let total = view.instances_on(*n);
         // hosting nodes first (0), then non-empty (1), then empty (2);
         // within a class, fuller nodes first
         let class = if hosts { 0 } else if total > 0 { 1 } else { 2 };
         (class, usize::MAX - total)
     });
     nodes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::tests::test_catalog;
+
+    #[test]
+    fn plan_builder_overlays_placements_and_nodes() {
+        let cat = test_catalog();
+        let cluster = Cluster::new(1);
+        let mut pb = PlanBuilder::new(&cat, &cluster);
+        assert_eq!(pb.n_nodes(), 1);
+        pb.place(0, 0);
+        pb.place(0, 0);
+        let v = pb.add_node();
+        assert_eq!(v, 1);
+        pb.place(1, v);
+        assert_eq!(pb.n_nodes(), 2);
+        assert_eq!(pb.counts(0, 0), (2, 0));
+        assert_eq!(pb.counts(v, 1), (1, 0));
+        assert_eq!(pb.instances_on(0), 2);
+        assert_eq!(pb.mix(0).entries, vec![(0, 2, 0)]);
+        assert_eq!(pb.mix(v).entries, vec![(1, 1, 0)]);
+        assert!(pb.deployed_anywhere(1));
+        let spec = cat.get(0);
+        assert_eq!(pb.requested(0), (2 * spec.milli_cpu, 2 * spec.mem_mb));
+        assert_eq!(pb.placed(), 3);
+        // the underlying cluster never moved
+        assert_eq!(cluster.instances_len(), 0);
+    }
+
+    #[test]
+    fn commit_replays_actions_and_maps_virtual_nodes() {
+        let cat = test_catalog();
+        let mut cluster = Cluster::new(1);
+        let mut pb = PlanBuilder::new(&cat, &cluster);
+        pb.place(0, 0);
+        let v = pb.add_node();
+        pb.place(2, v);
+        let plan = pb.finish(false, 0, 0);
+        assert_eq!(plan.placements_planned(), 2);
+        assert_eq!(plan.nodes_added(), 1);
+        let committed = plan.commit(&cat, &mut cluster, 5.0);
+        assert_eq!(cluster.n_nodes(), 2);
+        assert_eq!(committed.placements.len(), 2);
+        assert_eq!(committed.placements[0].node, 0);
+        assert_eq!(committed.placements[1].node, 1);
+        assert_eq!(cluster.counts(1, 2), (1, 0));
+        assert_eq!(committed.touched_nodes(), vec![0, 1]);
+        cluster.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "plan computed against")]
+    fn stale_plan_refuses_commit_after_cluster_growth() {
+        let cat = test_catalog();
+        let mut cluster = Cluster::new(1);
+        let mut pb = PlanBuilder::new(&cat, &cluster);
+        let v = pb.add_node();
+        pb.place(0, v);
+        let plan = pb.finish(false, 0, 0);
+        cluster.add_node(); // cluster changed since planning
+        let _ = plan.commit(&cat, &mut cluster, 0.0);
+    }
+
+    #[test]
+    fn dropped_plan_is_a_free_dry_run() {
+        let cat = test_catalog();
+        let cluster = Cluster::new(2);
+        let mut pb = PlanBuilder::new(&cat, &cluster);
+        for _ in 0..5 {
+            pb.place(0, 0);
+        }
+        let plan = pb.finish(false, 0, 0);
+        drop(plan);
+        assert_eq!(cluster.instances_len(), 0);
+        assert_eq!(cluster.n_nodes(), 2);
+    }
 }

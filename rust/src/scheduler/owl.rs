@@ -4,7 +4,8 @@
 //! dedicated servers and records the co-location limits it observed; at
 //! schedule time it only consults that history (fast), and it never
 //! colocates more than **two distinct functions** per node — the
-//! limitation the paper calls out in Fig. 13.
+//! limitation the paper calls out in Fig. 13.  Admission runs over
+//! [`ClusterView`], so a planned batch respects its own placements.
 //!
 //! Port notes: real Owl measures pairs on real hardware.  Our substrate's
 //! "profiling run" queries the ground-truth interference model with
@@ -12,7 +13,7 @@
 //! would produce — and is memoized into the pair table.  Profiling cost
 //! is counted (`profiling_samples`) for Table 1's O(n²k) scaling.
 
-use super::{Placement, ScheduleResult, Scheduler};
+use super::{candidate_order, ClusterView, DeferredUpdate, Plan, PlanBuilder, Scheduler};
 use crate::catalog::{Catalog, FunctionId};
 use crate::cluster::{Cluster, NodeId};
 use crate::interference::{self, NodeMix};
@@ -104,21 +105,21 @@ impl OwlScheduler {
     /// Historical feasibility of adding one `function` instance to a node.
     /// None = colocation combination outside Owl's history model
     /// (>2 distinct functions).
-    fn admits(
+    fn admits<C: ClusterView>(
         &mut self,
         cat: &Catalog,
-        cluster: &Cluster,
+        view: &C,
         node: NodeId,
         f: FunctionId,
     ) -> Option<bool> {
-        let mix = cluster.mix(node);
+        let mix = view.mix(node);
         let mut others: Vec<(FunctionId, u32)> = mix
             .entries
             .iter()
             .filter(|(g, s, c)| *g != f && s + c > 0)
             .map(|(g, s, c)| (*g, s + c))
             .collect();
-        let (sat, cached) = cluster.counts(node, f);
+        let (sat, cached) = view.counts(node, f);
         let mine = sat + cached;
         match others.len() {
             0 => {
@@ -145,30 +146,25 @@ impl Scheduler for OwlScheduler {
     fn schedule(
         &mut self,
         cat: &Catalog,
-        cluster: &mut Cluster,
+        cluster: &Cluster,
         function: FunctionId,
         count: u32,
-        now_ms: f64,
-    ) -> Result<ScheduleResult> {
-        let mut res = ScheduleResult::default();
+        _now_ms: f64,
+    ) -> Result<Plan> {
         let t0 = Instant::now();
+        let mut pb = PlanBuilder::new(cat, cluster);
         for _ in 0..count {
             let mut chosen = None;
-            for node in super::candidate_order(cluster, function) {
-                if self.admits(cat, cluster, node, function) == Some(true) {
+            for node in candidate_order(&pb, function) {
+                if self.admits(cat, &pb, node, function) == Some(true) {
                     chosen = Some(node);
                     break;
                 }
             }
-            let node = chosen.unwrap_or_else(|| {
-                res.nodes_added += 1;
-                cluster.add_node()
-            });
-            let id = cluster.place(cat, function, node, now_ms);
-            res.placements.push(Placement { instance: id, node });
+            let node = chosen.unwrap_or_else(|| pb.add_node());
+            pb.place(function, node);
         }
-        res.decision_nanos = t0.elapsed().as_nanos() as u64;
-        Ok(res)
+        Ok(pb.finish(false, 0, t0.elapsed().as_nanos() as u64))
     }
 
     fn on_node_changed(
@@ -177,8 +173,8 @@ impl Scheduler for OwlScheduler {
         _cluster: &Cluster,
         _node: NodeId,
         _now_ms: f64,
-    ) -> Result<u64> {
-        Ok(0)
+    ) -> Result<Option<DeferredUpdate>> {
+        Ok(None)
     }
 
     fn find_feasible_node(
@@ -188,7 +184,7 @@ impl Scheduler for OwlScheduler {
         function: FunctionId,
         exclude: NodeId,
     ) -> Result<Option<NodeId>> {
-        for node in super::candidate_order(cluster, function) {
+        for node in candidate_order(cluster, function) {
             if node != exclude && self.admits(cat, cluster, node, function) == Some(true) {
                 return Ok(Some(node));
             }
@@ -202,14 +198,26 @@ mod tests {
     use super::*;
     use crate::catalog::tests::test_catalog;
 
+    fn schedule_commit(
+        s: &mut OwlScheduler,
+        cat: &Catalog,
+        cluster: &mut Cluster,
+        f: FunctionId,
+        count: u32,
+        now_ms: f64,
+    ) -> super::super::CommittedPlan {
+        let plan = s.schedule(cat, cluster, f, count, now_ms).unwrap();
+        plan.commit(cat, cluster, now_ms)
+    }
+
     #[test]
     fn never_colocates_three_functions() {
         let cat = test_catalog();
         let mut cluster = Cluster::new(1);
         let mut s = OwlScheduler::new(7);
-        s.schedule(&cat, &mut cluster, 0, 2, 0.0).unwrap();
-        s.schedule(&cat, &mut cluster, 1, 2, 0.0).unwrap();
-        s.schedule(&cat, &mut cluster, 2, 2, 0.0).unwrap();
+        schedule_commit(&mut s, &cat, &mut cluster, 0, 2, 0.0);
+        schedule_commit(&mut s, &cat, &mut cluster, 1, 2, 0.0);
+        schedule_commit(&mut s, &cat, &mut cluster, 2, 2, 0.0);
         for n in 0..cluster.n_nodes() {
             let distinct = cluster.mix(n).entries.len();
             assert!(distinct <= 2, "node {n} has {distinct} functions");
@@ -221,10 +229,10 @@ mod tests {
         let cat = test_catalog();
         let mut cluster = Cluster::new(1);
         let mut s = OwlScheduler::new(7);
-        s.schedule(&cat, &mut cluster, 0, 3, 0.0).unwrap();
+        schedule_commit(&mut s, &cat, &mut cluster, 0, 3, 0.0);
         let after_first = s.profiling_samples;
         assert!(after_first > 0);
-        s.schedule(&cat, &mut cluster, 0, 3, 1.0).unwrap();
+        schedule_commit(&mut s, &cat, &mut cluster, 0, 3, 1.0);
         assert_eq!(s.profiling_samples, after_first, "solo profile reused");
     }
 
@@ -234,8 +242,8 @@ mod tests {
         let mut cluster = Cluster::new(1);
         let mut s = OwlScheduler::new(7);
         // schedule far more than one node's capacity; Owl must spill
-        let r = s.schedule(&cat, &mut cluster, 0, 40, 0.0).unwrap();
-        assert_eq!(r.placements.len(), 40);
+        let committed = schedule_commit(&mut s, &cat, &mut cluster, 0, 40, 0.0);
+        assert_eq!(committed.placements.len(), 40);
         assert!(cluster.n_nodes() >= 2);
         let cap = s.solo_cap[&0];
         for n in 0..cluster.n_nodes() {

@@ -1,14 +1,11 @@
 //! Discrete-event cluster simulation — the testbed substitute.
 //!
-//! Virtual time advances in 1-second ticks driven by a trace.  Each tick:
-//!
-//! 1. due cold starts complete (instances flip Starting → Saturated and
-//!    join the routing set),
-//! 2. the autoscaler evaluates every function (dual-staged scaling),
-//! 3. QoS is measured: for every (node, function) with saturated
-//!    instances, the ground-truth interference model yields the window's
-//!    P90 latency (plus measurement noise), judged against the QoS bound,
-//! 4. density/cost metrics accumulate.
+//! Virtual time advances in 1-second ticks driven by a trace.  Each tick
+//! is one [`ControlPlane::step`]: deferred capacity refreshes land, due
+//! cold starts complete, the autoscaler plans + commits scale decisions
+//! (dual-staged scaling), QoS is measured per (node, function) window
+//! against the ground-truth interference model, and the emitted
+//! [`TickEvents`] are folded here into the [`RunReport`].
 //!
 //! **Scheduling cost is real, not modelled**: scheduler decisions execute
 //! the actual capacity-table / PJRT-inference code and their measured
@@ -17,20 +14,12 @@
 //! *init* latency (cfork 8.4 ms / docker 85.5 ms) is a constant from the
 //! literature.
 
-use crate::autoscaler::Autoscaler;
 use crate::catalog::Catalog;
-use crate::cluster::{Cluster, InstanceId};
-use crate::config::{RunConfig, SchedulerKind};
-use crate::interference;
+use crate::config::RunConfig;
+use crate::controlplane::{ControlPlane, TickEvents};
 use crate::metrics::{CostTracker, DensityTracker, QosTracker};
-use crate::model::AccuracyMonitor;
-use crate::router::Router;
 use crate::runtime::Predictor;
-use crate::scheduler::{
-    GsightScheduler, JiaguScheduler, KubernetesScheduler, OwlScheduler, Scheduler,
-};
 use crate::traces::TraceSet;
-use crate::util::rng::Rng;
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -77,7 +66,8 @@ impl RunReport {
     }
 }
 
-/// The simulation driver.
+/// The simulation driver: a thin loop over [`ControlPlane::step`] that
+/// folds each tick's [`TickEvents`] into the aggregate report.
 pub struct Simulation {
     pub cat: Catalog,
     pub cfg: RunConfig,
@@ -89,136 +79,51 @@ impl Simulation {
         Self { cat, cfg, predictor }
     }
 
-    fn make_scheduler(&self) -> Box<dyn Scheduler> {
-        match self.cfg.scheduler {
-            SchedulerKind::Jiagu => Box::new(JiaguScheduler::new(
-                self.predictor.clone(),
-                self.cfg.capacity.clone(),
-                self.cfg.n_nodes,
-            )),
-            SchedulerKind::Kubernetes => Box::new(KubernetesScheduler::new()),
-            SchedulerKind::Gsight => Box::new(GsightScheduler::new(self.predictor.clone())),
-            SchedulerKind::Owl => Box::new(OwlScheduler::new(self.cfg.seed ^ 0x071)),
-        }
-    }
-
     /// Run the full trace; returns the aggregated report.
     pub fn run(&self, trace: &TraceSet) -> Result<RunReport> {
-        let mut cluster = Cluster::new(self.cfg.n_nodes);
-        let mut router = Router::new();
-        let mut sched = self.make_scheduler();
-        let mut autoscaler = Autoscaler::new(self.cfg.autoscaler.clone(), self.cat.len());
-        let mut rng = Rng::seed_from(self.cfg.seed);
+        let mut cp =
+            ControlPlane::new(self.cat.clone(), self.cfg.clone(), self.predictor.clone());
 
         let mut density = DensityTracker::default();
         let mut qos = QosTracker::new(self.cat.len());
         let mut costs = CostTracker::default();
-        let mut pending: Vec<(f64, InstanceId)> = Vec::new(); // (ready_ms, id)
-        // §6 online accuracy monitoring: every `monitor_every` ticks the
-        // deployed model's prediction for each active (node, function) is
-        // compared against the measured window latency; functions whose
-        // error will not converge fall back to isolated scheduling.
-        let mut monitor = AccuracyMonitor::new(self.cat.len());
-        let monitor_every = 30usize;
         let mut logical_cold_starts = 0u64;
         let mut real_after_release = 0u64;
         let mut migrations = 0u64;
         let mut released = 0u64;
         let mut evicted = 0u64;
         let mut async_nanos = 0u64;
+        let mut async_inferences = 0u64;
         let mut peak_nodes = self.cfg.n_nodes;
         let init_ms = self.cfg.init_model.latency_ms();
 
         let duration = trace.duration_s().min(self.cfg.duration_s);
         for t in 0..duration {
             let now_ms = t as f64 * 1000.0;
-
-            // 1. complete due cold starts
-            pending.retain(|(ready_ms, id)| {
-                if *ready_ms <= now_ms {
-                    if let Some(inst) = cluster.instance(*id) {
-                        let f = inst.function;
-                        cluster.mark_ready(*id, now_ms);
-                        router.add(f, *id);
-                    }
-                    false
-                } else {
-                    true
-                }
-            });
-
-            // 2. autoscaler tick (may schedule -> real decisions timed)
             let loads = trace.loads_at(t);
-            let outcome = autoscaler.tick(
-                &self.cat,
-                &mut cluster,
-                &mut router,
-                sched.as_mut(),
-                &loads,
-                now_ms,
-            )?;
-            logical_cold_starts += outcome.logical_cold_starts as u64;
-            real_after_release += outcome.real_after_release as u64;
-            migrations += outcome.migrations as u64;
-            released += outcome.released as u64;
-            evicted += (outcome.evicted + outcome.evicted_direct) as u64;
-            for res in &outcome.schedule_results {
-                costs.record_schedule(res, init_ms);
-                async_nanos += res.async_nanos;
-                let ready_ms = now_ms + res.decision_nanos as f64 / 1e6 + init_ms;
-                for p in &res.placements {
-                    pending.push((ready_ms, p.instance));
-                }
+            let ev: TickEvents = cp.step(now_ms, &loads)?;
+            for committed in &ev.scheduled {
+                costs.record_schedule(committed, init_ms);
             }
-
-            // 3. QoS measurement per (node, function) window
-            let monitor_tick = t % monitor_every == monitor_every - 1;
-            for node in 0..cluster.n_nodes() {
-                let mix = cluster.mix(node);
-                if mix.is_empty() {
-                    continue;
-                }
-                for (f, sat, _) in &mix.entries {
-                    if *sat == 0 {
-                        continue;
-                    }
-                    let truth = interference::ground_truth_latency(&self.cat, &mix, *f);
-                    let measured =
-                        truth * (1.0 + rng.normal_ms(0.0, self.cfg.measurement_noise));
-                    // requests this window ≈ serving share of the live load
-                    let serving_total = router.serving_count(*f).max(1) as f64;
-                    let requests = loads[*f] * (*sat as f64 / serving_total).min(1.0);
-                    if requests > 0.0 {
-                        qos.record(&self.cat, *f, requests, measured);
-                    }
-                    if monitor_tick {
-                        let row = crate::model::feature_row(&self.cat, &mix, *f);
-                        if let Ok(pred) = self.predictor.predict(std::slice::from_ref(&row)) {
-                            monitor.record(*f, pred[0] as f64, measured);
-                        }
-                    }
-                }
+            for w in &ev.qos {
+                qos.record(&self.cat, w.function, w.requests, w.measured_ms);
             }
-            if monitor_tick {
-                if let Some(jiagu) = sched.as_jiagu_mut() {
-                    for f in 0..self.cat.len() {
-                        jiagu.set_isolated(f, monitor.is_unpredictable(f));
-                    }
-                }
-            }
-
-            // 4. density accounting
-            let active_nodes =
-                (0..cluster.n_nodes()).filter(|n| !cluster.node_empty(*n)).count();
-            density.record(cluster.instances_len(), active_nodes.max(1), 1.0);
-            peak_nodes = peak_nodes.max(cluster.n_nodes());
+            logical_cold_starts += ev.logical_cold_starts as u64;
+            real_after_release += ev.real_after_release as u64;
+            migrations += ev.migrations as u64;
+            released += ev.released as u64;
+            evicted += (ev.evicted + ev.evicted_direct) as u64;
+            async_nanos += ev.async_nanos;
+            async_inferences += ev.async_inferences;
+            density.record(ev.instances, ev.active_nodes.max(1), 1.0);
+            peak_nodes = peak_nodes.max(ev.n_nodes);
         }
 
         let per_function_violation =
             (0..self.cat.len()).map(|f| qos.rate(f)).collect();
-        let isolated_functions = monitor.unpredictable();
+        let isolated_functions = cp.monitor().unpredictable();
         Ok(RunReport {
-            scheduler: sched.name().to_string(),
+            scheduler: cp.scheduler_name().to_string(),
             trace: trace.name.clone(),
             duration_s: duration,
             density: density.density(),
@@ -230,7 +135,7 @@ impl Simulation {
             cold_start_ms_p99: costs.cold_start_ms.percentile(0.99),
             inferences_per_schedule: costs.inferences_per_schedule(),
             critical_inferences: costs.critical_inferences,
-            async_inferences: costs.async_inferences,
+            async_inferences,
             schedule_calls: costs.calls,
             instances_started: costs.instances_started,
             fast_decisions: costs.fast_decisions,

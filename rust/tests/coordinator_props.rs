@@ -75,14 +75,27 @@ fn random_schedule_evict_sequences_keep_invariants() {
                 if rng.f64() < 0.6 || live.is_empty() {
                     let f = rng.below(cat.len() as u64) as usize;
                     let count = rng.range_u64(1, 4) as u32;
-                    let res = sched.schedule(&cat, &mut cluster, f, count, now).unwrap();
+                    let instances_before = cluster.instances_len();
+                    let nodes_before = cluster.n_nodes();
+                    let plan = sched.schedule(&cat, &cluster, f, count, now).unwrap();
+                    // planning must be pure: nothing moves until commit
+                    assert_eq!(cluster.instances_len(), instances_before, "{}", sched.name());
+                    assert_eq!(cluster.n_nodes(), nodes_before, "{}", sched.name());
+                    let committed = plan.commit(&cat, &mut cluster, now);
                     assert_eq!(
-                        res.placements.len(),
+                        committed.placements.len(),
                         count as usize,
                         "{}: all requested instances placed",
                         sched.name()
                     );
-                    for p in &res.placements {
+                    for node in committed.touched_nodes() {
+                        if let Some(u) =
+                            sched.on_node_changed(&cat, &cluster, node, now).unwrap()
+                        {
+                            sched.complete_deferred(u);
+                        }
+                    }
+                    for p in &committed.placements {
                         cluster.mark_ready(p.instance, now);
                         live.push(p.instance);
                     }
@@ -91,7 +104,9 @@ fn random_schedule_evict_sequences_keep_invariants() {
                     let id = live.swap_remove(idx);
                     let node = cluster.instance(id).unwrap().node;
                     cluster.evict(&cat, id).unwrap();
-                    sched.on_node_changed(&cat, &cluster, node, now).unwrap();
+                    if let Some(u) = sched.on_node_changed(&cat, &cluster, node, now).unwrap() {
+                        sched.complete_deferred(u);
+                    }
                 }
                 cluster.check_invariants().unwrap_or_else(|e| {
                     panic!("{} seed {seed} step {step}: {e}", sched.name())
@@ -136,6 +151,11 @@ fn autoscaler_random_loads_keep_router_consistent() {
             let out = autoscaler
                 .tick(&cat, &mut cluster, &mut router, &mut sched, &loads, now)
                 .unwrap();
+            // land the submitted refreshes immediately (the engine's
+            // virtual-time queue is exercised by the controlplane tests)
+            for u in out.deferred {
+                sched.complete_deferred(u);
+            }
             // new instances become ready next tick
             for id in out.cold_started {
                 cluster.mark_ready(id, now);
@@ -188,6 +208,9 @@ fn dual_staged_vs_nods_state_machines() {
             let out = autoscaler
                 .tick(&cat, &mut cluster, &mut router, &mut sched, &loads, now)
                 .unwrap();
+            for u in out.deferred {
+                sched.complete_deferred(u);
+            }
             saw_logical |= out.logical_cold_starts > 0;
             for id in out.cold_started {
                 cluster.mark_ready(id, now);
@@ -220,9 +243,10 @@ fn owl_two_function_invariant_under_random_load() {
         let mut rng = Rng::seed_from(seed);
         for step in 0..80 {
             let f = rng.below(cat.len() as u64) as usize;
-            sched
-                .schedule(&cat, &mut cluster, f, rng.range_u64(1, 3) as u32, step as f64)
+            let plan = sched
+                .schedule(&cat, &cluster, f, rng.range_u64(1, 3) as u32, step as f64)
                 .unwrap();
+            let _ = plan.commit(&cat, &mut cluster, step as f64);
             for n in 0..cluster.n_nodes() {
                 assert!(cluster.mix(n).entries.len() <= 2);
             }

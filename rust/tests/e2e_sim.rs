@@ -112,6 +112,11 @@ fn dual_staged_produces_logical_cold_starts_on_fluctuating_load() {
 
 #[test]
 fn runs_are_deterministic_given_seed_modulo_timing() {
+    // Plan/commit + the virtual-time deferred queue make determinism
+    // provable: decision *timing* is wall-clock and varies, but every
+    // counter in the report must replay bit-identically (deferred
+    // refreshes land one whole tick after submission regardless of the
+    // measured nanos, see controlplane::MAX_ASYNC_COMPLETION_MS).
     let Some((cat, dir)) = setup() else { return };
     let predictor = load_predictor(&dir, true).unwrap();
     let trace = traces::paper_traces(&cat, 240).swap_remove(3);
@@ -121,19 +126,31 @@ fn runs_are_deterministic_given_seed_modulo_timing() {
         .run(&trace)
         .unwrap();
     let b = Simulation::new(cat, cfg, predictor).run(&trace).unwrap();
-    // decision *timing* is wall-clock and varies; decisions themselves
-    // must be identical
     assert_eq!(a.instances_started, b.instances_started);
+    assert_eq!(a.schedule_calls, b.schedule_calls);
     assert_eq!(a.fast_decisions, b.fast_decisions);
     assert_eq!(a.slow_decisions, b.slow_decisions);
-    assert!((a.density - b.density).abs() < 1e-9);
+    assert_eq!(a.critical_inferences, b.critical_inferences);
+    assert_eq!(a.async_inferences, b.async_inferences);
+    assert_eq!(a.logical_cold_starts, b.logical_cold_starts);
+    assert_eq!(a.real_after_release, b.real_after_release);
+    assert_eq!(a.migrations, b.migrations);
+    assert_eq!(a.released, b.released);
+    assert_eq!(a.evicted, b.evicted);
+    assert_eq!(a.peak_nodes, b.peak_nodes);
+    assert_eq!(a.isolated_functions, b.isolated_functions);
+    assert!((a.density - b.density).abs() < 1e-12);
     assert!((a.qos_violation_rate - b.qos_violation_rate).abs() < 1e-12);
+    for (x, y) in a.per_function_violation.iter().zip(&b.per_function_violation) {
+        assert!((x - y).abs() < 1e-12);
+    }
 }
 
 #[test]
 fn unpredictability_fallback_isolates_function() {
-    // Force the fallback by hand and verify the scheduler keeps the
-    // flagged function on dedicated nodes at the request-packing limit.
+    // Force the fallback through the typed feedback API and verify the
+    // scheduler keeps the flagged function on dedicated nodes at the
+    // request-packing limit.
     let Some((cat, dir)) = setup() else { return };
     let predictor = load_predictor(&dir, true).unwrap();
     let mut cluster = jiagu::cluster::Cluster::new(4);
@@ -142,16 +159,17 @@ fn unpredictability_fallback_isolates_function() {
         jiagu::capacity::CapacityConfig::default(),
         4,
     );
-    use jiagu::scheduler::Scheduler;
+    use jiagu::scheduler::{Scheduler, SchedulerFeedback};
     // colocate some normal functions first
-    sched.schedule(&cat, &mut cluster, 1, 3, 0.0).unwrap();
-    sched.schedule(&cat, &mut cluster, 2, 3, 0.0).unwrap();
-    // flag function 0 as unpredictable
-    sched.set_isolated(0, true);
+    let _ = sched.schedule(&cat, &cluster, 1, 3, 0.0).unwrap().commit(&cat, &mut cluster, 0.0);
+    let _ = sched.schedule(&cat, &cluster, 2, 3, 0.0).unwrap().commit(&cat, &mut cluster, 0.0);
+    // flag function 0 as unpredictable via control-plane feedback
+    sched.apply_feedback(SchedulerFeedback::Unpredictability { function: 0, isolated: true });
     assert!(sched.is_isolated(0));
-    let r = sched.schedule(&cat, &mut cluster, 0, 20, 1.0).unwrap();
-    assert_eq!(r.placements.len(), 20);
-    assert_eq!(r.critical_inferences, 0, "fallback must not use the model");
+    let plan = sched.schedule(&cat, &cluster, 0, 20, 1.0).unwrap();
+    assert_eq!(plan.critical_inferences, 0, "fallback must not use the model");
+    let committed = plan.commit(&cat, &mut cluster, 1.0);
+    assert_eq!(committed.placements.len(), 20);
     let limit = cat.request_packing_limit(0);
     for n in 0..cluster.n_nodes() {
         let (sat, cached) = cluster.counts(n, 0);
@@ -165,6 +183,6 @@ fn unpredictability_fallback_isolates_function() {
         assert!(sat + cached <= limit, "node {n} over request limit");
     }
     // unflag: scheduling goes back through capacity tables
-    sched.set_isolated(0, false);
+    sched.apply_feedback(SchedulerFeedback::Unpredictability { function: 0, isolated: false });
     assert!(!sched.is_isolated(0));
 }
