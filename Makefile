@@ -33,9 +33,11 @@ bench: $(ARTIFACTS_DIR)/meta.json
 	$(CARGO) bench
 
 # One sim-driven bench at a short horizon — the CI guard that keeps the
-# fig11-fig17 harness from rotting.
+# fig11-fig17 harness from rotting — plus the event-queue microbench
+# guarding the engine's hot path.
 bench-smoke: $(ARTIFACTS_DIR)/meta.json
 	JIAGU_BENCH_DURATION=60 JIAGU_NATIVE=1 $(CARGO) bench --bench fig13_density
+	$(CARGO) bench --bench event_queue
 
 fmt-check:
 	$(CARGO) fmt --all -- --check

@@ -3,11 +3,13 @@
 //! AOT predictor over PJRT → simulated cluster — on a real-world-like
 //! trace, reporting the paper's headline metrics.
 //!
-//! The second half drives [`jiagu::controlplane::ControlPlane`] step by
-//! step in a *closed loop*: each tick's offered load reacts to the
-//! previous tick's measured QoS (an adversarial burst chases the worst
-//! window).  A trace fixed up-front — all `Simulation::run` can consume —
-//! cannot express that feedback coupling.
+//! The second scenario drives [`jiagu::controlplane::ControlPlane`] step
+//! by step in a *closed loop*: each second's offered load reacts to the
+//! previous drain's measured QoS (an adversarial burst chases the worst
+//! window) — a feedback coupling no fixed trace can express.  The third
+//! runs a *sub-second* Poisson-arrival workload end-to-end through the
+//! event engine: load re-drawn every 100 ms, cold starts completing at
+//! their exact `sched_cost + init_ms` due times.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_trace -- [--duration 1800] [--trace A]
@@ -129,6 +131,46 @@ fn main() -> Result<()> {
         "  cluster after feedback storm:  {} instances on {} nodes",
         cp.cluster().instances_len(),
         cp.cluster().n_nodes()
+    );
+
+    // -- sub-second burst scenario: Poisson arrivals at 100 ms bins ------
+    //
+    // Load is re-drawn every 100 ms from a Poisson arrival process — ten
+    // load changes per old tick, a shape the 1 s loop could not express.
+    // Cold starts complete at their exact sched_cost + init_ms due times,
+    // so the reported latency percentiles are event-resolution, not
+    // rounded up to tick boundaries.
+    let sub_s = duration.min(180);
+    println!("\n== sub-second scenario: Poisson arrivals, 100 ms bins ({sub_s} s) ==");
+    let params = traces::PoissonParams {
+        duration_s: sub_s,
+        bin_ms: 100.0,
+        mean_concurrency: 6.0,
+    };
+    let workload = traces::Workload::poisson(&cat, &params, 4242);
+    let mut cfg = RunConfig::jiagu_45();
+    cfg.duration_s = sub_s;
+    let r = Simulation::new(cat.clone(), cfg, predictor.clone()).run_workload(&workload)?;
+    println!("  load changes injected:    {}", workload.events.len());
+    println!(
+        "  cold start (event-resolution): mean {:.3} ms / p99 {:.3} ms over {} instances",
+        r.cold_start_ms_mean, r.cold_start_ms_p99, r.instances_started
+    );
+    println!(
+        "  fast path under churn:    {:.1}% ({} fast / {} slow)",
+        100.0 * r.fast_decisions as f64 / (r.fast_decisions + r.slow_decisions).max(1) as f64,
+        r.fast_decisions,
+        r.slow_decisions
+    );
+    println!(
+        "  QoS violation rate:       {:.2}% | density {:.2} inst/node | {} nodes peak",
+        r.qos_violation_rate * 100.0,
+        r.density,
+        r.peak_nodes
+    );
+    println!(
+        "  dual-staged under bursts: {} released, {} logical cold starts, {} migrations",
+        r.released, r.logical_cold_starts, r.migrations
     );
     Ok(())
 }

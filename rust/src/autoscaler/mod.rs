@@ -205,7 +205,7 @@ impl Autoscaler {
         // serving = saturated in router + instances still starting (they
         // will serve once ready; double-starting would overshoot)
         let serving = router.serving_count(f) as u32;
-        let starting = self.count_starting(cluster, f);
+        let starting = cluster.starting_count(f);
         let current = serving + starting;
 
         if expected > current {
@@ -213,7 +213,7 @@ impl Autoscaler {
             let mut need = expected - current;
             // stage-1 reversal: logical cold starts from cached instances
             if self.cfg.dual_staged {
-                let cached = self.cached_instances(cluster, f);
+                let cached = cluster.cached_of(f).to_vec();
                 let had_cached = !cached.is_empty();
                 for id in cached {
                     if need == 0 {
@@ -339,21 +339,9 @@ impl Autoscaler {
 
     // -- helpers -------------------------------------------------------------
 
-    fn count_starting(&self, cluster: &Cluster, f: FunctionId) -> u32 {
-        (0..cluster.n_nodes())
-            .map(|n| cluster.find_instances(n, f, InstanceState::Starting).len() as u32)
-            .sum()
-    }
-
-    fn cached_instances(&self, cluster: &Cluster, f: FunctionId) -> Vec<InstanceId> {
-        let mut ids = Vec::new();
-        for n in 0..cluster.n_nodes() {
-            ids.extend(cluster.find_instances(n, f, InstanceState::Cached));
-        }
-        ids
-    }
-
-    /// Newest `k` serving instances of `f` (LIFO release policy).
+    /// Newest `k` serving instances of `f` (LIFO release policy).  The
+    /// sort key is a total order (`f64::total_cmp`), so a NaN-poisoned
+    /// `created_ms` can no longer panic the comparator.
     fn newest_serving(
         &self,
         cluster: &Cluster,
@@ -365,7 +353,7 @@ impl Autoscaler {
         serving.sort_by(|a, b| {
             let ca = cluster.instance(*a).map(|i| i.created_ms).unwrap_or(0.0);
             let cb = cluster.instance(*b).map(|i| i.created_ms).unwrap_or(0.0);
-            cb.partial_cmp(&ca).unwrap()
+            cb.total_cmp(&ca)
         });
         serving.truncate(k as usize);
         serving

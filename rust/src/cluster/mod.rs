@@ -67,6 +67,13 @@ pub struct Cluster {
     mixes: Vec<HashMap<FunctionId, (u32, u32)>>,
     /// Cluster-wide instance counts per function (any state).
     global_counts: HashMap<FunctionId, u32>,
+    /// Cluster-wide Starting counts per function, kept on state
+    /// transitions — the autoscaler's per-eval lookup is O(1) instead of
+    /// an O(nodes × instances) scan.
+    starting: HashMap<FunctionId, u32>,
+    /// Cluster-wide Cached instance ids per function in release order
+    /// (the logical-cold-start conversion order), same motivation.
+    cached: HashMap<FunctionId, Vec<InstanceId>>,
 }
 
 impl Cluster {
@@ -77,6 +84,8 @@ impl Cluster {
             next_instance: 0,
             mixes: vec![HashMap::new(); n_nodes],
             global_counts: HashMap::new(),
+            starting: HashMap::new(),
+            cached: HashMap::new(),
         }
     }
 
@@ -132,8 +141,20 @@ impl Cluster {
         let e = self.mixes[node].entry(function).or_insert((0, 0));
         e.0 += 1; // Starting reserved as saturated
         *self.global_counts.entry(function).or_insert(0) += 1;
+        *self.starting.entry(function).or_insert(0) += 1;
         self.instances.insert(id, inst);
         id
+    }
+
+    /// Cluster-wide count of `f` instances still cold-starting — O(1).
+    pub fn starting_count(&self, f: FunctionId) -> u32 {
+        self.starting.get(&f).copied().unwrap_or(0)
+    }
+
+    /// Cluster-wide Cached instances of `f` in release order — O(1)
+    /// lookup (the slice the dual-staged reversal converts from).
+    pub fn cached_of(&self, f: FunctionId) -> &[InstanceId] {
+        self.cached.get(&f).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     /// Whether any instance (any state, any node) of `f` exists.
@@ -152,6 +173,8 @@ impl Cluster {
             debug_assert_eq!(inst.state, InstanceState::Starting);
             inst.state = InstanceState::Saturated;
             inst.state_since_ms = now_ms;
+            let function = inst.function;
+            self.dec_starting(function);
         }
     }
 
@@ -164,6 +187,8 @@ impl Cluster {
         let e = self.mixes[inst.node].get_mut(&inst.function).unwrap();
         e.0 -= 1;
         e.1 += 1;
+        let function = inst.function;
+        self.cached.entry(function).or_default().push(id);
     }
 
     /// Logical cold start: Cached → Saturated (re-route, <1 ms).
@@ -175,6 +200,24 @@ impl Cluster {
         let e = self.mixes[inst.node].get_mut(&inst.function).unwrap();
         e.0 += 1;
         e.1 -= 1;
+        let function = inst.function;
+        self.remove_cached(function, id);
+    }
+
+    fn dec_starting(&mut self, function: FunctionId) {
+        let s = self.starting.get_mut(&function).expect("starting count underflow");
+        *s -= 1;
+        if *s == 0 {
+            self.starting.remove(&function);
+        }
+    }
+
+    fn remove_cached(&mut self, function: FunctionId, id: InstanceId) {
+        let v = self.cached.get_mut(&function).expect("cached index missing function");
+        v.retain(|x| *x != id);
+        if v.is_empty() {
+            self.cached.remove(&function);
+        }
     }
 
     /// Remove an instance entirely (real eviction or failed start).
@@ -197,6 +240,11 @@ impl Cluster {
         *g -= 1;
         if *g == 0 {
             self.global_counts.remove(&inst.function);
+        }
+        match inst.state {
+            InstanceState::Starting => self.dec_starting(inst.function),
+            InstanceState::Cached => self.remove_cached(inst.function, id),
+            InstanceState::Saturated => {}
         }
         Some(inst)
     }
@@ -270,7 +318,8 @@ impl Cluster {
         self.nodes[node].instances.is_empty()
     }
 
-    /// Debug invariant check: mixes match the instance table (tests).
+    /// Debug invariant check: mixes and the per-function state index
+    /// match the instance table (tests).
     pub fn check_invariants(&self) -> anyhow::Result<()> {
         for (n, _) in self.nodes.iter().enumerate() {
             let mut counted: HashMap<FunctionId, (u32, u32)> = HashMap::new();
@@ -286,6 +335,42 @@ impl Cluster {
                 "node {n}: mix cache {:?} != actual {:?}",
                 self.mixes[n],
                 counted
+            );
+        }
+        let mut starting: HashMap<FunctionId, u32> = HashMap::new();
+        let mut cached: HashMap<FunctionId, Vec<InstanceId>> = HashMap::new();
+        for inst in self.instances.values() {
+            match inst.state {
+                InstanceState::Starting => *starting.entry(inst.function).or_insert(0) += 1,
+                InstanceState::Cached => cached.entry(inst.function).or_default().push(inst.id),
+                InstanceState::Saturated => {}
+            }
+        }
+        anyhow::ensure!(
+            starting == self.starting,
+            "starting index {:?} != actual {:?}",
+            self.starting,
+            starting
+        );
+        anyhow::ensure!(
+            cached.len() == self.cached.len(),
+            "cached index keys {:?} != actual {:?}",
+            self.cached.keys(),
+            cached.keys()
+        );
+        for (f, ids) in &cached {
+            // membership + uniqueness; the *release order* of the index
+            // cannot be reconstructed from the instance table (migration
+            // bumps state_since_ms without reordering), so order is
+            // pinned by the state_index_tracks_transitions unit test
+            let mut expect = ids.clone();
+            expect.sort_unstable();
+            let mut got = self.cached.get(f).cloned().unwrap_or_default();
+            got.sort_unstable();
+            got.dedup();
+            anyhow::ensure!(
+                expect == got,
+                "cached index for fn {f}: {got:?} != actual {expect:?}"
             );
         }
         Ok(())
@@ -311,6 +396,42 @@ mod tests {
         cl.evict(&cat, id);
         assert_eq!(cl.counts(0, 0), (0, 0));
         assert!(cl.node_empty(0));
+        cl.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn state_index_tracks_transitions() {
+        let cat = test_catalog();
+        let mut cl = Cluster::new(2);
+        let a = cl.place(&cat, 0, 0, 0.0);
+        let b = cl.place(&cat, 0, 1, 0.0);
+        assert_eq!(cl.starting_count(0), 2);
+        assert!(cl.cached_of(0).is_empty());
+        cl.mark_ready(a, 1.0);
+        assert_eq!(cl.starting_count(0), 1);
+        cl.release(a, 2.0);
+        assert_eq!(cl.cached_of(0), &[a]);
+        cl.mark_ready(b, 2.0);
+        cl.release(b, 3.0);
+        assert_eq!(cl.cached_of(0), &[a, b], "release order preserved");
+        cl.migrate_cached(&cat, a, 1, 4.0);
+        assert_eq!(cl.cached_of(0), &[a, b], "migration keeps membership");
+        // release a third, then remove the *middle* entry: the survivors
+        // must keep release order (a swap-remove would yield [d, b])
+        let d = cl.place(&cat, 0, 0, 5.0);
+        cl.mark_ready(d, 5.0);
+        cl.release(d, 6.0);
+        assert_eq!(cl.cached_of(0), &[a, b, d]);
+        cl.reactivate(b, 7.0);
+        assert_eq!(cl.cached_of(0), &[a, d], "removal preserves release order");
+        cl.reactivate(a, 8.0);
+        assert_eq!(cl.cached_of(0), &[d]);
+        cl.evict(&cat, d); // evict a Cached instance
+        assert!(cl.cached_of(0).is_empty());
+        cl.check_invariants().unwrap();
+        let c = cl.place(&cat, 1, 0, 6.0);
+        cl.evict(&cat, c); // evict a Starting instance
+        assert_eq!(cl.starting_count(1), 0);
         cl.check_invariants().unwrap();
     }
 

@@ -70,6 +70,60 @@ impl InitModel {
     }
 }
 
+/// Deterministic control-plane cost model: the virtual-time price of
+/// scheduling decisions and §4.3 asynchronous refreshes.
+///
+/// The event engine charges these *modelled* costs — derived from the
+/// deterministic inference counts a decision/refresh performed — instead
+/// of the measured wall clock, so event due times (and therefore the
+/// whole popped event stream) replay bit-identically for a given seed.
+/// The measured nanos are still carried on `Plan::decision_nanos` /
+/// `DeferredUpdate::nanos` for live observability; they just never steer
+/// virtual time.  Defaults are calibrated to the native forest's
+/// measured order of magnitude (tens of microseconds per batched
+/// inference, single-digit microseconds per table lookup).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CostModel {
+    /// Fixed critical-path cost of one scheduling decision (candidate
+    /// ranking + capacity-table lookups), ns.
+    pub decision_base_ns: u64,
+    /// Cost of one batched model inference, ns (critical or asynchronous).
+    pub inference_ns: u64,
+    /// Fixed off-critical-path overhead of one asynchronous capacity
+    /// refresh beyond its inferences, ns.
+    pub refresh_base_ns: u64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self { decision_base_ns: 5_000, inference_ns: 25_000, refresh_base_ns: 10_000 }
+    }
+}
+
+impl CostModel {
+    /// Modelled critical-path cost of a decision that ran
+    /// `critical_inferences` model inferences, ns.
+    pub fn decision_ns(&self, critical_inferences: u64) -> u64 {
+        self.decision_base_ns + critical_inferences * self.inference_ns
+    }
+
+    /// Same, in virtual milliseconds (what cold-start due times add).
+    pub fn decision_ms(&self, critical_inferences: u64) -> f64 {
+        self.decision_ns(critical_inferences) as f64 / 1e6
+    }
+
+    /// Modelled off-critical-path cost of one asynchronous refresh that
+    /// ran `inferences` model inferences, ns.
+    pub fn refresh_ns(&self, inferences: u64) -> u64 {
+        self.refresh_base_ns + inferences * self.inference_ns
+    }
+
+    /// Same, in virtual milliseconds (the refresh's completion delay).
+    pub fn refresh_ms(&self, inferences: u64) -> f64 {
+        self.refresh_ns(inferences) as f64 / 1e6
+    }
+}
+
 /// Full run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -84,6 +138,11 @@ pub struct RunConfig {
     pub measurement_noise: f64,
     /// RNG seed for the simulator's noise streams.
     pub seed: u64,
+    /// Deterministic virtual-time costs of decisions and refreshes.
+    pub cost: CostModel,
+    /// Autoscaler evaluation cadence in virtual ms (1 s mirrors the
+    /// paper's testbed; sub-second workloads may want tighter loops).
+    pub eval_interval_ms: f64,
 }
 
 impl Default for RunConfig {
@@ -97,6 +156,8 @@ impl Default for RunConfig {
             duration_s: 1800,
             measurement_noise: 0.05,
             seed: 42,
+            cost: CostModel::default(),
+            eval_interval_ms: 1000.0,
         }
     }
 }
@@ -171,6 +232,18 @@ impl RunConfig {
         if let Some(v) = j.opt("measurement_noise") {
             c.measurement_noise = v.as_f64()?;
         }
+        if let Some(v) = j.opt("decision_base_ns") {
+            c.cost.decision_base_ns = v.as_f64()? as u64;
+        }
+        if let Some(v) = j.opt("inference_ns") {
+            c.cost.inference_ns = v.as_f64()? as u64;
+        }
+        if let Some(v) = j.opt("refresh_base_ns") {
+            c.cost.refresh_base_ns = v.as_f64()? as u64;
+        }
+        if let Some(v) = j.opt("eval_interval_ms") {
+            c.eval_interval_ms = v.as_f64()?;
+        }
         Ok(c)
     }
 }
@@ -193,6 +266,16 @@ mod tests {
         assert_eq!(InitModel::Docker.latency_ms(), 85.5);
         assert_eq!(InitModel::parse("12.5").unwrap().latency_ms(), 12.5);
         assert!(InitModel::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn cost_model_is_linear_in_inferences() {
+        let c = CostModel { decision_base_ns: 1_000, inference_ns: 10_000, refresh_base_ns: 500 };
+        assert_eq!(c.decision_ns(0), 1_000);
+        assert_eq!(c.decision_ns(3), 31_000);
+        assert!((c.decision_ms(3) - 0.031).abs() < 1e-12);
+        assert_eq!(c.refresh_ns(2), 20_500);
+        assert!((c.refresh_ms(0) - 0.0005).abs() < 1e-15);
     }
 
     #[test]

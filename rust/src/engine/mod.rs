@@ -1,0 +1,195 @@
+//! The discrete-event core: a deterministic, millisecond-resolution
+//! [`EventQueue`] that replaced the 1 s tick loop.
+//!
+//! ## Event taxonomy
+//!
+//! | [`Event`] | Emitted by | Effect when due |
+//! |---|---|---|
+//! | [`Event::LoadChange`] | [`crate::traces::Workload`] generators | update one function's offered RPS |
+//! | [`Event::ColdStartComplete`] | plan commit (autoscaler eval) | Starting → Saturated, join routing set |
+//! | [`Event::DeferredUpdateDue`] | §4.3 asynchronous refresh submission | land the capacity-table refresh |
+//! | [`Event::AutoscalerEval`] | self-rescheduling, every eval interval | dual-staged scaling + plan/commit |
+//! | [`Event::MonitorTick`] | self-rescheduling, every second | QoS windows, density sample, §6 feedback |
+//!
+//! ## Determinism contract
+//!
+//! Events pop in ascending `(due_ms, seq)` order where `seq` is a
+//! monotone sequence number assigned at push.  `due_ms` is compared with
+//! [`f64::total_cmp`], and the `seq` tie-break makes the order a *total*
+//! order over any event multiset — two replays that push the same events
+//! in the same order pop them in the same order, bit for bit.  Nothing in
+//! the queue reads the wall clock: due times come from virtual time plus
+//! the modelled costs in [`crate::config::CostModel`], so the popped
+//! stream (and everything folded from it) replays identically for a given
+//! seed.  This is what lets the engine drop the old tick loop's
+//! wall-clock completion clamp (`MAX_ASYNC_COMPLETION_MS`): deferred
+//! work no longer needs quantization to stay replayable.
+//!
+//! Pop-until-due is `O(log n)` per event against the old loop's
+//! `O(n)`-per-tick `Vec::retain`/partition scans, and due times are
+//! honoured at full `f64` millisecond resolution instead of being rounded
+//! up to the next 1 s tick boundary.
+
+use crate::catalog::FunctionId;
+use crate::cluster::{InstanceId, NodeId};
+use std::collections::BinaryHeap;
+
+/// One typed control-plane event (see the module table).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// The offered load of `function` becomes `rps` from this instant on.
+    LoadChange { function: FunctionId, rps: f64 },
+    /// A cold start finishes: the instance flips Starting → Saturated and
+    /// joins the routing set at exactly its `sched_cost + init_ms` due
+    /// time — mid-tick, not at the next tick boundary.
+    ColdStartComplete { instance: InstanceId },
+    /// An asynchronous capacity refresh for `node` lands.  The payload
+    /// stays with the control plane (keyed by node); `version` guards
+    /// against superseded refreshes — only the event matching the node's
+    /// latest submitted version completes.
+    DeferredUpdateDue { node: NodeId, version: u64 },
+    /// Dual-staged autoscaler evaluation (plan + commit scale decisions).
+    AutoscalerEval,
+    /// QoS measurement window + utilisation sample; every
+    /// `MONITOR_EVERY`-th tick also runs the §6 accuracy comparison.
+    MonitorTick,
+}
+
+/// An event with its due time and push-order sequence number.
+#[derive(Debug, Clone)]
+pub struct Scheduled {
+    pub due_ms: f64,
+    /// Monotone per-queue push counter — the deterministic tie-break.
+    pub seq: u64,
+    pub event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq && self.due_ms.total_cmp(&other.due_ms).is_eq()
+    }
+}
+
+impl Eq for Scheduled {}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Scheduled {
+    /// Reversed comparison so [`BinaryHeap`] (a max-heap) pops the
+    /// earliest `(due_ms, seq)` first.
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .due_ms
+            .total_cmp(&self.due_ms)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic min-heap of [`Scheduled`] events.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `event` at `due_ms`; returns its sequence number.
+    pub fn push(&mut self, due_ms: f64, event: Event) -> u64 {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Scheduled { due_ms, seq, event });
+        seq
+    }
+
+    /// Due time of the earliest queued event.
+    pub fn peek_due(&self) -> Option<f64> {
+        self.heap.peek().map(|s| s.due_ms)
+    }
+
+    /// Pop the earliest event unconditionally.
+    pub fn pop(&mut self) -> Option<Scheduled> {
+        self.heap.pop()
+    }
+
+    /// Pop the earliest event if it is due by `limit_ms`.  With
+    /// `inclusive = false` only events strictly before the limit pop —
+    /// the half-open window `Simulation` drains per horizon.
+    pub fn pop_due(&mut self, limit_ms: f64, inclusive: bool) -> Option<Scheduled> {
+        let due = self.peek_due()?;
+        let ready = if inclusive { due <= limit_ms } else { due < limit_ms };
+        if ready {
+            self.heap.pop()
+        } else {
+            None
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_due_order() {
+        let mut q = EventQueue::new();
+        q.push(300.0, Event::AutoscalerEval);
+        q.push(8.4, Event::ColdStartComplete { instance: 1 });
+        q.push(150.25, Event::MonitorTick);
+        let dues: Vec<f64> = std::iter::from_fn(|| q.pop().map(|s| s.due_ms)).collect();
+        assert_eq!(dues, vec![8.4, 150.25, 300.0]);
+    }
+
+    #[test]
+    fn equal_due_ties_break_by_push_order() {
+        let mut q = EventQueue::new();
+        for f in 0..10usize {
+            q.push(1000.0, Event::LoadChange { function: f, rps: f as f64 });
+        }
+        q.push(1000.0, Event::AutoscalerEval);
+        let order: Vec<Event> = std::iter::from_fn(|| q.pop().map(|s| s.event)).collect();
+        for (f, e) in order.iter().take(10).enumerate() {
+            assert_eq!(*e, Event::LoadChange { function: f, rps: f as f64 });
+        }
+        assert_eq!(order[10], Event::AutoscalerEval);
+    }
+
+    #[test]
+    fn pop_due_honours_half_open_and_inclusive_limits() {
+        let mut q = EventQueue::new();
+        q.push(5.0, Event::MonitorTick);
+        q.push(10.0, Event::AutoscalerEval);
+        assert!(q.pop_due(5.0, false).is_none(), "strict: 5.0 not < 5.0");
+        assert!(q.pop_due(5.0, true).is_some(), "inclusive: 5.0 <= 5.0");
+        assert!(q.pop_due(10.0, false).is_none());
+        assert_eq!(q.pop_due(10.0, true).unwrap().due_ms, 10.0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn sub_millisecond_resolution_is_preserved() {
+        let mut q = EventQueue::new();
+        q.push(8.4321, Event::ColdStartComplete { instance: 0 });
+        q.push(8.4320, Event::ColdStartComplete { instance: 1 });
+        assert_eq!(
+            q.pop().unwrap().event,
+            Event::ColdStartComplete { instance: 1 },
+            "0.0001 ms earlier must pop first"
+        );
+    }
+}

@@ -7,7 +7,9 @@
 //! * **L3 (this crate)** — the serverless control plane: pre-decision
 //!   scheduler with per-node [`capacity`] tables, [`autoscaler`] with
 //!   dual-staged scaling, request [`router`], [`cluster`] state, baseline
-//!   schedulers, a discrete-event [`sim`]ulator and trace generators.
+//!   schedulers, a millisecond-resolution discrete-event core
+//!   ([`engine`] + [`controlplane`]), the [`sim`]ulator and
+//!   per-second/sub-second workload generators ([`traces`]).
 //! * **L2 (JAX, build time)** — the latency predictor compute graph,
 //!   AOT-lowered to HLO text at `make artifacts`.
 //! * **L1 (Pallas, build time)** — the random-forest traversal kernel.
@@ -37,6 +39,7 @@ pub mod catalog;
 pub mod cluster;
 pub mod config;
 pub mod controlplane;
+pub mod engine;
 pub mod interference;
 pub mod metrics;
 pub mod model;

@@ -128,11 +128,17 @@ impl QosTracker {
 /// Scheduling + cold-start cost accounting (Figs. 11/12, Table 2).
 /// Asynchronous (off-critical-path) refresh costs are tracked by the
 /// control-plane engine, not here — they never touch a cold start.
+///
+/// Decision costs are the *modelled* virtual-time costs the event
+/// engine charged (deterministic; see `config::CostModel`); cold-start
+/// latency is attributed at event resolution — completion time minus
+/// request time — by the `ColdStartComplete` events, not inferred from
+/// per-plan constants.
 #[derive(Debug, Default)]
 pub struct CostTracker {
-    /// Critical-path decision cost per scheduling call (ms).
+    /// Modelled critical-path decision cost per scheduling call (ms).
     pub scheduling_ms: Samples,
-    /// Cold-start latency per instance (scheduling + init, ms).
+    /// Cold-start latency per completed instance (request→ready, ms).
     pub cold_start_ms: Samples,
     /// Model inferences on the critical path.
     pub critical_inferences: u64,
@@ -146,13 +152,14 @@ pub struct CostTracker {
 }
 
 impl CostTracker {
+    /// Record one committed plan with its modelled critical-path decision
+    /// cost in virtual milliseconds.
     pub fn record_schedule(
         &mut self,
         committed: &crate::scheduler::CommittedPlan,
-        init_latency_ms: f64,
+        decision_ms: f64,
     ) {
         let plan = &committed.plan;
-        let decision_ms = plan.decision_nanos as f64 / 1e6;
         self.scheduling_ms.push(decision_ms);
         self.calls += 1;
         self.critical_inferences += plan.critical_inferences;
@@ -161,10 +168,12 @@ impl CostTracker {
         } else {
             self.fast_decisions += 1;
         }
-        for _ in &committed.placements {
-            self.cold_start_ms.push(decision_ms + init_latency_ms);
-            self.instances_started += 1;
-        }
+        self.instances_started += committed.placements.len() as u64;
+    }
+
+    /// Record one completed cold start at event resolution.
+    pub fn record_cold_start(&mut self, latency_ms: f64) {
+        self.cold_start_ms.push(latency_ms);
     }
 
     /// Inferences per scheduling call (Figs. 11a/12 middle series).
@@ -201,6 +210,29 @@ mod tests {
         assert!((q.rate(0) - 0.1).abs() < 1e-12);
         assert!((q.overall() - 0.1).abs() < 1e-12);
         assert_eq!(q.rate(1), 0.0);
+    }
+
+    #[test]
+    fn cost_tracker_splits_decision_and_completion_accounting() {
+        use crate::scheduler::{Action, CommittedPlan, Placement, Plan};
+        let mut c = CostTracker::default();
+        let mut plan = Plan::default();
+        plan.actions = vec![Action::Place { function: 0, node: 0 }];
+        plan.slow_path_used = true;
+        plan.decision_nanos = 123_456; // measured; must NOT drive the samples
+        plan.critical_inferences = 2;
+        let committed = CommittedPlan {
+            plan,
+            placements: vec![Placement { instance: 0, node: 0 }],
+        };
+        c.record_schedule(&committed, 0.055);
+        assert_eq!(c.calls, 1);
+        assert_eq!(c.slow_decisions, 1);
+        assert_eq!(c.instances_started, 1);
+        assert_eq!(c.scheduling_ms.values(), &[0.055]);
+        assert!(c.cold_start_ms.is_empty(), "cold starts attribute at completion");
+        c.record_cold_start(8.455);
+        assert_eq!(c.cold_start_ms.values(), &[8.455]);
     }
 
     #[test]

@@ -30,10 +30,12 @@
 //! touching a node it calls [`Scheduler::on_node_changed`], which
 //! *computes* the refresh (billing its wall-clock off-path) and returns a
 //! [`DeferredUpdate`] — the new table entries are **not yet visible**.
-//! The engine completes the update at `now + nanos` in virtual time via
-//! [`Scheduler::complete_deferred`]; until then every fast-path decision
-//! genuinely reads the stale table, which is the staleness window the
-//! paper defends (§4.3) and Figs. 11/12 price.
+//! The event engine completes the update via
+//! [`Scheduler::complete_deferred`] at `now + modelled cost` in virtual
+//! time (`config::CostModel`, linear in the refresh's inference count —
+//! deterministic, so replays stay bit-identical); until then every
+//! fast-path decision genuinely reads the stale table, which is the
+//! staleness window the paper defends (§4.3) and Figs. 11/12 price.
 //!
 //! ## Typed feedback
 //!
@@ -42,10 +44,12 @@
 //! concrete-type downcast, so alternative QoS-aware schedulers can opt
 //! into the unpredictability fallback without the engine knowing them.
 //!
-//! All decisions are timed with a monotonic clock; the simulator injects
-//! the measured wall-clock cost into the virtual cold-start timeline, so
-//! the Fig. 11/12 scheduling-cost comparisons measure *real code*, not
-//! modelled constants.
+//! All decisions are still timed with a monotonic clock
+//! (`Plan::decision_nanos`, for live profiling), but the virtual
+//! cold-start timeline charges the *modelled* per-inference cost from
+//! `config::CostModel` — the inference counts are real and
+//! deterministic, the wall clock is not, and determinism of the event
+//! stream wins (see `controlplane` for the full argument).
 
 mod gsight;
 mod jiagu;

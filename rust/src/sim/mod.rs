@@ -1,30 +1,37 @@
 //! Discrete-event cluster simulation — the testbed substitute.
 //!
-//! Virtual time advances in 1-second ticks driven by a trace.  Each tick
-//! is one [`ControlPlane::step`]: deferred capacity refreshes land, due
-//! cold starts complete, the autoscaler plans + commits scale decisions
-//! (dual-staged scaling), QoS is measured per (node, function) window
-//! against the ground-truth interference model, and the emitted
-//! [`TickEvents`] are folded here into the [`RunReport`].
+//! A run is one drain of the control plane's deterministic event queue:
+//! the workload's `LoadChange` events are injected up front,
+//! [`ControlPlane::run_until`] pops every event in `(due_ms, seq)` order
+//! — cold starts completing at their exact `sched_cost + init_ms` due
+//! times, §4.3 refreshes landing at their modelled sub-millisecond
+//! delays, autoscaler evaluations and QoS monitor ticks on their
+//! cadences — and [`Simulation::run_workload`] folds the accumulated
+//! [`EngineEvents`] into the [`RunReport`].
 //!
-//! **Scheduling cost is real, not modelled**: scheduler decisions execute
-//! the actual capacity-table / PJRT-inference code and their measured
-//! wall-clock time is injected into the virtual cold-start timeline
-//! (DESIGN.md "Scheduling-cost measurement model").  Only the instance
-//! *init* latency (cfork 8.4 ms / docker 85.5 ms) is a constant from the
-//! literature.
+//! **Virtual-time cost is modelled, deterministically**: decision and
+//! refresh costs charged to the timeline come from
+//! [`CostModel`](crate::config::CostModel) — linear in the
+//! deterministic inference counts the scheduler actually performed — so
+//! the entire report (latency percentiles included) is bit-identical
+//! across replays of the same seed.  Measured wall-clock nanos remain
+//! available on `Plan`/`DeferredUpdate` for live profiling; only the
+//! instance *init* latency (cfork 8.4 ms / docker 85.5 ms) is a
+//! constant from the literature.
 
 use crate::catalog::Catalog;
 use crate::config::RunConfig;
-use crate::controlplane::{ControlPlane, TickEvents};
+use crate::controlplane::{ControlPlane, EngineEvents};
 use crate::metrics::{CostTracker, DensityTracker, QosTracker};
 use crate::runtime::Predictor;
-use crate::traces::TraceSet;
+use crate::traces::{TraceSet, Workload};
 use anyhow::Result;
 use std::sync::Arc;
 
-/// Aggregated outcome of one simulated run.
-#[derive(Debug)]
+/// Aggregated outcome of one simulated run.  Every field is derived
+/// from the deterministic event stream, so two runs with the same seed
+/// compare equal (`PartialEq`) bit for bit.
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunReport {
     pub scheduler: String,
     pub trace: String,
@@ -32,8 +39,11 @@ pub struct RunReport {
     pub density: f64,
     pub qos_violation_rate: f64,
     pub per_function_violation: Vec<f64>,
+    /// Modelled critical-path decision cost (virtual ms).
     pub scheduling_ms_mean: f64,
     pub scheduling_ms_p99: f64,
+    /// Cold-start latency attributed at event resolution: completion
+    /// time − request time in virtual ms.
     pub cold_start_ms_mean: f64,
     pub cold_start_ms_p99: f64,
     pub inferences_per_schedule: f64,
@@ -49,6 +59,7 @@ pub struct RunReport {
     pub released: u64,
     pub evicted: u64,
     pub peak_nodes: usize,
+    /// Modelled off-critical-path refresh cost (ns, deterministic).
     pub async_nanos: u64,
     /// Functions under the §6 unpredictability fallback at run end.
     pub isolated_functions: Vec<usize>,
@@ -66,8 +77,8 @@ impl RunReport {
     }
 }
 
-/// The simulation driver: a thin loop over [`ControlPlane::step`] that
-/// folds each tick's [`TickEvents`] into the aggregate report.
+/// The simulation driver: inject a workload, drain the event queue,
+/// fold the emitted [`EngineEvents`] into the aggregate report.
 pub struct Simulation {
     pub cat: Catalog,
     pub cfg: RunConfig,
@@ -79,14 +90,31 @@ impl Simulation {
         Self { cat, cfg, predictor }
     }
 
-    /// Run the full trace; returns the aggregated report.
+    /// Run a per-second trace (converted to its event-stream form).
     pub fn run(&self, trace: &TraceSet) -> Result<RunReport> {
+        self.run_workload(&trace.workload())
+    }
+
+    /// Run any event-stream workload; returns the aggregated report.
+    ///
+    /// The horizon is drained in fold chunks so the accumulated
+    /// [`EngineEvents`] (QoS windows, committed plans, samples) stay
+    /// bounded by the chunk length instead of growing with the run.
+    pub fn run_workload(&self, workload: &Workload) -> Result<RunReport> {
+        /// Fold granularity (virtual ms): long enough to amortise the
+        /// fold, short enough to keep per-chunk event Vecs small.
+        const FOLD_CHUNK_MS: f64 = 60_000.0;
+
         let mut cp =
             ControlPlane::new(self.cat.clone(), self.cfg.clone(), self.predictor.clone());
+        cp.inject_workload(workload);
+        let duration = workload.duration_s().min(self.cfg.duration_s);
+        let horizon_ms = duration as f64 * 1000.0;
 
-        let mut density = DensityTracker::default();
-        let mut qos = QosTracker::new(self.cat.len());
         let mut costs = CostTracker::default();
+        let mut qos = QosTracker::new(self.cat.len());
+        let mut density = DensityTracker::default();
+        let mut peak_nodes = self.cfg.n_nodes;
         let mut logical_cold_starts = 0u64;
         let mut real_after_release = 0u64;
         let mut migrations = 0u64;
@@ -94,20 +122,27 @@ impl Simulation {
         let mut evicted = 0u64;
         let mut async_nanos = 0u64;
         let mut async_inferences = 0u64;
-        let mut peak_nodes = self.cfg.n_nodes;
-        let init_ms = self.cfg.init_model.latency_ms();
-
-        let duration = trace.duration_s().min(self.cfg.duration_s);
-        for t in 0..duration {
-            let now_ms = t as f64 * 1000.0;
-            let loads = trace.loads_at(t);
-            let ev: TickEvents = cp.step(now_ms, &loads)?;
+        let mut until = 0.0f64;
+        while until < horizon_ms {
+            until = (until + FOLD_CHUNK_MS).min(horizon_ms);
+            let ev: EngineEvents = cp.run_until(until)?;
             for committed in &ev.scheduled {
-                costs.record_schedule(committed, init_ms);
+                costs.record_schedule(
+                    committed,
+                    self.cfg.cost.decision_ms(committed.plan.critical_inferences),
+                );
+            }
+            for latency in &ev.cold_start_latency_ms {
+                costs.record_cold_start(*latency);
             }
             for w in &ev.qos {
                 qos.record(&self.cat, w.function, w.requests, w.measured_ms);
             }
+            for s in &ev.samples {
+                density.record(s.instances, s.active_nodes.max(1), 1.0);
+                peak_nodes = peak_nodes.max(s.n_nodes);
+            }
+            peak_nodes = peak_nodes.max(ev.n_nodes);
             logical_cold_starts += ev.logical_cold_starts as u64;
             real_after_release += ev.real_after_release as u64;
             migrations += ev.migrations as u64;
@@ -115,8 +150,6 @@ impl Simulation {
             evicted += (ev.evicted + ev.evicted_direct) as u64;
             async_nanos += ev.async_nanos;
             async_inferences += ev.async_inferences;
-            density.record(ev.instances, ev.active_nodes.max(1), 1.0);
-            peak_nodes = peak_nodes.max(ev.n_nodes);
         }
 
         let per_function_violation =
@@ -124,7 +157,7 @@ impl Simulation {
         let isolated_functions = cp.monitor().unpredictable();
         Ok(RunReport {
             scheduler: cp.scheduler_name().to_string(),
-            trace: trace.name.clone(),
+            trace: workload.name.clone(),
             duration_s: duration,
             density: density.density(),
             qos_violation_rate: qos.overall(),

@@ -56,6 +56,208 @@ impl TraceSet {
     pub fn loads_at(&self, second: usize) -> Vec<f64> {
         self.functions.iter().map(|f| f.at(second)).collect()
     }
+
+    /// The event-engine form of this trace (emits one
+    /// [`LoadEvent`] per per-second change).
+    pub fn workload(&self) -> Workload {
+        Workload::from_trace(self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event-engine workloads: load as a stream of LoadChange events.
+// ---------------------------------------------------------------------------
+
+/// One offered-load step: from `at_ms` on, `function` runs at `rps`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadEvent {
+    pub at_ms: f64,
+    pub function: usize,
+    pub rps: f64,
+}
+
+/// A workload as the event engine consumes it: a time-sorted stream of
+/// [`LoadEvent`]s at arbitrary (sub-second) resolution.  Per-second
+/// [`TraceSet`]s convert losslessly via [`Workload::from_trace`]; the
+/// sub-second generators ([`Workload::poisson`], [`Workload::spike_burst`],
+/// [`Workload::diurnal`]) express load shapes the old 1 s tick loop could
+/// not represent at all.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub n_functions: usize,
+    /// Sorted by `at_ms` (stable: ties keep emission order, which the
+    /// event queue's sequence numbers then preserve).
+    pub events: Vec<LoadEvent>,
+    pub duration_ms: f64,
+}
+
+impl Workload {
+    fn finish(name: String, n_functions: usize, mut events: Vec<LoadEvent>, duration_ms: f64) -> Self {
+        events.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
+        Self { name, n_functions, events, duration_ms }
+    }
+
+    pub fn duration_s(&self) -> usize {
+        (self.duration_ms / 1000.0).ceil() as usize
+    }
+
+    /// Convert a per-second trace, emitting an event only where a
+    /// function's RPS actually changes (the engine holds loads between
+    /// events).
+    pub fn from_trace(trace: &TraceSet) -> Self {
+        let mut events = Vec::new();
+        for (f, ft) in trace.functions.iter().enumerate() {
+            let mut prev = f64::NAN; // always emit the t=0 level
+            for (t, rps) in ft.rps.iter().enumerate() {
+                if prev.to_bits() != rps.to_bits() {
+                    events.push(LoadEvent { at_ms: t as f64 * 1000.0, function: f, rps: *rps });
+                    prev = *rps;
+                }
+            }
+        }
+        let duration_ms = trace.duration_s() as f64 * 1000.0;
+        Self::finish(trace.name.clone(), trace.functions.len(), events, duration_ms)
+    }
+
+    /// Poisson arrivals binned at `bin_ms`: each bin's offered RPS is a
+    /// Poisson draw around the function's mean rate, so short bins show
+    /// the high-CV burstiness the Azure traces report — load the 1 s loop
+    /// averaged away.
+    pub fn poisson(cat: &Catalog, params: &PoissonParams, seed: u64) -> Self {
+        let mut rng = Rng::seed_from(seed);
+        let mut events = Vec::new();
+        let bins = (params.duration_s as f64 * 1000.0 / params.bin_ms).ceil() as usize;
+        let bin_s = params.bin_ms / 1000.0;
+        for f in 0..cat.len() {
+            let sat = cat.get(f).saturated_rps;
+            // heavy-tailed mean concurrency per function
+            let lambda = params.mean_concurrency * (0.3 + 1.4 * rng.f64() * rng.f64()) * sat;
+            for b in 0..bins {
+                let arrivals = rng.poisson(lambda * bin_s);
+                events.push(LoadEvent {
+                    at_ms: b as f64 * params.bin_ms,
+                    function: f,
+                    rps: arrivals as f64 / bin_s,
+                });
+            }
+        }
+        let duration_ms = params.duration_s as f64 * 1000.0;
+        Self::finish(format!("poisson-{seed}"), cat.len(), events, duration_ms)
+    }
+
+    /// Sub-second spike/burst: a steady baseline with exponentially
+    /// spaced bursts that multiply one function's load for 200–900 ms —
+    /// shorter than one old tick, so the tick loop literally could not
+    /// see them start and end.
+    pub fn spike_burst(cat: &Catalog, params: &SpikeParams, seed: u64) -> Self {
+        let mut rng = Rng::seed_from(seed);
+        let mut events = Vec::new();
+        let duration_ms = params.duration_s as f64 * 1000.0;
+        for f in 0..cat.len() {
+            let sat = cat.get(f).saturated_rps;
+            let base = params.baseline_concurrency * sat;
+            events.push(LoadEvent { at_ms: 0.0, function: f, rps: base });
+            let mut t_ms = rng.exp(params.burst_rate_per_s) * 1000.0;
+            while t_ms < duration_ms {
+                let gain = rng.range_f64(2.0, params.max_gain.max(2.0));
+                let len_ms = rng.range_f64(200.0, 900.0);
+                events.push(LoadEvent { at_ms: t_ms, function: f, rps: base * gain });
+                let end = (t_ms + len_ms).min(duration_ms);
+                events.push(LoadEvent { at_ms: end, function: f, rps: base });
+                t_ms = end + rng.exp(params.burst_rate_per_s) * 1000.0;
+            }
+        }
+        Self::finish(format!("spike-{seed}"), cat.len(), events, duration_ms)
+    }
+
+    /// Azure-style diurnal envelope sampled sub-second: a compressed
+    /// day/night sinusoid with multiplicative jitter re-drawn every
+    /// `sample_ms`, so the envelope moves slowly while the instantaneous
+    /// load stays bursty between autoscaler evaluations.
+    pub fn diurnal(cat: &Catalog, params: &DiurnalParams, seed: u64) -> Self {
+        let mut rng = Rng::seed_from(seed);
+        let mut events = Vec::new();
+        let duration_ms = params.duration_s as f64 * 1000.0;
+        let samples = (duration_ms / params.sample_ms).ceil() as usize;
+        for f in 0..cat.len() {
+            let sat = cat.get(f).saturated_rps;
+            let scale = params.peak_concurrency * (0.25 + 1.5 * rng.f64() * rng.f64()) * sat;
+            let phase = rng.f64() * std::f64::consts::TAU;
+            for s in 0..samples {
+                let t_ms = s as f64 * params.sample_ms;
+                let day = (t_ms / 1000.0 / params.day_period_s) * std::f64::consts::TAU;
+                let envelope = 0.55 + 0.45 * (day + phase).sin();
+                let jitter = (1.0 + rng.normal_ms(0.0, params.jitter_sigma)).max(0.05);
+                events.push(LoadEvent {
+                    at_ms: t_ms,
+                    function: f,
+                    rps: (scale * envelope * jitter).max(0.0),
+                });
+            }
+        }
+        Self::finish(format!("diurnal-{seed}"), cat.len(), events, duration_ms)
+    }
+}
+
+/// Parameters for [`Workload::poisson`].
+#[derive(Debug, Clone)]
+pub struct PoissonParams {
+    pub duration_s: usize,
+    /// Sub-second bin width the arrival process is sampled at (ms).
+    pub bin_ms: f64,
+    /// Mean saturated-instance concurrency per function at the mean rate.
+    pub mean_concurrency: f64,
+}
+
+impl Default for PoissonParams {
+    fn default() -> Self {
+        Self { duration_s: 120, bin_ms: 100.0, mean_concurrency: 6.0 }
+    }
+}
+
+/// Parameters for [`Workload::spike_burst`].
+#[derive(Debug, Clone)]
+pub struct SpikeParams {
+    pub duration_s: usize,
+    /// Steady concurrency between bursts.
+    pub baseline_concurrency: f64,
+    /// Burst arrivals per second per function (exponential gaps).
+    pub burst_rate_per_s: f64,
+    /// Upper bound of the burst load multiplier (lower bound 2x).
+    pub max_gain: f64,
+}
+
+impl Default for SpikeParams {
+    fn default() -> Self {
+        Self { duration_s: 120, baseline_concurrency: 2.0, burst_rate_per_s: 0.05, max_gain: 5.0 }
+    }
+}
+
+/// Parameters for [`Workload::diurnal`].
+#[derive(Debug, Clone)]
+pub struct DiurnalParams {
+    pub duration_s: usize,
+    /// Jitter re-draw interval (ms).
+    pub sample_ms: f64,
+    /// Mean peak concurrency per function.
+    pub peak_concurrency: f64,
+    /// Compressed "day" period (s).
+    pub day_period_s: f64,
+    /// Per-sample multiplicative jitter σ.
+    pub jitter_sigma: f64,
+}
+
+impl Default for DiurnalParams {
+    fn default() -> Self {
+        Self {
+            duration_s: 300,
+            sample_ms: 250.0,
+            peak_concurrency: 12.0,
+            day_period_s: 120.0,
+            jitter_sigma: 0.15,
+        }
+    }
 }
 
 /// Parameters for the real-world-like generator.
@@ -277,6 +479,90 @@ mod tests {
             }
             assert!(ft.peak() > 0.0, "every function must fire sometimes");
         }
+    }
+
+    #[test]
+    fn workload_from_trace_replays_per_second_levels() {
+        let cat = test_catalog();
+        let p = RealWorldParams { duration_s: 50, ..Default::default() };
+        let t = realworld(&cat, &p, 3);
+        let wl = t.workload();
+        assert_eq!(wl.n_functions, t.functions.len());
+        assert_eq!(wl.duration_s(), 50);
+        // fold the event stream back into per-second levels
+        let mut loads = vec![0.0; wl.n_functions];
+        let mut i = 0;
+        for sec in 0..50usize {
+            let now = sec as f64 * 1000.0;
+            while i < wl.events.len() && wl.events[i].at_ms <= now {
+                loads[wl.events[i].function] = wl.events[i].rps;
+                i += 1;
+            }
+            assert_eq!(loads, t.loads_at(sec), "second {sec}");
+        }
+    }
+
+    #[test]
+    fn workload_events_sorted_and_deterministic() {
+        let cat = test_catalog();
+        for wl in [
+            Workload::poisson(&cat, &PoissonParams::default(), 7),
+            Workload::spike_burst(&cat, &SpikeParams::default(), 7),
+            Workload::diurnal(&cat, &DiurnalParams { duration_s: 60, ..Default::default() }, 7),
+        ] {
+            assert!(!wl.events.is_empty());
+            for w in wl.events.windows(2) {
+                assert!(w[0].at_ms <= w[1].at_ms, "{}: events must be sorted", wl.name);
+            }
+            assert!(
+                wl.events.iter().all(|e| e.rps >= 0.0 && e.function < wl.n_functions),
+                "{}: events well-formed",
+                wl.name
+            );
+        }
+        let a = Workload::poisson(&cat, &PoissonParams::default(), 9);
+        let b = Workload::poisson(&cat, &PoissonParams::default(), 9);
+        assert_eq!(a.events, b.events, "same seed, same events");
+    }
+
+    #[test]
+    fn poisson_workload_is_subsecond_and_bursty() {
+        let cat = test_catalog();
+        let params = PoissonParams { duration_s: 30, bin_ms: 100.0, ..Default::default() };
+        let wl = Workload::poisson(&cat, &params, 11);
+        assert!(
+            wl.events.iter().any(|e| e.at_ms % 1000.0 != 0.0),
+            "bins must land between whole seconds"
+        );
+        // within one second, a function's level must actually move
+        let f0: Vec<f64> = wl
+            .events
+            .iter()
+            .filter(|e| e.function == 0 && e.at_ms < 5000.0)
+            .map(|e| e.rps)
+            .collect();
+        assert!(f0.iter().any(|r| *r != f0[0]), "sub-second variation expected");
+    }
+
+    #[test]
+    fn spike_burst_returns_to_baseline_within_a_second() {
+        let cat = test_catalog();
+        let params = SpikeParams { duration_s: 60, burst_rate_per_s: 0.2, ..Default::default() };
+        let wl = Workload::spike_burst(&cat, &params, 5);
+        let sat = cat.get(0).saturated_rps;
+        let base = params.baseline_concurrency * sat;
+        let f0: Vec<&LoadEvent> = wl.events.iter().filter(|e| e.function == 0).collect();
+        // pattern: base, then (burst, base) pairs each <= 900 ms long
+        let mut saw_burst = false;
+        for pair in f0.windows(2) {
+            if pair[0].rps > base * 1.5 {
+                saw_burst = true;
+                let len = pair[1].at_ms - pair[0].at_ms;
+                assert!(len <= 900.0 + 1e-9, "burst length {len} ms");
+                assert!((pair[1].rps - base).abs() < 1e-9, "must return to baseline");
+            }
+        }
+        assert!(saw_burst, "bursts must fire at rate 0.2/s over 60 s");
     }
 
     #[test]

@@ -233,6 +233,48 @@ fn dual_staged_vs_nods_state_machines() {
     }
 }
 
+/// Two event queues fed the same randomized schedule pop bit-identical
+/// sequences, and the pop order equals a *stable* sort of the pushes by
+/// due time — i.e. exact-due collisions resolve by the monotone push
+/// sequence number, never by heap internals.
+#[test]
+fn event_queue_pop_order_is_deterministic_with_seq_tiebreak() {
+    use jiagu::engine::{Event, EventQueue};
+    for seed in 0..8u64 {
+        let mut rng = Rng::seed_from(seed ^ 0x5eed);
+        let mut pushed: Vec<(f64, Event)> = Vec::new();
+        for i in 0..500u64 {
+            // coarse due grid → many exact ties exercise the tie-break
+            let due = rng.below(40) as f64 * 250.0;
+            let event = match rng.below(4) {
+                0 => Event::ColdStartComplete { instance: i },
+                1 => Event::DeferredUpdateDue { node: i as usize % 7, version: i },
+                2 => Event::LoadChange { function: i as usize % 5, rps: i as f64 },
+                _ => Event::AutoscalerEval,
+            };
+            pushed.push((due, event));
+        }
+        let mut a = EventQueue::new();
+        let mut b = EventQueue::new();
+        for (due, e) in &pushed {
+            a.push(*due, e.clone());
+            b.push(*due, e.clone());
+        }
+        // the reference order: a stable sort by due keeps push order on ties
+        let mut expected = pushed.clone();
+        expected.sort_by(|x, y| x.0.total_cmp(&y.0));
+        let mut popped = Vec::new();
+        while let (Some(x), Some(y)) = (a.pop(), b.pop()) {
+            assert_eq!(x.due_ms, y.due_ms, "seed {seed}: replicas diverged");
+            assert_eq!(x.seq, y.seq, "seed {seed}: replicas diverged");
+            assert_eq!(x.event, y.event, "seed {seed}: replicas diverged");
+            popped.push((x.due_ms, x.event));
+        }
+        assert!(a.is_empty() && b.is_empty());
+        assert_eq!(popped, expected, "seed {seed}: pop order != stable due-order");
+    }
+}
+
 /// Owl never exceeds two distinct functions per node over random workloads.
 #[test]
 fn owl_two_function_invariant_under_random_load() {

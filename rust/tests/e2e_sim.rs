@@ -111,12 +111,11 @@ fn dual_staged_produces_logical_cold_starts_on_fluctuating_load() {
 }
 
 #[test]
-fn runs_are_deterministic_given_seed_modulo_timing() {
-    // Plan/commit + the virtual-time deferred queue make determinism
-    // provable: decision *timing* is wall-clock and varies, but every
-    // counter in the report must replay bit-identically (deferred
-    // refreshes land one whole tick after submission regardless of the
-    // measured nanos, see controlplane::MAX_ASYNC_COMPLETION_MS).
+fn replays_are_bit_identical_full_report() {
+    // The event core makes determinism total: every due time comes from
+    // virtual time + the modelled CostModel (never the wall clock), the
+    // queue pops in (due_ms, seq) order, so the *entire* RunReport —
+    // latency percentiles included — must compare equal across replays.
     let Some((cat, dir)) = setup() else { return };
     let predictor = load_predictor(&dir, true).unwrap();
     let trace = traces::paper_traces(&cat, 240).swap_remove(3);
@@ -126,24 +125,32 @@ fn runs_are_deterministic_given_seed_modulo_timing() {
         .run(&trace)
         .unwrap();
     let b = Simulation::new(cat, cfg, predictor).run(&trace).unwrap();
-    assert_eq!(a.instances_started, b.instances_started);
-    assert_eq!(a.schedule_calls, b.schedule_calls);
-    assert_eq!(a.fast_decisions, b.fast_decisions);
-    assert_eq!(a.slow_decisions, b.slow_decisions);
-    assert_eq!(a.critical_inferences, b.critical_inferences);
-    assert_eq!(a.async_inferences, b.async_inferences);
-    assert_eq!(a.logical_cold_starts, b.logical_cold_starts);
-    assert_eq!(a.real_after_release, b.real_after_release);
-    assert_eq!(a.migrations, b.migrations);
-    assert_eq!(a.released, b.released);
-    assert_eq!(a.evicted, b.evicted);
-    assert_eq!(a.peak_nodes, b.peak_nodes);
-    assert_eq!(a.isolated_functions, b.isolated_functions);
-    assert!((a.density - b.density).abs() < 1e-12);
-    assert!((a.qos_violation_rate - b.qos_violation_rate).abs() < 1e-12);
-    for (x, y) in a.per_function_violation.iter().zip(&b.per_function_violation) {
-        assert!((x - y).abs() < 1e-12);
-    }
+    assert_eq!(a, b, "full RunReport must replay bit-identically");
+}
+
+#[test]
+fn subsecond_poisson_workload_replays_bit_identical_and_serves() {
+    // The same total-determinism contract must hold for workloads the
+    // tick loop could not express: 100 ms Poisson bins.
+    let Some((cat, dir)) = setup() else { return };
+    let predictor = load_predictor(&dir, true).unwrap();
+    let params = traces::PoissonParams { duration_s: 90, ..Default::default() };
+    let wl = traces::Workload::poisson(&cat, &params, 77);
+    let mut cfg = RunConfig::jiagu_45();
+    cfg.duration_s = 90;
+    let a = Simulation::new(cat.clone(), cfg.clone(), predictor.clone())
+        .run_workload(&wl)
+        .unwrap();
+    let b = Simulation::new(cat, cfg, predictor).run_workload(&wl).unwrap();
+    assert_eq!(a, b, "sub-second workload must replay bit-identically");
+    assert!(a.instances_started > 0, "poisson load must drive scale-ups");
+    // cold starts complete at sched_cost + init (cfork 8.4 ms), far
+    // below the tick boundary the old loop rounded up to
+    assert!(
+        a.cold_start_ms_mean > 8.4 && a.cold_start_ms_mean < 100.0,
+        "event-resolution cold start latency, got {}",
+        a.cold_start_ms_mean
+    );
 }
 
 #[test]
