@@ -10,7 +10,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts artifacts-jax build test bench bench-smoke fmt-check clippy doc ci clean
+.PHONY: artifacts artifacts-jax build test check-test-targets bench bench-smoke fmt-check clippy doc ci clean
 
 # Regenerate unconditionally.
 artifacts:
@@ -26,18 +26,34 @@ artifacts-jax:
 build:
 	$(CARGO) build --release
 
-test: $(ARTIFACTS_DIR)/meta.json
+# The workspace sets `autotests = false`, so a test file without a
+# matching [[test]] target in Cargo.toml would silently never run.  Fail
+# loudly instead.
+check-test-targets:
+	@registered=$$(grep -A1 '^\[\[test\]\]' Cargo.toml | sed -n 's/^name = "\(.*\)"$$/\1/p'); \
+	missing=0; \
+	for f in rust/tests/*.rs; do \
+		name=$$(basename "$$f" .rs); \
+		echo "$$registered" | grep -qx "$$name" || { \
+			echo "error: $$f has no [[test]] target in Cargo.toml (autotests = false: it would silently not run)"; \
+			missing=1; \
+		}; \
+	done; \
+	exit $$missing
+
+test: check-test-targets $(ARTIFACTS_DIR)/meta.json
 	$(CARGO) test -q
 
 bench: $(ARTIFACTS_DIR)/meta.json
 	$(CARGO) bench
 
 # One sim-driven bench at a short horizon — the CI guard that keeps the
-# fig11-fig17 harness from rotting — plus the event-queue microbench
-# guarding the engine's hot path.
+# fig11-fig17 harness from rotting — plus the microbenches guarding the
+# engine's and the per-request router's hot paths.
 bench-smoke: $(ARTIFACTS_DIR)/meta.json
 	JIAGU_BENCH_DURATION=60 JIAGU_NATIVE=1 $(CARGO) bench --bench fig13_density
 	$(CARGO) bench --bench event_queue
+	$(CARGO) bench --bench router_hotpath
 
 fmt-check:
 	$(CARGO) fmt --all -- --check

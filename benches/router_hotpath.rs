@@ -1,0 +1,103 @@
+//! Per-request router hot path: sustained requests/sec through
+//! `Router::route` + `Router::complete` — the operations the event core
+//! performs once per invocation, so their cost bounds how much traffic a
+//! simulated control plane can absorb per wall-clock second.
+//!
+//! Two shapes bound real usage:
+//!
+//! * **steady state** — every routed request is eventually completed, so
+//!   the in-flight population stays near-constant and picks walk the
+//!   full weighted serving set;
+//! * **queue churn** — arrivals outpace completions for a stretch, so
+//!   FIFO queues grow and drain (the tail-latency regime).
+//!
+//! ```bash
+//! cargo bench --bench router_hotpath
+//! ```
+
+use jiagu::router::{RouteOutcome, Router};
+use jiagu::util::bench::{bench, Table};
+use std::collections::VecDeque;
+use std::time::Duration;
+
+const FUNCTIONS: usize = 16;
+const INSTANCES_PER_FN: usize = 24;
+const NODES: usize = 64;
+
+fn populated_router(seed: u64) -> Router {
+    let mut r = Router::with_seed(seed);
+    let mut id = 0u64;
+    for f in 0..FUNCTIONS {
+        for i in 0..INSTANCES_PER_FN {
+            r.add(f, id, (f * INSTANCES_PER_FN + i) % NODES);
+            id += 1;
+        }
+    }
+    r
+}
+
+fn main() {
+    let mut table = Table::new(&["scenario", "ns/request", "Mreq/s", "p99 ns/request"]);
+
+    // steady state: route one request, complete one in-service request
+    let mut r = populated_router(0x5eed);
+    let mut started: VecDeque<u64> = VecDeque::new();
+    let mut f = 0usize;
+    let mut routed = 0u64;
+    let s = bench(1000, Duration::from_millis(300), || {
+        match r.route(f, routed as f64) {
+            RouteOutcome::Started { instance, .. } => started.push_back(instance),
+            RouteOutcome::Queued { .. } => {}
+            RouteOutcome::ColdWait => unreachable!("every function has serving instances"),
+        }
+        routed += 1;
+        f = (f + 1) % FUNCTIONS;
+        // complete the oldest in-service request; its queue head (if
+        // any) immediately re-enters service on the same instance
+        if started.len() > FUNCTIONS {
+            let id = started.pop_front().expect("non-empty");
+            if r.complete(id).is_some() {
+                started.push_back(id);
+            }
+        }
+    });
+    // one route + (amortised) one complete per iteration
+    let per_req = s.mean_ns / 2.0;
+    table.row(&[
+        format!("steady state ({} fns x {} inst)", FUNCTIONS, INSTANCES_PER_FN),
+        format!("{per_req:.1}"),
+        format!("{:.2}", 1e3 / per_req),
+        format!("{:.1}", s.p99_ns / 2.0),
+    ]);
+
+    // queue churn: bursts of 64 arrivals, then drain 64 completions
+    let mut r = populated_router(0xc4u64);
+    let mut busy: VecDeque<u64> = VecDeque::new();
+    let mut t = 0u64;
+    let s = bench(50, Duration::from_millis(300), || {
+        for _ in 0..64 {
+            let outcome = r.route(t as usize % FUNCTIONS, t as f64);
+            if let RouteOutcome::Started { instance, .. } = outcome {
+                busy.push_back(instance);
+            }
+            t += 1;
+        }
+        for _ in 0..64 {
+            let Some(id) = busy.pop_front() else { break };
+            if r.complete(id).is_some() {
+                busy.push_back(id);
+            }
+        }
+    });
+    // 64 routes + up to 64 completes per iteration
+    let per_req = s.mean_ns / 128.0;
+    table.row(&[
+        "queue churn (64-deep bursts)".to_string(),
+        format!("{per_req:.1}"),
+        format!("{:.2}", 1e3 / per_req),
+        format!("{:.1}", s.p99_ns / 128.0),
+    ]);
+
+    table.print("router hot path (seeded weighted pick + FIFO queues)");
+    assert!(r.total_in_flight() < u32::MAX); // keep the optimizer honest
+}

@@ -150,6 +150,10 @@ fn main() -> Result<()> {
     let workload = traces::Workload::poisson(&cat, &params, 4242);
     let mut cfg = RunConfig::jiagu_45();
     cfg.duration_s = sub_s;
+    // per-request routing: every synthesized invocation is individually
+    // routed (seeded weighted pick), queued FIFO per instance, and
+    // attributed cold-start wait + queueing + service
+    cfg.requests = true;
     let r = Simulation::new(cat.clone(), cfg, predictor.clone()).run_workload(&workload)?;
     println!("  load changes injected:    {}", workload.events.len());
     println!(
@@ -171,6 +175,19 @@ fn main() -> Result<()> {
     println!(
         "  dual-staged under bursts: {} released, {} logical cold starts, {} migrations",
         r.released, r.logical_cold_starts, r.migrations
+    );
+    println!(
+        "  per-request tail latency: {} served | p50 {:.1} / p95 {:.1} / p99 {:.1} ms",
+        r.requests_served, r.request_p50_ms, r.request_p95_ms, r.request_p99_ms
+    );
+    let violations: u64 = r.request_qos_violations.iter().sum();
+    println!(
+        "  per-request QoS:          {} violations ({:.2}%) | {} cold-waited | {} stranded | peak {} in flight/node",
+        violations,
+        100.0 * violations as f64 / r.requests_served.max(1) as f64,
+        r.cold_wait_requests,
+        r.stranded_requests,
+        r.peak_node_in_flight
     );
     Ok(())
 }

@@ -12,6 +12,9 @@
 //! * `forest.json`               trained + flattened random forest
 //! * `predict_check.json`        feature rows → expected predictions
 //! * `meta.json`                 shared contract (dims, layouts, batches)
+//! * `latency_golden.json`       per-request p50/p95/p99 + histogram of a
+//!   fixed 100 ms-bin Poisson scenario run end-to-end through the
+//!   event-driven per-request router (golden-tested byte-identical)
 //! * `model_comparison.json`     the natively computable Fig. 15/16/17a rows
 //!
 //! — in pure Rust, deterministic for a given [`GenConfig`] (all sampling
@@ -25,13 +28,17 @@
 pub mod trainer;
 
 use crate::catalog::{Catalog, FunctionSpec};
+use crate::config::RunConfig;
 use crate::interference::{self, NodeMix, PROFILE_METRICS, RESOURCES};
 use crate::model::{feature_row, N_FEATURES};
-use crate::runtime::NativeForest;
+use crate::runtime::{ForestParams, NativeForest, NativeForestPredictor, Predictor};
+use crate::sim::Simulation;
+use crate::traces::{PoissonParams, Workload};
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::rng::Rng;
 use anyhow::{ensure, Context, Result};
 use std::path::Path;
+use std::sync::Arc;
 
 /// Node/instance sizing shared with `python/compile/datagen.py`.
 pub const NODE_MILLI_CPU: u64 = 48_000;
@@ -169,6 +176,14 @@ pub fn generate(out_dir: &Path, cfg: &GenConfig) -> Result<GenReport> {
     ]);
     write_json(&out_dir.join("predict_check.json"), &check)?;
 
+    // -- per-request latency golden ---------------------------------------
+    // Reload the forest through the same loader the tests use so the
+    // golden run sees exactly the artifact bytes (f32 round-trips are
+    // lossless, but reloading removes even that assumption).
+    let reloaded = ForestParams::load(&out_dir.join("forest.json"))?;
+    let golden_latency = latency_golden(&cat, reloaded)?;
+    write_json(&out_dir.join("latency_golden.json"), &golden_latency)?;
+
     // -- meta --------------------------------------------------------------
     let meta = obj(vec![
         ("n_features", num(N_FEATURES as f64)),
@@ -212,6 +227,52 @@ pub fn generate(out_dir: &Path, cfg: &GenConfig) -> Result<GenReport> {
         test_error,
         fit_seconds,
     })
+}
+
+/// The fixed scenario behind `latency_golden.json`: a 100 ms-bin Poisson
+/// workload routed per-request through the event core.  Kept `pub` so
+/// `rust/tests/golden.rs` replays the *identical* configuration and can
+/// assert byte-identical histogram JSON against the checked-in artifact.
+pub fn latency_golden_scenario(cat: &Catalog) -> (RunConfig, Workload) {
+    let mut cfg = RunConfig::jiagu_45();
+    cfg.n_nodes = 6;
+    cfg.duration_s = 10;
+    cfg.seed = 4242;
+    cfg.requests = true;
+    cfg.eval_interval_ms = 250.0;
+    let params = PoissonParams { duration_s: 10, bin_ms: 100.0, mean_concurrency: 2.0 };
+    let workload = Workload::poisson(cat, &params, 4242);
+    (cfg, workload)
+}
+
+/// Run the [`latency_golden_scenario`] end-to-end over `forest` and
+/// serialise the per-request golden vectors (percentiles, per-function
+/// QoS violations, the full fixed-bin histogram).  Deterministic: equal
+/// catalog + forest bytes give equal JSON bytes.
+pub fn latency_golden(cat: &Catalog, forest: ForestParams) -> Result<Json> {
+    let predictor: Arc<dyn Predictor> = Arc::new(NativeForestPredictor::new(forest));
+    let (cfg, workload) = latency_golden_scenario(cat);
+    let report = Simulation::new(cat.clone(), cfg, predictor).run_workload(&workload)?;
+    ensure!(report.requests_served > 0, "latency golden scenario routed no requests");
+    Ok(obj(vec![
+        ("scenario", s("poisson-100ms-per-request")),
+        ("requests", num(report.requests_served as f64)),
+        ("cold_waits", num(report.cold_wait_requests as f64)),
+        ("stranded", num(report.stranded_requests as f64)),
+        ("peak_node_in_flight", num(report.peak_node_in_flight as f64)),
+        ("p50_ms", num(report.request_p50_ms)),
+        ("p95_ms", num(report.request_p95_ms)),
+        ("p99_ms", num(report.request_p99_ms)),
+        (
+            "requests_per_function",
+            arr(report.request_counts.iter().map(|v| num(*v as f64))),
+        ),
+        (
+            "qos_violations",
+            arr(report.request_qos_violations.iter().map(|v| num(*v as f64))),
+        ),
+        ("histogram", report.latency_hist.to_json()),
+    ]))
 }
 
 /// Paper's error metric: mean |P̂ − P| / P.

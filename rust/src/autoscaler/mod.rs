@@ -83,6 +83,10 @@ pub struct TickOutcome {
     /// of the function existed but could not be converted (the cost
     /// migration avoids; only occurs with `migration = false`).
     pub real_after_release: u32,
+    /// Arrival times of requests that were queued on instances this tick
+    /// released/evicted — the engine re-dispatches them (per-request
+    /// model; see [`crate::router::Router::remove`]).
+    pub orphaned: Vec<(FunctionId, f64)>,
 }
 
 impl TickOutcome {
@@ -96,6 +100,7 @@ impl TickOutcome {
         self.evicted_direct += other.evicted_direct;
         self.migrations += other.migrations;
         self.real_after_release += other.real_after_release;
+        self.orphaned.extend(other.orphaned);
     }
 
     /// Record a committed node change: ask the scheduler for its refresh
@@ -222,7 +227,7 @@ impl Autoscaler {
                     let node = cluster.instance(id).unwrap().node;
                     if sched.find_feasible_conversion(cat, cluster, node, f)? {
                         cluster.reactivate(id, now_ms);
-                        router.add(f, id);
+                        router.add(f, id, node);
                         out.logical_cold_starts += 1;
                         need -= 1;
                         out.notify(sched, cat, cluster, node, now_ms)?;
@@ -252,7 +257,8 @@ impl Autoscaler {
                 let victims = self.newest_serving(cluster, router, f, surplus);
                 for id in victims {
                     let node = cluster.instance(id).unwrap().node;
-                    router.remove(f, id);
+                    let drained = router.remove(f, id);
+                    out.orphaned.extend(drained.into_iter().map(|a| (f, a)));
                     if self.cfg.dual_staged {
                         cluster.release(id, now_ms);
                         out.released += 1;

@@ -92,11 +92,19 @@ pub struct CostModel {
     /// Fixed off-critical-path overhead of one asynchronous capacity
     /// refresh beyond its inferences, ns.
     pub refresh_base_ns: u64,
+    /// Per-request dispatch overhead (routing decision + proxy hop) added
+    /// to the interference-model service time of every routed request, ns.
+    pub request_overhead_ns: u64,
 }
 
 impl Default for CostModel {
     fn default() -> Self {
-        Self { decision_base_ns: 5_000, inference_ns: 25_000, refresh_base_ns: 10_000 }
+        Self {
+            decision_base_ns: 5_000,
+            inference_ns: 25_000,
+            refresh_base_ns: 10_000,
+            request_overhead_ns: 20_000,
+        }
     }
 }
 
@@ -122,6 +130,12 @@ impl CostModel {
     pub fn refresh_ms(&self, inferences: u64) -> f64 {
         self.refresh_ns(inferences) as f64 / 1e6
     }
+
+    /// Per-request dispatch overhead in virtual milliseconds (added to
+    /// every routed request's service time).
+    pub fn request_overhead_ms(&self) -> f64 {
+        self.request_overhead_ns as f64 / 1e6
+    }
 }
 
 /// Full run configuration.
@@ -143,6 +157,13 @@ pub struct RunConfig {
     /// Autoscaler evaluation cadence in virtual ms (1 s mirrors the
     /// paper's testbed; sub-second workloads may want tighter loops).
     pub eval_interval_ms: f64,
+    /// Per-request simulation: synthesize per-invocation arrivals from
+    /// the workload's load steps and route every request individually
+    /// (queueing + tail-latency attribution).  Off by default — the
+    /// aggregate RPS model is much cheaper on multi-hour horizons — and
+    /// orthogonal to every aggregate metric: the same seed produces the
+    /// same density/QoS-window numbers with or without it.
+    pub requests: bool,
 }
 
 impl Default for RunConfig {
@@ -158,6 +179,7 @@ impl Default for RunConfig {
             seed: 42,
             cost: CostModel::default(),
             eval_interval_ms: 1000.0,
+            requests: false,
         }
     }
 }
@@ -244,6 +266,12 @@ impl RunConfig {
         if let Some(v) = j.opt("eval_interval_ms") {
             c.eval_interval_ms = v.as_f64()?;
         }
+        if let Some(v) = j.opt("request_overhead_ns") {
+            c.cost.request_overhead_ns = v.as_f64()? as u64;
+        }
+        if let Some(v) = j.opt("requests") {
+            c.requests = v.as_bool()?;
+        }
         Ok(c)
     }
 }
@@ -270,12 +298,18 @@ mod tests {
 
     #[test]
     fn cost_model_is_linear_in_inferences() {
-        let c = CostModel { decision_base_ns: 1_000, inference_ns: 10_000, refresh_base_ns: 500 };
+        let c = CostModel {
+            decision_base_ns: 1_000,
+            inference_ns: 10_000,
+            refresh_base_ns: 500,
+            request_overhead_ns: 50_000,
+        };
         assert_eq!(c.decision_ns(0), 1_000);
         assert_eq!(c.decision_ns(3), 31_000);
         assert!((c.decision_ms(3) - 0.031).abs() < 1e-12);
         assert_eq!(c.refresh_ns(2), 20_500);
         assert!((c.refresh_ms(0) - 0.0005).abs() < 1e-15);
+        assert!((c.request_overhead_ms() - 0.05).abs() < 1e-15);
     }
 
     #[test]

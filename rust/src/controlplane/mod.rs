@@ -10,9 +10,23 @@
 //!
 //! * [`Event::LoadChange`] — a [`crate::traces::Workload`] step lands:
 //!   one function's offered RPS changes at millisecond resolution,
+//! * [`Event::RequestArrival`] — one request is routed
+//!   ([`Router::route`]): it is admitted by an idle serving instance,
+//!   joins a busy instance's FIFO queue, or parks on the function's
+//!   cold-wait queue when nothing serves it yet; per-request latency
+//!   (cold-start wait + queueing + dispatch overhead + the interference
+//!   model's latency under the instance's *current* node mix) is
+//!   attributed at admission,
+//! * [`Event::RequestComplete`] — the request admitted on an instance
+//!   releases its service slot — one saturated-rate interval stretched
+//!   by the interference slowdown, so per-instance throughput matches
+//!   what the capacity model provisions — and the head of its FIFO
+//!   queue is admitted at this exact instant,
 //! * [`Event::ColdStartComplete`] — an instance flips Starting →
 //!   Saturated and joins the routing set at *exactly* its
-//!   `sched_cost + init_ms` due time (mid-tick, not rounded up),
+//!   `sched_cost + init_ms` due time (mid-tick, not rounded up); any
+//!   cold-waiting requests of the function are drained onto the routing
+//!   set at the same instant,
 //! * [`Event::DeferredUpdateDue`] — a §4.3 capacity refresh lands in the
 //!   scheduler's tables ([`Scheduler::complete_deferred`]); until then
 //!   every fast-path decision genuinely reads the stale table,
@@ -47,19 +61,19 @@
 //! `now_ms`.
 
 use crate::autoscaler::Autoscaler;
-use crate::catalog::Catalog;
-use crate::cluster::{Cluster, InstanceState, NodeId};
+use crate::catalog::{Catalog, FunctionId};
+use crate::cluster::{Cluster, InstanceId, InstanceState, NodeId};
 use crate::config::{RunConfig, SchedulerKind};
 use crate::engine::{Event, EventQueue};
 use crate::interference;
 use crate::model::AccuracyMonitor;
-use crate::router::Router;
+use crate::router::{RouteOutcome, Router};
 use crate::runtime::Predictor;
 use crate::scheduler::{
     CommittedPlan, DeferredUpdate, GsightScheduler, JiaguScheduler, KubernetesScheduler,
     OwlScheduler, Scheduler, SchedulerFeedback,
 };
-use crate::traces::Workload;
+use crate::traces::{Arrival, Workload};
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -91,6 +105,18 @@ pub struct UtilizationSample {
     pub active_nodes: usize,
     /// Cluster size.
     pub n_nodes: usize,
+    /// Requests in flight cluster-wide (per-request model; 0 otherwise).
+    pub in_flight: u32,
+}
+
+/// One routed request's QoS attribution: total latency = cold-start wait
+/// + queueing delay + service time, recorded at service start (service
+/// time is deterministic once started, so this equals completion-time
+/// attribution).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestRecord {
+    pub function: FunctionId,
+    pub latency_ms: f64,
 }
 
 /// Everything a drain of the event queue did, for the caller to fold
@@ -125,6 +151,23 @@ pub struct EngineEvents {
     pub qos: Vec<QosWindow>,
     /// Utilisation samples, one per monitor tick in the drain.
     pub samples: Vec<UtilizationSample>,
+    /// Per-request latency attributions in this drain (service starts).
+    pub requests: Vec<RequestRecord>,
+    /// Arrivals whose *first* dispatch found no serving instance and
+    /// parked on a cold-wait queue (their latency is attributed once
+    /// drained; re-parks after orphan re-dispatch don't re-count).
+    pub cold_waits: u64,
+    /// Router gauge at drain end: highest per-node in-flight count ever.
+    pub peak_node_in_flight: u32,
+    /// Router gauge at drain end: requests in flight cluster-wide.
+    pub in_flight: u32,
+    /// Router gauge at drain end: requests still parked on cold-wait
+    /// queues (stranded if the load never returns — see
+    /// `RunReport::stranded_requests`).
+    pub waiting: u64,
+    /// Router gauge at drain end: requests dispatched into instance FIFO
+    /// queues but not yet admitted into service.
+    pub queued: u64,
     /// Deployed instances (any state) at drain end.
     pub instances: usize,
     /// Nodes hosting at least one instance at drain end.
@@ -191,7 +234,9 @@ impl ControlPlane {
         };
         Self {
             cluster: Cluster::new(cfg.n_nodes),
-            router: Router::new(),
+            // the pick stream must differ from every other seeded stream
+            // yet derive from the run seed (replica determinism)
+            router: Router::with_seed(cfg.seed ^ 0x7e57_0a11),
             autoscaler: Autoscaler::new(cfg.autoscaler.clone(), n_functions),
             monitor: AccuracyMonitor::new(n_functions),
             rng: Rng::seed_from(cfg.seed),
@@ -271,6 +316,21 @@ impl ControlPlane {
         }
     }
 
+    /// Queue synthesized per-invocation arrivals as
+    /// [`Event::RequestArrival`]s.  Call before the first drain, after
+    /// [`ControlPlane::inject_workload`]: a load step and an arrival at
+    /// the same instant then dispatch in injection order, which the
+    /// queue's sequence numbers keep deterministic.
+    pub fn inject_arrivals(&mut self, arrivals: &[Arrival]) {
+        for a in arrivals {
+            // same door policy as inject_workload: malformed events would
+            // wedge or skew the queue, so drop them here
+            if a.function < self.loads.len() && a.at_ms.is_finite() {
+                self.queue.push(a.at_ms, Event::RequestArrival { function: a.function });
+            }
+        }
+    }
+
     /// Seed the self-rescheduling periodic events on first drain (after
     /// any workload injection, so same-instant load steps sort first).
     fn seed(&mut self) {
@@ -314,6 +374,10 @@ impl ControlPlane {
         ev.active_nodes =
             (0..self.cluster.n_nodes()).filter(|n| !self.cluster.node_empty(*n)).count();
         ev.n_nodes = self.cluster.n_nodes();
+        ev.peak_node_in_flight = self.router.peak_node_in_flight();
+        ev.in_flight = self.router.total_in_flight();
+        ev.waiting = self.router.total_waiting();
+        ev.queued = self.router.total_queued();
         Ok(ev)
     }
 
@@ -325,16 +389,34 @@ impl ControlPlane {
                     self.loads[function] = rps;
                 }
             }
+            Event::RequestArrival { function } => {
+                self.route_request(function, due_ms, due_ms, true, ev);
+            }
+            Event::RequestComplete { instance } => {
+                if let Some(next) = self.router.complete(instance) {
+                    // the queue head enters service at this exact instant
+                    self.begin_service(
+                        next.function,
+                        instance,
+                        next.node,
+                        next.arrival_ms,
+                        due_ms,
+                        ev,
+                    );
+                }
+            }
             Event::ColdStartComplete { instance } => {
                 self.pending_cold_starts = self.pending_cold_starts.saturating_sub(1);
                 if let Some(inst) = self.cluster.instance(instance) {
                     if inst.state == InstanceState::Starting {
                         let f = inst.function;
+                        let node = inst.node;
                         let created = inst.created_ms;
                         self.cluster.mark_ready(instance, due_ms);
-                        self.router.add(f, instance);
+                        self.router.add(f, instance, node);
                         ev.cold_starts_completed += 1;
                         ev.cold_start_latency_ms.push(due_ms - created);
+                        self.drain_cold_waiters(f, due_ms, ev);
                     }
                 }
             }
@@ -351,6 +433,78 @@ impl ControlPlane {
             Event::MonitorTick => self.monitor_tick(due_ms, ev)?,
         }
         Ok(())
+    }
+
+    /// Route one request of `f` that arrived at `arrival_ms` (≤ `now_ms`
+    /// for re-dispatched cold-waiters/orphans): admit, queue, or park on
+    /// the cold-wait queue.  `fresh` marks a first dispatch — only those
+    /// count toward `cold_waits`, so a request re-parked after an orphan
+    /// re-dispatch is never double-counted.
+    fn route_request(
+        &mut self,
+        f: FunctionId,
+        arrival_ms: f64,
+        now_ms: f64,
+        fresh: bool,
+        ev: &mut EngineEvents,
+    ) {
+        if f >= self.loads.len() {
+            return;
+        }
+        match self.router.route(f, arrival_ms) {
+            RouteOutcome::Started { instance, node } => {
+                self.begin_service(f, instance, node, arrival_ms, now_ms, ev);
+            }
+            RouteOutcome::Queued { .. } => {} // attributed at admission
+            RouteOutcome::ColdWait => {
+                if fresh {
+                    ev.cold_waits += 1;
+                }
+            }
+        }
+    }
+
+    /// Admit one request into service and attribute its latency.
+    ///
+    /// The instance is a *pipelined* server: it admits one request per
+    /// saturated-rate interval (`1000 / saturated_rps` ms — the
+    /// throughput the capacity model provisions against), stretched by
+    /// the interference slowdown of the node's *current* mix, plus the
+    /// [`CostModel`](crate::config::CostModel) dispatch overhead.  The
+    /// attributed latency is the request's *response time*: wait so far
+    /// (cold-start wait + queueing) + dispatch overhead + the
+    /// interference model's latency.  Attribution happens at admission —
+    /// both terms are deterministic from this instant, so this equals
+    /// completion-time attribution.
+    fn begin_service(
+        &mut self,
+        f: FunctionId,
+        instance: InstanceId,
+        node: NodeId,
+        arrival_ms: f64,
+        now_ms: f64,
+        ev: &mut EngineEvents,
+    ) {
+        let spec = self.cat.get(f);
+        let overhead_ms = self.cfg.cost.request_overhead_ms();
+        let truth_ms =
+            interference::ground_truth_latency(&self.cat, &self.cluster.mix(node), f);
+        let latency_ms = (now_ms - arrival_ms).max(0.0) + overhead_ms + truth_ms;
+        ev.requests.push(RequestRecord { function: f, latency_ms });
+        // slowdown > 1 under colocation pressure: the instance admits
+        // slower exactly when its requests run slower
+        let slowdown = truth_ms / spec.solo_latency_ms;
+        let occupancy_ms = overhead_ms + 1000.0 / spec.saturated_rps * slowdown;
+        self.queue.push(now_ms + occupancy_ms, Event::RequestComplete { instance });
+    }
+
+    /// Re-dispatch every cold-waiting request of `f` the moment an
+    /// instance (re-)joins the routing set; their cold-start wait lands
+    /// in the attributed latency.
+    fn drain_cold_waiters(&mut self, f: FunctionId, now_ms: f64, ev: &mut EngineEvents) {
+        while let Some(arrival_ms) = self.router.pop_waiting(f) {
+            self.route_request(f, arrival_ms, now_ms, false, ev);
+        }
     }
 
     /// Dual-staged scaling evaluation: plans are committed, cold starts
@@ -394,6 +548,18 @@ impl ControlPlane {
             // node: versions are monotone, the old one would be dropped
             // on landing anyway, and its cost is already accounted
             self.in_flight.insert(update.node, update);
+        }
+        // per-request model: re-dispatch requests orphaned by this eval's
+        // releases/evictions (cold-wait if nothing serves them any more),
+        // then drain cold-waiters of functions that regained capacity via
+        // logical cold starts (real cold starts drain on completion)
+        for (f, arrival_ms) in outcome.orphaned {
+            self.route_request(f, arrival_ms, now_ms, false, ev);
+        }
+        for f in 0..self.loads.len() {
+            if self.router.serving_count(f) > 0 && self.router.waiting_count(f) > 0 {
+                self.drain_cold_waiters(f, now_ms, ev);
+            }
         }
         self.queue.push(now_ms + self.eval_interval_ms, Event::AutoscalerEval);
         Ok(())
@@ -446,6 +612,7 @@ impl ControlPlane {
                 .filter(|n| !self.cluster.node_empty(*n))
                 .count(),
             n_nodes: self.cluster.n_nodes(),
+            in_flight: self.router.total_in_flight(),
         });
         self.queue.push(now_ms + MONITOR_INTERVAL_MS, Event::MonitorTick);
         Ok(())
@@ -591,6 +758,69 @@ mod tests {
             let ev = cp.step(10.0, &loads).unwrap();
             assert!(ev.events_processed >= 2, "eval + monitor must still fire");
         }
+    }
+
+    #[test]
+    fn per_request_routing_attributes_cold_wait_queueing_and_service() {
+        use crate::traces::{LoadEvent, Workload};
+        let mut cp = plane();
+        let sat = cp.cat.get(0).saturated_rps;
+        let wl = Workload {
+            name: "request-burst".into(),
+            n_functions: cp.cat.len(),
+            events: vec![LoadEvent { at_ms: 0.0, function: 0, rps: 3.0 * sat }],
+            duration_ms: 5000.0,
+        };
+        cp.inject_workload(&wl);
+        let mut arrivals = wl.synthesize_arrivals(17);
+        assert!(!arrivals.is_empty());
+        // one guaranteed pre-cold-start arrival: nothing can serve before
+        // the first cold start completes at sched_cost + init_ms (≥8.4 ms)
+        arrivals.insert(0, crate::traces::Arrival { at_ms: 1.0, function: 0 });
+        cp.inject_arrivals(&arrivals);
+        let ev = cp.run_until(5000.0).unwrap();
+        // before the first cold start completes nothing serves fn 0, so
+        // early arrivals must park on the cold-wait queue ...
+        assert!(ev.cold_waits > 0, "pre-cold-start arrivals must wait");
+        // ... and be drained once instances join the routing set: every
+        // attributed latency covers wait + service, bounded below by the
+        // modelled per-request cost
+        assert!(!ev.requests.is_empty());
+        assert!(ev.requests.len() <= arrivals.len());
+        let overhead = cp.cfg.cost.request_overhead_ms();
+        for r in &ev.requests {
+            assert_eq!(r.function, 0);
+            assert!(r.latency_ms > overhead, "latency {} must include service", r.latency_ms);
+            assert!(r.latency_ms.is_finite());
+        }
+        assert_eq!(cp.router().waiting_count(0), 0, "cold-waiters drained");
+        assert!(ev.peak_node_in_flight > 0);
+        // request conservation: every injected arrival is either
+        // attributed (admitted) or still waiting/queued at the horizon
+        assert_eq!(
+            ev.requests.len() as u64 + ev.waiting + ev.queued,
+            arrivals.len() as u64,
+            "no request may vanish from the accounting"
+        );
+        cp.router().check_consistent(cp.cluster()).unwrap();
+    }
+
+    #[test]
+    fn request_replicas_stay_in_lockstep() {
+        use crate::traces::{PoissonParams, Workload};
+        let run = || {
+            let mut cp = plane();
+            let params = PoissonParams { duration_s: 6, ..Default::default() };
+            let wl = Workload::poisson(&cp.cat, &params, 23);
+            cp.inject_workload(&wl);
+            cp.inject_arrivals(&wl.synthesize_arrivals(23));
+            cp.run_until(6000.0).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.requests, b.requests, "routing decisions must replay bit-identically");
+        assert_eq!(a.cold_waits, b.cold_waits);
+        assert_eq!(a.peak_node_in_flight, b.peak_node_in_flight);
+        assert_eq!(a.in_flight, b.in_flight);
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //! | [`Event`] | Emitted by | Effect when due |
 //! |---|---|---|
 //! | [`Event::LoadChange`] | [`crate::traces::Workload`] generators | update one function's offered RPS |
-//! | [`Event::ColdStartComplete`] | plan commit (autoscaler eval) | Starting → Saturated, join routing set |
+//! | [`Event::RequestArrival`] | [`crate::traces::Workload::synthesize_arrivals`] | route one request ([`crate::router::Router::pick`]) |
+//! | [`Event::RequestComplete`] | service start (routing / queue pop) | finish service, start the next queued request |
+//! | [`Event::ColdStartComplete`] | plan commit (autoscaler eval) | Starting → Saturated, join routing set, drain cold-waiters |
 //! | [`Event::DeferredUpdateDue`] | §4.3 asynchronous refresh submission | land the capacity-table refresh |
 //! | [`Event::AutoscalerEval`] | self-rescheduling, every eval interval | dual-staged scaling + plan/commit |
 //! | [`Event::MonitorTick`] | self-rescheduling, every second | QoS windows, density sample, §6 feedback |
@@ -39,6 +41,16 @@ use std::collections::BinaryHeap;
 pub enum Event {
     /// The offered load of `function` becomes `rps` from this instant on.
     LoadChange { function: FunctionId, rps: f64 },
+    /// One request for `function` arrives and must be routed now: onto an
+    /// idle serving instance (service starts), a busy one (FIFO queue),
+    /// or — with no serving instance anywhere — the function's cold-wait
+    /// queue, drained when an instance next joins the routing set.
+    RequestArrival { function: FunctionId },
+    /// The request admitted on `instance` releases its service slot (one
+    /// saturated-rate interval, stretched by the interference slowdown);
+    /// the head of the instance's FIFO queue (if any) is admitted at
+    /// this instant.
+    RequestComplete { instance: InstanceId },
     /// A cold start finishes: the instance flips Starting → Saturated and
     /// joins the routing set at exactly its `sched_cost + init_ms` due
     /// time — mid-tick, not at the next tick boundary.

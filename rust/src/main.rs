@@ -6,6 +6,7 @@
 //! jiagu run   [--scheduler jiagu|k8s|gsight|owl] [--trace A|B|C|D|timer|worst]
 //!             [--release 45] [--no-ds] [--no-migration] [--duration 1800]
 //!             [--init cfork|docker|<ms>] [--native] [--config file.json]
+//!             [--requests]            # per-request routing + tail latency
 //!             [--json]                # emit the RunReport as JSON
 //! jiagu compare [--duration 900]      # all schedulers on trace A
 //! jiagu info                          # artifacts + model summary
@@ -88,6 +89,9 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     if args.switches.contains("no-migration") {
         cfg.autoscaler.migration = false;
     }
+    if args.switches.contains("requests") {
+        cfg.requests = true;
+    }
     Ok(cfg)
 }
 
@@ -144,6 +148,23 @@ fn report_json(r: &jiagu::sim::RunReport) -> jiagu::util::json::Json {
             "isolated_functions",
             arr(r.isolated_functions.iter().map(|f| num(*f as f64))),
         ),
+        ("requests_served", num(r.requests_served as f64)),
+        ("request_p50_ms", num(r.request_p50_ms)),
+        ("request_p95_ms", num(r.request_p95_ms)),
+        ("request_p99_ms", num(r.request_p99_ms)),
+        (
+            "request_counts",
+            arr(r.request_counts.iter().map(|v| num(*v as f64))),
+        ),
+        (
+            "request_qos_violations",
+            arr(r.request_qos_violations.iter().map(|v| num(*v as f64))),
+        ),
+        ("cold_wait_requests", num(r.cold_wait_requests as f64)),
+        ("stranded_requests", num(r.stranded_requests as f64)),
+        ("peak_node_in_flight", num(r.peak_node_in_flight as f64)),
+        ("peak_in_flight", num(r.peak_in_flight as f64)),
+        ("latency_histogram", r.latency_hist.to_json()),
     ])
 }
 
@@ -171,6 +192,17 @@ fn print_report(r: &jiagu::sim::RunReport) {
         "  released {} / evicted {}; peak nodes {}",
         r.released, r.evicted, r.peak_nodes
     );
+    if r.requests_served > 0 {
+        println!(
+            "  per-request: {} served, p50 {:.1} / p95 {:.1} / p99 {:.1} ms, {} cold-waited, peak {} in flight/node",
+            r.requests_served,
+            r.request_p50_ms,
+            r.request_p95_ms,
+            r.request_p99_ms,
+            r.cold_wait_requests,
+            r.peak_node_in_flight
+        );
+    }
 }
 
 fn run() -> Result<()> {

@@ -1,7 +1,23 @@
-//! Evaluation metrics: density, QoS violation rate, scheduling cost and
-//! cold-start accounting — the quantities behind Figs. 11–14 and Table 2.
+//! Evaluation metrics: density, QoS violation rate, scheduling cost,
+//! cold-start accounting — the quantities behind Figs. 11–14 and Table 2
+//! — plus the per-request tail-latency histogram of the event-driven
+//! routing model.
+//!
+//! ## Per-request latency
+//!
+//! [`LatencyHistogram`] is a **fixed-bin** histogram (bin width and bin
+//! count chosen at construction, an overflow bucket beyond): recording is
+//! O(1), the memory is constant, and — unlike a retained sample vector —
+//! the serialised form is identical for identical request streams, which
+//! is what lets the golden test assert *byte-identical* histogram JSON
+//! across replays and regenerations.  Percentiles are read from bin
+//! upper edges (the overflow bucket reports the maximum recorded value),
+//! so p50/p95/p99 are conservative to one bin width and fully
+//! deterministic.  [`RequestTracker`] folds the engine's per-request
+//! records into the histogram plus per-function QoS-violation counts.
 
 use crate::catalog::{Catalog, FunctionId};
+use crate::util::json::{arr, num, obj, Json};
 
 /// Streaming percentile estimator: exact over a retained sample vector
 /// (sample counts here are small enough to keep everything).
@@ -47,6 +63,147 @@ impl Samples {
 
     pub fn values(&self) -> &[f64] {
         &self.values
+    }
+}
+
+/// Default per-request histogram bin width (ms).
+pub const LATENCY_BIN_MS: f64 = 4.0;
+/// Default per-request histogram bin count (covers 0–1024 ms; slower
+/// requests land in the overflow bucket).
+pub const LATENCY_BINS: usize = 256;
+
+/// Fixed-bin latency histogram (see the module docs for the determinism
+/// rationale).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyHistogram {
+    bin_ms: f64,
+    bins: Vec<u64>,
+    overflow: u64,
+    count: u64,
+    max_ms: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new(LATENCY_BIN_MS, LATENCY_BINS)
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new(bin_ms: f64, n_bins: usize) -> Self {
+        assert!(bin_ms > 0.0 && bin_ms.is_finite(), "bin width must be positive");
+        assert!(n_bins > 0, "need at least one bin");
+        Self { bin_ms, bins: vec![0; n_bins], overflow: 0, count: 0, max_ms: 0.0 }
+    }
+
+    /// Record one latency sample; non-finite or negative values count
+    /// into the overflow bucket rather than poisoning the bins.
+    pub fn record(&mut self, ms: f64) {
+        self.count += 1;
+        if !ms.is_finite() || ms < 0.0 {
+            self.overflow += 1;
+            return;
+        }
+        self.max_ms = self.max_ms.max(ms);
+        let idx = (ms / self.bin_ms) as usize;
+        if idx < self.bins.len() {
+            self.bins[idx] += 1;
+        } else {
+            self.overflow += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn bin_ms(&self) -> f64 {
+        self.bin_ms
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    /// Largest finite latency recorded.
+    pub fn max_ms(&self) -> f64 {
+        self.max_ms
+    }
+
+    /// The `p`-quantile, read as the upper edge of the bin where the
+    /// cumulative count first reaches `ceil(p · count)`; quantiles that
+    /// fall into the overflow bucket report [`LatencyHistogram::max_ms`].
+    /// 0.0 on an empty histogram.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, c) in self.bins.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return (i + 1) as f64 * self.bin_ms;
+            }
+        }
+        self.max_ms
+    }
+
+    /// Serialise for the golden vectors: every field is integral or an
+    /// exactly round-tripping f64, so equal histograms give equal bytes.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("bin_ms", num(self.bin_ms)),
+            ("bins", arr(self.bins.iter().map(|c| num(*c as f64)))),
+            ("overflow", num(self.overflow as f64)),
+            ("count", num(self.count as f64)),
+            ("max_ms", num(self.max_ms)),
+            ("p50_ms", num(self.percentile(0.50))),
+            ("p95_ms", num(self.percentile(0.95))),
+            ("p99_ms", num(self.percentile(0.99))),
+        ])
+    }
+}
+
+/// Per-request QoS accounting: latency histogram + per-function counts
+/// of requests whose total latency (cold-start wait + queueing + service)
+/// exceeded the function's QoS bound.
+#[derive(Debug, Default)]
+pub struct RequestTracker {
+    pub hist: LatencyHistogram,
+    /// Per function: requests whose latency exceeded the QoS bound.
+    pub violations: Vec<u64>,
+    /// Per function: requests attributed.
+    pub requests: Vec<u64>,
+    /// Arrivals whose first dispatch parked on a cold-wait queue.
+    pub cold_waits: u64,
+}
+
+impl RequestTracker {
+    pub fn new(n_functions: usize) -> Self {
+        Self {
+            hist: LatencyHistogram::default(),
+            violations: vec![0; n_functions],
+            requests: vec![0; n_functions],
+            cold_waits: 0,
+        }
+    }
+
+    /// Fold one attributed request.
+    pub fn record(&mut self, cat: &Catalog, f: FunctionId, latency_ms: f64) {
+        self.hist.record(latency_ms);
+        self.requests[f] += 1;
+        if latency_ms > cat.get(f).qos_latency_ms {
+            self.violations[f] += 1;
+        }
     }
 }
 
@@ -233,6 +390,61 @@ mod tests {
         assert!(c.cold_start_ms.is_empty(), "cold starts attribute at completion");
         c.record_cold_start(8.455);
         assert_eq!(c.cold_start_ms.values(), &[8.455]);
+    }
+
+    #[test]
+    fn latency_histogram_bins_percentiles_and_overflow() {
+        let mut h = LatencyHistogram::new(10.0, 10); // covers 0–100 ms
+        assert_eq!(h.percentile(0.99), 0.0, "empty histogram reads 0");
+        for v in [1.0, 2.0, 5.0, 11.0, 250.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.bins()[0], 3);
+        assert_eq!(h.bins()[1], 1);
+        assert_eq!(h.overflow(), 1);
+        assert_eq!(h.max_ms(), 250.0);
+        // rank(0.5 · 5) = 3 → third sample sits in bin 0 → upper edge 10
+        assert_eq!(h.percentile(0.50), 10.0);
+        // p99 rank = 5 → overflow → max recorded value
+        assert_eq!(h.percentile(0.99), 250.0);
+        // degenerate inputs count but never poison the bins
+        h.record(f64::NAN);
+        h.record(-1.0);
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.overflow(), 3);
+        assert_eq!(h.max_ms(), 250.0);
+    }
+
+    #[test]
+    fn latency_histogram_json_is_deterministic() {
+        let build = || {
+            let mut h = LatencyHistogram::new(2.0, 8);
+            for v in [0.5, 3.2, 7.9, 100.0] {
+                h.record(v);
+            }
+            h
+        };
+        let (a, b) = (build(), build());
+        assert_eq!(a, b);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        // round-trips through the JSON layer
+        let parsed = crate::util::json::Json::parse(&a.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("count").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(parsed.get("bins").unwrap().f64_vec().unwrap().len(), 8);
+    }
+
+    #[test]
+    fn request_tracker_counts_violations_per_function() {
+        let cat = test_catalog();
+        let mut t = RequestTracker::new(cat.len());
+        let qos0 = cat.get(0).qos_latency_ms;
+        t.record(&cat, 0, qos0 * 0.5);
+        t.record(&cat, 0, qos0 * 2.0);
+        t.record(&cat, 1, cat.get(1).qos_latency_ms * 0.9);
+        assert_eq!(t.requests, vec![2, 1, 0, 0]);
+        assert_eq!(t.violations, vec![1, 0, 0, 0]);
+        assert_eq!(t.hist.count(), 3);
     }
 
     #[test]

@@ -1,26 +1,127 @@
-//! Request router: dispatches load across a function's instances.
+//! Request router: per-request dispatch and queueing across a function's
+//! instances.
 //!
 //! The router load-balances over **saturated** instances only; **cached**
 //! instances (dual-staged scaling) are excluded from the routing set the
 //! same way the paper's K8s-Service label trick removes them.  A "logical
 //! cold start" is just re-adding a cached instance to the routing set —
 //! the <1 ms operation the autoscaler prefers over a real cold start.
+//!
+//! ## The per-request model
+//!
+//! Routing is event-driven, one request at a time:
+//!
+//! * [`Router::pick`] chooses a serving instance with probability
+//!   proportional to `1 / (1 + in_flight)` — lightly loaded instances
+//!   draw more traffic, the saturated ones draw less — from the router's
+//!   **own seeded RNG**, so the pick stream is a pure function of the
+//!   seed and the dispatch order (bit-identical across replays; it never
+//!   touches the control plane's noise RNG).
+//! * Each instance **admits one request at a time** through a FIFO
+//!   queue: [`Router::route`] either occupies the free slot (idle
+//!   instance) or appends the arrival to the instance's queue;
+//!   [`Router::complete`] pops the next queued request into the slot.
+//!   The control plane decides how long a slot stays occupied (one
+//!   saturated-rate interval stretched by interference — the pipelined
+//!   server model that matches the capacity planner's throughput).
+//! * A request that finds **no serving instance anywhere** parks on the
+//!   function's *cold-wait* queue ([`RouteOutcome::ColdWait`]); the
+//!   control plane drains it ([`Router::pop_waiting`]) the moment an
+//!   instance joins the routing set, so cold-start wait shows up in that
+//!   request's latency instead of being dropped.
+//! * [`Router::remove`] (release/eviction) hands the victim's queued
+//!   arrivals back to the caller for re-dispatch — the in-service request
+//!   finishes where it started, but queued work never strands on an
+//!   instance that stopped serving.
+//!
+//! Per-node in-flight gauges (and their peak) come along for free and
+//! feed the `RunReport`'s tail-latency accounting.  Determinism contract:
+//! the router holds no wall-clock state and draws randomness only from
+//! its seeded RNG, one draw per successful pick.
 
 use crate::catalog::FunctionId;
-use crate::cluster::{Cluster, InstanceId, InstanceState};
-use std::collections::HashMap;
+use crate::cluster::{Cluster, InstanceId, InstanceState, NodeId};
+use crate::util::rng::Rng;
+use std::collections::{HashMap, VecDeque};
 
-/// Routing table: function → serving (saturated) instances.
-#[derive(Debug, Default)]
+/// Where [`Router::route`] sent a request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RouteOutcome {
+    /// The instance was idle: service starts at the dispatch instant.
+    Started { instance: InstanceId, node: NodeId },
+    /// The instance was busy: the request joined its FIFO queue.
+    Queued { instance: InstanceId, node: NodeId },
+    /// No serving instance exists anywhere: parked on the function's
+    /// cold-wait queue until one joins the routing set.
+    ColdWait,
+}
+
+/// The next request entering service after a [`Router::complete`]: the
+/// head of the instance's FIFO queue, with the arrival time the caller
+/// needs for queueing-delay attribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NextService {
+    pub function: FunctionId,
+    pub node: NodeId,
+    pub arrival_ms: f64,
+}
+
+/// Per-instance dispatch state (created on [`Router::add`], retained
+/// after [`Router::remove`] only while an in-service request drains).
+#[derive(Debug, Clone)]
+struct InstanceLoad {
+    function: FunctionId,
+    node: NodeId,
+    /// Requests dispatched here and not yet completed (1 in service +
+    /// queue length while busy; 0 when idle).
+    in_flight: u32,
+    /// Arrival times of requests waiting behind the in-service one.
+    queue: VecDeque<f64>,
+}
+
+/// Routing table: function → serving (saturated) instances, plus the
+/// per-instance queueing state of the per-request model.
+#[derive(Debug)]
 pub struct Router {
     serving: HashMap<FunctionId, Vec<InstanceId>>,
     /// Count of re-route operations (logical cold starts, releases).
     pub reroutes: u64,
+    /// Seeded pick RNG — the router's only randomness source.
+    rng: Rng,
+    load: HashMap<InstanceId, InstanceLoad>,
+    /// Requests per node currently dispatched (in service + queued).
+    node_in_flight: HashMap<NodeId, u32>,
+    peak_node_in_flight: u32,
+    /// Cold-wait queues: arrival times of requests that found no serving
+    /// instance, per function.
+    waiting: HashMap<FunctionId, VecDeque<f64>>,
+    /// Reusable weight buffer for [`Router::pick`] (never observable).
+    scratch: Vec<f64>,
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::with_seed(0)
+    }
 }
 
 impl Router {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A router whose pick stream derives from `seed`.
+    pub fn with_seed(seed: u64) -> Self {
+        Self {
+            serving: HashMap::new(),
+            reroutes: 0,
+            rng: Rng::seed_from(seed),
+            load: HashMap::new(),
+            node_in_flight: HashMap::new(),
+            peak_node_in_flight: 0,
+            waiting: HashMap::new(),
+            scratch: Vec::new(),
+        }
     }
 
     /// Instances currently receiving traffic for `f`.
@@ -32,32 +133,210 @@ impl Router {
         self.serving(f).len()
     }
 
-    /// Add a newly started (or logically cold-started) instance.
-    pub fn add(&mut self, f: FunctionId, id: InstanceId) {
+    /// Add a newly started (or logically cold-started) instance on
+    /// `node` to the routing set.
+    pub fn add(&mut self, f: FunctionId, id: InstanceId, node: NodeId) {
         let v = self.serving.entry(f).or_default();
         debug_assert!(!v.contains(&id));
         v.push(id);
         self.reroutes += 1;
+        // a re-added instance may still be draining its previous
+        // in-service request; keep that state, re-pin identity, and —
+        // when a cached instance migrated before rejoining — carry the
+        // residual gauge to the new node so per-node counts stay coherent
+        let (carry, old_node) = {
+            let e = self.load.entry(id).or_insert_with(|| InstanceLoad {
+                function: f,
+                node,
+                in_flight: 0,
+                queue: VecDeque::new(),
+            });
+            let carry = if e.node != node { e.in_flight } else { 0 };
+            let old_node = e.node;
+            e.function = f;
+            e.node = node;
+            (carry, old_node)
+        };
+        if carry > 0 {
+            self.dec_node(old_node, carry);
+            self.inc_node_by(node, carry);
+        }
     }
 
-    /// Remove an instance from the routing set (release or eviction).
-    /// Returns whether it was serving.
-    pub fn remove(&mut self, f: FunctionId, id: InstanceId) -> bool {
-        if let Some(v) = self.serving.get_mut(&f) {
-            let before = v.len();
-            v.retain(|x| *x != id);
-            if v.len() != before {
-                self.reroutes += 1;
-                return true;
+    /// Remove an instance from the routing set (release or eviction) and
+    /// return the arrival times of its **queued** (not yet in service)
+    /// requests, which the caller must re-dispatch.  The in-service
+    /// request, if any, finishes where it started.  A no-op (empty vec)
+    /// when the instance was not serving.
+    pub fn remove(&mut self, f: FunctionId, id: InstanceId) -> Vec<f64> {
+        let Some(v) = self.serving.get_mut(&f) else { return Vec::new() };
+        let before = v.len();
+        v.retain(|x| *x != id);
+        if v.len() == before {
+            return Vec::new();
+        }
+        self.reroutes += 1;
+        let Some(e) = self.load.get_mut(&id) else { return Vec::new() };
+        let orphaned: Vec<f64> = e.queue.drain(..).collect();
+        e.in_flight -= orphaned.len() as u32;
+        let node = e.node;
+        if e.in_flight == 0 {
+            self.load.remove(&id);
+        }
+        if !orphaned.is_empty() {
+            self.dec_node(node, orphaned.len() as u32);
+        }
+        orphaned
+    }
+
+    /// Pick a serving instance of `f`, weighted by instantaneous
+    /// in-flight load (`weight ∝ 1 / (1 + in_flight)`), from the seeded
+    /// pick RNG.  `None` when nothing serves `f`; the RNG is only
+    /// consumed on a successful pick, so replica routers fed the same
+    /// dispatch sequence stay in lockstep.
+    pub fn pick(&mut self, f: FunctionId) -> Option<InstanceId> {
+        if self.serving.get(&f).map(|v| v.len()).unwrap_or(0) == 0 {
+            return None;
+        }
+        let u = self.rng.f64();
+        // weights computed once into the reusable scratch buffer (this is
+        // the per-request hot path; see benches/router_hotpath.rs)
+        self.scratch.clear();
+        let serving = &self.serving[&f];
+        let mut total = 0.0;
+        for id in serving {
+            let w = 1.0 / (1.0 + self.load.get(id).map(|e| e.in_flight).unwrap_or(0) as f64);
+            total += w;
+            self.scratch.push(w);
+        }
+        let mut r = u * total;
+        for (id, w) in serving.iter().zip(&self.scratch) {
+            r -= w;
+            if r <= 0.0 {
+                return Some(*id);
             }
         }
-        false
+        serving.last().copied()
     }
 
-    /// Per-instance RPS under equal load balancing of `total_rps`.
+    /// Route one request for `f` arriving at `arrival_ms` (virtual time).
+    pub fn route(&mut self, f: FunctionId, arrival_ms: f64) -> RouteOutcome {
+        let Some(instance) = self.pick(f) else {
+            self.waiting.entry(f).or_default().push_back(arrival_ms);
+            return RouteOutcome::ColdWait;
+        };
+        let e = self.load.get_mut(&instance).expect("picked instance has load state");
+        e.in_flight += 1;
+        let node = e.node;
+        let started = e.in_flight == 1;
+        if !started {
+            e.queue.push_back(arrival_ms);
+        }
+        self.inc_node(node);
+        if started {
+            RouteOutcome::Started { instance, node }
+        } else {
+            RouteOutcome::Queued { instance, node }
+        }
+    }
+
+    /// A service completes on `instance`.  Returns the next queued
+    /// request now entering service, if any.  Gracefully ignores
+    /// completions for instances the router no longer tracks.
+    pub fn complete(&mut self, instance: InstanceId) -> Option<NextService> {
+        // single hash lookup on the per-request hot path
+        let (function, node, next, drained) = {
+            let e = self.load.get_mut(&instance)?;
+            if e.in_flight == 0 {
+                return None;
+            }
+            e.in_flight -= 1;
+            (e.function, e.node, e.queue.pop_front(), e.in_flight == 0)
+        };
+        self.dec_node(node, 1);
+        if let Some(arrival_ms) = next {
+            return Some(NextService { function, node, arrival_ms });
+        }
+        if drained && !self.serving(function).contains(&instance) {
+            // drained after leaving the routing set: drop the state
+            self.load.remove(&instance);
+        }
+        None
+    }
+
+    /// Pop the oldest cold-waiting request of `f` (for re-dispatch once
+    /// an instance serves again).
+    pub fn pop_waiting(&mut self, f: FunctionId) -> Option<f64> {
+        let q = self.waiting.get_mut(&f)?;
+        let arrival = q.pop_front();
+        if q.is_empty() {
+            self.waiting.remove(&f);
+        }
+        arrival
+    }
+
+    /// Requests parked on `f`'s cold-wait queue.
+    pub fn waiting_count(&self, f: FunctionId) -> usize {
+        self.waiting.get(&f).map(|q| q.len()).unwrap_or(0)
+    }
+
+    /// Requests parked on any function's cold-wait queue.
+    pub fn total_waiting(&self) -> u64 {
+        self.waiting.values().map(|q| q.len() as u64).sum()
+    }
+
+    /// Requests sitting in instance FIFO queues (dispatched but not yet
+    /// admitted into service).
+    pub fn total_queued(&self) -> u64 {
+        self.load.values().map(|e| e.queue.len() as u64).sum()
+    }
+
+    /// Requests dispatched to `instance` and not yet completed.
+    pub fn in_flight_of(&self, instance: InstanceId) -> u32 {
+        self.load.get(&instance).map(|e| e.in_flight).unwrap_or(0)
+    }
+
+    /// Requests currently dispatched to `node` (in service + queued).
+    pub fn node_in_flight(&self, node: NodeId) -> u32 {
+        self.node_in_flight.get(&node).copied().unwrap_or(0)
+    }
+
+    /// Highest per-node in-flight count ever observed.
+    pub fn peak_node_in_flight(&self) -> u32 {
+        self.peak_node_in_flight
+    }
+
+    /// Requests currently dispatched cluster-wide.
+    pub fn total_in_flight(&self) -> u32 {
+        self.node_in_flight.values().sum()
+    }
+
+    fn inc_node(&mut self, node: NodeId) {
+        self.inc_node_by(node, 1);
+    }
+
+    fn inc_node_by(&mut self, node: NodeId, by: u32) {
+        let c = self.node_in_flight.entry(node).or_insert(0);
+        *c += by;
+        self.peak_node_in_flight = self.peak_node_in_flight.max(*c);
+    }
+
+    fn dec_node(&mut self, node: NodeId, by: u32) {
+        if let Some(c) = self.node_in_flight.get_mut(&node) {
+            *c = c.saturating_sub(by);
+            if *c == 0 {
+                self.node_in_flight.remove(&node);
+            }
+        }
+    }
+
+    /// Per-instance RPS under equal load balancing of `total_rps` (the
+    /// aggregate window model).  Returns 0.0 — never NaN/inf — when the
+    /// serving set is empty (all instances drained mid-window) or the
+    /// offered load itself is not finite.
     pub fn per_instance_rps(&self, f: FunctionId, total_rps: f64) -> f64 {
         let n = self.serving_count(f);
-        if n == 0 {
+        if n == 0 || !total_rps.is_finite() {
             0.0
         } else {
             total_rps / n as f64
@@ -65,7 +344,10 @@ impl Router {
     }
 
     /// Consistency check against cluster state: the routing set must be
-    /// exactly the saturated instances of each function.
+    /// exactly saturated instances of each function, and the queueing
+    /// state must be internally coherent (per-node gauges equal the sum
+    /// of per-instance in-flight; a busy instance's in-flight exceeds
+    /// its queue by exactly one).
     pub fn check_consistent(&self, cluster: &Cluster) -> anyhow::Result<()> {
         use anyhow::ensure;
         for (f, serving) in &self.serving {
@@ -79,8 +361,35 @@ impl Router {
                     inst.state
                 );
                 ensure!(inst.function == *f, "instance {id} routed to wrong function");
+                let e = self
+                    .load
+                    .get(id)
+                    .ok_or_else(|| anyhow::anyhow!("serving instance {id} has no load state"))?;
+                ensure!(e.node == inst.node, "instance {id} load state on wrong node");
             }
         }
+        let mut per_node: HashMap<NodeId, u32> = HashMap::new();
+        for (id, e) in &self.load {
+            ensure!(
+                e.in_flight as usize >= e.queue.len(),
+                "instance {id}: queue {} longer than in-flight {}",
+                e.queue.len(),
+                e.in_flight
+            );
+            ensure!(
+                e.in_flight as usize - e.queue.len() <= 1,
+                "instance {id}: more than one request in service"
+            );
+            if e.in_flight > 0 {
+                *per_node.entry(e.node).or_insert(0) += e.in_flight;
+            }
+        }
+        ensure!(
+            per_node == self.node_in_flight,
+            "node in-flight gauges {:?} != per-instance sums {:?}",
+            self.node_in_flight,
+            per_node
+        );
         Ok(())
     }
 }
@@ -92,12 +401,12 @@ mod tests {
     #[test]
     fn add_remove_balance() {
         let mut r = Router::new();
-        r.add(0, 1);
-        r.add(0, 2);
+        r.add(0, 1, 0);
+        r.add(0, 2, 1);
         assert_eq!(r.serving_count(0), 2);
         assert_eq!(r.per_instance_rps(0, 100.0), 50.0);
-        assert!(r.remove(0, 1));
-        assert!(!r.remove(0, 1), "double remove is a no-op");
+        assert!(r.remove(0, 1).is_empty());
+        assert!(r.remove(0, 1).is_empty(), "double remove is a no-op");
         assert_eq!(r.per_instance_rps(0, 100.0), 100.0);
         assert_eq!(r.per_instance_rps(1, 100.0), 0.0);
     }
@@ -105,8 +414,118 @@ mod tests {
     #[test]
     fn reroute_counting() {
         let mut r = Router::new();
-        r.add(0, 1);
+        r.add(0, 1, 0);
         r.remove(0, 1);
         assert_eq!(r.reroutes, 2);
+    }
+
+    #[test]
+    fn per_instance_rps_never_nan_or_inf() {
+        let mut r = Router::new();
+        // empty serving set: 0.0, not NaN
+        assert_eq!(r.per_instance_rps(0, 120.0), 0.0);
+        // drained mid-window: instances existed, then all left
+        r.add(0, 1, 0);
+        r.add(0, 2, 1);
+        r.remove(0, 1);
+        r.remove(0, 2);
+        assert_eq!(r.per_instance_rps(0, 120.0), 0.0);
+        // non-finite offered load degrades to 0.0 as well
+        r.add(0, 3, 0);
+        assert_eq!(r.per_instance_rps(0, f64::NAN), 0.0);
+        assert_eq!(r.per_instance_rps(0, f64::INFINITY), 0.0);
+        assert!(r.per_instance_rps(0, 120.0).is_finite());
+    }
+
+    #[test]
+    fn route_queues_fifo_per_instance() {
+        let mut r = Router::with_seed(1);
+        r.add(0, 7, 3);
+        // idle → service starts; busy → FIFO queue on the same instance
+        assert_eq!(r.route(0, 10.0), RouteOutcome::Started { instance: 7, node: 3 });
+        assert_eq!(r.route(0, 11.0), RouteOutcome::Queued { instance: 7, node: 3 });
+        assert_eq!(r.route(0, 12.0), RouteOutcome::Queued { instance: 7, node: 3 });
+        assert_eq!(r.in_flight_of(7), 3);
+        assert_eq!(r.node_in_flight(3), 3);
+        assert_eq!(r.peak_node_in_flight(), 3);
+        // completions pop the queue in arrival order
+        let n1 = r.complete(7).unwrap();
+        assert_eq!(n1.arrival_ms, 11.0);
+        let n2 = r.complete(7).unwrap();
+        assert_eq!(n2.arrival_ms, 12.0);
+        assert!(r.complete(7).is_none());
+        assert_eq!(r.node_in_flight(3), 0);
+        // over-completion never underflows the gauges
+        assert!(r.complete(7).is_none());
+        assert_eq!(r.total_in_flight(), 0);
+    }
+
+    #[test]
+    fn cold_wait_parks_and_pops_in_order() {
+        let mut r = Router::new();
+        assert_eq!(r.route(2, 5.0), RouteOutcome::ColdWait);
+        assert_eq!(r.route(2, 6.0), RouteOutcome::ColdWait);
+        assert_eq!(r.waiting_count(2), 2);
+        assert_eq!(r.pop_waiting(2), Some(5.0));
+        assert_eq!(r.pop_waiting(2), Some(6.0));
+        assert_eq!(r.pop_waiting(2), None);
+        assert_eq!(r.waiting_count(2), 0);
+    }
+
+    #[test]
+    fn remove_orphans_queued_requests_but_not_the_in_service_one() {
+        let mut r = Router::with_seed(4);
+        r.add(0, 1, 0);
+        r.route(0, 1.0); // in service
+        r.route(0, 2.0); // queued
+        r.route(0, 3.0); // queued
+        let orphaned = r.remove(0, 1);
+        assert_eq!(orphaned, vec![2.0, 3.0], "queued arrivals handed back in order");
+        assert_eq!(r.in_flight_of(1), 1, "in-service request keeps draining");
+        assert_eq!(r.node_in_flight(0), 1);
+        assert!(r.complete(1).is_none(), "no queue left to pop");
+        assert_eq!(r.in_flight_of(1), 0, "state dropped after the drain");
+        assert_eq!(r.total_in_flight(), 0);
+    }
+
+    #[test]
+    fn pick_prefers_lightly_loaded_instances() {
+        let mut r = Router::with_seed(9);
+        r.add(0, 1, 0);
+        r.add(0, 2, 1);
+        // saturate instance 1 with queued work
+        for _ in 0..20 {
+            let e = r.load.get_mut(&1).unwrap();
+            e.in_flight += 1;
+        }
+        let mut hits = [0u32; 2];
+        for _ in 0..400 {
+            match r.pick(0).unwrap() {
+                1 => hits[0] += 1,
+                2 => hits[1] += 1,
+                other => panic!("picked unknown instance {other}"),
+            }
+        }
+        assert!(
+            hits[1] > hits[0] * 5,
+            "idle instance must dominate: {hits:?} (weights 1/21 vs 1)"
+        );
+    }
+
+    #[test]
+    fn pick_is_deterministic_per_seed_and_skips_rng_when_empty() {
+        let seq = |seed: u64, warmups: usize| -> Vec<InstanceId> {
+            let mut r = Router::with_seed(seed);
+            // pick on an empty set must not consume the RNG
+            for _ in 0..warmups {
+                assert!(r.pick(0).is_none());
+            }
+            r.add(0, 1, 0);
+            r.add(0, 2, 0);
+            r.add(0, 3, 1);
+            (0..64).map(|_| r.pick(0).unwrap()).collect()
+        };
+        assert_eq!(seq(5, 0), seq(5, 7), "empty picks must not advance the stream");
+        assert_ne!(seq(5, 0), seq(6, 0), "seed must move the pick stream");
     }
 }

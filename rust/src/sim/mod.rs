@@ -18,15 +18,26 @@
 //! available on `Plan`/`DeferredUpdate` for live profiling; only the
 //! instance *init* latency (cfork 8.4 ms / docker 85.5 ms) is a
 //! constant from the literature.
+//!
+//! With `cfg.requests = true` the run additionally synthesizes
+//! per-invocation arrivals from the workload's load steps and routes
+//! every request individually (see [`crate::router`]); the report then
+//! carries the fixed-bin latency histogram, p50/p95/p99 and per-function
+//! QoS-violation counts — all equally bit-identical across replays.
 
 use crate::catalog::Catalog;
 use crate::config::RunConfig;
 use crate::controlplane::{ControlPlane, EngineEvents};
-use crate::metrics::{CostTracker, DensityTracker, QosTracker};
+use crate::metrics::{CostTracker, DensityTracker, LatencyHistogram, QosTracker, RequestTracker};
 use crate::runtime::Predictor;
 use crate::traces::{TraceSet, Workload};
 use anyhow::Result;
 use std::sync::Arc;
+
+/// Salt XOR-ed into `cfg.seed` for the per-invocation arrival stream
+/// (`cfg.requests = true`), keeping it independent of the simulator's
+/// other seeded streams while still replaying per seed.
+pub const ARRIVAL_SEED_SALT: u64 = 0x0a21_71a1;
 
 /// Aggregated outcome of one simulated run.  Every field is derived
 /// from the deterministic event stream, so two runs with the same seed
@@ -63,6 +74,38 @@ pub struct RunReport {
     pub async_nanos: u64,
     /// Functions under the §6 unpredictability fallback at run end.
     pub isolated_functions: Vec<usize>,
+    /// Per-request model (`cfg.requests = true`; all-zero otherwise):
+    /// requests attributed (cold-start wait + queueing + service).
+    /// Requests still queued or cold-waiting when the horizon ends are
+    /// *not* attributed — see [`RunReport::stranded_requests`].
+    pub requests_served: u64,
+    /// Per-request latency percentiles read from the fixed-bin histogram
+    /// (upper bin edges — conservative to one bin width).
+    pub request_p50_ms: f64,
+    pub request_p95_ms: f64,
+    pub request_p99_ms: f64,
+    /// Per function: requests attributed (the denominator for
+    /// per-function violation rates).
+    pub request_counts: Vec<u64>,
+    /// Per function: requests whose total latency exceeded the QoS bound.
+    pub request_qos_violations: Vec<u64>,
+    /// Arrivals whose first dispatch found no serving instance (parked
+    /// on a cold-wait queue before being served).
+    pub cold_wait_requests: u64,
+    /// Unserved demand at the horizon: requests still cold-waiting plus
+    /// requests queued on instances but never admitted.  Their latency
+    /// is unknowable, so they are counted here instead of silently
+    /// dropped — `requests_served + stranded_requests` equals the
+    /// arrivals the horizon let in.
+    pub stranded_requests: u64,
+    /// Highest per-node in-flight request count observed.
+    pub peak_node_in_flight: u32,
+    /// Highest cluster-wide in-flight request count observed at monitor
+    /// samples and drain ends (a *sampled* gauge, unlike the continuous
+    /// per-node high-water mark above, so the two are not comparable).
+    pub peak_in_flight: u32,
+    /// The full fixed-bin latency histogram (golden-vector surface).
+    pub latency_hist: LatencyHistogram,
 }
 
 impl RunReport {
@@ -108,12 +151,22 @@ impl Simulation {
         let mut cp =
             ControlPlane::new(self.cat.clone(), self.cfg.clone(), self.predictor.clone());
         cp.inject_workload(workload);
+        if self.cfg.requests {
+            // per-invocation arrivals derive from the run seed (salted so
+            // the stream differs from every other seeded stream) — same
+            // cfg + workload ⇒ byte-identical arrival vector
+            cp.inject_arrivals(&workload.synthesize_arrivals(self.cfg.seed ^ ARRIVAL_SEED_SALT));
+        }
         let duration = workload.duration_s().min(self.cfg.duration_s);
         let horizon_ms = duration as f64 * 1000.0;
 
         let mut costs = CostTracker::default();
         let mut qos = QosTracker::new(self.cat.len());
         let mut density = DensityTracker::default();
+        let mut reqs = RequestTracker::new(self.cat.len());
+        let mut peak_node_in_flight = 0u32;
+        let mut peak_in_flight = 0u32;
+        let mut stranded_requests = 0u64;
         let mut peak_nodes = self.cfg.n_nodes;
         let mut logical_cold_starts = 0u64;
         let mut real_after_release = 0u64;
@@ -138,9 +191,19 @@ impl Simulation {
             for w in &ev.qos {
                 qos.record(&self.cat, w.function, w.requests, w.measured_ms);
             }
+            for r in &ev.requests {
+                reqs.record(&self.cat, r.function, r.latency_ms);
+            }
+            reqs.cold_waits += ev.cold_waits;
+            peak_node_in_flight = peak_node_in_flight.max(ev.peak_node_in_flight);
+            peak_in_flight = peak_in_flight.max(ev.in_flight);
+            // the final chunk's gauges = unserved demand at the horizon:
+            // cold-waiters plus requests queued but never admitted
+            stranded_requests = ev.waiting + ev.queued;
             for s in &ev.samples {
                 density.record(s.instances, s.active_nodes.max(1), 1.0);
                 peak_nodes = peak_nodes.max(s.n_nodes);
+                peak_in_flight = peak_in_flight.max(s.in_flight);
             }
             peak_nodes = peak_nodes.max(ev.n_nodes);
             logical_cold_starts += ev.logical_cold_starts as u64;
@@ -181,6 +244,17 @@ impl Simulation {
             peak_nodes,
             async_nanos,
             isolated_functions,
+            requests_served: reqs.hist.count(),
+            request_p50_ms: reqs.hist.percentile(0.50),
+            request_p95_ms: reqs.hist.percentile(0.95),
+            request_p99_ms: reqs.hist.percentile(0.99),
+            request_counts: reqs.requests,
+            request_qos_violations: reqs.violations,
+            cold_wait_requests: reqs.cold_waits,
+            stranded_requests,
+            peak_node_in_flight,
+            peak_in_flight,
+            latency_hist: reqs.hist,
         })
     }
 }

@@ -198,6 +198,70 @@ impl Workload {
         }
         Self::finish(format!("diurnal-{seed}"), cat.len(), events, duration_ms)
     }
+
+    /// Synthesize per-invocation request arrivals from this workload's
+    /// load steps: per function, a Poisson process whose instantaneous
+    /// rate follows the piecewise-constant RPS signal (exponential gaps
+    /// re-drawn from the segment's rate; the process restarts at each
+    /// step boundary, which the exponential's memorylessness makes
+    /// harmless).  Each function draws from its own RNG derived from
+    /// `seed`, so the streams are independent of iteration interleaving;
+    /// the merged stream is stably sorted by arrival time, which the
+    /// event queue's push-order tie-break then preserves.  Deterministic:
+    /// equal seeds produce identical arrival vectors.
+    ///
+    /// A per-function safety cap ([`MAX_ARRIVALS_PER_FUNCTION`]) bounds
+    /// pathological rates; hitting it truncates that function's tail.
+    pub fn synthesize_arrivals(&self, seed: u64) -> Vec<Arrival> {
+        let mut arrivals: Vec<Arrival> = Vec::new();
+        for f in 0..self.n_functions {
+            let mut rng =
+                Rng::seed_from(seed.wrapping_add((f as u64).wrapping_mul(0x9e3779b97f4a7c15)));
+            // the function's load steps in time order (`events` is sorted;
+            // a later same-instant step overrides an earlier one, matching
+            // how the engine applies LoadChange events)
+            let steps: Vec<&LoadEvent> =
+                self.events.iter().filter(|e| e.function == f).collect();
+            let mut count = 0usize;
+            'segments: for (i, step) in steps.iter().enumerate() {
+                let seg_end = steps
+                    .get(i + 1)
+                    .map(|n| n.at_ms)
+                    .unwrap_or(self.duration_ms)
+                    .min(self.duration_ms);
+                let rate = step.rps;
+                if rate <= 0.0 || !rate.is_finite() || !step.at_ms.is_finite() {
+                    continue;
+                }
+                let mut t_ms = step.at_ms;
+                loop {
+                    t_ms += rng.exp(rate) * 1000.0;
+                    if t_ms >= seg_end {
+                        break;
+                    }
+                    arrivals.push(Arrival { at_ms: t_ms, function: f });
+                    count += 1;
+                    if count >= MAX_ARRIVALS_PER_FUNCTION {
+                        break 'segments;
+                    }
+                }
+            }
+        }
+        arrivals.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
+        arrivals
+    }
+}
+
+/// Safety cap on synthesized arrivals per function (see
+/// [`Workload::synthesize_arrivals`]).
+pub const MAX_ARRIVALS_PER_FUNCTION: usize = 4 << 20;
+
+/// One synthesized request arrival (the event-engine unit of work for
+/// per-request routing).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    pub at_ms: f64,
+    pub function: usize,
 }
 
 /// Parameters for [`Workload::poisson`].
@@ -563,6 +627,66 @@ mod tests {
             }
         }
         assert!(saw_burst, "bursts must fire at rate 0.2/s over 60 s");
+    }
+
+    #[test]
+    fn arrival_synthesis_is_deterministic_and_sorted() {
+        let cat = test_catalog();
+        let params = PoissonParams { duration_s: 20, ..Default::default() };
+        let wl = Workload::poisson(&cat, &params, 13);
+        let a = wl.synthesize_arrivals(99);
+        let b = wl.synthesize_arrivals(99);
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "same seed, same arrivals");
+        let c = wl.synthesize_arrivals(100);
+        assert_ne!(a, c, "seed must move the arrival stream");
+        for w in a.windows(2) {
+            assert!(w[0].at_ms <= w[1].at_ms, "arrivals must be time-sorted");
+        }
+        for r in &a {
+            assert!(r.at_ms >= 0.0 && r.at_ms < wl.duration_ms);
+            assert!(r.function < wl.n_functions);
+        }
+    }
+
+    #[test]
+    fn arrival_rate_tracks_the_load_signal() {
+        let cat = test_catalog();
+        // one function at a constant 50 rps for 100 s: expect ~5000
+        // arrivals, none outside the active window
+        let wl = Workload {
+            name: "const".into(),
+            n_functions: cat.len(),
+            events: vec![
+                LoadEvent { at_ms: 0.0, function: 0, rps: 50.0 },
+                LoadEvent { at_ms: 100_000.0, function: 0, rps: 0.0 },
+            ],
+            duration_ms: 120_000.0,
+        };
+        let arrivals = wl.synthesize_arrivals(7);
+        assert!(arrivals.iter().all(|a| a.function == 0), "only fn 0 is loaded");
+        let n = arrivals.len() as f64;
+        assert!((n - 5000.0).abs() < 300.0, "Poisson count ≈ rate × time, got {n}");
+        assert!(
+            arrivals.iter().all(|a| a.at_ms < 100_000.0),
+            "no arrivals after the rate drops to zero"
+        );
+    }
+
+    #[test]
+    fn arrival_synthesis_skips_degenerate_rates() {
+        let cat = test_catalog();
+        let wl = Workload {
+            name: "degenerate".into(),
+            n_functions: cat.len(),
+            events: vec![
+                LoadEvent { at_ms: 0.0, function: 0, rps: f64::NAN },
+                LoadEvent { at_ms: 0.0, function: 1, rps: f64::INFINITY },
+                LoadEvent { at_ms: 0.0, function: 2, rps: -3.0 },
+            ],
+            duration_ms: 10_000.0,
+        };
+        assert!(wl.synthesize_arrivals(1).is_empty(), "degenerate rates produce nothing");
     }
 
     #[test]

@@ -36,12 +36,13 @@ fn tiny_config() -> GenConfig {
     }
 }
 
-const DETERMINISTIC_FILES: [&str; 5] = [
+const DETERMINISTIC_FILES: [&str; 6] = [
     "meta.json",
     "functions.json",
     "forest.json",
     "interference_check.json",
     "predict_check.json",
+    "latency_golden.json",
 ];
 
 #[test]
@@ -110,6 +111,29 @@ fn generated_artifacts_roundtrip_through_loaders() {
         let rel = (g - w).abs() / w.abs().max(1e-6);
         assert!(rel < 1e-6, "predict_check row {i}: {g} vs {w}");
     }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Self-contained version of the byte-identical latency golden (the
+/// repo-artifact variant lives in golden.rs): regenerating the fixed
+/// per-request scenario from the *loaded* artifacts must reproduce
+/// `latency_golden.json` exactly.
+#[test]
+fn latency_golden_replays_byte_identically_from_loaded_artifacts() {
+    let dir = tmp_dir("latency");
+    generate(&dir, &tiny_config()).unwrap();
+    let cat = Catalog::load(&dir.join("functions.json")).unwrap();
+    let forest = ForestParams::load(&dir.join("forest.json")).unwrap();
+    let got = jiagu::artifacts::latency_golden(&cat, forest).unwrap();
+    let want = std::fs::read_to_string(dir.join("latency_golden.json")).unwrap();
+    assert_eq!(format!("{}\n", got.to_string()), want, "per-request golden must replay");
+    let parsed = Json::parse(&want).unwrap();
+    assert!(parsed.get("requests").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(
+        parsed.get("qos_violations").unwrap().f64_vec().unwrap().len(),
+        cat.len(),
+        "one violation counter per function"
+    );
     let _ = std::fs::remove_dir_all(dir);
 }
 

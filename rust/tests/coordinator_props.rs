@@ -159,8 +159,9 @@ fn autoscaler_random_loads_keep_router_consistent() {
             // new instances become ready next tick
             for id in out.cold_started {
                 cluster.mark_ready(id, now);
-                let f = cluster.instance(id).unwrap().function;
-                router.add(f, id);
+                let inst = cluster.instance(id).unwrap();
+                let (f, node) = (inst.function, inst.node);
+                router.add(f, id, node);
             }
             cluster.check_invariants().unwrap();
             router.check_consistent(&cluster).unwrap();
@@ -214,8 +215,9 @@ fn dual_staged_vs_nods_state_machines() {
             saw_logical |= out.logical_cold_starts > 0;
             for id in out.cold_started {
                 cluster.mark_ready(id, now);
-                let f = cluster.instance(id).unwrap().function;
-                router.add(f, id);
+                let inst = cluster.instance(id).unwrap();
+                let (f, node) = (inst.function, inst.node);
+                router.add(f, id, node);
             }
             for n in 0..cluster.n_nodes() {
                 for f in 0..cat.len() {

@@ -131,18 +131,27 @@ fn replays_are_bit_identical_full_report() {
 #[test]
 fn subsecond_poisson_workload_replays_bit_identical_and_serves() {
     // The same total-determinism contract must hold for workloads the
-    // tick loop could not express: 100 ms Poisson bins.
+    // tick loop could not express: 100 ms Poisson bins — now with the
+    // per-request model on, so the histogram, per-function violation
+    // counts and in-flight gauges are part of the replayed surface.
     let Some((cat, dir)) = setup() else { return };
     let predictor = load_predictor(&dir, true).unwrap();
-    let params = traces::PoissonParams { duration_s: 90, ..Default::default() };
+    let params = traces::PoissonParams { duration_s: 45, ..Default::default() };
     let wl = traces::Workload::poisson(&cat, &params, 77);
     let mut cfg = RunConfig::jiagu_45();
-    cfg.duration_s = 90;
+    cfg.duration_s = 45;
+    cfg.requests = true;
     let a = Simulation::new(cat.clone(), cfg.clone(), predictor.clone())
         .run_workload(&wl)
         .unwrap();
-    let b = Simulation::new(cat, cfg, predictor).run_workload(&wl).unwrap();
+    let b = Simulation::new(cat.clone(), cfg, predictor).run_workload(&wl).unwrap();
     assert_eq!(a, b, "sub-second workload must replay bit-identically");
+    // the new per-request fields, asserted field by field so a future
+    // PartialEq regression cannot silently shrink the replayed surface
+    assert_eq!(a.latency_hist, b.latency_hist, "histogram bins must replay");
+    assert_eq!(a.request_qos_violations, b.request_qos_violations);
+    assert_eq!(a.peak_node_in_flight, b.peak_node_in_flight);
+    assert_eq!(a.cold_wait_requests, b.cold_wait_requests);
     assert!(a.instances_started > 0, "poisson load must drive scale-ups");
     // cold starts complete at sched_cost + init (cfork 8.4 ms), far
     // below the tick boundary the old loop rounded up to
@@ -151,6 +160,55 @@ fn subsecond_poisson_workload_replays_bit_identical_and_serves() {
         "event-resolution cold start latency, got {}",
         a.cold_start_ms_mean
     );
+    // the per-request surface is genuinely populated and coherent
+    assert!(a.requests_served > 0, "arrivals must be synthesized and routed");
+    assert_eq!(
+        a.latency_hist.bins().iter().sum::<u64>() + a.latency_hist.overflow(),
+        a.requests_served,
+        "every attributed request lands in exactly one bin"
+    );
+    assert!(a.request_p50_ms > 0.0);
+    assert!(a.request_p95_ms >= a.request_p50_ms);
+    assert!(a.request_p99_ms >= a.request_p95_ms);
+    assert_eq!(a.request_qos_violations.len(), cat.len());
+    assert_eq!(
+        a.request_counts.iter().sum::<u64>(),
+        a.requests_served,
+        "per-function counts must partition the attributed requests"
+    );
+    for (served, violated) in a.request_counts.iter().zip(&a.request_qos_violations) {
+        assert!(violated <= served, "violations bounded by requests per function");
+    }
+    assert!(a.cold_wait_requests > 0, "pre-cold-start arrivals must wait");
+    assert!(a.peak_node_in_flight > 0);
+}
+
+#[test]
+fn request_model_leaves_aggregate_metrics_untouched() {
+    // The per-request path draws from its own seeded streams: switching
+    // it on must not move any aggregate metric (density, QoS windows,
+    // fast-path counters, cold starts) for the same seed.
+    let Some((cat, dir)) = setup() else { return };
+    let predictor = load_predictor(&dir, true).unwrap();
+    let params = traces::PoissonParams { duration_s: 30, ..Default::default() };
+    let wl = traces::Workload::poisson(&cat, &params, 31);
+    let mut cfg = RunConfig::jiagu_45();
+    cfg.duration_s = 30;
+    let off = Simulation::new(cat.clone(), cfg.clone(), predictor.clone())
+        .run_workload(&wl)
+        .unwrap();
+    cfg.requests = true;
+    let on = Simulation::new(cat, cfg, predictor).run_workload(&wl).unwrap();
+    assert_eq!(off.requests_served, 0, "off = no per-request attribution");
+    assert!(on.requests_served > 0);
+    assert_eq!(off.density, on.density);
+    assert_eq!(off.qos_violation_rate, on.qos_violation_rate);
+    assert_eq!(off.instances_started, on.instances_started);
+    assert_eq!(off.fast_decisions, on.fast_decisions);
+    assert_eq!(off.slow_decisions, on.slow_decisions);
+    assert_eq!(off.cold_start_ms_mean, on.cold_start_ms_mean);
+    assert_eq!(off.released, on.released);
+    assert_eq!(off.logical_cold_starts, on.logical_cold_starts);
 }
 
 #[test]

@@ -95,6 +95,36 @@ fn feature_rows_match_python_to_f32() {
     }
 }
 
+/// Per-request tail-latency golden: replaying the fixed 100 ms-bin
+/// Poisson scenario (`artifacts::latency_golden_scenario`) over the
+/// checked-in forest must reproduce `latency_golden.json` — histogram
+/// included — **byte for byte**.  Any nondeterminism anywhere on the
+/// request path (arrival synthesis, pick RNG, queue ordering, service
+/// times, histogram fold) breaks this test.
+#[test]
+fn per_request_latency_histogram_matches_golden_byte_identical() {
+    let Some(dir) = artifacts() else { return };
+    let path = dir.join("latency_golden.json");
+    if !path.exists() {
+        eprintln!("SKIP: latency_golden.json absent (re-run `make artifacts`)");
+        return;
+    }
+    let cat = Catalog::load(&dir.join("functions.json")).unwrap();
+    let forest = jiagu::runtime::ForestParams::load(&dir.join("forest.json")).unwrap();
+    let got = jiagu::artifacts::latency_golden(&cat, forest).unwrap();
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        format!("{}\n", got.to_string()),
+        want,
+        "latency golden must replay byte-identically"
+    );
+    // sanity on the vectors themselves (golden JSON is well-formed)
+    let parsed = Json::parse(&want).unwrap();
+    let p50 = parsed.get("p50_ms").unwrap().as_f64().unwrap();
+    let p99 = parsed.get("p99_ms").unwrap().as_f64().unwrap();
+    assert!(p50 > 0.0 && p99 >= p50, "percentiles ordered: p50 {p50} p99 {p99}");
+}
+
 #[test]
 fn catalog_packing_limit_is_twelve() {
     // the Fig. 13 density baseline: 48000 mCPU node / 4000 mCPU request

@@ -1,0 +1,225 @@
+//! Property tests over the per-request router (hand-rolled generators
+//! over the crate's seeded RNG — no proptest offline; every failure
+//! reports its seed):
+//!
+//! * the router never dispatches a request to a node without a serving
+//!   instance of the function (and never to a non-saturated instance),
+//! * in-flight accounting never goes negative or drifts: per-node gauges
+//!   always equal the per-instance sums and the test's own outstanding
+//!   count, under adversarial completions included,
+//! * two replica `ControlPlane`s fed the same event stream make
+//!   byte-identical routing decisions.
+//!
+//! Registered in `Cargo.toml` as a `[[test]]` target — `autotests =
+//! false`, so an unregistered file would silently never run (and `make
+//! test` now fails on exactly that).
+
+use jiagu::artifacts::make_catalog;
+use jiagu::catalog::Catalog;
+use jiagu::cluster::{Cluster, InstanceId, InstanceState};
+use jiagu::config::RunConfig;
+use jiagu::controlplane::ControlPlane;
+use jiagu::router::{RouteOutcome, Router};
+use jiagu::runtime::{ForestParams, NativeForestPredictor, Predictor};
+use jiagu::traces::{PoissonParams, Workload};
+use jiagu::util::rng::Rng;
+use std::sync::Arc;
+
+fn catalog(seed: u64) -> Catalog {
+    Catalog::from_functions(make_catalog(6, seed))
+}
+
+fn stub_predictor() -> Arc<dyn Predictor> {
+    Arc::new(NativeForestPredictor::new(ForestParams::synthetic_stub(
+        jiagu::model::N_FEATURES,
+        0.05,
+        0.05,
+    )))
+}
+
+/// Random place/release/reactivate/route/complete sequences against a
+/// live cluster: every dispatch must land on a saturated instance of the
+/// requested function, and the router's in-flight accounting must match
+/// a shadow count exactly (never negative, never drifting).
+#[test]
+fn random_sequences_route_only_to_serving_instances() {
+    for seed in 0..8u64 {
+        let cat = catalog(seed);
+        let mut rng = Rng::seed_from(seed ^ 0x70e7);
+        let mut cluster = Cluster::new(4);
+        let mut router = Router::with_seed(seed);
+        // instances whose head-of-line request is in service right now
+        let mut in_service: Vec<InstanceId> = Vec::new();
+        let mut outstanding: i64 = 0;
+        for step in 0..600usize {
+            let now = step as f64 * 10.0;
+            let f = rng.below(cat.len() as u64) as usize;
+            match rng.below(10) {
+                // grow: place + ready + join routing set
+                0 | 1 => {
+                    let node = rng.below(cluster.n_nodes() as u64) as usize;
+                    let id = cluster.place(&cat, f, node, now);
+                    cluster.mark_ready(id, now);
+                    router.add(f, id, node);
+                }
+                // shrink: release one serving instance, re-dispatch its
+                // orphaned queue
+                2 => {
+                    let serving = router.serving(f).to_vec();
+                    if let Some(id) = serving.first().copied() {
+                        let orphaned = router.remove(f, id);
+                        cluster.release(id, now);
+                        outstanding -= orphaned.len() as i64;
+                        for arrival in orphaned {
+                            match router.route(f, arrival) {
+                                RouteOutcome::ColdWait => {}
+                                RouteOutcome::Started { instance, .. } => {
+                                    outstanding += 1;
+                                    in_service.push(instance);
+                                }
+                                RouteOutcome::Queued { .. } => outstanding += 1,
+                            }
+                        }
+                    }
+                }
+                // logical cold start: cached instance rejoins
+                3 => {
+                    if let Some(id) = cluster.cached_of(f).first().copied() {
+                        let node = cluster.instance(id).unwrap().node;
+                        cluster.reactivate(id, now);
+                        router.add(f, id, node);
+                    }
+                }
+                // complete the in-service request on some busy instance
+                4 | 5 => {
+                    if !in_service.is_empty() {
+                        let idx = rng.below(in_service.len() as u64) as usize;
+                        let id = in_service.swap_remove(idx);
+                        outstanding -= 1;
+                        if router.complete(id).is_some() {
+                            in_service.push(id); // queue head enters service
+                            outstanding += 1;
+                        }
+                    }
+                }
+                // route one request
+                _ => match router.route(f, now) {
+                    RouteOutcome::Started { instance, node } => {
+                        outstanding += 1;
+                        in_service.push(instance);
+                        let inst = cluster.instance(instance).unwrap_or_else(|| {
+                            panic!("seed {seed} step {step}: routed to unknown instance")
+                        });
+                        assert_eq!(inst.function, f, "seed {seed} step {step}");
+                        assert_eq!(inst.state, InstanceState::Saturated, "seed {seed}");
+                        assert_eq!(inst.node, node, "seed {seed} step {step}");
+                        assert!(
+                            !cluster.find_instances(node, f, InstanceState::Saturated).is_empty(),
+                            "seed {seed} step {step}: node {node} serves nothing of fn {f}"
+                        );
+                    }
+                    RouteOutcome::Queued { instance, node } => {
+                        outstanding += 1;
+                        let inst = cluster.instance(instance).unwrap();
+                        assert_eq!(inst.function, f, "seed {seed} step {step}");
+                        assert_eq!(inst.state, InstanceState::Saturated, "seed {seed}");
+                        assert!(
+                            !cluster.find_instances(node, f, InstanceState::Saturated).is_empty(),
+                            "seed {seed} step {step}: node {node} serves nothing of fn {f}"
+                        );
+                    }
+                    RouteOutcome::ColdWait => {
+                        assert_eq!(
+                            router.serving_count(f),
+                            0,
+                            "seed {seed} step {step}: cold-wait despite serving instances"
+                        );
+                    }
+                },
+            }
+            assert!(outstanding >= 0, "seed {seed} step {step}: negative outstanding");
+            assert_eq!(
+                router.total_in_flight() as i64, outstanding,
+                "seed {seed} step {step}: in-flight gauges drifted"
+            );
+            router.check_consistent(&cluster).unwrap_or_else(|e| {
+                panic!("seed {seed} step {step}: {e}");
+            });
+            cluster.check_invariants().unwrap();
+        }
+    }
+}
+
+/// Adversarial completion storms (unknown ids, double completes, idle
+/// instances) must never underflow any gauge.
+#[test]
+fn in_flight_gauges_survive_adversarial_completions() {
+    let mut router = Router::with_seed(3);
+    router.add(0, 1, 0);
+    assert!(router.complete(1).is_none(), "idle instance: nothing to complete");
+    assert!(router.complete(999).is_none(), "unknown instance is a no-op");
+    assert_eq!(router.node_in_flight(0), 0);
+    let RouteOutcome::Started { instance, .. } = router.route(0, 1.0) else {
+        panic!("single idle instance must start service");
+    };
+    assert_eq!(instance, 1);
+    assert!(router.complete(1).is_none());
+    for _ in 0..5 {
+        assert!(router.complete(1).is_none(), "double completes stay no-ops");
+    }
+    assert_eq!(router.total_in_flight(), 0);
+    assert_eq!(router.node_in_flight(0), 0);
+    assert_eq!(router.peak_node_in_flight(), 1, "peak is a high-water mark");
+}
+
+/// Two replica control planes fed the same workload + arrival stream pop
+/// the same events and make byte-identical routing decisions — the
+/// precondition for sharded/replicated control planes (ROADMAP).
+#[test]
+fn control_plane_replicas_make_byte_identical_routing_decisions() {
+    for seed in [7u64, 19] {
+        let cat = catalog(1);
+        let mut cfg = RunConfig::jiagu_45();
+        cfg.n_nodes = 4;
+        cfg.seed = seed;
+        cfg.duration_s = 8;
+        cfg.eval_interval_ms = 500.0;
+        let params = PoissonParams { duration_s: 8, ..Default::default() };
+        let workload = Workload::poisson(&cat, &params, seed);
+        let arrivals = workload.synthesize_arrivals(seed ^ 0xa441);
+        assert!(!arrivals.is_empty());
+
+        let mut planes: Vec<ControlPlane> = (0..2)
+            .map(|_| {
+                let mut cp = ControlPlane::new(cat.clone(), cfg.clone(), stub_predictor());
+                cp.inject_workload(&workload);
+                cp.inject_arrivals(&arrivals);
+                cp
+            })
+            .collect();
+
+        let mut total_requests = 0usize;
+        for chunk in 1..=4u32 {
+            let until = chunk as f64 * 2000.0;
+            let a = planes[0].run_until(until).unwrap();
+            let b = planes[1].run_until(until).unwrap();
+            assert_eq!(a.requests, b.requests, "seed {seed}: routing decisions diverged");
+            assert_eq!(a.cold_waits, b.cold_waits, "seed {seed}");
+            assert_eq!(a.in_flight, b.in_flight, "seed {seed}");
+            assert_eq!(a.peak_node_in_flight, b.peak_node_in_flight, "seed {seed}");
+            assert_eq!(a.events_processed, b.events_processed, "seed {seed}");
+            total_requests += a.requests.len();
+            for f in 0..cat.len() {
+                assert_eq!(
+                    planes[0].router().serving(f),
+                    planes[1].router().serving(f),
+                    "seed {seed}: serving sets diverged for fn {f}"
+                );
+            }
+            for cp in &planes {
+                cp.router().check_consistent(cp.cluster()).unwrap();
+            }
+        }
+        assert!(total_requests > 0, "seed {seed}: the scenario must route requests");
+    }
+}
