@@ -10,7 +10,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts artifacts-jax build test check-test-targets bench bench-smoke fmt-check clippy doc ci clean
+.PHONY: artifacts artifacts-jax build test check-test-targets bench bench-smoke determinism fmt-check clippy doc ci clean
 
 # Regenerate unconditionally.
 artifacts:
@@ -26,16 +26,25 @@ artifacts-jax:
 build:
 	$(CARGO) build --release
 
-# The workspace sets `autotests = false`, so a test file without a
-# matching [[test]] target in Cargo.toml would silently never run.  Fail
-# loudly instead.
+# The workspace sets `autotests = false` / `autobenches = false`, so a
+# test or bench file without a matching [[test]] / [[bench]] target in
+# Cargo.toml would silently never run.  Fail loudly instead.
+# (benches/common/ is the shared helper module, not a bench binary.)
 check-test-targets:
 	@registered=$$(grep -A1 '^\[\[test\]\]' Cargo.toml | sed -n 's/^name = "\(.*\)"$$/\1/p'); \
+	benches=$$(grep -A1 '^\[\[bench\]\]' Cargo.toml | sed -n 's/^name = "\(.*\)"$$/\1/p'); \
 	missing=0; \
 	for f in rust/tests/*.rs; do \
 		name=$$(basename "$$f" .rs); \
 		echo "$$registered" | grep -qx "$$name" || { \
 			echo "error: $$f has no [[test]] target in Cargo.toml (autotests = false: it would silently not run)"; \
+			missing=1; \
+		}; \
+	done; \
+	for f in benches/*.rs; do \
+		name=$$(basename "$$f" .rs); \
+		echo "$$benches" | grep -qx "$$name" || { \
+			echo "error: $$f has no [[bench]] target in Cargo.toml (autobenches = false: it would silently not run)"; \
 			missing=1; \
 		}; \
 	done; \
@@ -49,11 +58,30 @@ bench: $(ARTIFACTS_DIR)/meta.json
 
 # One sim-driven bench at a short horizon — the CI guard that keeps the
 # fig11-fig17 harness from rotting — plus the microbenches guarding the
-# engine's and the per-request router's hot paths.
+# engine's and the per-request router's hot paths, and the shard-scaling
+# bench (which also asserts 1/2/4-shard reports are byte-identical).
 bench-smoke: $(ARTIFACTS_DIR)/meta.json
 	JIAGU_BENCH_DURATION=60 JIAGU_NATIVE=1 $(CARGO) bench --bench fig13_density
 	$(CARGO) bench --bench event_queue
 	$(CARGO) bench --bench router_hotpath
+	$(CARGO) bench --bench shard_scaling
+
+# Determinism matrix: the fixed-seed latency-golden scenario must emit
+# byte-identical RunReport JSON at every shard count — the merged report
+# is a function of the partition layout only, never of the worker-thread
+# count.  Reports land in target/determinism/ (uploaded by CI).
+determinism: $(ARTIFACTS_DIR)/meta.json
+	@mkdir -p target/determinism; \
+	for n in 1 2 4; do \
+		echo "jiagu run --trace golden --shards $$n --json"; \
+		$(CARGO) run --release --quiet --bin jiagu -- run --trace golden --shards $$n --json \
+			> target/determinism/report-shards-$$n.json || exit 1; \
+	done; \
+	cmp target/determinism/report-shards-1.json target/determinism/report-shards-2.json || \
+		{ echo "error: shards 2 diverged from shards 1"; exit 1; }; \
+	cmp target/determinism/report-shards-1.json target/determinism/report-shards-4.json || \
+		{ echo "error: shards 4 diverged from shards 1"; exit 1; }; \
+	echo "determinism: shards 1/2/4 emit byte-identical RunReports"
 
 fmt-check:
 	$(CARGO) fmt --all -- --check
@@ -68,7 +96,7 @@ clippy:
 doc:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
-ci: build fmt-check clippy doc test bench-smoke
+ci: build fmt-check clippy doc test bench-smoke determinism
 
 clean:
 	$(CARGO) clean

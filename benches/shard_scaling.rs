@@ -1,0 +1,127 @@
+//! Shard-scaling throughput: wall-clock events/sec of the sharded
+//! control plane at 1 / 2 / 4 worker threads over the *same* partition
+//! layout — the tentpole claim that parallel shards buy throughput
+//! without buying nondeterminism.  Every run must merge to the same
+//! bytes (asserted here, not just in CI), so the speedup column is the
+//! only thing allowed to move between rows.
+//!
+//! Self-contained: generates its own catalog and uses the synthetic-stub
+//! forest, so it runs on a fresh checkout without `make artifacts`.
+//!
+//! ```bash
+//! cargo bench --bench shard_scaling
+//! # JIAGU_BENCH_DURATION=60 scales the virtual horizon (default 20 s);
+//! # JIAGU_BENCH_JSON=path.json additionally writes the rows as JSON
+//! # (uploaded as a CI workflow artifact).
+//! ```
+
+use jiagu::artifacts::make_catalog;
+use jiagu::catalog::Catalog;
+use jiagu::config::RunConfig;
+use jiagu::controlplane::shard::ShardedControlPlane;
+use jiagu::runtime::{ForestParams, NativeForestPredictor, Predictor};
+use jiagu::sim::RunReport;
+use jiagu::traces::{PoissonParams, Workload};
+use jiagu::util::bench::Table;
+use jiagu::util::json::{arr, num, obj, s};
+use std::sync::Arc;
+use std::time::Instant;
+
+const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
+const PARTITIONS: usize = 4;
+const N_FUNCTIONS: usize = 8;
+const N_NODES: usize = 16;
+/// Deterministic runs: wall time is the only noise, so a few repeats
+/// with a min-take are enough.
+const REPEATS: usize = 3;
+
+fn main() {
+    let duration_s: usize = std::env::var("JIAGU_BENCH_DURATION")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20);
+    let cat = Catalog::from_functions(make_catalog(N_FUNCTIONS, 0xbe7c));
+    let predictor: Arc<dyn Predictor> = Arc::new(NativeForestPredictor::new(
+        ForestParams::synthetic_stub(jiagu::model::N_FEATURES, 0.05, 0.05),
+    ));
+    let workload = Workload::poisson(
+        &cat,
+        &PoissonParams { duration_s, bin_ms: 100.0, mean_concurrency: 3.0 },
+        0x51ed,
+    );
+
+    let run = |shards: usize| -> (RunReport, f64) {
+        let mut cfg = RunConfig::jiagu_45();
+        cfg.n_nodes = N_NODES;
+        cfg.duration_s = duration_s;
+        cfg.requests = true;
+        cfg.eval_interval_ms = 250.0;
+        cfg.seed = 4242;
+        cfg.partitions = PARTITIONS;
+        cfg.shards = shards;
+        let plane = ShardedControlPlane::new(cat.clone(), cfg, predictor.clone());
+        let mut best_s = f64::INFINITY;
+        let mut report = None;
+        for _ in 0..REPEATS {
+            let t0 = Instant::now();
+            let r = plane.run_workload(&workload).expect("sharded run");
+            best_s = best_s.min(t0.elapsed().as_secs_f64());
+            report = Some(r);
+        }
+        (report.expect("at least one repeat"), best_s)
+    };
+
+    let mut table = Table::new(&["shards", "events", "wall ms", "events/sec", "speedup"]);
+    let mut rows = Vec::new();
+    let mut reference: Option<(RunReport, f64)> = None;
+    for shards in SHARD_COUNTS {
+        let (report, secs) = run(shards);
+        assert!(report.events_processed > 0, "the scenario must process events");
+        let events_per_sec = report.events_processed as f64 / secs;
+        let speedup = match &reference {
+            None => 1.0,
+            Some((reference_report, reference_secs)) => {
+                // the determinism guard: parallelism may only move time
+                assert_eq!(
+                    *reference_report,
+                    report,
+                    "{shards}-shard report must be bit-identical to 1-shard"
+                );
+                reference_secs / secs
+            }
+        };
+        table.row(&[
+            format!("{shards}"),
+            format!("{}", report.events_processed),
+            format!("{:.1}", secs * 1e3),
+            format!("{events_per_sec:.0}"),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(obj(vec![
+            ("shards", num(shards as f64)),
+            ("partitions", num(PARTITIONS as f64)),
+            ("events_processed", num(report.events_processed as f64)),
+            ("wall_seconds", num(secs)),
+            ("events_per_sec", num(events_per_sec)),
+            ("speedup", num(speedup)),
+        ]));
+        if reference.is_none() {
+            reference = Some((report, secs));
+        }
+    }
+    table.print(&format!("shard scaling ({PARTITIONS} partitions, {duration_s}s horizon)"));
+    println!("(reports byte-identical across all shard counts — asserted)");
+
+    if let Ok(path) = std::env::var("JIAGU_BENCH_JSON") {
+        if !path.is_empty() {
+            let payload = obj(vec![
+                ("bench", s("shard_scaling")),
+                ("duration_s", num(duration_s as f64)),
+                ("rows", arr(rows)),
+            ]);
+            std::fs::write(&path, format!("{}\n", payload.to_string()))
+                .expect("writing JIAGU_BENCH_JSON");
+            println!("wrote {path}");
+        }
+    }
+}

@@ -149,6 +149,26 @@ pub fn compute_capacity(
     predictor: &dyn Predictor,
     cfg: &CapacityConfig,
 ) -> Result<u32> {
+    Ok(compute_capacity_counted(cat, mix, target, predictor, cfg)?.0)
+}
+
+/// [`compute_capacity`] plus the number of batched predictor invocations
+/// the sweep cost: 0 when the room check short-circuits, 1 otherwise.
+///
+/// The count is returned by the sweep itself rather than read back off
+/// the predictor's shared [`InferenceStats`](crate::runtime::InferenceStats)
+/// counters: those are process-global, so a snapshot delta would absorb
+/// inferences run by *sibling* control planes when shards execute on
+/// parallel threads — and the count feeds `CostModel` due times, where
+/// any cross-thread bleed would make the event stream thread-count-
+/// dependent.
+pub fn compute_capacity_counted(
+    cat: &Catalog,
+    mix: &NodeMix,
+    target: FunctionId,
+    predictor: &dyn Predictor,
+    cfg: &CapacityConfig,
+) -> Result<(u32, u64)> {
     // neighbour entries with the target removed
     let neighbours: Vec<(FunctionId, u32, u32)> = mix
         .entries
@@ -169,7 +189,7 @@ pub fn compute_capacity(
         .saturating_sub(neighbour_sat + neighbour_cached + target_cached);
     let max_c = cfg.max_candidates.min(room);
     if max_c == 0 {
-        return Ok(0);
+        return Ok((0, 0));
     }
 
     // functions whose QoS must hold: target + all neighbours with sat > 0
@@ -209,7 +229,7 @@ pub fn compute_capacity(
         }
         capacity = c;
     }
-    Ok(capacity)
+    Ok((capacity, 1))
 }
 
 /// Recompute the full capacity table of a node (asynchronous update body):
@@ -338,6 +358,24 @@ mod tests {
         let (calls, rows, _) = oracle.stats.snapshot();
         assert_eq!(calls, 1, "sweep must be a single batched inference");
         assert!(rows >= cfg.max_candidates as u64 / 2);
+    }
+
+    #[test]
+    fn counted_sweep_reports_inference_cost_without_shared_counters() {
+        let cat = test_catalog();
+        let oracle = OraclePredictor::new(cat.clone());
+        let mix = NodeMix::new(vec![(0, 2, 0)]);
+        let (cap, inf) =
+            compute_capacity_counted(&cat, &mix, 0, &oracle, &CapacityConfig::default()).unwrap();
+        assert_eq!(inf, 1, "one batched inference per sweep");
+        assert!(cap >= 1);
+        // the returned count must equal what actually hit the predictor
+        assert_eq!(oracle.stats.snapshot().0, 1);
+        // no room: the sweep short-circuits without paying an inference
+        let no_room = CapacityConfig { max_instances_per_node: 0, ..Default::default() };
+        let (cap0, inf0) = compute_capacity_counted(&cat, &mix, 0, &oracle, &no_room).unwrap();
+        assert_eq!((cap0, inf0), (0, 0));
+        assert_eq!(oracle.stats.snapshot().0, 1, "predictor untouched");
     }
 
     #[test]

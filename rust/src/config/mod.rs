@@ -8,6 +8,13 @@ use crate::util::json::Json;
 use anyhow::{bail, Result};
 use std::path::Path;
 
+/// Default partition count of the sharded control plane
+/// ([`crate::controlplane::shard`]).  The partition layout — not the
+/// worker-thread count — is what determines the merged report, so this
+/// stays fixed while `shards` varies; the CI determinism matrix pins
+/// exactly that invariance.
+pub const DEFAULT_PARTITIONS: usize = 4;
+
 /// Which scheduler drives a run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SchedulerKind {
@@ -164,6 +171,19 @@ pub struct RunConfig {
     /// orthogonal to every aggregate metric: the same seed produces the
     /// same density/QoS-window numbers with or without it.
     pub requests: bool,
+    /// Worker threads of the sharded orchestrator
+    /// ([`crate::controlplane::shard::ShardedControlPlane`]).  `0` (the
+    /// default) runs the single unsharded control plane; any value ≥ 1
+    /// runs the partitioned layout, with `shards` threads draining the
+    /// partitions in parallel.  The merged report is byte-identical for
+    /// every thread count — only wall-clock changes.
+    pub shards: usize,
+    /// Partition count of the sharded layout: functions (round-robin by
+    /// id) and nodes (proportional split) are divided into this many
+    /// independent control-plane cells.  Fixed independently of `shards`
+    /// so the report depends only on the layout, never on parallelism;
+    /// clamped to `min(n_functions, n_nodes)` at layout build time.
+    pub partitions: usize,
 }
 
 impl Default for RunConfig {
@@ -180,6 +200,8 @@ impl Default for RunConfig {
             cost: CostModel::default(),
             eval_interval_ms: 1000.0,
             requests: false,
+            shards: 0,
+            partitions: DEFAULT_PARTITIONS,
         }
     }
 }
@@ -272,6 +294,12 @@ impl RunConfig {
         if let Some(v) = j.opt("requests") {
             c.requests = v.as_bool()?;
         }
+        if let Some(v) = j.opt("shards") {
+            c.shards = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("partitions") {
+            c.partitions = v.as_usize()?;
+        }
         Ok(c)
     }
 }
@@ -310,6 +338,20 @@ mod tests {
         assert_eq!(c.refresh_ns(2), 20_500);
         assert!((c.refresh_ms(0) - 0.0005).abs() < 1e-15);
         assert!((c.request_overhead_ms() - 0.05).abs() < 1e-15);
+    }
+
+    #[test]
+    fn load_reads_shard_knobs_and_defaults_stay_unsharded() {
+        let d = RunConfig::default();
+        assert_eq!(d.shards, 0, "unsharded by default");
+        assert_eq!(d.partitions, DEFAULT_PARTITIONS);
+        let path = std::env::temp_dir().join("jiagu_cfg_shards_test.json");
+        std::fs::write(&path, r#"{"shards": 2, "partitions": 8, "seed": 9}"#).unwrap();
+        let c = RunConfig::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(c.shards, 2);
+        assert_eq!(c.partitions, 8);
+        assert_eq!(c.seed, 9);
     }
 
     #[test]

@@ -59,6 +59,14 @@
 //! `RunReport`.  [`ControlPlane::step`] keeps the closed-loop driver
 //! API: set the offered loads directly, then drain inclusively up to
 //! `now_ms`.
+//!
+//! One control plane is one thread; the [`shard`] module scales past
+//! that by partitioning functions and nodes into independent cells, each
+//! a plain `ControlPlane` over its own event sub-stream, drained on
+//! parallel threads and merged into one report — byte-identical for any
+//! thread count.
+
+pub mod shard;
 
 use crate::autoscaler::Autoscaler;
 use crate::catalog::{Catalog, FunctionId};

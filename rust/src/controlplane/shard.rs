@@ -1,0 +1,354 @@
+//! Sharded parallel control planes with a deterministic report merge.
+//!
+//! One [`ControlPlane`](crate::controlplane::ControlPlane) drains one
+//! event queue on one thread — fine for a 24-node testbed, a ceiling for
+//! the ROADMAP's production-scale target.  `router_props` established
+//! the precondition (two replica control planes make byte-identical
+//! decisions from the same event stream); this module builds on it by
+//! **partitioning** the workload into independent control-plane cells
+//! and running them on parallel threads:
+//!
+//! * The [`ShardLayout`] divides the catalog's functions (round-robin by
+//!   id, so heavy and light functions interleave) and the cluster's
+//!   nodes (proportional split) into `cfg.partitions` disjoint cells.
+//! * Each cell is a complete, plain control plane: full catalog, its own
+//!   node allotment, its own seeded RNG streams, and only its own
+//!   functions' [`LoadEvent`](crate::traces::LoadEvent)s/arrivals —
+//!   routed to it by [`Workload::restrict`] with relative event order
+//!   preserved, so each cell's `(due_ms, seq)` contract is exactly what
+//!   a dedicated control plane would see.
+//! * [`ShardedControlPlane::run_workload`] executes the cells on
+//!   `cfg.shards` worker threads (`std::thread::scope`; cells are
+//!   assigned round-robin to workers) and merges the per-cell
+//!   [`RunReport`]s **in ascending cell order** via [`RunReport::merge`].
+//!
+//! ## The determinism contract
+//!
+//! The merged report is a function of the *partition layout only*.
+//! `shards` picks how many threads drain the cells; it never changes
+//! which cells exist, what events they see, or the order reports merge
+//! in — so `--shards 1`, `--shards 2` and `--shards 4` emit
+//! byte-identical reports (the CI determinism matrix pins this), and a
+//! crashed-and-retried run reproduces exactly.  Three properties carry
+//! the proof obligation:
+//!
+//! 1. **cell isolation** — cells share no mutable state.  The one shared
+//!    object, the predictor, is `&self`-pure; even its inference
+//!    *accounting* is returned by value from each sweep
+//!    (`capacity::compute_capacity_counted`) rather than read off the
+//!    shared atomic counters, which parallel cells bump concurrently;
+//! 2. **per-cell determinism** — each cell replays bit-identically for
+//!    its seed (the engine's `(due_ms, seq)` contract, PR 3/4);
+//! 3. **pinned merge order** — reports fold in cell order 0..P with the
+//!    exactly-associative algebra of [`RunReport::merge`].
+//!
+//! Semantically a partitioned run is a *different* (coarser-grained)
+//! system than the single shared cluster: functions in different cells
+//! never colocate, so cross-cell interference is zero by construction —
+//! the paper's per-region deployment story, where each region's control
+//! plane schedules onto its own nodes.  That is why the reference for
+//! the byte-identity matrix is the 1-**shard** run of the same
+//! partitioned layout, not the unpartitioned control plane (which
+//! `partitions = 1` reproduces exactly — pinned by a test below).
+
+use crate::catalog::Catalog;
+use crate::config::RunConfig;
+use crate::runtime::Predictor;
+use crate::sim::{RunReport, Simulation};
+use crate::traces::{TraceSet, Workload};
+use anyhow::{anyhow, ensure, Result};
+use std::sync::Arc;
+
+/// Multiplier deriving a cell's seed from the run seed (splitmix64's
+/// golden-ratio increment): cell 0 keeps the run seed unchanged — which
+/// makes the 1-partition layout bit-equal to the unsharded control plane
+/// — while every other cell gets a well-separated stream.
+const CELL_SEED_MULT: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// Deterministic seed of one cell; depends only on (run seed, cell).
+pub fn cell_seed(seed: u64, cell: usize) -> u64 {
+    seed ^ (cell as u64).wrapping_mul(CELL_SEED_MULT)
+}
+
+/// The deterministic partition layout: which functions and how many
+/// nodes each cell owns.  Built from `(n_functions, n_nodes,
+/// partitions)` alone — never from the shard/thread count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardLayout {
+    partitions: usize,
+    n_functions: usize,
+    /// Per-cell node allotment (proportional split of `n_nodes`).
+    node_share: Vec<usize>,
+}
+
+impl ShardLayout {
+    /// Build the layout.  `partitions` is clamped into
+    /// `1..=min(n_functions, n_nodes)` so every cell owns at least one
+    /// function and one node.
+    pub fn new(n_functions: usize, n_nodes: usize, partitions: usize) -> Self {
+        let cap = n_functions.min(n_nodes);
+        let p = partitions.clamp(1, cap.max(1));
+        let node_share = (0..p).map(|i| n_nodes / p + usize::from(i < n_nodes % p)).collect();
+        Self { partitions: p, n_functions, node_share }
+    }
+
+    /// Number of cells (after clamping).
+    pub fn partitions(&self) -> usize {
+        self.partitions
+    }
+
+    /// The cell owning `function` (round-robin by id).
+    pub fn cell_of(&self, function: usize) -> usize {
+        function % self.partitions
+    }
+
+    /// Starting node count of `cell`'s sub-cluster.
+    pub fn nodes_of(&self, cell: usize) -> usize {
+        self.node_share[cell]
+    }
+
+    /// The (global) function ids `cell` owns, ascending.
+    pub fn functions_of(&self, cell: usize) -> Vec<usize> {
+        (cell..self.n_functions).step_by(self.partitions).collect()
+    }
+}
+
+/// The sharded orchestrator: partitions a workload across independent
+/// control-plane cells, drains them on parallel threads, and merges the
+/// per-cell reports deterministically (see the module docs).
+pub struct ShardedControlPlane {
+    cat: Catalog,
+    cfg: RunConfig,
+    predictor: Arc<dyn Predictor>,
+    layout: ShardLayout,
+}
+
+impl ShardedControlPlane {
+    pub fn new(cat: Catalog, cfg: RunConfig, predictor: Arc<dyn Predictor>) -> Self {
+        let layout = ShardLayout::new(cat.len(), cfg.n_nodes, cfg.partitions);
+        Self { cat, cfg, predictor, layout }
+    }
+
+    pub fn layout(&self) -> &ShardLayout {
+        &self.layout
+    }
+
+    /// The plain-control-plane configuration `cell` runs with: its node
+    /// allotment, its derived seed, sharding itself switched off.
+    pub fn cell_config(&self, cell: usize) -> RunConfig {
+        let mut cfg = self.cfg.clone();
+        cfg.n_nodes = self.layout.nodes_of(cell);
+        cfg.seed = cell_seed(self.cfg.seed, cell);
+        cfg.shards = 0;
+        cfg.partitions = 1;
+        cfg
+    }
+
+    /// Run a per-second trace (converted to its event-stream form).
+    pub fn run(&self, trace: &TraceSet) -> Result<RunReport> {
+        self.run_workload(&trace.workload())
+    }
+
+    /// Partition `workload` across the layout's cells, drain every cell
+    /// (on `cfg.shards.max(1)` threads, capped at the cell count), and
+    /// merge the per-cell reports in ascending cell order.
+    pub fn run_workload(&self, workload: &Workload) -> Result<RunReport> {
+        ensure!(
+            workload.n_functions == self.cat.len(),
+            "workload spans {} functions, catalog has {}",
+            workload.n_functions,
+            self.cat.len()
+        );
+        let p = self.layout.partitions();
+        let mut cells = Vec::with_capacity(p);
+        for c in 0..p {
+            let cell_workload = workload.restrict(|f| self.layout.cell_of(f) == c);
+            cells.push((self.cell_config(c), cell_workload));
+        }
+        let threads = self.cfg.shards.clamp(1, p);
+
+        let mut reports: Vec<Option<RunReport>> = (0..p).map(|_| None).collect();
+        if threads == 1 {
+            for (c, (cfg, wl)) in cells.iter().enumerate() {
+                reports[c] = Some(self.run_cell(cfg, wl)?);
+            }
+        } else {
+            // Workers take cells round-robin; each returns (cell, result)
+            // pairs that land back into the cell-indexed slot, so thread
+            // scheduling can never reorder anything the merge sees.
+            std::thread::scope(|scope| -> Result<()> {
+                let cells = &cells;
+                let mut handles = Vec::with_capacity(threads);
+                for w in 0..threads {
+                    handles.push(scope.spawn(move || -> Vec<(usize, Result<RunReport>)> {
+                        let mut worker = Vec::new();
+                        let mut c = w;
+                        while c < p {
+                            let (cfg, wl) = &cells[c];
+                            worker.push((c, self.run_cell(cfg, wl)));
+                            c += threads;
+                        }
+                        worker
+                    }));
+                }
+                for handle in handles {
+                    let worker = handle.join().map_err(|_| anyhow!("shard worker panicked"))?;
+                    for (c, report) in worker {
+                        reports[c] = Some(report?);
+                    }
+                }
+                Ok(())
+            })?;
+        }
+
+        // pinned merge order: ascending cell index
+        let mut iter = reports.into_iter().map(|r| r.expect("every cell ran"));
+        let mut merged = iter.next().expect("layout has at least one cell");
+        for report in iter {
+            merged.merge(&report)?;
+        }
+        Ok(merged)
+    }
+
+    /// One cell = one plain simulation over the full catalog with the
+    /// cell's sub-workload, node allotment and seed.
+    fn run_cell(&self, cfg: &RunConfig, workload: &Workload) -> Result<RunReport> {
+        Simulation::new(self.cat.clone(), cfg.clone(), self.predictor.clone())
+            .run_workload(workload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::tests::test_catalog;
+    use crate::runtime::{ForestParams, NativeForestPredictor};
+    use crate::traces::PoissonParams;
+
+    fn stub_predictor() -> Arc<dyn Predictor> {
+        Arc::new(NativeForestPredictor::new(ForestParams::synthetic_stub(
+            crate::model::N_FEATURES,
+            0.05,
+            0.05,
+        )))
+    }
+
+    fn base_cfg() -> RunConfig {
+        let mut cfg = RunConfig::jiagu_45();
+        cfg.n_nodes = 6;
+        cfg.duration_s = 8;
+        cfg.requests = true;
+        cfg.eval_interval_ms = 250.0;
+        cfg.partitions = 2;
+        cfg
+    }
+
+    fn test_workload(cat: &Catalog) -> Workload {
+        Workload::poisson(cat, &PoissonParams { duration_s: 8, ..Default::default() }, 33)
+    }
+
+    fn run_with_shards(shards: usize) -> RunReport {
+        let cat = test_catalog();
+        let mut cfg = base_cfg();
+        cfg.shards = shards;
+        let wl = test_workload(&cat);
+        ShardedControlPlane::new(cat, cfg, stub_predictor()).run_workload(&wl).unwrap()
+    }
+
+    #[test]
+    fn layout_partitions_functions_and_nodes_exactly() {
+        let l = ShardLayout::new(5, 7, 3);
+        assert_eq!(l.partitions(), 3);
+        assert_eq!(l.functions_of(0), vec![0, 3]);
+        assert_eq!(l.functions_of(1), vec![1, 4]);
+        assert_eq!(l.functions_of(2), vec![2]);
+        // 7 nodes over 3 cells: 3 + 2 + 2
+        assert_eq!((0..3).map(|c| l.nodes_of(c)).collect::<Vec<_>>(), vec![3, 2, 2]);
+        // every function owned by exactly its cell
+        for f in 0..5 {
+            assert!(l.functions_of(l.cell_of(f)).contains(&f));
+        }
+        // clamping: never more cells than functions or nodes, never zero
+        assert_eq!(ShardLayout::new(2, 64, 8).partitions(), 2);
+        assert_eq!(ShardLayout::new(64, 3, 8).partitions(), 3);
+        assert_eq!(ShardLayout::new(4, 4, 0).partitions(), 1);
+    }
+
+    #[test]
+    fn cell_seeds_derive_deterministically_and_cell0_keeps_run_seed() {
+        assert_eq!(cell_seed(42, 0), 42);
+        assert_ne!(cell_seed(42, 1), 42);
+        assert_ne!(cell_seed(42, 1), cell_seed(42, 2));
+        assert_eq!(cell_seed(42, 3), cell_seed(42, 3));
+    }
+
+    /// The tentpole invariant: the merged report is a function of the
+    /// partition layout only — every worker-thread count produces the
+    /// same bytes (asserted through the full `PartialEq` surface,
+    /// histogram and raw sample vectors included).
+    #[test]
+    fn shard_count_never_changes_the_merged_report() {
+        let reference = run_with_shards(1);
+        assert!(reference.requests_served > 0, "scenario must route traffic");
+        assert!(reference.instances_started > 0);
+        for shards in [2, 3, 4] {
+            let parallel = run_with_shards(shards);
+            assert_eq!(
+                reference,
+                parallel,
+                "{shards} worker threads must merge to the 1-thread bytes"
+            );
+        }
+    }
+
+    /// A 1-partition layout is the unsharded control plane, exactly:
+    /// cell 0 keeps the run seed, owns every node and every event, and a
+    /// single-report merge path is the identity.
+    #[test]
+    fn single_partition_layout_equals_plain_simulation() {
+        let cat = test_catalog();
+        let mut cfg = base_cfg();
+        cfg.partitions = 1;
+        cfg.shards = 1;
+        let wl = test_workload(&cat);
+        let sharded = ShardedControlPlane::new(cat.clone(), cfg.clone(), stub_predictor())
+            .run_workload(&wl)
+            .unwrap();
+        cfg.shards = 0;
+        let plain = Simulation::new(cat, cfg, stub_predictor()).run_workload(&wl).unwrap();
+        assert_eq!(sharded, plain);
+    }
+
+    /// Cells never colocate foreign functions: each cell's per-function
+    /// request counts live entirely inside its owned id set.
+    #[test]
+    fn cells_only_serve_their_own_functions() {
+        let cat = test_catalog();
+        let cfg = base_cfg();
+        let wl = test_workload(&cat);
+        let cp = ShardedControlPlane::new(cat, cfg, stub_predictor());
+        let layout = cp.layout().clone();
+        for cell in 0..layout.partitions() {
+            let cell_wl = wl.restrict(|f| layout.cell_of(f) == cell);
+            let report = cp.run_cell(&cp.cell_config(cell), &cell_wl).unwrap();
+            for (f, count) in report.request_counts.iter().enumerate() {
+                if layout.cell_of(f) != cell {
+                    assert_eq!(*count, 0, "cell {cell} served foreign function {f}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_workload_is_rejected() {
+        let cat = test_catalog();
+        let cp = ShardedControlPlane::new(cat, base_cfg(), stub_predictor());
+        let wl = Workload {
+            name: "wrong-arity".into(),
+            n_functions: 1,
+            events: Vec::new(),
+            duration_ms: 1000.0,
+        };
+        assert!(cp.run_workload(&wl).is_err());
+    }
+}

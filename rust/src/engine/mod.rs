@@ -31,6 +31,14 @@
 //! `O(n)`-per-tick `Vec::retain`/partition scans, and due times are
 //! honoured at full `f64` millisecond resolution instead of being rounded
 //! up to the next 1 s tick boundary.
+//!
+//! The contract is also what makes control planes **composable**: a
+//! partitioned sub-stream of a workload (see
+//! [`crate::traces::Workload::restrict`]) pushed into a fresh queue
+//! preserves the original relative order, so each shard cell of
+//! [`crate::controlplane::shard`] replays exactly as a dedicated control
+//! plane fed that sub-stream would — per-cell determinism is what the
+//! parallel drain and the pinned-order report merge build on.
 
 use crate::catalog::FunctionId;
 use crate::cluster::{InstanceId, NodeId};

@@ -3,14 +3,21 @@
 //! Subcommands (hand-rolled CLI; no clap offline):
 //!
 //! ```text
-//! jiagu run   [--scheduler jiagu|k8s|gsight|owl] [--trace A|B|C|D|timer|worst]
+//! jiagu run   [--scheduler jiagu|k8s|gsight|owl] [--trace A|B|C|D|timer|worst|golden]
 //!             [--release 45] [--no-ds] [--no-migration] [--duration 1800]
 //!             [--init cfork|docker|<ms>] [--native] [--config file.json]
 //!             [--requests]            # per-request routing + tail latency
+//!             [--shards N]            # sharded control planes on N threads
+//!             [--partitions P]        # partition layout (default 4)
 //!             [--json]                # emit the RunReport as JSON
 //! jiagu compare [--duration 900]      # all schedulers on trace A
 //! jiagu info                          # artifacts + model summary
 //! ```
+//!
+//! `--trace golden` replays the fixed-seed latency-golden scenario
+//! (`artifacts::latency_golden_scenario`) — the CI determinism matrix
+//! runs it at `--shards 1,2,4` and byte-compares the `--json` outputs;
+//! only the parallelism knobs apply on top of the pinned scenario.
 
 use anyhow::{bail, Context, Result};
 use jiagu::config::{InitModel, RunConfig, SchedulerKind};
@@ -92,6 +99,12 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     if args.switches.contains("requests") {
         cfg.requests = true;
     }
+    if let Some(v) = args.flags.get("shards") {
+        cfg.shards = v.parse().context("--shards")?;
+    }
+    if let Some(v) = args.flags.get("partitions") {
+        cfg.partitions = v.parse().context("--partitions")?;
+    }
     Ok(cfg)
 }
 
@@ -107,7 +120,7 @@ fn make_trace(
         }
         "timer" => traces::timer_trace(cat, duration, 60),
         "worst" => traces::worstcase_trace(cat, duration, 90, 20),
-        _ => bail!("unknown trace {name:?} (A|B|C|D|timer|worst)"),
+        _ => bail!("unknown trace {name:?} (A|B|C|D|timer|worst|golden)"),
     })
 }
 
@@ -119,6 +132,7 @@ fn report_json(r: &jiagu::sim::RunReport) -> jiagu::util::json::Json {
         ("scheduler", s(&r.scheduler)),
         ("trace", s(&r.trace)),
         ("duration_s", num(r.duration_s as f64)),
+        ("events_processed", num(r.events_processed as f64)),
         ("density", num(r.density)),
         ("qos_violation_rate", num(r.qos_violation_rate)),
         (
@@ -189,8 +203,8 @@ fn print_report(r: &jiagu::sim::RunReport) {
         r.fast_decisions, r.slow_decisions, r.logical_cold_starts, r.migrations
     );
     println!(
-        "  released {} / evicted {}; peak nodes {}",
-        r.released, r.evicted, r.peak_nodes
+        "  released {} / evicted {}; peak nodes {}; {} events processed",
+        r.released, r.evicted, r.peak_nodes, r.events_processed
     );
     if r.requests_served > 0 {
         println!(
@@ -213,11 +227,26 @@ fn run() -> Result<()> {
             let cfg = build_config(&args)?;
             let cat = jiagu::catalog::Catalog::load(&artifacts.join("functions.json"))?;
             let trace_name = args.flags.get("trace").map(|s| s.as_str()).unwrap_or("A");
-            let trace = make_trace(&cat, trace_name, cfg.duration_s)?;
             let native = args.switches.contains("native");
             let predictor = load_predictor(&artifacts, native)?;
-            let sim = Simulation::new(cat, cfg, predictor);
-            let report = sim.run(&trace)?;
+            let (cfg, workload) = if trace_name == "golden" {
+                // the fixed-seed latency-golden scenario: everything is
+                // pinned except the parallelism knobs, so shard counts
+                // are byte-comparable against each other
+                let (mut golden_cfg, wl) = jiagu::artifacts::latency_golden_scenario(&cat);
+                golden_cfg.shards = cfg.shards;
+                golden_cfg.partitions = cfg.partitions;
+                (golden_cfg, wl)
+            } else {
+                let trace = make_trace(&cat, trace_name, cfg.duration_s)?;
+                (cfg, trace.workload())
+            };
+            let report = if cfg.shards > 0 {
+                jiagu::controlplane::shard::ShardedControlPlane::new(cat, cfg, predictor)
+                    .run_workload(&workload)?
+            } else {
+                Simulation::new(cat, cfg, predictor).run_workload(&workload)?
+            };
             if args.switches.contains("json") {
                 println!("{}", report_json(&report).to_string());
             } else {

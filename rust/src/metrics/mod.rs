@@ -18,10 +18,15 @@
 
 use crate::catalog::{Catalog, FunctionId};
 use crate::util::json::{arr, num, obj, Json};
+use anyhow::{ensure, Result};
 
 /// Streaming percentile estimator: exact over a retained sample vector
 /// (sample counts here are small enough to keep everything).
-#[derive(Debug, Default, Clone)]
+///
+/// `PartialEq` compares the raw vectors in insertion order, which is what
+/// lets `RunReport` keep its bit-identical-replay contract after samples
+/// became part of the report's mergeable sufficient statistics.
+#[derive(Debug, Default, Clone, PartialEq)]
 pub struct Samples {
     values: Vec<f64>,
 }
@@ -63,6 +68,15 @@ impl Samples {
 
     pub fn values(&self) -> &[f64] {
         &self.values
+    }
+
+    /// Append another sample set (partition merge).  Concatenation is
+    /// exactly associative, and every derived quantity is recomputed from
+    /// the final vector: percentiles sort (order-insensitive), the mean
+    /// sums left-to-right over the concatenation — deterministic for a
+    /// pinned merge order.
+    pub fn extend_from(&mut self, other: &Samples) {
+        self.values.extend_from_slice(&other.values);
     }
 }
 
@@ -157,6 +171,31 @@ impl LatencyHistogram {
         self.max_ms
     }
 
+    /// Fold another histogram into this one (partition merge).  Requires
+    /// identical binning (bit-equal `bin_ms`, same bin count); bins,
+    /// overflow and count add, `max_ms` takes the maximum.  All integer
+    /// sums + a max, so the operation is exactly associative **and**
+    /// commutative — merged shard reports are byte-identical however the
+    /// partitions were grouped.
+    pub fn merge(&mut self, other: &LatencyHistogram) -> Result<()> {
+        ensure!(
+            self.bin_ms.to_bits() == other.bin_ms.to_bits()
+                && self.bins.len() == other.bins.len(),
+            "histogram merge needs identical binning: {} x {} vs {} x {}",
+            self.bin_ms,
+            self.bins.len(),
+            other.bin_ms,
+            other.bins.len()
+        );
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += b;
+        }
+        self.overflow += other.overflow;
+        self.count += other.count;
+        self.max_ms = self.max_ms.max(other.max_ms);
+        Ok(())
+    }
+
     /// Serialise for the golden vectors: every field is integral or an
     /// exactly round-tripping f64, so equal histograms give equal bytes.
     pub fn to_json(&self) -> Json {
@@ -233,6 +272,18 @@ impl DensityTracker {
             self.instance_seconds / self.node_seconds
         }
     }
+
+    /// The ratio's numerator — the mergeable sufficient statistic (sums
+    /// of integral instance counts × whole-second dts, so partition sums
+    /// are exact in f64).
+    pub fn instance_seconds(&self) -> f64 {
+        self.instance_seconds
+    }
+
+    /// The ratio's denominator (see [`DensityTracker::instance_seconds`]).
+    pub fn node_seconds(&self) -> f64 {
+        self.node_seconds
+    }
 }
 
 /// QoS violation accounting (Fig. 14a): per function, requests served vs
@@ -266,6 +317,16 @@ impl QosTracker {
         } else {
             v / t
         }
+    }
+
+    /// Per-function violating-request counts (merge numerators).
+    pub fn violating(&self) -> Vec<f64> {
+        self.per_function.iter().map(|(v, _)| *v).collect()
+    }
+
+    /// Per-function total-request counts (merge denominators).
+    pub fn totals(&self) -> Vec<f64> {
+        self.per_function.iter().map(|(_, t)| *t).collect()
     }
 
     /// Overall violation rate (request-weighted, the paper's metric).
@@ -432,6 +493,55 @@ mod tests {
         let parsed = crate::util::json::Json::parse(&a.to_json().to_string()).unwrap();
         assert_eq!(parsed.get("count").unwrap().as_usize().unwrap(), 4);
         assert_eq!(parsed.get("bins").unwrap().f64_vec().unwrap().len(), 8);
+    }
+
+    #[test]
+    fn latency_histogram_merge_is_exact_and_rejects_mismatched_bins() {
+        let fill = |vals: &[f64]| {
+            let mut h = LatencyHistogram::new(10.0, 4);
+            for v in vals {
+                h.record(*v);
+            }
+            h
+        };
+        let (a, b) = (fill(&[1.0, 15.0, 500.0]), fill(&[2.0, 35.0]));
+        // the union histogram, recorded in one pass, is the ground truth
+        let union = fill(&[1.0, 15.0, 500.0, 2.0, 35.0]);
+        let mut m = a.clone();
+        m.merge(&b).unwrap();
+        assert_eq!(m, union, "merge must equal single-pass recording");
+        // commutative: b ⊕ a gives the same histogram
+        let mut m2 = b.clone();
+        m2.merge(&a).unwrap();
+        assert_eq!(m2, union);
+        // mismatched binning is an error, not silent corruption
+        let mut narrow = LatencyHistogram::new(5.0, 4);
+        assert!(narrow.merge(&a).is_err());
+        let mut short = LatencyHistogram::new(10.0, 3);
+        assert!(short.merge(&a).is_err());
+    }
+
+    #[test]
+    fn samples_extend_concatenates_in_order() {
+        let mut a = Samples::default();
+        a.push(3.0);
+        let mut b = Samples::default();
+        b.push(1.0);
+        b.push(2.0);
+        a.extend_from(&b);
+        assert_eq!(a.values(), &[3.0, 1.0, 2.0]);
+        assert_eq!(a.percentile(1.0), 3.0);
+    }
+
+    #[test]
+    fn qos_tracker_exposes_merge_numerators_and_denominators() {
+        let cat = test_catalog();
+        let mut q = QosTracker::new(cat.len());
+        let qos0 = cat.get(0).qos_latency_ms;
+        q.record(&cat, 0, 90.0, qos0 * 0.9);
+        q.record(&cat, 0, 10.0, qos0 * 1.5);
+        assert_eq!(q.violating(), vec![10.0, 0.0, 0.0, 0.0]);
+        assert_eq!(q.totals(), vec![100.0, 0.0, 0.0, 0.0]);
     }
 
     #[test]

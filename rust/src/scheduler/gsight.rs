@@ -73,14 +73,17 @@ impl GsightScheduler {
     /// Validate the top candidate nodes with **one** batched inference
     /// (the port's per-decision cost is therefore ~1 model call — the
     /// structure the paper's 21.78 ms average reflects) and return the
-    /// first feasible node.
+    /// first feasible node plus the number of inferences spent (0 when no
+    /// candidate exists, 1 otherwise).  Counted locally, never read off
+    /// the predictor's shared stats — sibling shard threads bump those
+    /// concurrently (see `capacity::compute_capacity_counted`).
     fn pick_node<C: ClusterView>(
         &self,
         cat: &Catalog,
         view: &C,
         function: FunctionId,
         exclude: Option<NodeId>,
-    ) -> Result<Option<NodeId>> {
+    ) -> Result<(Option<NodeId>, u64)> {
         let mut candidates: Vec<NodeId> = candidate_order(view, function)
             .into_iter()
             .filter(|n| Some(*n) != exclude)
@@ -88,7 +91,7 @@ impl GsightScheduler {
             .take(Self::CANDIDATE_FANOUT)
             .collect();
         if candidates.is_empty() {
-            return Ok(None);
+            return Ok((None, 0));
         }
         let mut rows = Vec::new();
         let mut qos = Vec::new();
@@ -102,11 +105,11 @@ impl GsightScheduler {
         for (i, n) in spans.iter().enumerate() {
             let ok = (off..off + n).all(|j| (preds[j] as f64) <= qos[j]);
             if ok {
-                return Ok(Some(candidates.swap_remove(i)));
+                return Ok((Some(candidates.swap_remove(i)), 1));
             }
             off += n;
         }
-        Ok(None)
+        Ok((None, 1))
     }
 }
 
@@ -124,24 +127,26 @@ impl Scheduler for GsightScheduler {
         _now_ms: f64,
     ) -> Result<Plan> {
         let t0 = Instant::now();
-        let (calls0, _, _) = self.predictor.stats().snapshot();
         let mut pb = PlanBuilder::new(cat, cluster);
+        let mut critical = 0u64;
         // per-instance decisions: no pre-decision, no batching
         for _ in 0..count {
-            let node = match self.pick_node(cat, &pb, function, None)? {
+            let (picked, inferences) = self.pick_node(cat, &pb, function, None)?;
+            critical += inferences;
+            let node = match picked {
                 Some(n) => n,
                 None => {
                     let node = pb.add_node();
                     // still validate (solo on an empty node is trivially
                     // feasible, but the policy pays the inference)
-                    let _ = self.pick_node(cat, &pb, function, None)?;
+                    let (_, revalidate) = self.pick_node(cat, &pb, function, None)?;
+                    critical += revalidate;
                     node
                 }
             };
             pb.place(function, node);
         }
-        let (calls1, _, _) = self.predictor.stats().snapshot();
-        Ok(pb.finish(true, calls1 - calls0, t0.elapsed().as_nanos() as u64))
+        Ok(pb.finish(true, critical, t0.elapsed().as_nanos() as u64))
     }
 
     fn on_node_changed(
@@ -161,7 +166,7 @@ impl Scheduler for GsightScheduler {
         function: FunctionId,
         exclude: NodeId,
     ) -> Result<Option<NodeId>> {
-        self.pick_node(cat, cluster, function, Some(exclude))
+        Ok(self.pick_node(cat, cluster, function, Some(exclude))?.0)
     }
 }
 

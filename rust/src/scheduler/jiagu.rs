@@ -139,11 +139,17 @@ impl JiaguScheduler {
             return Ok(*cap);
         }
         let mix = pb.mix(node);
-        let (c0, _, _) = self.predictor.stats().snapshot();
-        let cap =
-            capacity::compute_capacity(cat, &mix, function, self.predictor.as_ref(), &self.cfg)?;
-        let (c1, _, _) = self.predictor.stats().snapshot();
-        *critical += c1 - c0;
+        // the sweep reports its own inference cost — never a delta of the
+        // predictor's shared stats counters, which sibling shard threads
+        // also bump (see compute_capacity_counted)
+        let (cap, inferences) = capacity::compute_capacity_counted(
+            cat,
+            &mix,
+            function,
+            self.predictor.as_ref(),
+            &self.cfg,
+        )?;
+        *critical += inferences;
         *slow = true;
         if node < pb.base_nodes() {
             let v = self.tables[node].version();
@@ -242,7 +248,6 @@ impl Scheduler for JiaguScheduler {
     ) -> Result<Option<DeferredUpdate>> {
         self.ensure_tables(cluster.n_nodes());
         let t0 = Instant::now();
-        let (calls0, _, _) = self.predictor.stats().snapshot();
         let mix = cluster.mix(node);
         let version = self.tables[node].bump_version();
         let mut targets: HashSet<FunctionId> =
@@ -253,16 +258,22 @@ impl Scheduler for JiaguScheduler {
             }
         }
         let mut entries = HashMap::new();
+        let mut inferences = 0u64;
         for f in targets {
-            let cap =
-                capacity::compute_capacity(cat, &mix, f, self.predictor.as_ref(), &self.cfg)?;
+            let (cap, sweep_inferences) = capacity::compute_capacity_counted(
+                cat,
+                &mix,
+                f,
+                self.predictor.as_ref(),
+                &self.cfg,
+            )?;
+            inferences += sweep_inferences;
             entries.insert(f, capacity::CapacityEntry { capacity: cap, mix_version: version });
         }
-        let (calls1, _, _) = self.predictor.stats().snapshot();
         Ok(Some(DeferredUpdate {
             node,
             nanos: t0.elapsed().as_nanos() as u64,
-            inferences: calls1 - calls0,
+            inferences,
             version,
             entries,
         }))

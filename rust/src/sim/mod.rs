@@ -28,10 +28,12 @@
 use crate::catalog::Catalog;
 use crate::config::RunConfig;
 use crate::controlplane::{ControlPlane, EngineEvents};
-use crate::metrics::{CostTracker, DensityTracker, LatencyHistogram, QosTracker, RequestTracker};
+use crate::metrics::{
+    CostTracker, DensityTracker, LatencyHistogram, QosTracker, RequestTracker, Samples,
+};
 use crate::runtime::Predictor;
 use crate::traces::{TraceSet, Workload};
-use anyhow::Result;
+use anyhow::{ensure, Result};
 use std::sync::Arc;
 
 /// Salt XOR-ed into `cfg.seed` for the per-invocation arrival stream
@@ -42,11 +44,25 @@ pub const ARRIVAL_SEED_SALT: u64 = 0x0a21_71a1;
 /// Aggregated outcome of one simulated run.  Every field is derived
 /// from the deterministic event stream, so two runs with the same seed
 /// compare equal (`PartialEq`) bit for bit.
+///
+/// Reports are **mergeable**: alongside the derived aggregates (ratios,
+/// means, percentiles) the report carries their *sufficient statistics*
+/// — per-function count tables, raw sample vectors, the fixed-bin
+/// histogram, the density ratio's numerator/denominator — and
+/// [`RunReport::merge`] folds another partition's report in by combining
+/// those and recomputing every derived field.  All combination steps are
+/// integer/concatenation/scatter operations (see the field docs), so the
+/// merge is exactly associative; the sharded control plane
+/// ([`crate::controlplane::shard`]) exploits that to fuse per-partition
+/// reports in a pinned order into bytes identical for any thread count.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunReport {
     pub scheduler: String,
     pub trace: String,
     pub duration_s: usize,
+    /// Events popped and handled by the control plane(s) — the
+    /// throughput denominator `benches/shard_scaling.rs` reports.
+    pub events_processed: u64,
     pub density: f64,
     pub qos_violation_rate: f64,
     pub per_function_violation: Vec<f64>,
@@ -104,8 +120,26 @@ pub struct RunReport {
     /// samples and drain ends (a *sampled* gauge, unlike the continuous
     /// per-node high-water mark above, so the two are not comparable).
     pub peak_in_flight: u32,
-    /// The full fixed-bin latency histogram (golden-vector surface).
+    /// The full fixed-bin latency histogram (golden-vector surface);
+    /// merges bin-wise ([`LatencyHistogram::merge`]).
     pub latency_hist: LatencyHistogram,
+    // ---- mergeable sufficient statistics --------------------------------
+    /// Per function: QoS-window requests that violated the bound (the
+    /// numerator behind `per_function_violation`).  Functions are owned
+    /// by exactly one partition, so merging is an exact scatter-add.
+    pub qos_violating: Vec<f64>,
+    /// Per function: total QoS-window requests (the denominator).
+    pub qos_totals: Vec<f64>,
+    /// Density numerator: instance-seconds (integral values, so
+    /// partition sums are exact in f64).
+    pub instance_seconds: f64,
+    /// Density denominator: active-node-seconds.
+    pub node_seconds: f64,
+    /// Raw per-call decision costs behind `scheduling_ms_mean`/`_p99`;
+    /// merges by concatenation in the pinned partition order.
+    pub scheduling_samples: Samples,
+    /// Raw per-instance cold-start latencies behind `cold_start_ms_*`.
+    pub cold_start_samples: Samples,
 }
 
 impl RunReport {
@@ -117,6 +151,137 @@ impl RunReport {
         } else {
             self.logical_cold_starts as f64 / total as f64
         }
+    }
+
+    /// Fold another partition's report into this one.
+    ///
+    /// Combination rules, chosen so the operation is exactly associative
+    /// and — up to the pinned merge order the sharded control plane uses
+    /// — order-insensitive:
+    ///
+    /// * **counters** (`u64`) add;
+    /// * **per-function tables** scatter-add (each function is owned by
+    ///   exactly one partition, so at most one operand is non-zero);
+    /// * **sample vectors** concatenate; **histograms** add bin-wise;
+    /// * **extents of disjoint sub-clusters** combine by their natural
+    ///   union: cluster-wide sizes/gauges (`peak_nodes`,
+    ///   `peak_in_flight`) add partition peaks, the per-node gauge
+    ///   (`peak_node_in_flight`) takes the max;
+    /// * every **derived field** (ratios, means, percentiles) is then
+    ///   recomputed from the combined sufficient statistics — never
+    ///   averaged from the operands' derived values.
+    ///
+    /// Errors when the reports are not merge-compatible (different
+    /// scheduler/trace/horizon, catalog size, or histogram binning).
+    /// Every check runs before the first mutation (the histogram merge
+    /// validates its binning up front), so `self` is unchanged on error.
+    pub fn merge(&mut self, other: &RunReport) -> Result<()> {
+        ensure!(
+            self.scheduler == other.scheduler,
+            "merge across schedulers: {} vs {}",
+            self.scheduler,
+            other.scheduler
+        );
+        ensure!(
+            self.trace == other.trace,
+            "merge across traces: {} vs {}",
+            self.trace,
+            other.trace
+        );
+        ensure!(
+            self.duration_s == other.duration_s,
+            "merge across horizons: {} vs {} s",
+            self.duration_s,
+            other.duration_s
+        );
+        ensure!(
+            self.qos_totals.len() == other.qos_totals.len()
+                && self.qos_violating.len() == other.qos_violating.len()
+                && self.request_counts.len() == other.request_counts.len()
+                && self.request_qos_violations.len() == other.request_qos_violations.len(),
+            "merge across catalog sizes"
+        );
+        self.latency_hist.merge(&other.latency_hist)?;
+        // counters
+        self.events_processed += other.events_processed;
+        self.critical_inferences += other.critical_inferences;
+        self.async_inferences += other.async_inferences;
+        self.schedule_calls += other.schedule_calls;
+        self.instances_started += other.instances_started;
+        self.fast_decisions += other.fast_decisions;
+        self.slow_decisions += other.slow_decisions;
+        self.logical_cold_starts += other.logical_cold_starts;
+        self.real_after_release += other.real_after_release;
+        self.migrations += other.migrations;
+        self.released += other.released;
+        self.evicted += other.evicted;
+        self.async_nanos += other.async_nanos;
+        self.requests_served += other.requests_served;
+        self.cold_wait_requests += other.cold_wait_requests;
+        self.stranded_requests += other.stranded_requests;
+        // disjoint sub-cluster extents
+        self.peak_nodes += other.peak_nodes;
+        self.peak_in_flight += other.peak_in_flight;
+        self.peak_node_in_flight = self.peak_node_in_flight.max(other.peak_node_in_flight);
+        // per-function tables (scatter: one owner per function)
+        for (a, b) in self.qos_violating.iter_mut().zip(&other.qos_violating) {
+            *a += b;
+        }
+        for (a, b) in self.qos_totals.iter_mut().zip(&other.qos_totals) {
+            *a += b;
+        }
+        for (a, b) in self.request_counts.iter_mut().zip(&other.request_counts) {
+            *a += b;
+        }
+        for (a, b) in self.request_qos_violations.iter_mut().zip(&other.request_qos_violations) {
+            *a += b;
+        }
+        // remaining sufficient statistics
+        self.instance_seconds += other.instance_seconds;
+        self.node_seconds += other.node_seconds;
+        self.scheduling_samples.extend_from(&other.scheduling_samples);
+        self.cold_start_samples.extend_from(&other.cold_start_samples);
+        self.isolated_functions.extend_from_slice(&other.isolated_functions);
+        self.isolated_functions.sort_unstable();
+        self.isolated_functions.dedup();
+        self.recompute_derived();
+        Ok(())
+    }
+
+    /// Recompute every derived aggregate from the sufficient statistics.
+    /// The single source of the derivation formulas: `run_workload` calls
+    /// this to finalise a fresh report and `merge` to re-derive after
+    /// combining, so a one-partition merge is the exact identity.
+    fn recompute_derived(&mut self) {
+        self.density = if self.node_seconds == 0.0 {
+            0.0
+        } else {
+            self.instance_seconds / self.node_seconds
+        };
+        let (v, t) = self
+            .qos_violating
+            .iter()
+            .zip(&self.qos_totals)
+            .fold((0.0, 0.0), |(av, at), (v, t)| (av + v, at + t));
+        self.qos_violation_rate = if t == 0.0 { 0.0 } else { v / t };
+        self.per_function_violation = self
+            .qos_violating
+            .iter()
+            .zip(&self.qos_totals)
+            .map(|(v, t)| if *t == 0.0 { 0.0 } else { v / t })
+            .collect();
+        self.scheduling_ms_mean = self.scheduling_samples.mean();
+        self.scheduling_ms_p99 = self.scheduling_samples.percentile(0.99);
+        self.cold_start_ms_mean = self.cold_start_samples.mean();
+        self.cold_start_ms_p99 = self.cold_start_samples.percentile(0.99);
+        self.inferences_per_schedule = if self.schedule_calls == 0 {
+            0.0
+        } else {
+            self.critical_inferences as f64 / self.schedule_calls as f64
+        };
+        self.request_p50_ms = self.latency_hist.percentile(0.50);
+        self.request_p95_ms = self.latency_hist.percentile(0.95);
+        self.request_p99_ms = self.latency_hist.percentile(0.99);
     }
 }
 
@@ -175,6 +340,7 @@ impl Simulation {
         let mut evicted = 0u64;
         let mut async_nanos = 0u64;
         let mut async_inferences = 0u64;
+        let mut events_processed = 0u64;
         let mut until = 0.0f64;
         while until < horizon_ms {
             until = (until + FOLD_CHUNK_MS).min(horizon_ms);
@@ -213,23 +379,27 @@ impl Simulation {
             evicted += (ev.evicted + ev.evicted_direct) as u64;
             async_nanos += ev.async_nanos;
             async_inferences += ev.async_inferences;
+            events_processed += ev.events_processed;
         }
 
-        let per_function_violation =
-            (0..self.cat.len()).map(|f| qos.rate(f)).collect();
         let isolated_functions = cp.monitor().unpredictable();
-        Ok(RunReport {
+        // sufficient statistics first; every derived aggregate (ratios,
+        // means, percentiles) comes from recompute_derived — the same
+        // code path RunReport::merge re-derives with, so merging a
+        // single-partition report is the exact identity
+        let mut report = RunReport {
             scheduler: cp.scheduler_name().to_string(),
             trace: workload.name.clone(),
             duration_s: duration,
-            density: density.density(),
-            qos_violation_rate: qos.overall(),
-            per_function_violation,
-            scheduling_ms_mean: costs.scheduling_ms.mean(),
-            scheduling_ms_p99: costs.scheduling_ms.percentile(0.99),
-            cold_start_ms_mean: costs.cold_start_ms.mean(),
-            cold_start_ms_p99: costs.cold_start_ms.percentile(0.99),
-            inferences_per_schedule: costs.inferences_per_schedule(),
+            events_processed,
+            density: 0.0,
+            qos_violation_rate: 0.0,
+            per_function_violation: Vec::new(),
+            scheduling_ms_mean: 0.0,
+            scheduling_ms_p99: 0.0,
+            cold_start_ms_mean: 0.0,
+            cold_start_ms_p99: 0.0,
+            inferences_per_schedule: 0.0,
             critical_inferences: costs.critical_inferences,
             async_inferences,
             schedule_calls: costs.calls,
@@ -245,9 +415,9 @@ impl Simulation {
             async_nanos,
             isolated_functions,
             requests_served: reqs.hist.count(),
-            request_p50_ms: reqs.hist.percentile(0.50),
-            request_p95_ms: reqs.hist.percentile(0.95),
-            request_p99_ms: reqs.hist.percentile(0.99),
+            request_p50_ms: 0.0,
+            request_p95_ms: 0.0,
+            request_p99_ms: 0.0,
             request_counts: reqs.requests,
             request_qos_violations: reqs.violations,
             cold_wait_requests: reqs.cold_waits,
@@ -255,7 +425,15 @@ impl Simulation {
             peak_node_in_flight,
             peak_in_flight,
             latency_hist: reqs.hist,
-        })
+            qos_violating: qos.violating(),
+            qos_totals: qos.totals(),
+            instance_seconds: density.instance_seconds(),
+            node_seconds: density.node_seconds(),
+            scheduling_samples: costs.scheduling_ms,
+            cold_start_samples: costs.cold_start_ms,
+        };
+        report.recompute_derived();
+        Ok(report)
     }
 }
 

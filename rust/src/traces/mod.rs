@@ -199,6 +199,24 @@ impl Workload {
         Self::finish(format!("diurnal-{seed}"), cat.len(), events, duration_ms)
     }
 
+    /// Restrict this workload to the functions `keep` accepts — the
+    /// per-shard event routing of the sharded control plane
+    /// ([`crate::controlplane::shard`]).  The filter is stable (relative
+    /// event order is preserved, so the event queue's push-order
+    /// tie-break sees the same ordering a full injection would), function
+    /// ids stay **global** (`n_functions` is unchanged — cells own a
+    /// sparse slice of the id space, not a re-indexed one), and the
+    /// horizon (`duration_ms`) and name carry over so every cell reports
+    /// the same trace identity and duration.
+    pub fn restrict(&self, keep: impl Fn(usize) -> bool) -> Workload {
+        Workload {
+            name: self.name.clone(),
+            n_functions: self.n_functions,
+            events: self.events.iter().filter(|e| keep(e.function)).copied().collect(),
+            duration_ms: self.duration_ms,
+        }
+    }
+
     /// Synthesize per-invocation request arrivals from this workload's
     /// load steps: per function, a Poisson process whose instantaneous
     /// rate follows the piecewise-constant RPS signal (exponential gaps
@@ -627,6 +645,29 @@ mod tests {
             }
         }
         assert!(saw_burst, "bursts must fire at rate 0.2/s over 60 s");
+    }
+
+    #[test]
+    fn restrict_partitions_events_without_reordering() {
+        let cat = test_catalog();
+        let wl = Workload::poisson(&cat, &PoissonParams::default(), 21);
+        let cells = 2usize;
+        let parts: Vec<Workload> = (0..cells).map(|c| wl.restrict(|f| f % cells == c)).collect();
+        for (c, p) in parts.iter().enumerate() {
+            assert_eq!(p.name, wl.name);
+            assert_eq!(p.n_functions, wl.n_functions, "ids stay global");
+            assert_eq!(p.duration_ms, wl.duration_ms);
+            assert!(p.events.iter().all(|e| e.function % cells == c));
+            // stable: the cell's events appear in the original order
+            let original: Vec<&LoadEvent> =
+                wl.events.iter().filter(|e| e.function % cells == c).collect();
+            assert_eq!(p.events.len(), original.len());
+            for (a, b) in p.events.iter().zip(original) {
+                assert_eq!(a, b);
+            }
+        }
+        // the cells partition the event stream exactly
+        assert_eq!(parts.iter().map(|p| p.events.len()).sum::<usize>(), wl.events.len());
     }
 
     #[test]

@@ -1,0 +1,308 @@
+//! Property tests over the shard merge algebra (hand-rolled generators
+//! over the crate's seeded RNG — no proptest offline; every failure
+//! reports its seed):
+//!
+//! * `LatencyHistogram::merge` is exactly associative *and* commutative,
+//! * `RunReport::merge` is exactly associative over reports with
+//!   disjoint function ownership (the shape real partitions have),
+//! * merging in a permuted order leaves every aggregate unchanged —
+//!   "order-insensitive up to the pinned merge order": only the raw
+//!   sample vectors remember the order, and everything derived from
+//!   them sorts or sums order-independently,
+//! * end-to-end: the shard count never changes any aggregate — the
+//!   merged report of a partitioned Poisson run is bit-identical for
+//!   every worker-thread count, and the 1-partition layout reproduces
+//!   the plain unsharded simulation exactly.
+//!
+//! Registered in `Cargo.toml` as a `[[test]]` target (`autotests =
+//! false`; `make check-test-targets` fails on unregistered files).
+
+use jiagu::artifacts::make_catalog;
+use jiagu::catalog::Catalog;
+use jiagu::config::RunConfig;
+use jiagu::controlplane::shard::ShardedControlPlane;
+use jiagu::metrics::{LatencyHistogram, Samples};
+use jiagu::runtime::{ForestParams, NativeForestPredictor, Predictor};
+use jiagu::sim::{RunReport, Simulation};
+use jiagu::traces::{PoissonParams, Workload};
+use jiagu::util::rng::Rng;
+use std::sync::Arc;
+
+fn stub_predictor() -> Arc<dyn Predictor> {
+    Arc::new(NativeForestPredictor::new(ForestParams::synthetic_stub(
+        jiagu::model::N_FEATURES,
+        0.05,
+        0.05,
+    )))
+}
+
+fn random_hist(rng: &mut Rng) -> LatencyHistogram {
+    let mut h = LatencyHistogram::new(8.0, 16);
+    for _ in 0..rng.range_u64(0, 64) {
+        // spread across bins, overflow and the degenerate path
+        let v = match rng.below(8) {
+            0 => -1.0,
+            1 => 10_000.0,
+            _ => rng.range_f64(0.0, 160.0),
+        };
+        h.record(v);
+    }
+    h
+}
+
+fn merged(a: &LatencyHistogram, b: &LatencyHistogram) -> LatencyHistogram {
+    let mut m = a.clone();
+    m.merge(b).unwrap();
+    m
+}
+
+#[test]
+fn histogram_merge_is_associative_and_commutative() {
+    for seed in 0..32u64 {
+        let mut rng = Rng::seed_from(seed ^ 0x4157);
+        let (a, b, c) = (random_hist(&mut rng), random_hist(&mut rng), random_hist(&mut rng));
+        let left = merged(&merged(&a, &b), &c);
+        let right = merged(&a, &merged(&b, &c));
+        assert_eq!(left, right, "associativity, seed {seed}");
+        assert_eq!(merged(&a, &b), merged(&b, &a), "commutativity, seed {seed}");
+        assert_eq!(left.count(), a.count() + b.count() + c.count());
+        assert_eq!(
+            left.to_json().to_string(),
+            right.to_json().to_string(),
+            "serialised bytes must agree too, seed {seed}"
+        );
+    }
+}
+
+const N_FUNCTIONS: usize = 6;
+
+/// A synthetic partition report: `cell` (of `cells`) owns functions
+/// `f % cells == cell`, so per-function tables are disjoint across the
+/// operands — the shape `ShardedControlPlane` merges.  Samples use
+/// dyadic values (k/64) so sums are exact under any regrouping, exactly
+/// like the integral instance/node-second sums of real runs.  Derived
+/// fields are left zeroed: `merge` recomputes them from the sufficient
+/// statistics, which is itself part of what these tests pin.
+fn synthetic_report(rng: &mut Rng, cell: usize, cells: usize) -> RunReport {
+    let dyadic = |rng: &mut Rng| rng.range_u64(0, 1 << 12) as f64 / 64.0;
+    let mut scheduling_samples = Samples::default();
+    let mut cold_start_samples = Samples::default();
+    for _ in 0..rng.range_u64(1, 12) {
+        scheduling_samples.push(dyadic(rng));
+    }
+    for _ in 0..rng.range_u64(0, 8) {
+        cold_start_samples.push(dyadic(rng));
+    }
+    let mut latency_hist = LatencyHistogram::default();
+    let mut request_counts = vec![0u64; N_FUNCTIONS];
+    let mut request_qos_violations = vec![0u64; N_FUNCTIONS];
+    let mut qos_violating = vec![0.0; N_FUNCTIONS];
+    let mut qos_totals = vec![0.0; N_FUNCTIONS];
+    for f in 0..N_FUNCTIONS {
+        if f % cells != cell {
+            continue; // foreign function: this partition never saw it
+        }
+        let served = rng.range_u64(0, 40);
+        for _ in 0..served {
+            latency_hist.record(rng.range_f64(0.0, 900.0));
+        }
+        request_counts[f] = served;
+        request_qos_violations[f] = rng.range_u64(0, served);
+        qos_totals[f] = rng.range_u64(0, 500) as f64;
+        qos_violating[f] = (qos_totals[f] * rng.f64()).floor();
+    }
+    let isolated_functions =
+        (cell..N_FUNCTIONS).step_by(cells).filter(|_| rng.below(3) == 0).collect();
+    RunReport {
+        scheduler: "jiagu".into(),
+        trace: "synthetic".into(),
+        duration_s: 60,
+        events_processed: rng.range_u64(0, 10_000),
+        density: 0.0,
+        qos_violation_rate: 0.0,
+        per_function_violation: Vec::new(),
+        scheduling_ms_mean: 0.0,
+        scheduling_ms_p99: 0.0,
+        cold_start_ms_mean: 0.0,
+        cold_start_ms_p99: 0.0,
+        inferences_per_schedule: 0.0,
+        critical_inferences: rng.range_u64(0, 100),
+        async_inferences: rng.range_u64(0, 100),
+        schedule_calls: rng.range_u64(1, 50),
+        instances_started: rng.range_u64(0, 50),
+        fast_decisions: rng.range_u64(0, 40),
+        slow_decisions: rng.range_u64(0, 10),
+        logical_cold_starts: rng.range_u64(0, 20),
+        real_after_release: rng.range_u64(0, 20),
+        migrations: rng.range_u64(0, 5),
+        released: rng.range_u64(0, 20),
+        evicted: rng.range_u64(0, 5),
+        peak_nodes: rng.range_u64(1, 8) as usize,
+        async_nanos: rng.range_u64(0, 1 << 30),
+        isolated_functions,
+        requests_served: latency_hist.count(),
+        request_p50_ms: 0.0,
+        request_p95_ms: 0.0,
+        request_p99_ms: 0.0,
+        request_counts,
+        request_qos_violations,
+        cold_wait_requests: rng.range_u64(0, 30),
+        stranded_requests: rng.range_u64(0, 10),
+        peak_node_in_flight: rng.range_u64(0, 64) as u32,
+        peak_in_flight: rng.range_u64(0, 128) as u32,
+        latency_hist,
+        qos_violating,
+        qos_totals,
+        instance_seconds: rng.range_u64(0, 5_000) as f64,
+        node_seconds: rng.range_u64(1, 500) as f64,
+        scheduling_samples,
+        cold_start_samples,
+    }
+}
+
+fn fold(reports: &[&RunReport]) -> RunReport {
+    let mut out = reports[0].clone();
+    for r in &reports[1..] {
+        out.merge(r).unwrap();
+    }
+    out
+}
+
+#[test]
+fn report_merge_is_associative_over_disjoint_partitions() {
+    for seed in 0..24u64 {
+        let mut rng = Rng::seed_from(seed ^ 0x5a5d);
+        let a = synthetic_report(&mut rng, 0, 3);
+        let b = synthetic_report(&mut rng, 1, 3);
+        let c = synthetic_report(&mut rng, 2, 3);
+        let left = fold(&[&fold(&[&a, &b]), &c]);
+        let right = fold(&[&a, &fold(&[&b, &c])]);
+        assert_eq!(left, right, "associativity (full PartialEq surface), seed {seed}");
+        // merged sufficient statistics really accumulated
+        assert_eq!(
+            left.requests_served,
+            a.requests_served + b.requests_served + c.requests_served
+        );
+        assert_eq!(
+            left.scheduling_samples.len(),
+            a.scheduling_samples.len() + b.scheduling_samples.len() + c.scheduling_samples.len()
+        );
+    }
+}
+
+#[test]
+fn report_merge_aggregates_are_order_insensitive() {
+    for seed in 0..24u64 {
+        let mut rng = Rng::seed_from(seed ^ 0x0bd2);
+        let a = synthetic_report(&mut rng, 0, 3);
+        let b = synthetic_report(&mut rng, 1, 3);
+        let c = synthetic_report(&mut rng, 2, 3);
+        let pinned = fold(&[&a, &b, &c]);
+        for permuted in [fold(&[&c, &a, &b]), fold(&[&b, &c, &a]), fold(&[&c, &b, &a])] {
+            // only the raw sample vectors remember the merge order; every
+            // aggregate — counters, tables, histogram, ratios, means and
+            // percentiles — must be bit-equal under permutation
+            assert_eq!(pinned.events_processed, permuted.events_processed);
+            assert_eq!(pinned.density, permuted.density, "seed {seed}");
+            assert_eq!(pinned.qos_violation_rate, permuted.qos_violation_rate);
+            assert_eq!(pinned.per_function_violation, permuted.per_function_violation);
+            assert_eq!(pinned.scheduling_ms_mean, permuted.scheduling_ms_mean);
+            assert_eq!(pinned.scheduling_ms_p99, permuted.scheduling_ms_p99);
+            assert_eq!(pinned.cold_start_ms_mean, permuted.cold_start_ms_mean);
+            assert_eq!(pinned.cold_start_ms_p99, permuted.cold_start_ms_p99);
+            assert_eq!(pinned.inferences_per_schedule, permuted.inferences_per_schedule);
+            assert_eq!(pinned.latency_hist, permuted.latency_hist);
+            assert_eq!(pinned.request_counts, permuted.request_counts);
+            assert_eq!(pinned.request_qos_violations, permuted.request_qos_violations);
+            assert_eq!(pinned.request_p50_ms, permuted.request_p50_ms);
+            assert_eq!(pinned.request_p95_ms, permuted.request_p95_ms);
+            assert_eq!(pinned.request_p99_ms, permuted.request_p99_ms);
+            assert_eq!(pinned.isolated_functions, permuted.isolated_functions);
+            assert_eq!(pinned.peak_nodes, permuted.peak_nodes);
+            assert_eq!(pinned.peak_node_in_flight, permuted.peak_node_in_flight);
+            assert_eq!(pinned.peak_in_flight, permuted.peak_in_flight);
+            assert_eq!(pinned.requests_served, permuted.requests_served);
+            assert_eq!(pinned.stranded_requests, permuted.stranded_requests);
+            assert_eq!(pinned.cold_wait_requests, permuted.cold_wait_requests);
+        }
+    }
+}
+
+#[test]
+fn incompatible_reports_are_rejected() {
+    let mut rng = Rng::seed_from(7);
+    let base = synthetic_report(&mut rng, 0, 2);
+    let other = synthetic_report(&mut rng, 1, 2);
+
+    let mut wrong_trace = base.clone();
+    let mut o = other.clone();
+    o.trace = "different".into();
+    assert!(wrong_trace.merge(&o).is_err(), "trace mismatch must fail");
+
+    let mut wrong_sched = base.clone();
+    let mut o = other.clone();
+    o.scheduler = "k8s".into();
+    assert!(wrong_sched.merge(&o).is_err(), "scheduler mismatch must fail");
+
+    let mut wrong_horizon = base.clone();
+    let mut o = other.clone();
+    o.duration_s = 61;
+    assert!(wrong_horizon.merge(&o).is_err(), "horizon mismatch must fail");
+
+    let mut wrong_catalog = base.clone();
+    let mut o = other.clone();
+    o.qos_totals.pop();
+    assert!(wrong_catalog.merge(&o).is_err(), "catalog-size mismatch must fail");
+
+    let mut wrong_bins = base.clone();
+    let mut o = other.clone();
+    o.latency_hist = LatencyHistogram::new(1.0, 4);
+    assert!(wrong_bins.merge(&o).is_err(), "histogram-binning mismatch must fail");
+}
+
+/// The end-to-end invariant the CI matrix pins through the CLI: for a
+/// fixed partition layout, the worker-thread count never moves a single
+/// bit of the merged report.
+#[test]
+fn shard_count_never_changes_any_aggregate_end_to_end() {
+    let cat = Catalog::from_functions(make_catalog(8, 0x5ca1e));
+    let wl = Workload::poisson(&cat, &PoissonParams { duration_s: 10, ..Default::default() }, 61);
+    let run = |shards: usize, partitions: usize| {
+        let mut cfg = RunConfig::jiagu_45();
+        cfg.n_nodes = 8;
+        cfg.duration_s = 10;
+        cfg.requests = true;
+        cfg.eval_interval_ms = 250.0;
+        cfg.seed = 99;
+        cfg.shards = shards;
+        cfg.partitions = partitions;
+        ShardedControlPlane::new(cat.clone(), cfg, stub_predictor()).run_workload(&wl).unwrap()
+    };
+    let reference = run(1, 4);
+    assert!(reference.requests_served > 0, "the scenario must route traffic");
+    assert!(reference.events_processed > 0);
+    for shards in [2, 4, 8] {
+        // shards beyond the partition count clamp to it — still identical
+        assert_eq!(reference, run(shards, 4), "shards = {shards}");
+    }
+    // a different *layout* is a different system: partitions move bits
+    assert_ne!(reference, run(1, 2), "partition count is part of the semantics");
+}
+
+#[test]
+fn single_partition_layout_reproduces_the_unsharded_plane() {
+    let cat = Catalog::from_functions(make_catalog(6, 0xfeed));
+    let wl = Workload::poisson(&cat, &PoissonParams { duration_s: 8, ..Default::default() }, 17);
+    let mut cfg = RunConfig::jiagu_45();
+    cfg.n_nodes = 6;
+    cfg.duration_s = 8;
+    cfg.requests = true;
+    cfg.seed = 5;
+    cfg.partitions = 1;
+    cfg.shards = 1;
+    let sharded = ShardedControlPlane::new(cat.clone(), cfg.clone(), stub_predictor())
+        .run_workload(&wl)
+        .unwrap();
+    let plain = Simulation::new(cat, cfg, stub_predictor()).run_workload(&wl).unwrap();
+    assert_eq!(sharded, plain, "P = 1 must be the identity embedding");
+}
