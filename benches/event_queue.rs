@@ -1,24 +1,33 @@
-//! Event-queue hot path: sustained events/sec through the deterministic
-//! `(due_ms, seq)` binary heap that replaced the 1 s tick loop.
-//!
-//! Two shapes bound the engine's real usage:
+//! Event-queue hot path: sustained events/sec through both [`Timeline`]
+//! implementations — the deterministic `(due_ms, seq)` binary heap and
+//! the hierarchical timing wheel — over the shapes that bound the
+//! engine's real usage:
 //!
 //! * **bulk drain** — a workload injection pushes tens of thousands of
 //!   `LoadChange` events up front, then the run pops them all;
 //! * **steady churn** — at steady state every pop of a periodic event
-//!   pushes its successor, so the heap stays near-constant size.
+//!   pushes its successor, so the queue stays near-constant size;
+//! * **million churn** — the same churn with 1,000,000 scheduled events
+//!   resident: the regime the wheel exists for (`O(1)` push/pop vs the
+//!   heap's `O(log n)`).  The wheel must sustain at least the heap's
+//!   events/sec here — asserted, not just printed.
 //!
 //! ```bash
 //! cargo bench --bench event_queue
+//! # JIAGU_BENCH_SNAPSHOT=BENCH_event_queue.json additionally writes the
+//! # machine-normalized snapshot (deterministic scenario sizes + the
+//! # dimensionless wheel/heap throughput ratios; no wall-clock fields).
 //! ```
 
-use jiagu::engine::{Event, EventQueue};
-use jiagu::util::bench::{bench, Table};
+use jiagu::engine::{AnyTimeline, Event, QueueKind, Timeline};
+use jiagu::util::bench::{bench, Summary, Table};
+use jiagu::util::json::{arr, num, obj, s, Json};
 use jiagu::util::rng::Rng;
 use std::time::Duration;
 
 const BULK: usize = 10_000;
-const CHURN_HEAP: usize = 1_024;
+const CHURN_SMALL: usize = 1_024;
+const CHURN_MILLION: usize = 1_000_000;
 
 fn random_event(rng: &mut Rng, i: u64) -> (f64, Event) {
     let due = rng.below(1_800_000) as f64; // anywhere in a 1800 s run (ms)
@@ -31,16 +40,14 @@ fn random_event(rng: &mut Rng, i: u64) -> (f64, Event) {
     (due, event)
 }
 
-fn main() {
-    let mut table = Table::new(&["scenario", "ns/event", "Mevents/s", "p99 ns/event"]);
-
-    // bulk drain: push BULK randomized events, pop until empty
+/// Push `BULK` randomized events, pop until empty; fresh queue per
+/// iteration.  Returns ns per event (one push + one pop each).
+fn bulk_drain(kind: QueueKind) -> Summary {
     let mut rng = Rng::seed_from(0xE7E27);
-    let events: Vec<(f64, Event)> =
-        (0..BULK as u64).map(|i| random_event(&mut rng, i)).collect();
+    let events: Vec<(f64, Event)> = (0..BULK as u64).map(|i| random_event(&mut rng, i)).collect();
     let mut sink = 0.0f64;
-    let s = bench(3, Duration::from_millis(300), || {
-        let mut q = EventQueue::new();
+    let summary = bench(3, Duration::from_millis(300), || {
+        let mut q = AnyTimeline::new(kind);
         for (due, e) in &events {
             q.push(*due, e.clone());
         }
@@ -48,40 +55,95 @@ fn main() {
             sink += popped.due_ms;
         }
     });
-    // each iteration moves BULK events through push *and* pop
-    let per_event = s.mean_ns / (2 * BULK) as f64;
-    table.row(&[
-        format!("bulk drain ({BULK} events)"),
-        format!("{per_event:.1}"),
-        format!("{:.1}", 1e3 / per_event),
-        format!("{:.1}", s.p99_ns / (2 * BULK) as f64),
-    ]);
+    assert!(sink.is_finite()); // keep the optimizer honest
+    summary
+}
 
-    // steady churn: heap holds CHURN_HEAP events; each iteration pops the
-    // earliest and pushes a successor (the periodic-event pattern)
-    let mut q = EventQueue::new();
+/// The queue holds `size` events; each iteration pops the earliest and
+/// pushes a successor 1 s later (the periodic-event pattern), so the
+/// population never moves.
+fn steady_churn(kind: QueueKind, size: usize) -> Summary {
+    let mut q = AnyTimeline::new(kind);
     let mut rng = Rng::seed_from(0xC4412);
-    for i in 0..CHURN_HEAP as u64 {
+    for i in 0..size as u64 {
         let (due, e) = random_event(&mut rng, i);
         q.push(due, e);
     }
-    let mut i = CHURN_HEAP as u64;
-    let s = bench(1000, Duration::from_millis(300), || {
-        let popped = q.pop().expect("heap never drains");
+    let mut i = size as u64;
+    let mut sink = 0.0f64;
+    let summary = bench(1000, Duration::from_millis(300), || {
+        let popped = q.pop().expect("queue never drains");
         sink += popped.due_ms;
         let (_, e) = random_event(&mut rng, i);
         q.push(popped.due_ms + 1000.0, e);
         i += 1;
     });
-    // one pop + one push per iteration
-    let per_event = s.mean_ns / 2.0;
-    table.row(&[
-        format!("steady churn (heap {CHURN_HEAP})"),
-        format!("{per_event:.1}"),
-        format!("{:.1}", 1e3 / per_event),
-        format!("{:.1}", s.p99_ns / 2.0),
-    ]);
+    assert!(sink.is_finite());
+    summary
+}
 
-    table.print("event queue throughput (deterministic (due, seq) binary heap)");
-    assert!(sink.is_finite()); // keep the optimizer honest
+fn main() {
+    let mut table = Table::new(&["scenario", "queue", "ns/event", "Mevents/s", "p99 ns/event"]);
+    // (snapshot key, display name, events resident, ops per iteration)
+    let scenarios: [(&str, String, usize); 3] = [
+        ("bulk_drain", format!("bulk drain ({BULK} events)"), BULK),
+        ("steady_churn", format!("steady churn (queue {CHURN_SMALL})"), CHURN_SMALL),
+        ("million_churn", format!("million churn (queue {CHURN_MILLION})"), CHURN_MILLION),
+    ];
+
+    let mut ratios: Vec<(&str, Json)> = Vec::new();
+    let mut million_per_event = [0.0f64; 2]; // [heap, wheel]
+    for (key, display, size) in &scenarios {
+        let mut per_event = [0.0f64; 2];
+        for (slot, kind) in [QueueKind::Heap, QueueKind::Wheel].into_iter().enumerate() {
+            let (summary, ops) = if *key == "bulk_drain" {
+                (bulk_drain(kind), (2 * BULK) as f64)
+            } else {
+                (steady_churn(kind, *size), 2.0)
+            };
+            per_event[slot] = summary.mean_ns / ops;
+            table.row(&[
+                display.clone(),
+                kind.name().to_string(),
+                format!("{:.1}", per_event[slot]),
+                format!("{:.1}", 1e3 / per_event[slot]),
+                format!("{:.1}", summary.p99_ns / ops),
+            ]);
+        }
+        // dimensionless and machine-normalized: >1 means the wheel is faster
+        ratios.push((*key, num(per_event[0] / per_event[1])));
+        if *key == "million_churn" {
+            million_per_event = per_event;
+        }
+    }
+    table.print("event queue throughput (Timeline: binary heap vs hierarchical timing wheel)");
+
+    assert!(
+        million_per_event[1] <= million_per_event[0],
+        "wheel must sustain at least the heap's events/sec at 1M resident events \
+         (heap {:.1} ns/event, wheel {:.1} ns/event)",
+        million_per_event[0],
+        million_per_event[1],
+    );
+    println!("(wheel >= heap events/sec at 1M resident events — asserted)");
+
+    if let Ok(path) = std::env::var("JIAGU_BENCH_SNAPSHOT") {
+        if !path.is_empty() {
+            let rows = scenarios
+                .iter()
+                .map(|(key, _, size)| {
+                    obj(vec![("events", num(*size as f64)), ("scenario", s(key))])
+                })
+                .collect::<Vec<_>>();
+            let payload = obj(vec![
+                ("bench", s("event_queue")),
+                ("bootstrap", Json::Bool(false)),
+                ("scenarios", arr(rows)),
+                ("wheel_over_heap_throughput", obj(ratios)),
+            ]);
+            std::fs::write(&path, format!("{}\n", payload.to_string()))
+                .expect("writing JIAGU_BENCH_SNAPSHOT");
+            println!("wrote {path}");
+        }
+    }
 }

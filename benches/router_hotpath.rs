@@ -13,10 +13,14 @@
 //!
 //! ```bash
 //! cargo bench --bench router_hotpath
+//! # JIAGU_BENCH_SNAPSHOT=BENCH_router_hotpath.json additionally writes
+//! # the machine-normalized snapshot (deterministic scenario shapes + the
+//! # dimensionless churn/steady throughput ratio; no wall-clock fields).
 //! ```
 
 use jiagu::router::{RouteOutcome, Router};
 use jiagu::util::bench::{bench, Table};
+use jiagu::util::json::{arr, num, obj, s as jstr, Json};
 use std::collections::VecDeque;
 use std::time::Duration;
 
@@ -63,6 +67,7 @@ fn main() {
     });
     // one route + (amortised) one complete per iteration
     let per_req = s.mean_ns / 2.0;
+    let steady_per_req = per_req;
     table.row(&[
         format!("steady state ({} fns x {} inst)", FUNCTIONS, INSTANCES_PER_FN),
         format!("{per_req:.1}"),
@@ -100,4 +105,34 @@ fn main() {
 
     table.print("router hot path (seeded weighted pick + FIFO queues)");
     assert!(r.total_in_flight() < u32::MAX); // keep the optimizer honest
+
+    if let Ok(path) = std::env::var("JIAGU_BENCH_SNAPSHOT") {
+        if !path.is_empty() {
+            let rows = vec![
+                obj(vec![
+                    ("instances_per_fn", num(INSTANCES_PER_FN as f64)),
+                    ("functions", num(FUNCTIONS as f64)),
+                    ("ops_per_iteration", num(2.0)),
+                    ("scenario", jstr("steady_state")),
+                ]),
+                obj(vec![
+                    ("instances_per_fn", num(INSTANCES_PER_FN as f64)),
+                    ("functions", num(FUNCTIONS as f64)),
+                    ("ops_per_iteration", num(128.0)),
+                    ("scenario", jstr("queue_churn")),
+                ]),
+            ];
+            let payload = obj(vec![
+                ("bench", jstr("router_hotpath")),
+                ("bootstrap", Json::Bool(false)),
+                // dimensionless: >1 means bursty churn routes faster per
+                // request than steady state (batched queue operations)
+                ("churn_over_steady_throughput", num(steady_per_req / per_req)),
+                ("scenarios", arr(rows)),
+            ]);
+            std::fs::write(&path, format!("{}\n", payload.to_string()))
+                .expect("writing JIAGU_BENCH_SNAPSHOT");
+            println!("wrote {path}");
+        }
+    }
 }

@@ -12,7 +12,10 @@
 //! cargo bench --bench shard_scaling
 //! # JIAGU_BENCH_DURATION=60 scales the virtual horizon (default 20 s);
 //! # JIAGU_BENCH_JSON=path.json additionally writes the rows as JSON
-//! # (uploaded as a CI workflow artifact).
+//! # (uploaded as a CI workflow artifact);
+//! # JIAGU_BENCH_SNAPSHOT=BENCH_shard_scaling.json writes the
+//! # machine-normalized snapshot (deterministic event counts + the
+//! # dimensionless speedups; no wall-clock fields).
 //! ```
 
 use jiagu::artifacts::make_catalog;
@@ -23,7 +26,7 @@ use jiagu::runtime::{ForestParams, NativeForestPredictor, Predictor};
 use jiagu::sim::RunReport;
 use jiagu::traces::{PoissonParams, Workload};
 use jiagu::util::bench::Table;
-use jiagu::util::json::{arr, num, obj, s};
+use jiagu::util::json::{arr, num, obj, s, Json};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -73,6 +76,7 @@ fn main() {
 
     let mut table = Table::new(&["shards", "events", "wall ms", "events/sec", "speedup"]);
     let mut rows = Vec::new();
+    let mut snapshot_rows = Vec::new();
     let mut reference: Option<(RunReport, f64)> = None;
     for shards in SHARD_COUNTS {
         let (report, secs) = run(shards);
@@ -105,6 +109,12 @@ fn main() {
             ("events_per_sec", num(events_per_sec)),
             ("speedup", num(speedup)),
         ]));
+        snapshot_rows.push(obj(vec![
+            ("events_processed", num(report.events_processed as f64)),
+            ("partitions", num(PARTITIONS as f64)),
+            ("shards", num(shards as f64)),
+            ("speedup", num(speedup)),
+        ]));
         if reference.is_none() {
             reference = Some((report, secs));
         }
@@ -121,6 +131,20 @@ fn main() {
             ]);
             std::fs::write(&path, format!("{}\n", payload.to_string()))
                 .expect("writing JIAGU_BENCH_JSON");
+            println!("wrote {path}");
+        }
+    }
+
+    if let Ok(path) = std::env::var("JIAGU_BENCH_SNAPSHOT") {
+        if !path.is_empty() {
+            let payload = obj(vec![
+                ("bench", s("shard_scaling")),
+                ("bootstrap", Json::Bool(false)),
+                ("duration_s", num(duration_s as f64)),
+                ("rows", arr(snapshot_rows)),
+            ]);
+            std::fs::write(&path, format!("{}\n", payload.to_string()))
+                .expect("writing JIAGU_BENCH_SNAPSHOT");
             println!("wrote {path}");
         }
     }

@@ -13,6 +13,18 @@
 //! "Saturated" means the router counts the instance as serving load (the
 //! paper's saturated instances); "Cached" instances are routed around but
 //! kept warm (dual-staged scaling, §5).
+//!
+//! ## Struct-of-arrays layout
+//!
+//! The instance table is stored as parallel columns indexed by
+//! [`InstanceId`] (ids are dense, monotone and never reused), not as a
+//! map of [`Instance`] rows: autoscaler sweeps and the per-request hot
+//! path read one column (state, node) per instance instead of chasing
+//! hash buckets, and [`Cluster::mix`] copies an already-sorted sparse
+//! per-node count vector instead of sorting a `HashMap` on every call.
+//! Slots of evicted instances stay allocated (a bounded cost of the
+//! id-indexed layout); [`Cluster::instance`] assembles a row **by value**
+//! for callers that want the whole record.
 
 use crate::catalog::{Catalog, FunctionId};
 use crate::interference::NodeMix;
@@ -35,8 +47,9 @@ pub enum InstanceState {
     Cached,
 }
 
-/// One function instance placed on a node.
-#[derive(Debug, Clone)]
+/// One function instance placed on a node — the by-value row view over
+/// the cluster's column store.
+#[derive(Debug, Clone, Copy)]
 pub struct Instance {
     pub id: InstanceId,
     pub function: FunctionId,
@@ -57,35 +70,62 @@ pub struct Node {
     pub requested_mem_mb: u64,
 }
 
-/// The whole cluster: nodes + instance table.
+/// The whole cluster: nodes + the struct-of-arrays instance table.
 #[derive(Debug)]
 pub struct Cluster {
     pub nodes: Vec<Node>,
-    instances: HashMap<InstanceId, Instance>,
+    // --- instance table columns, indexed by InstanceId ---
+    inst_function: Vec<FunctionId>,
+    inst_node: Vec<NodeId>,
+    inst_state: Vec<InstanceState>,
+    inst_created_ms: Vec<f64>,
+    inst_state_since_ms: Vec<f64>,
+    /// Whether the slot still holds a live (non-evicted) instance.
+    inst_live: Vec<bool>,
+    live_instances: usize,
     next_instance: InstanceId,
-    /// Cached per-node (function → (sat, cached)) counts, kept incrementally.
-    mixes: Vec<HashMap<FunctionId, (u32, u32)>>,
-    /// Cluster-wide instance counts per function (any state).
-    global_counts: HashMap<FunctionId, u32>,
+    /// Per-node (function, (sat+starting, cached)) counts, sparse and
+    /// sorted by function id — kept incrementally, so [`Cluster::mix`]
+    /// is a copy, never a sort.
+    mixes: Vec<Vec<(FunctionId, (u32, u32))>>,
+    /// Cluster-wide instance counts per function (any state), indexed by
+    /// function id (grown on demand).
+    global_counts: Vec<u32>,
     /// Cluster-wide Starting counts per function, kept on state
     /// transitions — the autoscaler's per-eval lookup is O(1) instead of
     /// an O(nodes × instances) scan.
-    starting: HashMap<FunctionId, u32>,
+    starting: Vec<u32>,
     /// Cluster-wide Cached instance ids per function in release order
     /// (the logical-cold-start conversion order), same motivation.
-    cached: HashMap<FunctionId, Vec<InstanceId>>,
+    cached: Vec<Vec<InstanceId>>,
+    /// Bumped by every mutation that can change a candidate ranking —
+    /// i.e. move some node's `counts` sum or `instances_on` total:
+    /// `place`, `evict`, `migrate_cached`.  `mark_ready`, `release` and
+    /// `reactivate` shuffle an instance between states *within* a node
+    /// (the summed counts and totals are unchanged) and `add_node`
+    /// appends an empty node (handled by the order cache's
+    /// append-on-grow path), so none of them bump.  See
+    /// `scheduler::CandidateOrders` for the consumer of this contract.
+    order_epoch: u64,
 }
 
 impl Cluster {
     pub fn new(n_nodes: usize) -> Self {
         Self {
             nodes: vec![Node::default(); n_nodes],
-            instances: HashMap::new(),
+            inst_function: Vec::new(),
+            inst_node: Vec::new(),
+            inst_state: Vec::new(),
+            inst_created_ms: Vec::new(),
+            inst_state_since_ms: Vec::new(),
+            inst_live: Vec::new(),
+            live_instances: 0,
             next_instance: 0,
-            mixes: vec![HashMap::new(); n_nodes],
-            global_counts: HashMap::new(),
-            starting: HashMap::new(),
-            cached: HashMap::new(),
+            mixes: vec![Vec::new(); n_nodes],
+            global_counts: Vec::new(),
+            starting: Vec::new(),
+            cached: Vec::new(),
+            order_epoch: 0,
         }
     }
 
@@ -93,24 +133,86 @@ impl Cluster {
         self.nodes.len()
     }
 
+    /// The candidate-order change stamp (see the field doc for exactly
+    /// which mutations advance it).
+    pub fn order_epoch(&self) -> u64 {
+        self.order_epoch
+    }
+
     /// Grow the cluster (the paper requests new servers when no node fits).
     pub fn add_node(&mut self) -> NodeId {
         self.nodes.push(Node::default());
-        self.mixes.push(HashMap::new());
+        self.mixes.push(Vec::new());
         self.nodes.len() - 1
     }
 
-    pub fn instance(&self, id: InstanceId) -> Option<&Instance> {
-        self.instances.get(&id)
+    /// The full row of a live instance, by value.
+    pub fn instance(&self, id: InstanceId) -> Option<Instance> {
+        let i = id as usize;
+        if i >= self.inst_live.len() || !self.inst_live[i] {
+            return None;
+        }
+        Some(Instance {
+            id,
+            function: self.inst_function[i],
+            node: self.inst_node[i],
+            state: self.inst_state[i],
+            created_ms: self.inst_created_ms[i],
+            state_since_ms: self.inst_state_since_ms[i],
+        })
+    }
+
+    /// State of a live instance — one column read, no row assembly.
+    pub fn state_of(&self, id: InstanceId) -> Option<InstanceState> {
+        let i = id as usize;
+        (i < self.inst_live.len() && self.inst_live[i]).then(|| self.inst_state[i])
+    }
+
+    /// Node of a live instance — one column read.
+    pub fn node_of(&self, id: InstanceId) -> Option<NodeId> {
+        let i = id as usize;
+        (i < self.inst_live.len() && self.inst_live[i]).then(|| self.inst_node[i])
+    }
+
+    /// Creation time of a live instance — one column read.
+    pub fn created_ms_of(&self, id: InstanceId) -> Option<f64> {
+        let i = id as usize;
+        (i < self.inst_live.len() && self.inst_live[i]).then(|| self.inst_created_ms[i])
     }
 
     pub fn instances_len(&self) -> usize {
-        self.instances.len()
+        self.live_instances
     }
 
-    /// All instances on `node` (unordered).
-    pub fn node_instances(&self, node: NodeId) -> impl Iterator<Item = &Instance> + '_ {
-        self.nodes[node].instances.iter().filter_map(move |id| self.instances.get(id))
+    /// All instances on `node` (unordered), assembled by value.
+    pub fn node_instances(&self, node: NodeId) -> impl Iterator<Item = Instance> + '_ {
+        self.nodes[node]
+            .instances
+            .iter()
+            .map(move |&id| self.instance(id).expect("node instance list holds live ids"))
+    }
+
+    /// The (sat+starting, cached) cell for `function` in a sorted sparse
+    /// mix, inserted at its sort position on first touch.
+    fn mix_entry(
+        mix: &mut Vec<(FunctionId, (u32, u32))>,
+        function: FunctionId,
+    ) -> &mut (u32, u32) {
+        match mix.binary_search_by_key(&function, |(f, _)| *f) {
+            Ok(i) => &mut mix[i].1,
+            Err(i) => {
+                mix.insert(i, (function, (0, 0)));
+                &mut mix[i].1
+            }
+        }
+    }
+
+    fn ensure_function(&mut self, function: FunctionId) {
+        if self.global_counts.len() <= function {
+            self.global_counts.resize(function + 1, 0);
+            self.starting.resize(function + 1, 0);
+            self.cached.resize_with(function + 1, Vec::new);
+        }
     }
 
     /// Place a new instance (initially [`InstanceState::Starting`], which
@@ -127,125 +229,140 @@ impl Cluster {
         let id = self.next_instance;
         self.next_instance += 1;
         let spec = cat.get(function);
-        let inst = Instance {
-            id,
-            function,
-            node,
-            state: InstanceState::Starting,
-            created_ms: now_ms,
-            state_since_ms: now_ms,
-        };
+        debug_assert_eq!(self.inst_function.len() as u64, id);
+        self.inst_function.push(function);
+        self.inst_node.push(node);
+        self.inst_state.push(InstanceState::Starting);
+        self.inst_created_ms.push(now_ms);
+        self.inst_state_since_ms.push(now_ms);
+        self.inst_live.push(true);
+        self.live_instances += 1;
         self.nodes[node].instances.push(id);
         self.nodes[node].requested_milli_cpu += spec.milli_cpu;
         self.nodes[node].requested_mem_mb += spec.mem_mb;
-        let e = self.mixes[node].entry(function).or_insert((0, 0));
-        e.0 += 1; // Starting reserved as saturated
-        *self.global_counts.entry(function).or_insert(0) += 1;
-        *self.starting.entry(function).or_insert(0) += 1;
-        self.instances.insert(id, inst);
+        Self::mix_entry(&mut self.mixes[node], function).0 += 1; // Starting reserved as saturated
+        self.ensure_function(function);
+        self.global_counts[function] += 1;
+        self.starting[function] += 1;
+        self.order_epoch += 1;
         id
     }
 
     /// Cluster-wide count of `f` instances still cold-starting — O(1).
     pub fn starting_count(&self, f: FunctionId) -> u32 {
-        self.starting.get(&f).copied().unwrap_or(0)
+        self.starting.get(f).copied().unwrap_or(0)
     }
 
     /// Cluster-wide Cached instances of `f` in release order — O(1)
     /// lookup (the slice the dual-staged reversal converts from).
     pub fn cached_of(&self, f: FunctionId) -> &[InstanceId] {
-        self.cached.get(&f).map(|v| v.as_slice()).unwrap_or(&[])
+        self.cached.get(f).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     /// Whether any instance (any state, any node) of `f` exists.
     pub fn deployed_anywhere(&self, f: FunctionId) -> bool {
-        self.global_counts.get(&f).copied().unwrap_or(0) > 0
+        self.global_counts.get(f).copied().unwrap_or(0) > 0
     }
 
     /// Cluster-wide instance count of `f` (any state).
     pub fn global_count(&self, f: FunctionId) -> u32 {
-        self.global_counts.get(&f).copied().unwrap_or(0)
+        self.global_counts.get(f).copied().unwrap_or(0)
     }
 
     /// Flip a Starting instance to Saturated (init finished).
     pub fn mark_ready(&mut self, id: InstanceId, now_ms: f64) {
-        if let Some(inst) = self.instances.get_mut(&id) {
-            debug_assert_eq!(inst.state, InstanceState::Starting);
-            inst.state = InstanceState::Saturated;
-            inst.state_since_ms = now_ms;
-            let function = inst.function;
-            self.dec_starting(function);
+        let i = id as usize;
+        if i >= self.inst_live.len() || !self.inst_live[i] {
+            return;
         }
+        debug_assert_eq!(self.inst_state[i], InstanceState::Starting);
+        self.inst_state[i] = InstanceState::Saturated;
+        self.inst_state_since_ms[i] = now_ms;
+        let function = self.inst_function[i];
+        self.dec_starting(function);
+        // (sat+starting, cached) sums and totals unchanged: no epoch bump
     }
 
     /// Dual-staged scaling stage 1: Saturated → Cached ("release").
     pub fn release(&mut self, id: InstanceId, now_ms: f64) {
-        let inst = self.instances.get_mut(&id).expect("release: unknown instance");
-        assert_eq!(inst.state, InstanceState::Saturated, "release requires Saturated");
-        inst.state = InstanceState::Cached;
-        inst.state_since_ms = now_ms;
-        let e = self.mixes[inst.node].get_mut(&inst.function).unwrap();
+        let i = id as usize;
+        assert!(
+            i < self.inst_live.len() && self.inst_live[i],
+            "release: unknown instance"
+        );
+        assert_eq!(
+            self.inst_state[i],
+            InstanceState::Saturated,
+            "release requires Saturated"
+        );
+        self.inst_state[i] = InstanceState::Cached;
+        self.inst_state_since_ms[i] = now_ms;
+        let (node, function) = (self.inst_node[i], self.inst_function[i]);
+        let e = Self::mix_entry(&mut self.mixes[node], function);
         e.0 -= 1;
         e.1 += 1;
-        let function = inst.function;
-        self.cached.entry(function).or_default().push(id);
+        self.cached[function].push(id);
     }
 
     /// Logical cold start: Cached → Saturated (re-route, <1 ms).
     pub fn reactivate(&mut self, id: InstanceId, now_ms: f64) {
-        let inst = self.instances.get_mut(&id).expect("reactivate: unknown instance");
-        assert_eq!(inst.state, InstanceState::Cached, "reactivate requires Cached");
-        inst.state = InstanceState::Saturated;
-        inst.state_since_ms = now_ms;
-        let e = self.mixes[inst.node].get_mut(&inst.function).unwrap();
+        let i = id as usize;
+        assert!(
+            i < self.inst_live.len() && self.inst_live[i],
+            "reactivate: unknown instance"
+        );
+        assert_eq!(
+            self.inst_state[i],
+            InstanceState::Cached,
+            "reactivate requires Cached"
+        );
+        self.inst_state[i] = InstanceState::Saturated;
+        self.inst_state_since_ms[i] = now_ms;
+        let (node, function) = (self.inst_node[i], self.inst_function[i]);
+        let e = Self::mix_entry(&mut self.mixes[node], function);
         e.0 += 1;
         e.1 -= 1;
-        let function = inst.function;
         self.remove_cached(function, id);
     }
 
     fn dec_starting(&mut self, function: FunctionId) {
-        let s = self.starting.get_mut(&function).expect("starting count underflow");
-        *s -= 1;
-        if *s == 0 {
-            self.starting.remove(&function);
-        }
+        let s = &mut self.starting[function];
+        *s = s.checked_sub(1).expect("starting count underflow");
     }
 
     fn remove_cached(&mut self, function: FunctionId, id: InstanceId) {
-        let v = self.cached.get_mut(&function).expect("cached index missing function");
-        v.retain(|x| *x != id);
-        if v.is_empty() {
-            self.cached.remove(&function);
-        }
+        self.cached[function].retain(|x| *x != id);
     }
 
     /// Remove an instance entirely (real eviction or failed start).
     pub fn evict(&mut self, cat: &Catalog, id: InstanceId) -> Option<Instance> {
-        let inst = self.instances.remove(&id)?;
+        let inst = self.instance(id)?;
+        self.inst_live[id as usize] = false;
+        self.live_instances -= 1;
         let node = &mut self.nodes[inst.node];
         node.instances.retain(|x| *x != id);
         let spec = cat.get(inst.function);
         node.requested_milli_cpu -= spec.milli_cpu;
         node.requested_mem_mb -= spec.mem_mb;
-        let e = self.mixes[inst.node].get_mut(&inst.function).unwrap();
+        let mix = &mut self.mixes[inst.node];
+        let slot = mix
+            .binary_search_by_key(&inst.function, |(f, _)| *f)
+            .expect("mix missing evicted function");
+        let (_, counts) = &mut mix[slot];
         match inst.state {
-            InstanceState::Cached => e.1 -= 1,
-            _ => e.0 -= 1,
+            InstanceState::Cached => counts.1 -= 1,
+            _ => counts.0 -= 1,
         }
-        if *e == (0, 0) {
-            self.mixes[inst.node].remove(&inst.function);
+        if *counts == (0, 0) {
+            mix.remove(slot);
         }
-        let g = self.global_counts.get_mut(&inst.function).unwrap();
-        *g -= 1;
-        if *g == 0 {
-            self.global_counts.remove(&inst.function);
-        }
+        self.global_counts[inst.function] -= 1;
         match inst.state {
             InstanceState::Starting => self.dec_starting(inst.function),
             InstanceState::Cached => self.remove_cached(inst.function, id),
             InstanceState::Saturated => {}
         }
+        self.order_epoch += 1;
         Some(inst)
     }
 
@@ -258,46 +375,60 @@ impl Cluster {
         target: NodeId,
         now_ms: f64,
     ) {
-        let inst = self.instances.get_mut(&id).expect("migrate: unknown instance");
-        assert_eq!(inst.state, InstanceState::Cached);
-        let src = inst.node;
-        let function = inst.function;
+        let i = id as usize;
+        assert!(
+            i < self.inst_live.len() && self.inst_live[i],
+            "migrate: unknown instance"
+        );
+        assert_eq!(self.inst_state[i], InstanceState::Cached);
+        let src = self.inst_node[i];
+        let function = self.inst_function[i];
         let spec = cat.get(function);
         // remove from source
         self.nodes[src].instances.retain(|x| *x != id);
         self.nodes[src].requested_milli_cpu -= spec.milli_cpu;
         self.nodes[src].requested_mem_mb -= spec.mem_mb;
-        let e = self.mixes[src].get_mut(&function).unwrap();
-        e.1 -= 1;
-        if *e == (0, 0) {
-            self.mixes[src].remove(&function);
+        {
+            let mix = &mut self.mixes[src];
+            let slot = mix
+                .binary_search_by_key(&function, |(f, _)| *f)
+                .expect("mix missing migrated function");
+            let (_, counts) = &mut mix[slot];
+            counts.1 -= 1;
+            if *counts == (0, 0) {
+                mix.remove(slot);
+            }
         }
         // add to target
-        let inst = self.instances.get_mut(&id).unwrap();
-        inst.node = target;
-        inst.state_since_ms = now_ms;
+        self.inst_node[i] = target;
+        self.inst_state_since_ms[i] = now_ms;
         self.nodes[target].instances.push(id);
         self.nodes[target].requested_milli_cpu += spec.milli_cpu;
         self.nodes[target].requested_mem_mb += spec.mem_mb;
-        let e = self.mixes[target].entry(function).or_insert((0, 0));
-        e.1 += 1;
+        Self::mix_entry(&mut self.mixes[target], function).1 += 1;
+        self.order_epoch += 1; // instance totals moved between two nodes
     }
 
     /// The interference mix of a node: (function, saturated+starting,
-    /// cached) triples.  Starting instances count as saturated — the
-    /// scheduler must reserve their pressure before they serve.
+    /// cached) triples, sorted by function id.  Starting instances count
+    /// as saturated — the scheduler must reserve their pressure before
+    /// they serve.  The sparse counts are maintained sorted, so this is
+    /// a straight copy.
     pub fn mix(&self, node: NodeId) -> NodeMix {
-        let mut entries: Vec<(FunctionId, u32, u32)> = self.mixes[node]
-            .iter()
-            .map(|(f, (s, c))| (*f, *s, *c))
-            .collect();
-        entries.sort_unstable_by_key(|(f, _, _)| *f);
-        NodeMix::new(entries)
+        NodeMix::new(
+            self.mixes[node]
+                .iter()
+                .map(|&(f, (s, c))| (f, s, c))
+                .collect(),
+        )
     }
 
     /// (saturated+starting, cached) counts of `function` on `node`.
     pub fn counts(&self, node: NodeId, function: FunctionId) -> (u32, u32) {
-        self.mixes[node].get(&function).copied().unwrap_or((0, 0))
+        match self.mixes[node].binary_search_by_key(&function, |(f, _)| *f) {
+            Ok(i) => self.mixes[node][i].1,
+            Err(_) => (0, 0),
+        }
     }
 
     /// Instances of `function` on `node` in a given state.
@@ -307,9 +438,14 @@ impl Cluster {
         function: FunctionId,
         state: InstanceState,
     ) -> Vec<InstanceId> {
-        self.node_instances(node)
-            .filter(|i| i.function == function && i.state == state)
-            .map(|i| i.id)
+        self.nodes[node]
+            .instances
+            .iter()
+            .copied()
+            .filter(|&id| {
+                let i = id as usize;
+                self.inst_function[i] == function && self.inst_state[i] == state
+            })
             .collect()
     }
 
@@ -321,7 +457,7 @@ impl Cluster {
     /// Debug invariant check: mixes and the per-function state index
     /// match the instance table (tests).
     pub fn check_invariants(&self) -> anyhow::Result<()> {
-        for (n, _) in self.nodes.iter().enumerate() {
+        for n in 0..self.nodes.len() {
             let mut counted: HashMap<FunctionId, (u32, u32)> = HashMap::new();
             for inst in self.node_instances(n) {
                 let e = counted.entry(inst.function).or_insert((0, 0));
@@ -330,42 +466,56 @@ impl Cluster {
                     _ => e.0 += 1,
                 }
             }
+            let mut expect: Vec<(FunctionId, (u32, u32))> = counted.into_iter().collect();
+            expect.sort_unstable_by_key(|(f, _)| *f);
             anyhow::ensure!(
-                counted == self.mixes[n],
+                expect == self.mixes[n],
                 "node {n}: mix cache {:?} != actual {:?}",
                 self.mixes[n],
-                counted
+                expect
             );
         }
-        let mut starting: HashMap<FunctionId, u32> = HashMap::new();
+        let mut live = 0usize;
+        let mut starting = vec![0u32; self.starting.len()];
+        let mut global = vec![0u32; self.global_counts.len()];
         let mut cached: HashMap<FunctionId, Vec<InstanceId>> = HashMap::new();
-        for inst in self.instances.values() {
-            match inst.state {
-                InstanceState::Starting => *starting.entry(inst.function).or_insert(0) += 1,
-                InstanceState::Cached => cached.entry(inst.function).or_default().push(inst.id),
+        for i in 0..self.inst_live.len() {
+            if !self.inst_live[i] {
+                continue;
+            }
+            live += 1;
+            let f = self.inst_function[i];
+            anyhow::ensure!(f < global.len(), "fn {f} beyond the count index");
+            global[f] += 1;
+            match self.inst_state[i] {
+                InstanceState::Starting => starting[f] += 1,
+                InstanceState::Cached => cached.entry(f).or_default().push(i as InstanceId),
                 InstanceState::Saturated => {}
             }
         }
         anyhow::ensure!(
-            starting == self.starting,
-            "starting index {:?} != actual {:?}",
-            self.starting,
-            starting
+            live == self.live_instances,
+            "live counter {} != actual {live}",
+            self.live_instances
         );
         anyhow::ensure!(
-            cached.len() == self.cached.len(),
-            "cached index keys {:?} != actual {:?}",
-            self.cached.keys(),
-            cached.keys()
+            starting == self.starting,
+            "starting index {:?} != actual {starting:?}",
+            self.starting
         );
-        for (f, ids) in &cached {
+        anyhow::ensure!(
+            global == self.global_counts,
+            "global counts {:?} != actual {global:?}",
+            self.global_counts
+        );
+        for f in 0..self.cached.len() {
             // membership + uniqueness; the *release order* of the index
             // cannot be reconstructed from the instance table (migration
             // bumps state_since_ms without reordering), so order is
             // pinned by the state_index_tracks_transitions unit test
-            let mut expect = ids.clone();
+            let mut expect = cached.remove(&f).unwrap_or_default();
             expect.sort_unstable();
-            let mut got = self.cached.get(f).cloned().unwrap_or_default();
+            let mut got = self.cached[f].clone();
             got.sort_unstable();
             got.dedup();
             anyhow::ensure!(
@@ -373,6 +523,11 @@ impl Cluster {
                 "cached index for fn {f}: {got:?} != actual {expect:?}"
             );
         }
+        anyhow::ensure!(
+            cached.is_empty(),
+            "cached instances beyond the index: {:?}",
+            cached.keys()
+        );
         Ok(())
     }
 }
@@ -457,6 +612,7 @@ mod tests {
         assert_eq!(cl.counts(0, 2), (0, 0));
         assert_eq!(cl.counts(1, 2), (0, 1));
         assert_eq!(cl.instance(id).unwrap().node, 1);
+        assert_eq!(cl.node_of(id), Some(1));
         cl.check_invariants().unwrap();
     }
 
@@ -472,5 +628,49 @@ mod tests {
         }
         let mix = cl.mix(0);
         assert_eq!(mix.entries, vec![(0, 2, 0), (1, 2, 0), (2, 2, 0)]);
+    }
+
+    /// The order epoch moves exactly with the mutations that can change a
+    /// candidate ranking (place/evict/migrate) and stays put for the ones
+    /// that provably cannot (ready/release/reactivate/add_node).
+    #[test]
+    fn order_epoch_tracks_ranking_mutations_only() {
+        let cat = test_catalog();
+        let mut cl = Cluster::new(2);
+        let e0 = cl.order_epoch();
+        let id = cl.place(&cat, 0, 0, 0.0);
+        assert_ne!(cl.order_epoch(), e0, "place must bump");
+        let e1 = cl.order_epoch();
+        cl.mark_ready(id, 1.0);
+        cl.release(id, 2.0);
+        cl.reactivate(id, 3.0);
+        cl.add_node();
+        assert_eq!(cl.order_epoch(), e1, "in-node state moves must not bump");
+        cl.release(id, 4.0);
+        cl.migrate_cached(&cat, id, 1, 5.0);
+        assert_ne!(cl.order_epoch(), e1, "migration must bump");
+        let e2 = cl.order_epoch();
+        cl.evict(&cat, id);
+        assert_ne!(cl.order_epoch(), e2, "evict must bump");
+        cl.check_invariants().unwrap();
+    }
+
+    /// Column accessors agree with the assembled row and observe
+    /// evictions.
+    #[test]
+    fn column_accessors_match_row_view() {
+        let cat = test_catalog();
+        let mut cl = Cluster::new(1);
+        let id = cl.place(&cat, 1, 0, 7.5);
+        let row = cl.instance(id).unwrap();
+        assert_eq!(cl.state_of(id), Some(row.state));
+        assert_eq!(cl.node_of(id), Some(row.node));
+        assert_eq!(cl.created_ms_of(id), Some(7.5));
+        assert_eq!(cl.instances_len(), 1);
+        cl.evict(&cat, id);
+        assert!(cl.instance(id).is_none());
+        assert_eq!(cl.state_of(id), None);
+        assert_eq!(cl.node_of(id), None);
+        assert_eq!(cl.instances_len(), 0);
     }
 }

@@ -4,6 +4,7 @@
 
 use crate::autoscaler::AutoscalerConfig;
 use crate::capacity::CapacityConfig;
+use crate::engine::QueueKind;
 use crate::util::json::Json;
 use anyhow::{bail, Result};
 use std::path::Path;
@@ -184,6 +185,11 @@ pub struct RunConfig {
     /// so the report depends only on the layout, never on parallelism;
     /// clamped to `min(n_functions, n_nodes)` at layout build time.
     pub partitions: usize,
+    /// Which [`crate::engine::Timeline`] implementation orders the event
+    /// stream (JSON key `queue`: `"heap"` or `"wheel"`).  Both satisfy
+    /// the same `(due_ms, seq)` contract, so the choice never changes a
+    /// byte of any report — the determinism matrix pins exactly that.
+    pub queue: QueueKind,
 }
 
 impl Default for RunConfig {
@@ -202,6 +208,7 @@ impl Default for RunConfig {
             requests: false,
             shards: 0,
             partitions: DEFAULT_PARTITIONS,
+            queue: QueueKind::Heap,
         }
     }
 }
@@ -300,6 +307,13 @@ impl RunConfig {
         if let Some(v) = j.opt("partitions") {
             c.partitions = v.as_usize()?;
         }
+        if let Some(v) = j.opt("queue") {
+            let s = v.as_str()?;
+            c.queue = match QueueKind::parse(s) {
+                Some(kind) => kind,
+                None => bail!("unknown queue kind {s:?} (heap|wheel)"),
+            };
+        }
         Ok(c)
     }
 }
@@ -352,6 +366,18 @@ mod tests {
         assert_eq!(c.shards, 2);
         assert_eq!(c.partitions, 8);
         assert_eq!(c.seed, 9);
+    }
+
+    #[test]
+    fn load_reads_queue_kind_and_rejects_unknown() {
+        assert_eq!(RunConfig::default().queue, QueueKind::Heap);
+        let path = std::env::temp_dir().join("jiagu_cfg_queue_test.json");
+        std::fs::write(&path, r#"{"queue": "wheel"}"#).unwrap();
+        let c = RunConfig::load(&path).unwrap();
+        assert_eq!(c.queue, QueueKind::Wheel);
+        std::fs::write(&path, r#"{"queue": "ring"}"#).unwrap();
+        assert!(RunConfig::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

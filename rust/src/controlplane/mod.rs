@@ -1,5 +1,5 @@
 //! The event-driven control-plane core: cluster + router + scheduler +
-//! autoscaler behind one deterministic [`EventQueue`].
+//! autoscaler behind one deterministic [`Timeline`] queue.
 //!
 //! The old engine quantized everything to 1 s ticks: cold starts
 //! completed at the next tick boundary, asynchronous refreshes were
@@ -51,8 +51,10 @@
 //! [`DeferredUpdate`]/`Plan` for observability; they never steer
 //! virtual time.
 //!
-//! Drains are `O(log n)` per event (binary-heap pop) — the per-tick
-//! `Vec::retain` and partition scans of the old loop are gone.
+//! Drains cost `O(log n)` per event on the reference binary heap and
+//! `O(1)` amortised on the timing wheel (`cfg.queue` selects the
+//! [`Timeline`] implementation) — the per-tick `Vec::retain` and
+//! partition scans of the old loop are gone either way.
 //!
 //! [`ControlPlane::run_until`] drains the queue to a horizon and returns
 //! the accumulated [`EngineEvents`]; `sim::Simulation` folds that into a
@@ -72,7 +74,7 @@ use crate::autoscaler::Autoscaler;
 use crate::catalog::{Catalog, FunctionId};
 use crate::cluster::{Cluster, InstanceId, InstanceState, NodeId};
 use crate::config::{RunConfig, SchedulerKind};
-use crate::engine::{Event, EventQueue};
+use crate::engine::{AnyTimeline, Event, Timeline};
 use crate::interference;
 use crate::model::AccuracyMonitor;
 use crate::router::{RouteOutcome, Router};
@@ -210,7 +212,9 @@ pub struct ControlPlane {
     autoscaler: Autoscaler,
     monitor: AccuracyMonitor,
     rng: Rng,
-    queue: EventQueue,
+    /// The event timeline — heap or wheel per `cfg.queue`; both produce
+    /// the same pop stream bit for bit (see [`crate::engine::Timeline`]).
+    queue: AnyTimeline,
     /// Latest submitted refresh per node; an older in-flight refresh for
     /// the same node is superseded by overwriting it here (its queued
     /// event then pops as a no-op — versions are monotone per node).
@@ -248,7 +252,7 @@ impl ControlPlane {
             autoscaler: Autoscaler::new(cfg.autoscaler.clone(), n_functions),
             monitor: AccuracyMonitor::new(n_functions),
             rng: Rng::seed_from(cfg.seed),
-            queue: EventQueue::new(),
+            queue: AnyTimeline::new(cfg.queue),
             in_flight: HashMap::new(),
             loads: vec![0.0; n_functions],
             now_ms: 0.0,
@@ -314,14 +318,16 @@ impl ControlPlane {
     /// a load step at time `t` is visible to the autoscaler evaluation
     /// at the same `t`.
     pub fn inject_workload(&mut self, workload: &Workload) {
-        for e in &workload.events {
+        let batch: Vec<(f64, Event)> = workload
+            .events
+            .iter()
             // a non-finite due time would wedge the queue (a negative
             // NaN sorts before every finite due yet never satisfies
             // `due < limit`), so drop malformed events at the door
-            if e.function < self.loads.len() && e.at_ms.is_finite() {
-                self.queue.push(e.at_ms, Event::LoadChange { function: e.function, rps: e.rps });
-            }
-        }
+            .filter(|e| e.function < self.loads.len() && e.at_ms.is_finite())
+            .map(|e| (e.at_ms, Event::LoadChange { function: e.function, rps: e.rps }))
+            .collect();
+        self.queue.extend(batch);
     }
 
     /// Queue synthesized per-invocation arrivals as
@@ -330,13 +336,14 @@ impl ControlPlane {
     /// the same instant then dispatch in injection order, which the
     /// queue's sequence numbers keep deterministic.
     pub fn inject_arrivals(&mut self, arrivals: &[Arrival]) {
-        for a in arrivals {
+        let batch: Vec<(f64, Event)> = arrivals
+            .iter()
             // same door policy as inject_workload: malformed events would
             // wedge or skew the queue, so drop them here
-            if a.function < self.loads.len() && a.at_ms.is_finite() {
-                self.queue.push(a.at_ms, Event::RequestArrival { function: a.function });
-            }
-        }
+            .filter(|a| a.function < self.loads.len() && a.at_ms.is_finite())
+            .map(|a| (a.at_ms, Event::RequestArrival { function: a.function }))
+            .collect();
+        self.queue.extend(batch);
     }
 
     /// Seed the self-rescheduling periodic events on first drain (after

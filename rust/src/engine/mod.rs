@@ -1,5 +1,5 @@
 //! The discrete-event core: a deterministic, millisecond-resolution
-//! [`EventQueue`] that replaced the 1 s tick loop.
+//! [`Timeline`] abstraction that replaced the 1 s tick loop.
 //!
 //! ## Event taxonomy
 //!
@@ -27,10 +27,28 @@
 //! wall-clock completion clamp (`MAX_ASYNC_COMPLETION_MS`): deferred
 //! work no longer needs quantization to stay replayable.
 //!
-//! Pop-until-due is `O(log n)` per event against the old loop's
-//! `O(n)`-per-tick `Vec::retain`/partition scans, and due times are
-//! honoured at full `f64` millisecond resolution instead of being rounded
-//! up to the next 1 s tick boundary.
+//! ## Two interchangeable implementations
+//!
+//! The contract above is an *API*, not a data structure: the sealed
+//! [`Timeline`] trait captures it (`push`, `extend` batch admission,
+//! `pop`, `peek_due`, `pop_due`), and two implementations satisfy it:
+//!
+//! * [`EventQueue`] — the reference `BinaryHeap` implementation,
+//!   `O(log n)` per operation;
+//! * [`TimingWheel`] — a hierarchical timing wheel (4 levels × 64 slots
+//!   of 1 ms / 64 ms / 4.096 s / 262 s, bitmap-indexed, with an overflow
+//!   list beyond ~4.66 h), `O(1)` amortised per operation at steady
+//!   state, which is what keeps a million-event queue off the
+//!   `O(log 10^6)` pointer-chasing path.
+//!
+//! [`AnyTimeline`] dispatches between them at runtime; the control plane
+//! selects the implementation from [`crate::config::RunConfig`]
+//! (`jiagu run --queue {heap,wheel}`).  Because both implement the same
+//! total order, swapping the implementation never changes a single
+//! popped bit — the CI determinism matrix byte-compares golden
+//! `RunReport`s across `--queue heap` and `--queue wheel` at every shard
+//! count, and `rust/tests/timeline_props.rs` pins pop-order equivalence
+//! on randomized streams.
 //!
 //! The contract is also what makes control planes **composable**: a
 //! partitioned sub-stream of a workload (see
@@ -100,7 +118,9 @@ impl PartialOrd for Scheduled {
 
 impl Ord for Scheduled {
     /// Reversed comparison so [`BinaryHeap`] (a max-heap) pops the
-    /// earliest `(due_ms, seq)` first.
+    /// earliest `(due_ms, seq)` first — and a plain ascending sort of a
+    /// `Vec<Scheduled>` puts the earliest event *last* (cheap `Vec::pop`
+    /// drains in due order; the [`TimingWheel`] ready-run relies on it).
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         other
             .due_ms
@@ -109,7 +129,84 @@ impl Ord for Scheduled {
     }
 }
 
-/// Deterministic min-heap of [`Scheduled`] events.
+mod sealed {
+    /// [`super::Timeline`] is sealed: the determinism matrix can only
+    /// vouch for implementations this module knows about.
+    pub trait Sealed {}
+    impl Sealed for super::EventQueue {}
+    impl Sealed for super::TimingWheel {}
+    impl Sealed for super::AnyTimeline {}
+}
+
+/// The engine's time-ordering API — a deterministic priority queue of
+/// [`Scheduled`] events.
+///
+/// # The `(due_ms, seq)` determinism contract
+///
+/// Implementations MUST pop events in ascending `(due_ms, seq)` order,
+/// where `due_ms` is compared with [`f64::total_cmp`] at full `f64`
+/// resolution (an event due at `8.4320` ms pops before one due at
+/// `8.4321` ms) and `seq` is the monotone counter assigned by `push` —
+/// so equal due times resolve by push order and the pop order is a
+/// *total* order over any event multiset.  `pop_due(limit, inclusive)`
+/// honours a strict (`<`) or inclusive (`<=`) due-time limit.  Two
+/// implementations fed the same push sequence must therefore produce
+/// bit-identical pop streams; that equivalence is what lets
+/// [`crate::config::RunConfig`] select the implementation without
+/// perturbing a single byte of any `RunReport`.
+///
+/// The trait is sealed: [`EventQueue`] (reference `BinaryHeap`),
+/// [`TimingWheel`] (hierarchical timing wheel) and the dispatching
+/// [`AnyTimeline`] are the only implementations, because each one is
+/// pinned against the others by `rust/tests/timeline_props.rs` and the
+/// CI determinism matrix.
+pub trait Timeline: sealed::Sealed + Send {
+    /// Schedule `event` at `due_ms`; returns its sequence number.
+    fn push(&mut self, due_ms: f64, event: Event) -> u64;
+
+    /// Batch admission: push every `(due_ms, event)` pair in order.
+    ///
+    /// Equivalent to a `push` loop (sequence numbers are assigned in
+    /// iteration order); implementations may pre-size internal storage.
+    fn extend(&mut self, batch: Vec<(f64, Event)>) {
+        for (due_ms, event) in batch {
+            self.push(due_ms, event);
+        }
+    }
+
+    /// Pop the earliest event unconditionally.
+    fn pop(&mut self) -> Option<Scheduled>;
+
+    /// Due time of the earliest queued event.
+    ///
+    /// Takes `&mut self`: a wheel implementation may advance its cursor
+    /// to locate the minimum, which never changes the observable pop
+    /// order.
+    fn peek_due(&mut self) -> Option<f64>;
+
+    /// Pop the earliest event if it is due by `limit_ms`.  With
+    /// `inclusive = false` only events strictly before the limit pop —
+    /// the half-open window `Simulation` drains per horizon.
+    fn pop_due(&mut self, limit_ms: f64, inclusive: bool) -> Option<Scheduled> {
+        let due = self.peek_due()?;
+        let ready = if inclusive { due <= limit_ms } else { due < limit_ms };
+        if ready {
+            self.pop()
+        } else {
+            None
+        }
+    }
+
+    /// Number of queued events.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Deterministic min-heap of [`Scheduled`] events — the reference
+/// [`Timeline`] implementation (`O(log n)` per operation).
 #[derive(Debug, Default)]
 pub struct EventQueue {
     heap: BinaryHeap<Scheduled>,
@@ -158,6 +255,395 @@ impl EventQueue {
 
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
+    }
+}
+
+impl Timeline for EventQueue {
+    fn push(&mut self, due_ms: f64, event: Event) -> u64 {
+        EventQueue::push(self, due_ms, event)
+    }
+
+    fn pop(&mut self) -> Option<Scheduled> {
+        EventQueue::pop(self)
+    }
+
+    fn peek_due(&mut self) -> Option<f64> {
+        EventQueue::peek_due(self)
+    }
+
+    fn pop_due(&mut self, limit_ms: f64, inclusive: bool) -> Option<Scheduled> {
+        EventQueue::pop_due(self, limit_ms, inclusive)
+    }
+
+    fn len(&self) -> usize {
+        EventQueue::len(self)
+    }
+}
+
+const SLOT_BITS: u32 = 6;
+const SLOTS: usize = 1 << SLOT_BITS; // 64 slots per level
+const SLOT_MASK: u64 = SLOTS as u64 - 1;
+const LEVELS: usize = 4;
+/// Whole-millisecond ticks one wheel rotation covers before events fall
+/// into the overflow list: 64^4 ms ≈ 4.66 h of virtual time.
+const TOP_SHIFT: u32 = SLOT_BITS * LEVELS as u32;
+
+/// Hierarchical timing wheel over the same `(due_ms, seq)` contract as
+/// [`EventQueue`] — `O(1)` amortised push/pop at steady state.
+///
+/// Four levels of 64 slots each cover 1 ms / 64 ms / 4.096 s / ~262 s
+/// per slot; a `u64` occupancy bitmap per level turns "find the next
+/// non-empty slot" into a `trailing_zeros`, so advancing over sparse
+/// regions costs `O(levels)`, not `O(gap)`.  Events beyond the top
+/// level's window from the cursor wait in an overflow list and are
+/// re-admitted when the cursor reaches their rotation.
+///
+/// Determinism: slots bucket events by *whole* milliseconds only; a slot
+/// is drained into a run sorted by `(f64::total_cmp(due_ms), seq)`, so
+/// sub-millisecond resolution and push-order tie-breaks are preserved
+/// exactly — the pop stream is bit-identical to [`EventQueue`]'s
+/// (pinned by `rust/tests/timeline_props.rs`).  Late pushes whose due
+/// time is already behind the cursor splice into the sorted run at the
+/// position the heap would have given them.
+#[derive(Debug)]
+pub struct TimingWheel {
+    seq: u64,
+    len: usize,
+    /// Absolute tick (whole ms): every event at a tick `< cursor` is in
+    /// `ready` by the time `refill` returns (the level-0 drain can carry
+    /// the cursor into a not-yet-cascaded higher-level slot; the next
+    /// `refill` re-admits it before any event is observable).
+    cursor: u64,
+    /// Drained events awaiting pop, sorted ascending by the reversed
+    /// [`Scheduled`] `Ord` — i.e. the earliest `(due_ms, seq)` is
+    /// *last*, so `Vec::pop` drains in due order.
+    ready: Vec<Scheduled>,
+    /// `LEVELS × SLOTS` buckets, flattened level-major.
+    slots: Vec<Vec<Scheduled>>,
+    /// Per-level slot-occupancy bitmaps.
+    occupied: [u64; LEVELS],
+    /// Events more than one top-level rotation ahead of the cursor.
+    overflow: Vec<Scheduled>,
+}
+
+impl Default for TimingWheel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TimingWheel {
+    pub fn new() -> Self {
+        Self {
+            seq: 0,
+            len: 0,
+            cursor: 0,
+            ready: Vec::new(),
+            slots: (0..LEVELS * SLOTS).map(|_| Vec::new()).collect(),
+            occupied: [0; LEVELS],
+            overflow: Vec::new(),
+        }
+    }
+
+    /// Whole-millisecond tick of a due time.  Non-finite dues saturate
+    /// to the last tick; `total_cmp` ordering inside that bucket then
+    /// reproduces the heap's `inf < NaN` tail order.
+    fn tick(due_ms: f64) -> u64 {
+        if due_ms <= 0.0 {
+            0
+        } else if due_ms.is_finite() {
+            due_ms as u64
+        } else {
+            u64::MAX
+        }
+    }
+
+    /// Schedule `event` at `due_ms`; returns its sequence number.
+    pub fn push(&mut self, due_ms: f64, event: Event) -> u64 {
+        let seq = self.seq;
+        self.seq += 1;
+        self.insert(Scheduled { due_ms, seq, event });
+        self.len += 1;
+        seq
+    }
+
+    fn insert(&mut self, ev: Scheduled) {
+        let t = Self::tick(ev.due_ms);
+        if t < self.cursor {
+            // Already behind the cursor: splice into the sorted ready
+            // run at the exact `(due_ms, seq)` position.
+            let pos = self.ready.partition_point(|e| e < &ev);
+            self.ready.insert(pos, ev);
+            return;
+        }
+        // Lowest level whose window (one slot of the level above)
+        // contains both `t` and the cursor; slot width at level k is
+        // 64^k ticks.
+        for k in 0..LEVELS {
+            let window_shift = SLOT_BITS * (k as u32 + 1);
+            if t >> window_shift == self.cursor >> window_shift {
+                let slot = ((t >> (SLOT_BITS * k as u32)) & SLOT_MASK) as usize;
+                self.slots[k * SLOTS + slot].push(ev);
+                self.occupied[k] |= 1u64 << slot;
+                return;
+            }
+        }
+        self.overflow.push(ev);
+    }
+
+    /// Move the next non-empty bucket's events into `ready` (sorted).
+    /// Requires `ready` empty; a no-op only when the wheel holds nothing.
+    fn refill(&mut self) {
+        debug_assert!(self.ready.is_empty());
+        loop {
+            // The level-0 drain below can carry the cursor across a
+            // higher-level slot boundary (slot 63 + 1) without cascading
+            // the slot it lands in.  Re-admit the slot *containing* the
+            // cursor at every level, top-down, before trusting the
+            // level-0 window — otherwise fresh level-0 inserts for the
+            // same window would drain ahead of (or instead of) the
+            // still-racked contents above them.
+            for k in (1..LEVELS).rev() {
+                let shift = SLOT_BITS * k as u32;
+                let idx = ((self.cursor >> shift) & SLOT_MASK) as usize;
+                if self.occupied[k] & (1u64 << idx) != 0 {
+                    self.occupied[k] &= !(1u64 << idx);
+                    let batch = std::mem::take(&mut self.slots[k * SLOTS + idx]);
+                    for ev in batch {
+                        self.insert(ev); // lands below level k, or splices
+                    }
+                }
+            }
+            if !self.ready.is_empty() {
+                // Ticks already behind the cursor were spliced straight
+                // into `ready` by the re-admission; their whole-ms ticks
+                // strictly precede everything still racked in the wheel.
+                return;
+            }
+            // Level 0: the next occupied 1 ms slot in the current window.
+            let idx0 = (self.cursor & SLOT_MASK) as usize;
+            let pending0 = self.occupied[0] & (!0u64 << idx0);
+            if pending0 != 0 {
+                let slot = pending0.trailing_zeros() as usize;
+                self.occupied[0] &= !(1u64 << slot);
+                let mut run = std::mem::take(&mut self.slots[slot]);
+                // one slot = one whole-ms tick; its events differ only in
+                // fractional due and seq — sort restores the total order
+                // (reversed Ord: earliest last, popped first)
+                run.sort_unstable();
+                self.cursor = (self.cursor & !SLOT_MASK) + slot as u64 + 1;
+                if !run.is_empty() {
+                    self.ready = run;
+                    return;
+                }
+                continue;
+            }
+            // Level-0 window exhausted: jump to the next occupied slot of
+            // the lowest non-empty level and cascade it down.
+            let mut cascaded = false;
+            for k in 1..LEVELS {
+                let shift = SLOT_BITS * k as u32;
+                let idx = ((self.cursor >> shift) & SLOT_MASK) as usize;
+                // the re-admission pass above cleared the slot containing
+                // the cursor, so its bit is clear — `>= idx` cannot
+                // revisit the past
+                let pending = self.occupied[k] & (!0u64 << idx);
+                if pending != 0 {
+                    let slot = pending.trailing_zeros() as usize;
+                    self.occupied[k] &= !(1u64 << slot);
+                    let window_base =
+                        (self.cursor >> (shift + SLOT_BITS)) << (shift + SLOT_BITS);
+                    self.cursor = window_base | ((slot as u64) << shift);
+                    let batch = std::mem::take(&mut self.slots[k * SLOTS + slot]);
+                    for ev in batch {
+                        self.insert(ev); // lands at a level below k
+                    }
+                    cascaded = true;
+                    break;
+                }
+            }
+            if cascaded {
+                continue;
+            }
+            // Every level is empty: whatever remains sits one or more
+            // top-level rotations ahead — jump there and re-admit.
+            if self.overflow.is_empty() {
+                return;
+            }
+            let min_tick = self
+                .overflow
+                .iter()
+                .map(|e| Self::tick(e.due_ms))
+                .min()
+                .expect("non-empty overflow");
+            self.cursor = (min_tick >> TOP_SHIFT) << TOP_SHIFT;
+            let batch = std::mem::take(&mut self.overflow);
+            for ev in batch {
+                self.insert(ev); // still-far events return to overflow
+            }
+        }
+    }
+
+    /// Due time of the earliest queued event.
+    pub fn peek_due(&mut self) -> Option<f64> {
+        if self.len == 0 {
+            return None;
+        }
+        if self.ready.is_empty() {
+            self.refill();
+        }
+        self.ready.last().map(|s| s.due_ms)
+    }
+
+    /// Pop the earliest event unconditionally.
+    pub fn pop(&mut self) -> Option<Scheduled> {
+        if self.len == 0 {
+            return None;
+        }
+        if self.ready.is_empty() {
+            self.refill();
+        }
+        let ev = self.ready.pop();
+        debug_assert!(ev.is_some(), "len says non-empty but refill found nothing");
+        self.len -= ev.is_some() as usize;
+        ev
+    }
+
+    /// Pop the earliest event if it is due by `limit_ms` (strict or
+    /// inclusive — same semantics as [`EventQueue::pop_due`]).
+    pub fn pop_due(&mut self, limit_ms: f64, inclusive: bool) -> Option<Scheduled> {
+        let due = self.peek_due()?;
+        let ready = if inclusive { due <= limit_ms } else { due < limit_ms };
+        if ready {
+            self.pop()
+        } else {
+            None
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Timeline for TimingWheel {
+    fn push(&mut self, due_ms: f64, event: Event) -> u64 {
+        TimingWheel::push(self, due_ms, event)
+    }
+
+    fn pop(&mut self) -> Option<Scheduled> {
+        TimingWheel::pop(self)
+    }
+
+    fn peek_due(&mut self) -> Option<f64> {
+        TimingWheel::peek_due(self)
+    }
+
+    fn pop_due(&mut self, limit_ms: f64, inclusive: bool) -> Option<Scheduled> {
+        TimingWheel::pop_due(self, limit_ms, inclusive)
+    }
+
+    fn len(&self) -> usize {
+        TimingWheel::len(self)
+    }
+}
+
+/// Which [`Timeline`] implementation a run uses (JSON key `queue`,
+/// CLI `jiagu run --queue {heap,wheel}`).  Both produce byte-identical
+/// `RunReport`s; `wheel` is the million-event hot-path choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueKind {
+    /// [`EventQueue`]: the reference binary heap.
+    Heap,
+    /// [`TimingWheel`]: the hierarchical timing wheel.
+    Wheel,
+}
+
+impl Default for QueueKind {
+    fn default() -> Self {
+        QueueKind::Heap
+    }
+}
+
+impl QueueKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "heap" => Some(QueueKind::Heap),
+            "wheel" => Some(QueueKind::Wheel),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QueueKind::Heap => "heap",
+            QueueKind::Wheel => "wheel",
+        }
+    }
+}
+
+/// Runtime-selected [`Timeline`]: enum dispatch between the two sealed
+/// implementations (no virtual calls on the hot path).
+#[derive(Debug)]
+pub enum AnyTimeline {
+    Heap(EventQueue),
+    Wheel(TimingWheel),
+}
+
+impl AnyTimeline {
+    pub fn new(kind: QueueKind) -> Self {
+        match kind {
+            QueueKind::Heap => AnyTimeline::Heap(EventQueue::new()),
+            QueueKind::Wheel => AnyTimeline::Wheel(TimingWheel::new()),
+        }
+    }
+}
+
+impl Timeline for AnyTimeline {
+    fn push(&mut self, due_ms: f64, event: Event) -> u64 {
+        match self {
+            AnyTimeline::Heap(q) => q.push(due_ms, event),
+            AnyTimeline::Wheel(w) => w.push(due_ms, event),
+        }
+    }
+
+    fn extend(&mut self, batch: Vec<(f64, Event)>) {
+        match self {
+            AnyTimeline::Heap(q) => Timeline::extend(q, batch),
+            AnyTimeline::Wheel(w) => Timeline::extend(w, batch),
+        }
+    }
+
+    fn pop(&mut self) -> Option<Scheduled> {
+        match self {
+            AnyTimeline::Heap(q) => q.pop(),
+            AnyTimeline::Wheel(w) => w.pop(),
+        }
+    }
+
+    fn peek_due(&mut self) -> Option<f64> {
+        match self {
+            AnyTimeline::Heap(q) => EventQueue::peek_due(q),
+            AnyTimeline::Wheel(w) => w.peek_due(),
+        }
+    }
+
+    fn pop_due(&mut self, limit_ms: f64, inclusive: bool) -> Option<Scheduled> {
+        match self {
+            AnyTimeline::Heap(q) => q.pop_due(limit_ms, inclusive),
+            AnyTimeline::Wheel(w) => w.pop_due(limit_ms, inclusive),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            AnyTimeline::Heap(q) => q.len(),
+            AnyTimeline::Wheel(w) => w.len(),
+        }
     }
 }
 
@@ -211,5 +697,136 @@ mod tests {
             Event::ColdStartComplete { instance: 1 },
             "0.0001 ms earlier must pop first"
         );
+    }
+
+    // -- TimingWheel: the same contract, plus wheel-specific edges ----------
+
+    #[test]
+    fn wheel_pops_in_due_order() {
+        let mut w = TimingWheel::new();
+        w.push(300.0, Event::AutoscalerEval);
+        w.push(8.4, Event::ColdStartComplete { instance: 1 });
+        w.push(150.25, Event::MonitorTick);
+        let dues: Vec<f64> = std::iter::from_fn(|| w.pop().map(|s| s.due_ms)).collect();
+        assert_eq!(dues, vec![8.4, 150.25, 300.0]);
+    }
+
+    #[test]
+    fn wheel_equal_due_ties_break_by_push_order() {
+        let mut w = TimingWheel::new();
+        for f in 0..10usize {
+            w.push(1000.0, Event::LoadChange { function: f, rps: f as f64 });
+        }
+        w.push(1000.0, Event::AutoscalerEval);
+        let order: Vec<Event> = std::iter::from_fn(|| w.pop().map(|s| s.event)).collect();
+        for (f, e) in order.iter().take(10).enumerate() {
+            assert_eq!(*e, Event::LoadChange { function: f, rps: f as f64 });
+        }
+        assert_eq!(order[10], Event::AutoscalerEval);
+    }
+
+    #[test]
+    fn wheel_preserves_sub_millisecond_resolution_within_one_slot() {
+        let mut w = TimingWheel::new();
+        w.push(8.4321, Event::ColdStartComplete { instance: 0 });
+        w.push(8.4320, Event::ColdStartComplete { instance: 1 });
+        assert_eq!(
+            w.pop().unwrap().event,
+            Event::ColdStartComplete { instance: 1 },
+            "0.0001 ms earlier must pop first"
+        );
+        assert_eq!(w.pop().unwrap().event, Event::ColdStartComplete { instance: 0 });
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn wheel_pop_due_honours_half_open_and_inclusive_limits() {
+        let mut w = TimingWheel::new();
+        w.push(5.0, Event::MonitorTick);
+        w.push(10.0, Event::AutoscalerEval);
+        assert!(w.pop_due(5.0, false).is_none(), "strict: 5.0 not < 5.0");
+        assert!(w.pop_due(5.0, true).is_some(), "inclusive: 5.0 <= 5.0");
+        assert!(w.pop_due(10.0, false).is_none());
+        assert_eq!(w.pop_due(10.0, true).unwrap().due_ms, 10.0);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn wheel_crosses_level_boundaries_and_far_future_dues() {
+        let mut w = TimingWheel::new();
+        // one event per level span plus one beyond the whole rotation
+        let dues = [3.0, 100.0, 5_000.0, 300_000.0, 20_000_000.0];
+        for (i, due) in dues.iter().enumerate() {
+            w.push(*due, Event::ColdStartComplete { instance: i as u64 });
+        }
+        assert_eq!(w.len(), dues.len());
+        for (i, due) in dues.iter().enumerate() {
+            let popped = w.pop().expect("event per due");
+            assert_eq!(popped.due_ms, *due);
+            assert_eq!(popped.event, Event::ColdStartComplete { instance: i as u64 });
+        }
+        assert!(w.pop().is_none());
+    }
+
+    #[test]
+    fn wheel_accepts_pushes_behind_the_cursor() {
+        let mut w = TimingWheel::new();
+        w.push(10.9, Event::MonitorTick);
+        w.push(10.2, Event::AutoscalerEval);
+        assert_eq!(w.pop().unwrap().due_ms, 10.2); // cursor is now at tick 11
+        w.push(10.5, Event::ColdStartComplete { instance: 7 }); // behind the cursor
+        w.push(3.0, Event::ColdStartComplete { instance: 8 }); // far behind
+        assert_eq!(w.pop().unwrap().due_ms, 3.0);
+        assert_eq!(w.pop().unwrap().due_ms, 10.5);
+        assert_eq!(w.pop().unwrap().due_ms, 10.9);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn wheel_steady_churn_matches_heap() {
+        // the engine's periodic-event pattern: every pop pushes a
+        // successor a fixed interval later — the wheel and the heap must
+        // emit identical (due, seq) streams throughout
+        let mut heap = EventQueue::new();
+        let mut wheel = TimingWheel::new();
+        for i in 0..64u64 {
+            let due = (i as f64) * 37.5;
+            heap.push(due, Event::MonitorTick);
+            wheel.push(due, Event::MonitorTick);
+        }
+        for _ in 0..4_096 {
+            let a = heap.pop().expect("heap never drains");
+            let b = wheel.pop().expect("wheel never drains");
+            assert_eq!(a.due_ms.to_bits(), b.due_ms.to_bits());
+            assert_eq!(a.seq, b.seq);
+            heap.push(a.due_ms + 1000.0, Event::MonitorTick);
+            wheel.push(b.due_ms + 1000.0, Event::MonitorTick);
+        }
+        assert_eq!(heap.len(), wheel.len());
+    }
+
+    #[test]
+    fn any_timeline_dispatches_both_kinds() {
+        for kind in [QueueKind::Heap, QueueKind::Wheel] {
+            let mut q = AnyTimeline::new(kind);
+            Timeline::extend(
+                &mut q,
+                vec![(20.0, Event::AutoscalerEval), (10.0, Event::MonitorTick)],
+            );
+            assert_eq!(Timeline::len(&q), 2);
+            assert_eq!(Timeline::peek_due(&mut q), Some(10.0));
+            assert_eq!(Timeline::pop(&mut q).unwrap().due_ms, 10.0);
+            assert_eq!(Timeline::pop(&mut q).unwrap().due_ms, 20.0);
+            assert!(Timeline::is_empty(&q));
+        }
+    }
+
+    #[test]
+    fn queue_kind_parses_and_names() {
+        assert_eq!(QueueKind::parse("heap"), Some(QueueKind::Heap));
+        assert_eq!(QueueKind::parse("wheel"), Some(QueueKind::Wheel));
+        assert_eq!(QueueKind::parse("ring"), None);
+        assert_eq!(QueueKind::default().name(), "heap");
+        assert_eq!(QueueKind::Wheel.name(), "wheel");
     }
 }

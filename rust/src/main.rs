@@ -9,6 +9,7 @@
 //!             [--requests]            # per-request routing + tail latency
 //!             [--shards N]            # sharded control planes on N threads
 //!             [--partitions P]        # partition layout (default 4)
+//!             [--queue heap|wheel]    # Timeline impl (binary heap | timing wheel)
 //!             [--json]                # emit the RunReport as JSON
 //! jiagu compare [--duration 900]      # all schedulers on trace A
 //! jiagu info                          # artifacts + model summary
@@ -21,6 +22,7 @@
 
 use anyhow::{bail, Context, Result};
 use jiagu::config::{InitModel, RunConfig, SchedulerKind};
+use jiagu::engine::QueueKind;
 use jiagu::sim::{load_predictor, Simulation};
 use jiagu::traces;
 
@@ -105,6 +107,10 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     if let Some(v) = args.flags.get("partitions") {
         cfg.partitions = v.parse().context("--partitions")?;
     }
+    if let Some(v) = args.flags.get("queue") {
+        cfg.queue = QueueKind::parse(v)
+            .ok_or_else(|| anyhow::anyhow!("--queue {v:?} (heap|wheel)"))?;
+    }
     Ok(cfg)
 }
 
@@ -176,6 +182,7 @@ fn report_json(r: &jiagu::sim::RunReport) -> jiagu::util::json::Json {
         ),
         ("cold_wait_requests", num(r.cold_wait_requests as f64)),
         ("stranded_requests", num(r.stranded_requests as f64)),
+        ("arrivals_dropped", num(r.arrivals_dropped as f64)),
         ("peak_node_in_flight", num(r.peak_node_in_flight as f64)),
         ("peak_in_flight", num(r.peak_in_flight as f64)),
         ("latency_histogram", r.latency_hist.to_json()),
@@ -217,6 +224,12 @@ fn print_report(r: &jiagu::sim::RunReport) {
             r.peak_node_in_flight
         );
     }
+    if r.arrivals_dropped > 0 {
+        println!(
+            "  WARNING: {} synthesized arrivals dropped by the per-function safety cap",
+            r.arrivals_dropped
+        );
+    }
 }
 
 fn run() -> Result<()> {
@@ -236,6 +249,7 @@ fn run() -> Result<()> {
                 let (mut golden_cfg, wl) = jiagu::artifacts::latency_golden_scenario(&cat);
                 golden_cfg.shards = cfg.shards;
                 golden_cfg.partitions = cfg.partitions;
+                golden_cfg.queue = cfg.queue;
                 (golden_cfg, wl)
             } else {
                 let trace = make_trace(&cat, trace_name, cfg.duration_s)?;

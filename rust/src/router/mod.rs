@@ -16,7 +16,10 @@
 //!   draw more traffic, the saturated ones draw less — from the router's
 //!   **own seeded RNG**, so the pick stream is a pure function of the
 //!   seed and the dispatch order (bit-identical across replays; it never
-//!   touches the control plane's noise RNG).
+//!   touches the control plane's noise RNG).  The result is a typed
+//!   [`Dispatch`]: an idle instance ([`Dispatch::Routed`]), a busy one
+//!   ([`Dispatch::Saturated`]) or no serving instance at all
+//!   ([`Dispatch::ColdQueued`], which consumes no randomness).
 //! * Each instance **admits one request at a time** through a FIFO
 //!   queue: [`Router::route`] either occupies the free slot (idle
 //!   instance) or appends the arrival to the instance's queue;
@@ -34,6 +37,18 @@
 //!   finishes where it started, but queued work never strands on an
 //!   instance that stopped serving.
 //!
+//! ## Struct-of-arrays layout
+//!
+//! Per-instance queueing state lives in parallel columns indexed by
+//! [`InstanceId`] (cluster ids are dense and never reused), and the
+//! per-function serving/cold-wait tables and per-node gauges are vectors
+//! indexed by their dense ids.  The pick loop — the per-request hot path
+//! measured by `benches/router_hotpath.rs` — reads one `u32` per serving
+//! instance from a contiguous column instead of chasing hash buckets.
+//! A slot whose `live` flag is down is semantically absent (the old
+//! map-removal); slots stay allocated, a bounded cost of the id-indexed
+//! layout.
+//!
 //! Per-node in-flight gauges (and their peak) come along for free and
 //! feed the `RunReport`'s tail-latency accounting.  Determinism contract:
 //! the router holds no wall-clock state and draws randomness only from
@@ -42,7 +57,7 @@
 use crate::catalog::FunctionId;
 use crate::cluster::{Cluster, InstanceId, InstanceState, NodeId};
 use crate::util::rng::Rng;
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 /// Where [`Router::route`] sent a request.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -56,6 +71,31 @@ pub enum RouteOutcome {
     ColdWait,
 }
 
+/// What [`Router::pick`] decided for one request — the typed dispatch
+/// verdict, before any queueing state is touched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    /// Picked an instance with a free service slot (`in_flight == 0`):
+    /// the request would enter service immediately.
+    Routed(InstanceId),
+    /// Picked a busy instance: the request would join its FIFO queue
+    /// behind the in-service one.
+    Saturated(InstanceId),
+    /// No serving instance exists for the function; no RNG draw was
+    /// consumed and the request belongs on the cold-wait queue.
+    ColdQueued,
+}
+
+impl Dispatch {
+    /// The picked instance, if any.
+    pub fn instance(self) -> Option<InstanceId> {
+        match self {
+            Dispatch::Routed(id) | Dispatch::Saturated(id) => Some(id),
+            Dispatch::ColdQueued => None,
+        }
+    }
+}
+
 /// The next request entering service after a [`Router::complete`]: the
 /// head of the instance's FIFO queue, with the arrival time the caller
 /// needs for queueing-delay attribution.
@@ -66,35 +106,36 @@ pub struct NextService {
     pub arrival_ms: f64,
 }
 
-/// Per-instance dispatch state (created on [`Router::add`], retained
-/// after [`Router::remove`] only while an in-service request drains).
-#[derive(Debug, Clone)]
-struct InstanceLoad {
-    function: FunctionId,
-    node: NodeId,
-    /// Requests dispatched here and not yet completed (1 in service +
-    /// queue length while busy; 0 when idle).
-    in_flight: u32,
-    /// Arrival times of requests waiting behind the in-service one.
-    queue: VecDeque<f64>,
-}
-
 /// Routing table: function → serving (saturated) instances, plus the
-/// per-instance queueing state of the per-request model.
+/// per-instance queueing state of the per-request model, stored as
+/// parallel columns indexed by instance id (see the module docs).
 #[derive(Debug)]
 pub struct Router {
-    serving: HashMap<FunctionId, Vec<InstanceId>>,
+    /// Serving (saturated) instances per function, indexed by function id.
+    serving: Vec<Vec<InstanceId>>,
     /// Count of re-route operations (logical cold starts, releases).
     pub reroutes: u64,
     /// Seeded pick RNG — the router's only randomness source.
     rng: Rng,
-    load: HashMap<InstanceId, InstanceLoad>,
-    /// Requests per node currently dispatched (in service + queued).
-    node_in_flight: HashMap<NodeId, u32>,
+    // --- per-instance queueing state, columns indexed by InstanceId ---
+    load_function: Vec<FunctionId>,
+    load_node: Vec<NodeId>,
+    /// Requests dispatched here and not yet completed (1 in service +
+    /// queue length while busy; 0 when idle).
+    load_in_flight: Vec<u32>,
+    /// Arrival times of requests waiting behind the in-service one.
+    load_queue: Vec<VecDeque<f64>>,
+    /// Slot validity: down = the router no longer tracks this instance
+    /// (created on [`Router::add`], kept up after [`Router::remove`]
+    /// only while an in-service request drains).
+    load_live: Vec<bool>,
+    /// Requests per node currently dispatched (in service + queued),
+    /// indexed by node id.
+    node_in_flight: Vec<u32>,
     peak_node_in_flight: u32,
     /// Cold-wait queues: arrival times of requests that found no serving
-    /// instance, per function.
-    waiting: HashMap<FunctionId, VecDeque<f64>>,
+    /// instance, indexed by function id.
+    waiting: Vec<VecDeque<f64>>,
     /// Reusable weight buffer for [`Router::pick`] (never observable).
     scratch: Vec<f64>,
 }
@@ -113,20 +154,47 @@ impl Router {
     /// A router whose pick stream derives from `seed`.
     pub fn with_seed(seed: u64) -> Self {
         Self {
-            serving: HashMap::new(),
+            serving: Vec::new(),
             reroutes: 0,
             rng: Rng::seed_from(seed),
-            load: HashMap::new(),
-            node_in_flight: HashMap::new(),
+            load_function: Vec::new(),
+            load_node: Vec::new(),
+            load_in_flight: Vec::new(),
+            load_queue: Vec::new(),
+            load_live: Vec::new(),
+            node_in_flight: Vec::new(),
             peak_node_in_flight: 0,
-            waiting: HashMap::new(),
+            waiting: Vec::new(),
             scratch: Vec::new(),
         }
     }
 
+    fn ensure_function(&mut self, f: FunctionId) {
+        if self.serving.len() <= f {
+            self.serving.resize_with(f + 1, Vec::new);
+            self.waiting.resize_with(f + 1, VecDeque::new);
+        }
+    }
+
+    fn ensure_instance(&mut self, id: InstanceId) {
+        let i = id as usize;
+        if self.load_live.len() <= i {
+            self.load_function.resize(i + 1, 0);
+            self.load_node.resize(i + 1, 0);
+            self.load_in_flight.resize(i + 1, 0);
+            self.load_queue.resize_with(i + 1, VecDeque::new);
+            self.load_live.resize(i + 1, false);
+        }
+    }
+
+    fn tracked(&self, id: InstanceId) -> bool {
+        let i = id as usize;
+        i < self.load_live.len() && self.load_live[i]
+    }
+
     /// Instances currently receiving traffic for `f`.
     pub fn serving(&self, f: FunctionId) -> &[InstanceId] {
-        self.serving.get(&f).map(|v| v.as_slice()).unwrap_or(&[])
+        self.serving.get(f).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     pub fn serving_count(&self, f: FunctionId) -> usize {
@@ -136,27 +204,29 @@ impl Router {
     /// Add a newly started (or logically cold-started) instance on
     /// `node` to the routing set.
     pub fn add(&mut self, f: FunctionId, id: InstanceId, node: NodeId) {
-        let v = self.serving.entry(f).or_default();
+        self.ensure_function(f);
+        self.ensure_instance(id);
+        let v = &mut self.serving[f];
         debug_assert!(!v.contains(&id));
         v.push(id);
         self.reroutes += 1;
+        let i = id as usize;
+        if !self.load_live[i] {
+            self.load_live[i] = true;
+            self.load_function[i] = f;
+            self.load_node[i] = node;
+            self.load_in_flight[i] = 0;
+            self.load_queue[i].clear();
+            return;
+        }
         // a re-added instance may still be draining its previous
         // in-service request; keep that state, re-pin identity, and —
         // when a cached instance migrated before rejoining — carry the
         // residual gauge to the new node so per-node counts stay coherent
-        let (carry, old_node) = {
-            let e = self.load.entry(id).or_insert_with(|| InstanceLoad {
-                function: f,
-                node,
-                in_flight: 0,
-                queue: VecDeque::new(),
-            });
-            let carry = if e.node != node { e.in_flight } else { 0 };
-            let old_node = e.node;
-            e.function = f;
-            e.node = node;
-            (carry, old_node)
-        };
+        let old_node = self.load_node[i];
+        let carry = if old_node != node { self.load_in_flight[i] } else { 0 };
+        self.load_function[i] = f;
+        self.load_node[i] = node;
         if carry > 0 {
             self.dec_node(old_node, carry);
             self.inc_node_by(node, carry);
@@ -169,19 +239,22 @@ impl Router {
     /// request, if any, finishes where it started.  A no-op (empty vec)
     /// when the instance was not serving.
     pub fn remove(&mut self, f: FunctionId, id: InstanceId) -> Vec<f64> {
-        let Some(v) = self.serving.get_mut(&f) else { return Vec::new() };
+        let Some(v) = self.serving.get_mut(f) else { return Vec::new() };
         let before = v.len();
         v.retain(|x| *x != id);
         if v.len() == before {
             return Vec::new();
         }
         self.reroutes += 1;
-        let Some(e) = self.load.get_mut(&id) else { return Vec::new() };
-        let orphaned: Vec<f64> = e.queue.drain(..).collect();
-        e.in_flight -= orphaned.len() as u32;
-        let node = e.node;
-        if e.in_flight == 0 {
-            self.load.remove(&id);
+        if !self.tracked(id) {
+            return Vec::new();
+        }
+        let i = id as usize;
+        let orphaned: Vec<f64> = self.load_queue[i].drain(..).collect();
+        self.load_in_flight[i] -= orphaned.len() as u32;
+        let node = self.load_node[i];
+        if self.load_in_flight[i] == 0 {
+            self.load_live[i] = false;
         }
         if !orphaned.is_empty() {
             self.dec_node(node, orphaned.len() as u32);
@@ -191,52 +264,66 @@ impl Router {
 
     /// Pick a serving instance of `f`, weighted by instantaneous
     /// in-flight load (`weight ∝ 1 / (1 + in_flight)`), from the seeded
-    /// pick RNG.  `None` when nothing serves `f`; the RNG is only
-    /// consumed on a successful pick, so replica routers fed the same
+    /// pick RNG.  The verdict is typed: [`Dispatch::Routed`] for an idle
+    /// pick, [`Dispatch::Saturated`] for a busy one and
+    /// [`Dispatch::ColdQueued`] when nothing serves `f` — in which case
+    /// the RNG is **not** consumed, so replica routers fed the same
     /// dispatch sequence stay in lockstep.
-    pub fn pick(&mut self, f: FunctionId) -> Option<InstanceId> {
-        if self.serving.get(&f).map(|v| v.len()).unwrap_or(0) == 0 {
-            return None;
-        }
+    pub fn pick(&mut self, f: FunctionId) -> Dispatch {
+        let Some(serving) = self.serving.get(f).filter(|v| !v.is_empty()) else {
+            return Dispatch::ColdQueued;
+        };
         let u = self.rng.f64();
         // weights computed once into the reusable scratch buffer (this is
         // the per-request hot path; see benches/router_hotpath.rs)
         self.scratch.clear();
-        let serving = &self.serving[&f];
         let mut total = 0.0;
-        for id in serving {
-            let w = 1.0 / (1.0 + self.load.get(id).map(|e| e.in_flight).unwrap_or(0) as f64);
+        for &id in serving {
+            let n = self.load_in_flight.get(id as usize).copied().unwrap_or(0);
+            let w = 1.0 / (1.0 + n as f64);
             total += w;
             self.scratch.push(w);
         }
         let mut r = u * total;
-        for (id, w) in serving.iter().zip(&self.scratch) {
+        let mut picked = *serving.last().expect("serving set is non-empty");
+        for (&id, w) in serving.iter().zip(&self.scratch) {
             r -= w;
             if r <= 0.0 {
-                return Some(*id);
+                picked = id;
+                break;
             }
         }
-        serving.last().copied()
+        if self.load_in_flight.get(picked as usize).copied().unwrap_or(0) == 0 {
+            Dispatch::Routed(picked)
+        } else {
+            Dispatch::Saturated(picked)
+        }
     }
 
     /// Route one request for `f` arriving at `arrival_ms` (virtual time).
     pub fn route(&mut self, f: FunctionId, arrival_ms: f64) -> RouteOutcome {
-        let Some(instance) = self.pick(f) else {
-            self.waiting.entry(f).or_default().push_back(arrival_ms);
-            return RouteOutcome::ColdWait;
-        };
-        let e = self.load.get_mut(&instance).expect("picked instance has load state");
-        e.in_flight += 1;
-        let node = e.node;
-        let started = e.in_flight == 1;
-        if !started {
-            e.queue.push_back(arrival_ms);
-        }
-        self.inc_node(node);
-        if started {
-            RouteOutcome::Started { instance, node }
-        } else {
-            RouteOutcome::Queued { instance, node }
+        match self.pick(f) {
+            Dispatch::ColdQueued => {
+                self.ensure_function(f);
+                self.waiting[f].push_back(arrival_ms);
+                RouteOutcome::ColdWait
+            }
+            Dispatch::Routed(instance) => {
+                let i = instance as usize;
+                debug_assert_eq!(self.load_in_flight[i], 0);
+                self.load_in_flight[i] = 1;
+                let node = self.load_node[i];
+                self.inc_node(node);
+                RouteOutcome::Started { instance, node }
+            }
+            Dispatch::Saturated(instance) => {
+                let i = instance as usize;
+                self.load_in_flight[i] += 1;
+                self.load_queue[i].push_back(arrival_ms);
+                let node = self.load_node[i];
+                self.inc_node(node);
+                RouteOutcome::Queued { instance, node }
+            }
         }
     }
 
@@ -244,22 +331,22 @@ impl Router {
     /// request now entering service, if any.  Gracefully ignores
     /// completions for instances the router no longer tracks.
     pub fn complete(&mut self, instance: InstanceId) -> Option<NextService> {
-        // single hash lookup on the per-request hot path
-        let (function, node, next, drained) = {
-            let e = self.load.get_mut(&instance)?;
-            if e.in_flight == 0 {
-                return None;
-            }
-            e.in_flight -= 1;
-            (e.function, e.node, e.queue.pop_front(), e.in_flight == 0)
-        };
+        let i = instance as usize;
+        if !self.tracked(instance) || self.load_in_flight[i] == 0 {
+            return None;
+        }
+        self.load_in_flight[i] -= 1;
+        let function = self.load_function[i];
+        let node = self.load_node[i];
+        let next = self.load_queue[i].pop_front();
+        let drained = self.load_in_flight[i] == 0;
         self.dec_node(node, 1);
         if let Some(arrival_ms) = next {
             return Some(NextService { function, node, arrival_ms });
         }
         if drained && !self.serving(function).contains(&instance) {
             // drained after leaving the routing set: drop the state
-            self.load.remove(&instance);
+            self.load_live[i] = false;
         }
         None
     }
@@ -267,38 +354,42 @@ impl Router {
     /// Pop the oldest cold-waiting request of `f` (for re-dispatch once
     /// an instance serves again).
     pub fn pop_waiting(&mut self, f: FunctionId) -> Option<f64> {
-        let q = self.waiting.get_mut(&f)?;
-        let arrival = q.pop_front();
-        if q.is_empty() {
-            self.waiting.remove(&f);
-        }
-        arrival
+        self.waiting.get_mut(f)?.pop_front()
     }
 
     /// Requests parked on `f`'s cold-wait queue.
     pub fn waiting_count(&self, f: FunctionId) -> usize {
-        self.waiting.get(&f).map(|q| q.len()).unwrap_or(0)
+        self.waiting.get(f).map(|q| q.len()).unwrap_or(0)
     }
 
     /// Requests parked on any function's cold-wait queue.
     pub fn total_waiting(&self) -> u64 {
-        self.waiting.values().map(|q| q.len() as u64).sum()
+        self.waiting.iter().map(|q| q.len() as u64).sum()
     }
 
     /// Requests sitting in instance FIFO queues (dispatched but not yet
     /// admitted into service).
     pub fn total_queued(&self) -> u64 {
-        self.load.values().map(|e| e.queue.len() as u64).sum()
+        self.load_queue
+            .iter()
+            .zip(&self.load_live)
+            .filter(|(_, live)| **live)
+            .map(|(q, _)| q.len() as u64)
+            .sum()
     }
 
     /// Requests dispatched to `instance` and not yet completed.
     pub fn in_flight_of(&self, instance: InstanceId) -> u32 {
-        self.load.get(&instance).map(|e| e.in_flight).unwrap_or(0)
+        if self.tracked(instance) {
+            self.load_in_flight[instance as usize]
+        } else {
+            0
+        }
     }
 
     /// Requests currently dispatched to `node` (in service + queued).
     pub fn node_in_flight(&self, node: NodeId) -> u32 {
-        self.node_in_flight.get(&node).copied().unwrap_or(0)
+        self.node_in_flight.get(node).copied().unwrap_or(0)
     }
 
     /// Highest per-node in-flight count ever observed.
@@ -308,7 +399,7 @@ impl Router {
 
     /// Requests currently dispatched cluster-wide.
     pub fn total_in_flight(&self) -> u32 {
-        self.node_in_flight.values().sum()
+        self.node_in_flight.iter().sum()
     }
 
     fn inc_node(&mut self, node: NodeId) {
@@ -316,17 +407,17 @@ impl Router {
     }
 
     fn inc_node_by(&mut self, node: NodeId, by: u32) {
-        let c = self.node_in_flight.entry(node).or_insert(0);
+        if self.node_in_flight.len() <= node {
+            self.node_in_flight.resize(node + 1, 0);
+        }
+        let c = &mut self.node_in_flight[node];
         *c += by;
         self.peak_node_in_flight = self.peak_node_in_flight.max(*c);
     }
 
     fn dec_node(&mut self, node: NodeId, by: u32) {
-        if let Some(c) = self.node_in_flight.get_mut(&node) {
+        if let Some(c) = self.node_in_flight.get_mut(node) {
             *c = c.saturating_sub(by);
-            if *c == 0 {
-                self.node_in_flight.remove(&node);
-            }
         }
     }
 
@@ -350,7 +441,7 @@ impl Router {
     /// its queue by exactly one).
     pub fn check_consistent(&self, cluster: &Cluster) -> anyhow::Result<()> {
         use anyhow::ensure;
-        for (f, serving) in &self.serving {
+        for (f, serving) in self.serving.iter().enumerate() {
             for id in serving {
                 let inst = cluster
                     .instance(*id)
@@ -360,36 +451,47 @@ impl Router {
                     "instance {id} routed but {:?}",
                     inst.state
                 );
-                ensure!(inst.function == *f, "instance {id} routed to wrong function");
-                let e = self
-                    .load
-                    .get(id)
-                    .ok_or_else(|| anyhow::anyhow!("serving instance {id} has no load state"))?;
-                ensure!(e.node == inst.node, "instance {id} load state on wrong node");
+                ensure!(inst.function == f, "instance {id} routed to wrong function");
+                ensure!(
+                    self.tracked(*id),
+                    "serving instance {id} has no load state"
+                );
+                ensure!(
+                    self.load_node[*id as usize] == inst.node,
+                    "instance {id} load state on wrong node"
+                );
             }
         }
-        let mut per_node: HashMap<NodeId, u32> = HashMap::new();
-        for (id, e) in &self.load {
+        let mut per_node: Vec<u32> = vec![0; self.node_in_flight.len()];
+        for i in 0..self.load_live.len() {
+            if !self.load_live[i] {
+                continue;
+            }
+            let (in_flight, queued) = (self.load_in_flight[i], self.load_queue[i].len());
             ensure!(
-                e.in_flight as usize >= e.queue.len(),
-                "instance {id}: queue {} longer than in-flight {}",
-                e.queue.len(),
-                e.in_flight
+                in_flight as usize >= queued,
+                "instance {i}: queue {queued} longer than in-flight {in_flight}"
             );
             ensure!(
-                e.in_flight as usize - e.queue.len() <= 1,
-                "instance {id}: more than one request in service"
+                in_flight as usize - queued <= 1,
+                "instance {i}: more than one request in service"
             );
-            if e.in_flight > 0 {
-                *per_node.entry(e.node).or_insert(0) += e.in_flight;
+            if in_flight > 0 {
+                let node = self.load_node[i];
+                if per_node.len() <= node {
+                    per_node.resize(node + 1, 0);
+                }
+                per_node[node] += in_flight;
             }
         }
-        ensure!(
-            per_node == self.node_in_flight,
-            "node in-flight gauges {:?} != per-instance sums {:?}",
-            self.node_in_flight,
-            per_node
-        );
+        for n in 0..per_node.len().max(self.node_in_flight.len()) {
+            let gauge = self.node_in_flight.get(n).copied().unwrap_or(0);
+            let actual = per_node.get(n).copied().unwrap_or(0);
+            ensure!(
+                gauge == actual,
+                "node {n} in-flight gauge {gauge} != per-instance sum {actual}"
+            );
+        }
         Ok(())
     }
 }
@@ -397,6 +499,10 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn picked(d: Dispatch) -> InstanceId {
+        d.instance().expect("expected a successful pick")
+    }
 
     #[test]
     fn add_remove_balance() {
@@ -489,18 +595,28 @@ mod tests {
     }
 
     #[test]
+    fn pick_types_idle_vs_busy_vs_cold() {
+        let mut r = Router::with_seed(2);
+        assert_eq!(r.pick(0), Dispatch::ColdQueued);
+        r.add(0, 5, 0);
+        assert_eq!(r.pick(0), Dispatch::Routed(5), "idle slot is a Routed verdict");
+        r.route(0, 1.0); // occupies the slot
+        assert_eq!(r.pick(0), Dispatch::Saturated(5), "busy slot is a Saturated verdict");
+        r.complete(5);
+        assert_eq!(r.pick(0), Dispatch::Routed(5));
+        assert_eq!(Dispatch::ColdQueued.instance(), None);
+    }
+
+    #[test]
     fn pick_prefers_lightly_loaded_instances() {
         let mut r = Router::with_seed(9);
         r.add(0, 1, 0);
         r.add(0, 2, 1);
         // saturate instance 1 with queued work
-        for _ in 0..20 {
-            let e = r.load.get_mut(&1).unwrap();
-            e.in_flight += 1;
-        }
+        r.load_in_flight[1] += 20;
         let mut hits = [0u32; 2];
         for _ in 0..400 {
-            match r.pick(0).unwrap() {
+            match picked(r.pick(0)) {
                 1 => hits[0] += 1,
                 2 => hits[1] += 1,
                 other => panic!("picked unknown instance {other}"),
@@ -518,12 +634,12 @@ mod tests {
             let mut r = Router::with_seed(seed);
             // pick on an empty set must not consume the RNG
             for _ in 0..warmups {
-                assert!(r.pick(0).is_none());
+                assert_eq!(r.pick(0), Dispatch::ColdQueued);
             }
             r.add(0, 1, 0);
             r.add(0, 2, 0);
             r.add(0, 3, 1);
-            (0..64).map(|_| r.pick(0).unwrap()).collect()
+            (0..64).map(|_| picked(r.pick(0))).collect()
         };
         assert_eq!(seq(5, 0), seq(5, 7), "empty picks must not advance the stream");
         assert_ne!(seq(5, 0), seq(6, 0), "seed must move the pick stream");

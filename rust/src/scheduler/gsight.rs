@@ -13,7 +13,7 @@
 //! Planning runs over [`ClusterView`], so every instance of a batch sees
 //! the ones planned before it exactly as committed state.
 
-use super::{candidate_order, ClusterView, DeferredUpdate, Plan, PlanBuilder, Scheduler};
+use super::{CandidateOrders, ClusterView, DeferredUpdate, Plan, PlanBuilder, Scheduler};
 use crate::catalog::{Catalog, FunctionId};
 use crate::cluster::{Cluster, NodeId};
 use crate::interference::NodeMix;
@@ -29,6 +29,9 @@ pub struct GsightScheduler {
     pub max_instances_per_node: u32,
     /// Same admission margin Jiagu's capacity sweep applies.
     pub qos_headroom: f64,
+    /// Incrementally-maintained candidate rankings (no per-pick re-sort
+    /// when the cluster is unchanged).
+    orders: CandidateOrders,
 }
 
 impl GsightScheduler {
@@ -36,7 +39,12 @@ impl GsightScheduler {
     const CANDIDATE_FANOUT: usize = 24;
 
     pub fn new(predictor: Arc<dyn Predictor>) -> Self {
-        Self { predictor, max_instances_per_node: 40, qos_headroom: 0.95 }
+        Self {
+            predictor,
+            max_instances_per_node: 40,
+            qos_headroom: 0.95,
+            orders: CandidateOrders::new(),
+        }
     }
 
     /// Feature rows + QoS bounds for "mix + one more saturated instance
@@ -78,16 +86,20 @@ impl GsightScheduler {
     /// the predictor's shared stats — sibling shard threads bump those
     /// concurrently (see `capacity::compute_capacity_counted`).
     fn pick_node<C: ClusterView>(
-        &self,
+        &mut self,
         cat: &Catalog,
         view: &C,
         function: FunctionId,
         exclude: Option<NodeId>,
     ) -> Result<(Option<NodeId>, u64)> {
-        let mut candidates: Vec<NodeId> = candidate_order(view, function)
-            .into_iter()
+        let max_per_node = self.max_instances_per_node;
+        let mut candidates: Vec<NodeId> = self
+            .orders
+            .order(view, function)
+            .iter()
+            .copied()
             .filter(|n| Some(*n) != exclude)
-            .filter(|n| (view.instances_on(*n) as u32) < self.max_instances_per_node)
+            .filter(|n| (view.instances_on(*n) as u32) < max_per_node)
             .take(Self::CANDIDATE_FANOUT)
             .collect();
         if candidates.is_empty() {

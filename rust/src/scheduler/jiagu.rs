@@ -20,7 +20,7 @@
 //!   single asynchronous update per touched node.
 
 use super::{
-    candidate_order, ClusterView, DeferredUpdate, Plan, PlanBuilder, Scheduler,
+    CandidateOrders, ClusterView, DeferredUpdate, Plan, PlanBuilder, Scheduler,
     SchedulerFeedback,
 };
 use crate::capacity::{self, CapacityConfig, CapacityTable};
@@ -43,6 +43,8 @@ pub struct JiaguScheduler {
     /// conservatively on nodes dedicated to that function, packed only to
     /// the QoS-unaware request limit (no overcommitment).
     isolated: HashSet<FunctionId>,
+    /// Incrementally-maintained candidate rankings (no per-eval re-sort).
+    orders: CandidateOrders,
 }
 
 impl JiaguScheduler {
@@ -54,6 +56,7 @@ impl JiaguScheduler {
             fast_decisions: 0,
             slow_decisions: 0,
             isolated: HashSet::new(),
+            orders: CandidateOrders::new(),
         }
     }
 
@@ -194,9 +197,10 @@ impl Scheduler for JiaguScheduler {
         let mut critical = 0u64;
         let mut slow = false;
         let mut remaining = count;
-        // candidates ranked once per call; nodes the plan adds are
-        // appended instead of re-sorting the whole order per retry
-        let mut order = candidate_order(&pb, function);
+        // ranked once per call from the incremental cache (a hit skips
+        // the sort entirely); nodes the plan adds are appended instead of
+        // re-sorting the whole order per retry
+        let mut order = self.orders.take(&pb, function);
         let mut local: HashMap<NodeId, u32> = HashMap::new();
 
         'placing: while remaining > 0 {
@@ -222,6 +226,7 @@ impl Scheduler for JiaguScheduler {
             let node = pb.add_node();
             order.push(node);
         }
+        self.orders.give_back(function, order);
 
         if slow {
             self.slow_decisions += 1;
@@ -343,13 +348,16 @@ impl Scheduler for JiaguScheduler {
         exclude: NodeId,
     ) -> Result<Option<NodeId>> {
         self.ensure_tables(cluster.n_nodes());
-        for node in candidate_order(cluster, function) {
+        // split borrows: the ranking slice stays borrowed from `orders`
+        // while the loop body warms `tables`
+        let Self { orders, tables, predictor, cfg, .. } = self;
+        for &node in orders.order(cluster, function) {
             if node == exclude {
                 continue;
             }
             let (sat, cached) = cluster.counts(node, function);
             let current = sat + cached;
-            let cap = match self.tables[node].get(function) {
+            let cap = match tables[node].get(function) {
                 Some(e) => e.capacity,
                 None => {
                     let mix = cluster.mix(node);
@@ -357,11 +365,11 @@ impl Scheduler for JiaguScheduler {
                         cat,
                         &mix,
                         function,
-                        self.predictor.as_ref(),
-                        &self.cfg,
+                        predictor.as_ref(),
+                        cfg,
                     )?;
-                    let v = self.tables[node].version();
-                    self.tables[node].insert(function, cap, v);
+                    let v = tables[node].version();
+                    tables[node].insert(function, cap, v);
                     cap
                 }
             };

@@ -240,6 +240,13 @@ pub trait ClusterView {
     fn requested(&self, node: NodeId) -> (u64, u64);
     /// Whether any instance (any state, any node) of `f` exists.
     fn deployed_anywhere(&self, f: FunctionId) -> bool;
+    /// Cache stamp for incrementally-maintained candidate orders:
+    /// `Some((order_epoch, n_nodes))` when the view's ordering facts are
+    /// exactly the committed cluster's (the live [`Cluster`], or a
+    /// [`PlanBuilder`] with no planned actions yet — identical by
+    /// construction), `None` when planned actions make the view
+    /// plan-local and uncacheable.
+    fn order_stamp(&self) -> Option<(u64, usize)>;
 }
 
 impl ClusterView for Cluster {
@@ -266,6 +273,10 @@ impl ClusterView for Cluster {
 
     fn deployed_anywhere(&self, f: FunctionId) -> bool {
         Cluster::deployed_anywhere(self, f)
+    }
+
+    fn order_stamp(&self) -> Option<(u64, usize)> {
+        Some((self.order_epoch(), Cluster::n_nodes(self)))
     }
 }
 
@@ -420,6 +431,16 @@ impl ClusterView for PlanBuilder<'_> {
                 .values()
                 .any(|m| m.get(&f).copied().unwrap_or(0) > 0)
     }
+
+    fn order_stamp(&self) -> Option<(u64, usize)> {
+        if self.actions.is_empty() {
+            // an overlay with nothing planned reports exactly the facts
+            // the committed cluster does
+            self.cluster.order_stamp()
+        } else {
+            None
+        }
+    }
 }
 
 /// A scheduler plans new instance placements against a read-only cluster
@@ -503,15 +524,18 @@ pub trait Scheduler {
     }
 }
 
-/// Shared helper: order candidate nodes for a function — nodes already
-/// hosting it first (likely fast path + locality, §6 node filter), then by
-/// total instances descending (pack tighter), empty nodes last.  Works
-/// over any [`ClusterView`], so planning overlays rank identically to the
-/// committed cluster.
-pub(crate) fn candidate_order<C: ClusterView + ?Sized>(
-    view: &C,
-    function: FunctionId,
-) -> Vec<NodeId> {
+/// Full recompute of the candidate ranking for one function — nodes
+/// already hosting it first (likely fast path + locality, §6 node
+/// filter), then by total instances descending (pack tighter), empty
+/// nodes last.  Works over any [`ClusterView`], so planning overlays rank
+/// identically to the committed cluster.
+///
+/// The sort key is a function of `counts(n, f)` (summed) and
+/// `instances_on(n)` **only**, and [`Cluster`]'s order epoch advances
+/// exactly when one of those can move — if this key ever grows another
+/// input, the epoch bumps in `cluster/` must grow with it or
+/// [`CandidateOrders`] serves stale rankings.
+fn ranked_nodes<C: ClusterView + ?Sized>(view: &C, function: FunctionId) -> Vec<NodeId> {
     let mut nodes: Vec<NodeId> = (0..view.n_nodes()).collect();
     nodes.sort_by_key(|n| {
         let (sat, cached) = view.counts(*n, function);
@@ -523,6 +547,97 @@ pub(crate) fn candidate_order<C: ClusterView + ?Sized>(
         (class, usize::MAX - total)
     });
     nodes
+}
+
+/// Incrementally-maintained per-function candidate orders — the
+/// million-entity replacement for recomputing `candidate_order` as a
+/// fresh `Vec` on every eval.  An order is recomputed only when the
+/// view's [`ClusterView::order_stamp`] moved; when the cluster merely
+/// grew, the new nodes are appended in place (a new node is empty, so the
+/// stable full re-sort would put it at exactly that tail position — empty
+/// nodes tie and stay in id order); any other change (removal included)
+/// invalidates the slot.  [`Self::order`] hands out a borrowed slice;
+/// nothing is allocated or sorted on a cache hit.
+#[derive(Debug, Default)]
+pub(crate) struct CandidateOrders {
+    slots: Vec<OrderSlot>,
+}
+
+#[derive(Debug, Default)]
+struct OrderSlot {
+    /// `(order_epoch, n_nodes)` stamp of the view `nodes` ranks; `None`
+    /// when the slot holds nothing reusable (never filled, taken and not
+    /// returned, or computed against an uncacheable mid-plan overlay).
+    stamp: Option<(u64, usize)>,
+    nodes: Vec<NodeId>,
+}
+
+impl CandidateOrders {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The candidate order of `function` under `view`, as a borrowed
+    /// slice valid until the next call on this cache.
+    pub fn order<C: ClusterView + ?Sized>(
+        &mut self,
+        view: &C,
+        function: FunctionId,
+    ) -> &[NodeId] {
+        self.refresh(view, function);
+        &self.slots[function].nodes
+    }
+
+    /// Like [`Self::order`], but moves the buffer out, so planning loops
+    /// can keep ranking while the scheduler (and this cache with it) is
+    /// mutably borrowed, and may **append** plan-virtual node ids to it.
+    /// Hand the buffer back with [`Self::give_back`]; appending is the
+    /// only permitted mutation, so the cached prefix survives the trip.
+    pub fn take<C: ClusterView + ?Sized>(
+        &mut self,
+        view: &C,
+        function: FunctionId,
+    ) -> Vec<NodeId> {
+        self.refresh(view, function);
+        std::mem::take(&mut self.slots[function].nodes)
+    }
+
+    /// Return a buffer obtained from [`Self::take`].  The appended tail
+    /// (plan-virtual nodes) is truncated away; if the take-time stamp was
+    /// cacheable, the surviving prefix is still exactly that stamp's
+    /// order, so the slot revalidates without a re-sort.
+    pub fn give_back(&mut self, function: FunctionId, mut nodes: Vec<NodeId>) {
+        let slot = &mut self.slots[function];
+        match slot.stamp {
+            Some((_, n)) => nodes.truncate(n),
+            None => nodes.clear(),
+        }
+        slot.nodes = nodes;
+    }
+
+    fn refresh<C: ClusterView + ?Sized>(&mut self, view: &C, function: FunctionId) {
+        if self.slots.len() <= function {
+            self.slots.resize_with(function + 1, OrderSlot::default);
+        }
+        let slot = &mut self.slots[function];
+        let now = view.order_stamp();
+        match (slot.stamp, now) {
+            // hit: nothing order-affecting moved since the stamp (the
+            // length check rejects a buffer taken and never given back)
+            (Some(s), Some(n)) if s == n && slot.nodes.len() == n.1 => {}
+            // append-on-grow: same epoch, nodes only added
+            (Some((e0, n0)), Some((e1, n1)))
+                if e0 == e1 && n0 < n1 && slot.nodes.len() == n0 =>
+            {
+                slot.nodes.extend(n0..n1);
+                slot.stamp = now;
+            }
+            _ => {
+                slot.nodes = ranked_nodes(view, function);
+                slot.stamp = now;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -587,6 +702,87 @@ mod tests {
         let plan = pb.finish(false, 0, 0);
         cluster.add_node(); // cluster changed since planning
         let _ = plan.commit(&cat, &mut cluster, 0.0);
+    }
+
+    /// Randomized place/evict/grow sequences: the cached order must be
+    /// indistinguishable from a fresh recompute at every step (the
+    /// append-on-grow and invalidate-on-change paths both get exercised).
+    #[test]
+    fn candidate_orders_match_fresh_recompute_under_mutation() {
+        use crate::cluster::InstanceId;
+        use crate::util::rng::Rng;
+        let cat = test_catalog();
+        let mut cluster = Cluster::new(3);
+        let mut orders = CandidateOrders::new();
+        let mut rng = Rng::seed_from(11);
+        let mut live: Vec<InstanceId> = Vec::new();
+        for step in 0..300usize {
+            match rng.below(8) {
+                0 | 1 | 2 => {
+                    let f = rng.below(cat.len() as u64) as usize;
+                    let n = rng.below(cluster.n_nodes() as u64) as usize;
+                    let id = cluster.place(&cat, f, n, step as f64);
+                    cluster.mark_ready(id, step as f64);
+                    live.push(id);
+                }
+                3 if !live.is_empty() => {
+                    let i = rng.below(live.len() as u64) as usize;
+                    let id = live.swap_remove(i);
+                    cluster.evict(&cat, id);
+                }
+                4 => {
+                    cluster.add_node();
+                }
+                _ => {} // cache-hit rounds: nothing moves
+            }
+            for f in 0..cat.len() {
+                assert_eq!(
+                    orders.order(&cluster, f),
+                    ranked_nodes(&cluster, f).as_slice(),
+                    "step {step} fn {f}: cached order diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn take_give_back_truncates_plan_virtual_nodes() {
+        let cat = test_catalog();
+        let cluster = Cluster::new(2);
+        let mut orders = CandidateOrders::new();
+        let mut taken = orders.take(&cluster, 0);
+        let fresh = ranked_nodes(&cluster, 0);
+        assert_eq!(taken, fresh);
+        // a planning loop appends virtual node ids past the real ones
+        taken.push(2);
+        taken.push(3);
+        orders.give_back(0, taken);
+        assert_eq!(orders.order(&cluster, 0), fresh.as_slice());
+    }
+
+    /// A `PlanBuilder` with planned actions is uncacheable (`None` stamp):
+    /// ranking against it must see the overlay, and ranking against the
+    /// committed cluster right after must not reuse the overlay's order.
+    #[test]
+    fn mid_plan_overlays_are_uncacheable_but_correct() {
+        let cat = test_catalog();
+        let mut cluster = Cluster::new(3);
+        // make node 2 the fullest so it ranks first for a newcomer
+        for _ in 0..2 {
+            let id = cluster.place(&cat, 1, 2, 0.0);
+            cluster.mark_ready(id, 0.0);
+        }
+        let mut orders = CandidateOrders::new();
+        let mut pb = PlanBuilder::new(&cat, &cluster);
+        assert!(pb.order_stamp().is_some(), "empty overlay is cacheable");
+        pb.place(0, 0);
+        assert_eq!(pb.order_stamp(), None, "planned actions poison the stamp");
+        assert_eq!(orders.order(&pb, 0), ranked_nodes(&pb, 0).as_slice());
+        // node 0 now hosts fn 0 in the overlay, so it ranks first there…
+        assert_eq!(orders.order(&pb, 0)[0], 0);
+        // …but the committed cluster never saw the placement
+        assert_eq!(orders.order(&cluster, 0), ranked_nodes(&cluster, 0).as_slice());
+        assert_eq!(orders.order(&cluster, 0)[0], 2);
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! would produce — and is memoized into the pair table.  Profiling cost
 //! is counted (`profiling_samples`) for Table 1's O(n²k) scaling.
 
-use super::{candidate_order, ClusterView, DeferredUpdate, Plan, PlanBuilder, Scheduler};
+use super::{CandidateOrders, ClusterView, DeferredUpdate, Plan, PlanBuilder, Scheduler};
 use crate::catalog::{Catalog, FunctionId};
 use crate::cluster::{Cluster, NodeId};
 use crate::interference::{self, NodeMix};
@@ -36,6 +36,9 @@ pub struct OwlScheduler {
     /// colocation is feasible when measured latency <= headroom x QoS.
     qos_headroom: f64,
     rng: Rng,
+    /// Incrementally-maintained candidate rankings (no per-instance
+    /// re-sort when nothing moved).
+    orders: CandidateOrders,
 }
 
 impl OwlScheduler {
@@ -48,6 +51,7 @@ impl OwlScheduler {
             noise_sigma: 0.05,
             qos_headroom: 0.95,
             rng: Rng::seed_from(seed),
+            orders: CandidateOrders::new(),
         }
     }
 
@@ -154,13 +158,18 @@ impl Scheduler for OwlScheduler {
         let t0 = Instant::now();
         let mut pb = PlanBuilder::new(cat, cluster);
         for _ in 0..count {
+            // take/give_back: `admits` needs `&mut self` (profiling is
+            // memoized), so the ranking buffer moves out of the cache for
+            // the duration of the scan
+            let order = self.orders.take(&pb, function);
             let mut chosen = None;
-            for node in candidate_order(&pb, function) {
+            for &node in &order {
                 if self.admits(cat, &pb, node, function) == Some(true) {
                     chosen = Some(node);
                     break;
                 }
             }
+            self.orders.give_back(function, order);
             let node = chosen.unwrap_or_else(|| pb.add_node());
             pb.place(function, node);
         }
@@ -184,12 +193,16 @@ impl Scheduler for OwlScheduler {
         function: FunctionId,
         exclude: NodeId,
     ) -> Result<Option<NodeId>> {
-        for node in candidate_order(cluster, function) {
+        let order = self.orders.take(cluster, function);
+        let mut found = None;
+        for &node in &order {
             if node != exclude && self.admits(cat, cluster, node, function) == Some(true) {
-                return Ok(Some(node));
+                found = Some(node);
+                break;
             }
         }
-        Ok(None)
+        self.orders.give_back(function, order);
+        Ok(found)
     }
 }
 

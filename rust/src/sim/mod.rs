@@ -114,6 +114,11 @@ pub struct RunReport {
     /// dropped — `requests_served + stranded_requests` equals the
     /// arrivals the horizon let in.
     pub stranded_requests: u64,
+    /// Arrivals the synthesis safety cap
+    /// ([`crate::traces::MAX_ARRIVALS_PER_FUNCTION`]) dropped before
+    /// injection — surfaced here (and by the CLI) so a capped run is
+    /// never mistaken for a fully-served one; merges by addition.
+    pub arrivals_dropped: u64,
     /// Highest per-node in-flight request count observed.
     pub peak_node_in_flight: u32,
     /// Highest cluster-wide in-flight request count observed at monitor
@@ -219,6 +224,7 @@ impl RunReport {
         self.requests_served += other.requests_served;
         self.cold_wait_requests += other.cold_wait_requests;
         self.stranded_requests += other.stranded_requests;
+        self.arrivals_dropped += other.arrivals_dropped;
         // disjoint sub-cluster extents
         self.peak_nodes += other.peak_nodes;
         self.peak_in_flight += other.peak_in_flight;
@@ -316,11 +322,15 @@ impl Simulation {
         let mut cp =
             ControlPlane::new(self.cat.clone(), self.cfg.clone(), self.predictor.clone());
         cp.inject_workload(workload);
+        let mut arrivals_dropped = 0u64;
         if self.cfg.requests {
             // per-invocation arrivals derive from the run seed (salted so
             // the stream differs from every other seeded stream) — same
             // cfg + workload ⇒ byte-identical arrival vector
-            cp.inject_arrivals(&workload.synthesize_arrivals(self.cfg.seed ^ ARRIVAL_SEED_SALT));
+            let (arrivals, dropped) =
+                workload.synthesize_arrivals_counted(self.cfg.seed ^ ARRIVAL_SEED_SALT);
+            arrivals_dropped = dropped;
+            cp.inject_arrivals(&arrivals);
         }
         let duration = workload.duration_s().min(self.cfg.duration_s);
         let horizon_ms = duration as f64 * 1000.0;
@@ -422,6 +432,7 @@ impl Simulation {
             request_qos_violations: reqs.violations,
             cold_wait_requests: reqs.cold_waits,
             stranded_requests,
+            arrivals_dropped,
             peak_node_in_flight,
             peak_in_flight,
             latency_hist: reqs.hist,

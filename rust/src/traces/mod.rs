@@ -229,9 +229,22 @@ impl Workload {
     /// equal seeds produce identical arrival vectors.
     ///
     /// A per-function safety cap ([`MAX_ARRIVALS_PER_FUNCTION`]) bounds
-    /// pathological rates; hitting it truncates that function's tail.
+    /// the memory a pathological rate can claim; over-cap arrivals are
+    /// dropped **and counted** (see
+    /// [`Workload::synthesize_arrivals_counted`]) — never silently.
     pub fn synthesize_arrivals(&self, seed: u64) -> Vec<Arrival> {
+        self.synthesize_arrivals_counted(seed).0
+    }
+
+    /// [`Workload::synthesize_arrivals`] plus the number of arrivals the
+    /// per-function safety cap dropped, so callers can surface the loss
+    /// (`RunReport::arrivals_dropped`) instead of truncating silently.
+    /// The dropped tail is still *drawn* from the same per-function RNG
+    /// the uncapped process would use — the kept prefix is bit-identical
+    /// whether or not the cap engages, and the count is exact.
+    pub fn synthesize_arrivals_counted(&self, seed: u64) -> (Vec<Arrival>, u64) {
         let mut arrivals: Vec<Arrival> = Vec::new();
+        let mut dropped = 0u64;
         for f in 0..self.n_functions {
             let mut rng =
                 Rng::seed_from(seed.wrapping_add((f as u64).wrapping_mul(0x9e3779b97f4a7c15)));
@@ -241,7 +254,7 @@ impl Workload {
             let steps: Vec<&LoadEvent> =
                 self.events.iter().filter(|e| e.function == f).collect();
             let mut count = 0usize;
-            'segments: for (i, step) in steps.iter().enumerate() {
+            for (i, step) in steps.iter().enumerate() {
                 let seg_end = steps
                     .get(i + 1)
                     .map(|n| n.at_ms)
@@ -257,16 +270,17 @@ impl Workload {
                     if t_ms >= seg_end {
                         break;
                     }
+                    if count >= MAX_ARRIVALS_PER_FUNCTION {
+                        dropped += 1;
+                        continue;
+                    }
                     arrivals.push(Arrival { at_ms: t_ms, function: f });
                     count += 1;
-                    if count >= MAX_ARRIVALS_PER_FUNCTION {
-                        break 'segments;
-                    }
                 }
             }
         }
         arrivals.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
-        arrivals
+        (arrivals, dropped)
     }
 }
 
@@ -728,6 +742,23 @@ mod tests {
             duration_ms: 10_000.0,
         };
         assert!(wl.synthesize_arrivals(1).is_empty(), "degenerate rates produce nothing");
+        assert_eq!(wl.synthesize_arrivals_counted(1).1, 0, "nothing dropped either");
+    }
+
+    #[test]
+    fn over_cap_arrivals_are_counted_and_prefix_preserved() {
+        // 450k rps × 10 s ≈ 4.5M draws against the ~4.2M per-function cap
+        let wl = Workload {
+            name: "flood".into(),
+            n_functions: 1,
+            events: vec![LoadEvent { at_ms: 0.0, function: 0, rps: 450_000.0 }],
+            duration_ms: 10_000.0,
+        };
+        let (arrivals, dropped) = wl.synthesize_arrivals_counted(3);
+        assert_eq!(arrivals.len(), MAX_ARRIVALS_PER_FUNCTION);
+        assert!(dropped > 0, "the cap must engage and be counted");
+        // the kept prefix is bit-identical to the plain API
+        assert_eq!(arrivals, wl.synthesize_arrivals(3));
     }
 
     #[test]

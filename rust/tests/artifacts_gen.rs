@@ -137,6 +137,41 @@ fn latency_golden_replays_byte_identically_from_loaded_artifacts() {
     let _ = std::fs::remove_dir_all(dir);
 }
 
+/// The committed bench snapshots (`BENCH_*.json` at the repo root,
+/// written by `make bench-snapshot`) must always parse through the
+/// crate's own JSON reader and carry the expected schema — whether they
+/// are the zeroed `bootstrap: true` placeholders or freshly regenerated
+/// measurements.  Machine-dependent fields (wall seconds, events/sec)
+/// must never appear: snapshots hold deterministic counts and
+/// dimensionless ratios only.
+#[test]
+fn committed_bench_snapshots_parse_and_stay_machine_normalized() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    for (file, bench) in [
+        ("BENCH_event_queue.json", "event_queue"),
+        ("BENCH_router_hotpath.json", "router_hotpath"),
+        ("BENCH_shard_scaling.json", "shard_scaling"),
+    ] {
+        let snap = Json::parse_file(&root.join(file)).unwrap();
+        assert_eq!(snap.get("bench").unwrap().as_str().unwrap(), bench, "{file}");
+        snap.get("bootstrap").unwrap().as_bool().unwrap();
+        let rows_key = if bench == "shard_scaling" { "rows" } else { "scenarios" };
+        let rows = snap.get(rows_key).unwrap().as_arr().unwrap();
+        assert!(!rows.is_empty(), "{file}: empty {rows_key}");
+        for row in rows {
+            assert!(row.opt("wall_seconds").is_none(), "{file}: machine-dependent field");
+            assert!(row.opt("events_per_sec").is_none(), "{file}: machine-dependent field");
+            assert!(row.opt("ns_per_event").is_none(), "{file}: machine-dependent field");
+        }
+    }
+    // the event-queue snapshot carries the wheel-vs-heap throughput ratios
+    let eq = Json::parse_file(&root.join("BENCH_event_queue.json")).unwrap();
+    let ratios = eq.get("wheel_over_heap_throughput").unwrap();
+    for key in ["bulk_drain", "steady_churn", "million_churn"] {
+        assert!(ratios.get(key).unwrap().as_f64().unwrap() >= 0.0, "ratio {key}");
+    }
+}
+
 #[test]
 fn generated_golden_vectors_match_the_rust_mirror() {
     // the same invariant golden.rs checks on repo artifacts, applied to a

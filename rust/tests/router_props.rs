@@ -19,7 +19,7 @@ use jiagu::catalog::Catalog;
 use jiagu::cluster::{Cluster, InstanceId, InstanceState};
 use jiagu::config::RunConfig;
 use jiagu::controlplane::ControlPlane;
-use jiagu::router::{RouteOutcome, Router};
+use jiagu::router::{Dispatch, RouteOutcome, Router};
 use jiagu::runtime::{ForestParams, NativeForestPredictor, Predictor};
 use jiagu::traces::{PoissonParams, Workload};
 use jiagu::util::rng::Rng;
@@ -170,6 +170,91 @@ fn in_flight_gauges_survive_adversarial_completions() {
     assert_eq!(router.total_in_flight(), 0);
     assert_eq!(router.node_in_flight(0), 0);
     assert_eq!(router.peak_node_in_flight(), 1, "peak is a high-water mark");
+}
+
+/// The typed [`Dispatch`] verdict from `pick` must classify the picked
+/// instance's load exactly: `Routed` iff its service slot is free,
+/// `Saturated` iff a request is in flight on it, `ColdQueued` iff the
+/// function has no serving instance at all — and `pick` itself must
+/// never move a gauge (it is the read-only half of `route`).
+#[test]
+fn pick_verdicts_classify_instance_load_exactly() {
+    let mut saw = [false; 3]; // Routed, Saturated, ColdQueued
+    for seed in 0..8u64 {
+        let mut rng = Rng::seed_from(seed ^ 0xd15b);
+        let mut router = Router::with_seed(seed);
+        let n_fns = 4u64;
+        let mut next_id: InstanceId = 0;
+        let mut in_service: Vec<InstanceId> = Vec::new();
+        for step in 0..600usize {
+            let f = rng.below(n_fns) as usize;
+            match rng.below(8) {
+                // grow the routing set
+                0 | 1 => {
+                    next_id += 1;
+                    router.add(f, next_id, rng.below(3) as usize);
+                }
+                // finish one in-service request
+                2 => {
+                    if !in_service.is_empty() {
+                        let idx = rng.below(in_service.len() as u64) as usize;
+                        let id = in_service.swap_remove(idx);
+                        if router.complete(id).is_some() {
+                            in_service.push(id); // queue head enters service
+                        }
+                    }
+                }
+                // drive load through the full route path
+                3 | 4 | 5 => {
+                    if let RouteOutcome::Started { instance, .. } = router.route(f, step as f64) {
+                        in_service.push(instance);
+                    }
+                }
+                // oracle step: pick and classify
+                _ => {
+                    let serving = router.serving(f).to_vec();
+                    let gauges: Vec<u32> =
+                        serving.iter().map(|&i| router.in_flight_of(i)).collect();
+                    let verdict = router.pick(f);
+                    match verdict {
+                        Dispatch::ColdQueued => {
+                            assert!(
+                                serving.is_empty(),
+                                "seed {seed} step {step}: ColdQueued despite serving instances"
+                            );
+                            assert_eq!(verdict.instance(), None);
+                            saw[2] = true;
+                        }
+                        Dispatch::Routed(id) => {
+                            assert!(serving.contains(&id), "seed {seed} step {step}");
+                            assert_eq!(
+                                router.in_flight_of(id),
+                                0,
+                                "seed {seed} step {step}: Routed onto a busy instance"
+                            );
+                            assert_eq!(verdict.instance(), Some(id));
+                            saw[0] = true;
+                        }
+                        Dispatch::Saturated(id) => {
+                            assert!(serving.contains(&id), "seed {seed} step {step}");
+                            assert!(
+                                router.in_flight_of(id) > 0,
+                                "seed {seed} step {step}: Saturated verdict on an idle instance"
+                            );
+                            assert_eq!(verdict.instance(), Some(id));
+                            saw[1] = true;
+                        }
+                    }
+                    // pick never touches queueing state
+                    assert_eq!(router.serving(f), &serving[..], "seed {seed} step {step}");
+                    let after: Vec<u32> =
+                        serving.iter().map(|&i| router.in_flight_of(i)).collect();
+                    assert_eq!(gauges, after, "seed {seed} step {step}: pick moved a gauge");
+                }
+            }
+        }
+    }
+    assert!(saw.iter().all(|&s| s), "a Dispatch variant was never exercised");
 }
 
 /// Two replica control planes fed the same workload + arrival stream pop

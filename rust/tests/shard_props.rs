@@ -148,6 +148,7 @@ fn synthetic_report(rng: &mut Rng, cell: usize, cells: usize) -> RunReport {
         request_qos_violations,
         cold_wait_requests: rng.range_u64(0, 30),
         stranded_requests: rng.range_u64(0, 10),
+        arrivals_dropped: rng.range_u64(0, 4),
         peak_node_in_flight: rng.range_u64(0, 64) as u32,
         peak_in_flight: rng.range_u64(0, 128) as u32,
         latency_hist,
@@ -224,6 +225,7 @@ fn report_merge_aggregates_are_order_insensitive() {
             assert_eq!(pinned.requests_served, permuted.requests_served);
             assert_eq!(pinned.stranded_requests, permuted.stranded_requests);
             assert_eq!(pinned.cold_wait_requests, permuted.cold_wait_requests);
+            assert_eq!(pinned.arrivals_dropped, permuted.arrivals_dropped);
         }
     }
 }

@@ -1,0 +1,251 @@
+//! Property tests pinning the [`Timeline`] determinism contract across
+//! implementations (hand-rolled generators over the crate's seeded RNG —
+//! no proptest offline; every failure reports its seed):
+//!
+//! * on randomized interleavings of pushes and pops — same-ms bursts,
+//!   sub-ms jitter, behind-cursor pushes, far-future dues past the
+//!   wheel's top-level rotation — [`TimingWheel`] emits the exact
+//!   `(due_ms, seq, event)` stream the reference [`EventQueue`] heap
+//!   does, `to_bits`-identical on every due time;
+//! * `pop_due` windows (strict and inclusive) agree at every step;
+//! * events racked at level 1 survive the level-0 window carry (the
+//!   `refill` re-admission pass's regression case);
+//! * end to end: the fixed-seed latency-golden scenario produces
+//!   **equal `RunReport`s** under `queue = heap` and `queue = wheel`,
+//!   at shard counts 1, 2 and 4 — the invariant the CI determinism
+//!   matrix re-checks through the CLI byte-for-byte.
+//!
+//! Registered in `Cargo.toml` as a `[[test]]` target (`autotests =
+//! false`; `make check-test-targets` fails on unregistered files).
+
+use jiagu::artifacts::{latency_golden_scenario, make_catalog};
+use jiagu::catalog::Catalog;
+use jiagu::controlplane::shard::ShardedControlPlane;
+use jiagu::engine::{Event, EventQueue, QueueKind, Timeline, TimingWheel};
+use jiagu::runtime::{ForestParams, NativeForestPredictor, Predictor};
+use jiagu::util::rng::Rng;
+use std::sync::Arc;
+
+/// A randomized due time exercising every bucketing regime of the wheel:
+/// the current slot, same-ms bursts, sub-ms jitter, each level span, and
+/// dues beyond one whole top-level rotation (64^4 ms) that land in the
+/// overflow list.
+fn random_due(rng: &mut Rng, now_ms: f64) -> f64 {
+    match rng.below(8) {
+        // same-ms burst: a whole-millisecond tick shared by many events
+        0 => now_ms.floor() + rng.below(4) as f64,
+        // sub-ms jitter inside the current few ticks
+        1 => now_ms + rng.f64() * 4.0,
+        // level-0 span (ms)
+        2 => now_ms + rng.f64() * 60.0,
+        // level-1 span (tens of ms to seconds)
+        3 => now_ms + rng.f64() * 4_000.0,
+        // level-2 span (seconds to minutes)
+        4 => now_ms + rng.f64() * 260_000.0,
+        // level-3 span (minutes to hours)
+        5 => now_ms + rng.f64() * 16_000_000.0,
+        // beyond one top-level rotation: the overflow list
+        6 => now_ms + 17_000_000.0 + rng.f64() * 40_000_000.0,
+        // behind the current drain point (late scheduling)
+        _ => (now_ms - rng.f64() * 50.0).max(0.0),
+    }
+}
+
+fn random_event(rng: &mut Rng) -> Event {
+    match rng.below(4) {
+        0 => Event::MonitorTick,
+        1 => Event::AutoscalerEval,
+        2 => Event::LoadChange { function: rng.below(8) as usize, rps: rng.f64() * 50.0 },
+        _ => Event::ColdStartComplete { instance: rng.below(1 << 20) },
+    }
+}
+
+/// Randomized interleavings of push / pop / pop_due / peek: the wheel and
+/// the heap must agree on every observation, `to_bits`-exact.
+#[test]
+fn wheel_pop_stream_matches_heap_on_randomized_interleavings() {
+    for seed in 0..48u64 {
+        let mut rng = Rng::seed_from(seed ^ 0x7157_11e1);
+        let mut heap = EventQueue::new();
+        let mut wheel = TimingWheel::new();
+        let mut now_ms = 0.0f64;
+        for step in 0..2_000u32 {
+            match rng.below(10) {
+                // pushes dominate so the queues stay populated
+                0..=5 => {
+                    let due = random_due(&mut rng, now_ms);
+                    let ev = random_event(&mut rng);
+                    let sa = heap.push(due, ev.clone());
+                    let sb = wheel.push(due, ev);
+                    assert_eq!(sa, sb, "seed {seed} step {step}: seq counters diverged");
+                }
+                6 | 7 => {
+                    let a = heap.pop();
+                    let b = wheel.pop();
+                    match (&a, &b) {
+                        (Some(x), Some(y)) => {
+                            assert_eq!(
+                                x.due_ms.to_bits(),
+                                y.due_ms.to_bits(),
+                                "seed {seed} step {step}: due {} vs {}",
+                                x.due_ms,
+                                y.due_ms
+                            );
+                            assert_eq!(x.seq, y.seq, "seed {seed} step {step}");
+                            assert_eq!(x.event, y.event, "seed {seed} step {step}");
+                            now_ms = now_ms.max(x.due_ms);
+                        }
+                        (None, None) => {}
+                        _ => panic!("seed {seed} step {step}: one queue drained early"),
+                    }
+                }
+                8 => {
+                    let limit = now_ms + rng.f64() * 5_000.0;
+                    let inclusive = rng.below(2) == 0;
+                    let a = heap.pop_due(limit, inclusive);
+                    let b = wheel.pop_due(limit, inclusive);
+                    assert_eq!(
+                        a.as_ref().map(|s| (s.due_ms.to_bits(), s.seq)),
+                        b.as_ref().map(|s| (s.due_ms.to_bits(), s.seq)),
+                        "seed {seed} step {step}: pop_due({limit}, {inclusive})"
+                    );
+                    if let Some(s) = a {
+                        now_ms = now_ms.max(s.due_ms);
+                    }
+                }
+                _ => {
+                    assert_eq!(
+                        heap.peek_due().map(f64::to_bits),
+                        wheel.peek_due().map(f64::to_bits),
+                        "seed {seed} step {step}: peek_due"
+                    );
+                    assert_eq!(heap.len(), wheel.len(), "seed {seed} step {step}");
+                }
+            }
+        }
+        // drain both completely: the tails must agree too
+        loop {
+            let a = heap.pop();
+            let b = wheel.pop();
+            match (a, b) {
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.due_ms.to_bits(), y.due_ms.to_bits(), "seed {seed} drain");
+                    assert_eq!(x.seq, y.seq, "seed {seed} drain");
+                }
+                (None, None) => break,
+                _ => panic!("seed {seed}: drain lengths diverged"),
+            }
+        }
+    }
+}
+
+/// Dense same-millisecond bursts — hundreds of events sharing one slot,
+/// differing only in fractional due and push order — must pop in the
+/// exact `(due_ms, seq)` order on both implementations.
+#[test]
+fn same_ms_bursts_preserve_push_order_ties() {
+    let mut rng = Rng::seed_from(0xb0a57);
+    let mut heap = EventQueue::new();
+    let mut wheel = TimingWheel::new();
+    for _ in 0..600 {
+        // three whole-ms ticks, many exact collisions on each
+        let tick = 100.0 + rng.below(3) as f64;
+        let due = if rng.below(2) == 0 { tick } else { tick + rng.below(10) as f64 / 10.0 };
+        let ev = random_event(&mut rng);
+        heap.push(due, ev.clone());
+        wheel.push(due, ev);
+    }
+    let mut popped = 0;
+    while let Some(a) = heap.pop() {
+        let b = wheel.pop().expect("wheel holds the same multiset");
+        assert_eq!(a.due_ms.to_bits(), b.due_ms.to_bits());
+        assert_eq!(a.seq, b.seq, "tie at due {} broke differently", a.due_ms);
+        popped += 1;
+    }
+    assert_eq!(popped, 600);
+    assert!(wheel.is_empty());
+}
+
+/// Regression: an event racked at level 1 must survive the cursor
+/// carrying across its slot boundary through the level-0 drain
+/// (`slot 63 + 1` never runs a cascade).  Without the re-admission pass
+/// in `refill`, a fresh level-0 push into the newly entered window
+/// drains ahead of the level-1 slot's contents and strands them.
+#[test]
+fn events_racked_above_survive_the_level0_window_carry() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::seed_from(seed ^ 0x57a4d);
+        let mut heap = EventQueue::new();
+        let mut wheel = TimingWheel::new();
+        let base = (rng.range_u64(1, 1 << 22) * 64) as f64;
+        // park both cursors near the top of one level-0 window
+        for _ in 0..8 {
+            let due = base + 55.0 + rng.f64() * 8.0;
+            let ev = random_event(&mut rng);
+            heap.push(due, ev.clone());
+            wheel.push(due, ev);
+        }
+        for _ in 0..6 {
+            let a = heap.pop().unwrap();
+            let b = wheel.pop().unwrap();
+            assert_eq!((a.due_ms.to_bits(), a.seq), (b.due_ms.to_bits(), b.seq));
+        }
+        // one level-1 slot ahead: racked at level 1, not level 0
+        let d1 = base + 64.0 + rng.f64() * 2.0;
+        heap.push(d1, Event::MonitorTick);
+        wheel.push(d1, Event::MonitorTick);
+        // drain the rest of the old window — the carry crosses the
+        // level-1 slot boundary without a cascade
+        while matches!(heap.peek_due(), Some(d) if d < base + 64.0) {
+            let a = heap.pop().unwrap();
+            let b = wheel.pop().unwrap();
+            assert_eq!((a.due_ms.to_bits(), a.seq), (b.due_ms.to_bits(), b.seq));
+        }
+        // a fresh push into the new window's level 0, due after d1
+        let d2 = d1 + 1.0 + rng.f64();
+        heap.push(d2, Event::AutoscalerEval);
+        wheel.push(d2, Event::AutoscalerEval);
+        loop {
+            match (heap.pop(), wheel.pop()) {
+                (Some(a), Some(b)) => assert_eq!(
+                    (a.due_ms.to_bits(), a.seq),
+                    (b.due_ms.to_bits(), b.seq),
+                    "seed {seed}: level-1 event stranded behind the carry"
+                ),
+                (None, None) => break,
+                _ => panic!("seed {seed}: queues diverged in length"),
+            }
+        }
+    }
+}
+
+fn stub_predictor() -> Arc<dyn Predictor> {
+    Arc::new(NativeForestPredictor::new(ForestParams::synthetic_stub(
+        jiagu::model::N_FEATURES,
+        0.05,
+        0.05,
+    )))
+}
+
+/// The tentpole's end-to-end guarantee: swapping the Timeline
+/// implementation never moves a single bit of the golden scenario's
+/// report, at any shard count.  (The CI determinism matrix re-checks the
+/// same invariant through `jiagu run --json` byte comparison.)
+#[test]
+fn golden_scenario_reports_identical_under_heap_and_wheel_at_all_shard_counts() {
+    let cat = Catalog::from_functions(make_catalog(8, 0x5ca1e));
+    for shards in [1usize, 2, 4] {
+        let run = |queue: QueueKind| {
+            let (mut cfg, wl) = latency_golden_scenario(&cat);
+            cfg.shards = shards;
+            cfg.queue = queue;
+            ShardedControlPlane::new(cat.clone(), cfg, stub_predictor())
+                .run_workload(&wl)
+                .unwrap()
+        };
+        let heap = run(QueueKind::Heap);
+        let wheel = run(QueueKind::Wheel);
+        assert!(heap.requests_served > 0, "scenario must route traffic");
+        assert_eq!(heap, wheel, "queue impl moved bits at shards = {shards}");
+    }
+}
