@@ -10,7 +10,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts artifacts-jax build test check-test-targets bench bench-smoke bench-snapshot determinism fmt-check clippy doc ci clean
+.PHONY: artifacts artifacts-jax build test check-test-targets bench bench-smoke bench-snapshot determinism fuzz-smoke fmt-check clippy doc ci clean
 
 # Regenerate unconditionally.
 artifacts:
@@ -65,6 +65,7 @@ bench-smoke: $(ARTIFACTS_DIR)/meta.json
 	$(CARGO) bench --bench event_queue
 	$(CARGO) bench --bench router_hotpath
 	$(CARGO) bench --bench shard_scaling
+	JIAGU_TRACE_INVOCATIONS=200000 $(CARGO) bench --bench trace_replay
 
 # Regenerate the committed bench snapshots (BENCH_*.json at the repo
 # root): machine-normalized measurements only — deterministic event
@@ -75,6 +76,7 @@ bench-snapshot: $(ARTIFACTS_DIR)/meta.json
 	JIAGU_BENCH_SNAPSHOT=BENCH_event_queue.json $(CARGO) bench --bench event_queue
 	JIAGU_BENCH_SNAPSHOT=BENCH_router_hotpath.json $(CARGO) bench --bench router_hotpath
 	JIAGU_BENCH_SNAPSHOT=BENCH_shard_scaling.json JIAGU_BENCH_DURATION=20 $(CARGO) bench --bench shard_scaling
+	JIAGU_BENCH_SNAPSHOT=BENCH_trace_replay.json JIAGU_TRACE_INVOCATIONS=200000 $(CARGO) bench --bench trace_replay
 
 # Determinism matrix: the fixed-seed latency-golden scenario must emit
 # byte-identical RunReport JSON at every shard count AND under either
@@ -97,6 +99,38 @@ determinism: $(ARTIFACTS_DIR)/meta.json
 	done; \
 	echo "determinism: shards 1/2/4 x queue heap/wheel emit byte-identical RunReports"
 
+# Workload-lab smoke: (1) the seeded scenario fuzzer through the
+# differential QoS matrix over all four schedulers — fails on any
+# invariant violation, and on zero divergences (the regression
+# expectation: the adversarial scenarios must keep separating at least
+# one baseline from jiagu); the machine-readable divergence report
+# lands in target/fuzz/ (uploaded by CI).  (2) the committed sample
+# trace replayed at shards 1/2/4 x queue heap/wheel — all six RunReport
+# JSONs must be byte-identical.
+fuzz-smoke: $(ARTIFACTS_DIR)/meta.json
+	@mkdir -p target/fuzz; \
+	echo "jiagu fuzz --seeds 7,11 --duration 8 --require-divergence"; \
+	$(CARGO) run --release --quiet --bin jiagu -- fuzz --seeds 7,11 --duration 8 \
+		--require-divergence --out target/fuzz/divergence.json || exit 1; \
+	for n in 1 2 4; do \
+		for q in heap wheel; do \
+			echo "jiagu replay --trace data/traces/invocations_small.csv --shards $$n --queue $$q --json"; \
+			$(CARGO) run --release --quiet --bin jiagu -- replay \
+				--trace data/traces/invocations_small.csv --duration 8 \
+				--shards $$n --queue $$q --json \
+				> target/fuzz/replay-shards-$$n-$$q.json || exit 1; \
+		done; \
+	done; \
+	ref=target/fuzz/replay-shards-1-heap.json; \
+	for f in target/fuzz/replay-shards-*.json; do \
+		cmp $$ref $$f || { echo "error: $$f diverged from $$ref"; exit 1; }; \
+	done; \
+	echo "jiagu replay --trace data/traces/burst_small.jsonl --json"; \
+	$(CARGO) run --release --quiet --bin jiagu -- replay \
+		--trace data/traces/burst_small.jsonl --duration 8 --json \
+		> target/fuzz/replay-burst.json || exit 1; \
+	echo "fuzz-smoke: divergence report written; replay matrix byte-identical at shards 1/2/4 x heap/wheel"
+
 fmt-check:
 	$(CARGO) fmt --all -- --check
 
@@ -110,7 +144,7 @@ clippy:
 doc:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
-ci: build fmt-check clippy doc test bench-smoke determinism
+ci: build fmt-check clippy doc test bench-smoke determinism fuzz-smoke
 
 clean:
 	$(CARGO) clean

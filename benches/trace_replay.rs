@@ -1,0 +1,159 @@
+//! Trace-replay throughput: wall-clock events/sec (and trace
+//! records/sec) streaming a generated million-invocation Azure-style
+//! log through the control plane — unsharded and across the sharded
+//! layout.  The replay path's claim is *bounded memory at full
+//! fidelity*: the reader never materializes the trace, yet the replay
+//! stays byte-deterministic (asserted here across repeats).
+//!
+//! Self-contained: generates its own catalog, trace file (in the temp
+//! dir) and synthetic-stub forest, so it runs on a fresh checkout
+//! without `make artifacts`.
+//!
+//! ```bash
+//! cargo bench --bench trace_replay
+//! # JIAGU_TRACE_INVOCATIONS=200000 shrinks the trace (default 1M);
+//! # JIAGU_BENCH_JSON=path.json additionally writes the rows as JSON;
+//! # JIAGU_BENCH_SNAPSHOT=BENCH_trace_replay.json writes the
+//! # machine-normalized snapshot (deterministic counts only).
+//! ```
+
+use jiagu::artifacts::make_catalog;
+use jiagu::catalog::Catalog;
+use jiagu::config::RunConfig;
+use jiagu::runtime::{ForestParams, NativeForestPredictor, Predictor};
+use jiagu::util::bench::Table;
+use jiagu::util::json::{arr, num, obj, s, Json};
+use jiagu::workload::replay::{
+    generate_trace_file, replay_path, ReplayOptions, TraceFormat, TraceGenSpec,
+};
+use std::sync::Arc;
+use std::time::Instant;
+
+const N_FUNCTIONS: usize = 8;
+const N_NODES: usize = 16;
+/// Virtual trace horizon (s): ~16.7k rps aggregate at the default 1M.
+const TRACE_SECONDS: usize = 60;
+/// Deterministic runs: wall time is the only noise, so two repeats with
+/// a min-take suffice — and the repeat doubles as a determinism guard.
+const REPEATS: usize = 2;
+
+fn main() {
+    let invocations: u64 = std::env::var("JIAGU_TRACE_INVOCATIONS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1_000_000);
+    let cat = Catalog::from_functions(make_catalog(N_FUNCTIONS, 0x7ace));
+    let predictor: Arc<dyn Predictor> = Arc::new(NativeForestPredictor::new(
+        ForestParams::synthetic_stub(jiagu::model::N_FEATURES, 0.05, 0.05),
+    ));
+    let path = std::env::temp_dir().join(format!("jiagu_bench_trace_{invocations}.csv"));
+    let spec = TraceGenSpec {
+        invocations,
+        duration_s: TRACE_SECONDS,
+        seed: 0x7ace,
+        format: TraceFormat::Csv,
+    };
+    let t0 = Instant::now();
+    let written = generate_trace_file(&path, &cat, &spec).expect("trace generation");
+    let gen_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "generated {written} invocations over {TRACE_SECONDS}s in {:.1} ms ({:.0}/sec)",
+        gen_secs * 1e3,
+        written as f64 / gen_secs
+    );
+
+    let opts = ReplayOptions::default();
+    let mut table =
+        Table::new(&["scenario", "events", "wall ms", "events/sec", "records/sec"]);
+    let mut rows = Vec::new();
+    let mut snapshot_rows = Vec::new();
+    for (scenario, shards, partitions) in [("unsharded", 0usize, 1usize), ("sharded-2x2", 2, 2)]
+    {
+        let mut cfg = RunConfig::jiagu_45();
+        cfg.n_nodes = N_NODES;
+        cfg.duration_s = TRACE_SECONDS;
+        cfg.requests = true;
+        cfg.eval_interval_ms = 250.0;
+        cfg.seed = 4242;
+        cfg.shards = shards;
+        cfg.partitions = partitions;
+        let mut best_s = f64::INFINITY;
+        let mut kept = None;
+        for _ in 0..REPEATS {
+            let t0 = Instant::now();
+            let (report, stats) =
+                replay_path(&cat, &cfg, predictor.clone(), &path, &opts).expect("replay");
+            best_s = best_s.min(t0.elapsed().as_secs_f64());
+            if let Some((prev_report, prev_stats)) = &kept {
+                // the determinism guard: repeats may only move wall time
+                assert_eq!(*prev_report, report, "{scenario}: replay must be byte-stable");
+                assert_eq!(*prev_stats, stats);
+            }
+            kept = Some((report, stats));
+        }
+        let (report, stats) = kept.expect("at least one repeat");
+        assert_eq!(stats.invocations, written, "{scenario}: every record must be read");
+        assert_eq!(stats.clipped, 0, "{scenario}: the trace fits the horizon");
+        assert!(report.requests_served > 0, "{scenario}: traffic must be served");
+        let events_per_sec = report.events_processed as f64 / best_s;
+        let records_per_sec = stats.invocations as f64 / best_s;
+        table.row(&[
+            scenario.to_string(),
+            format!("{}", report.events_processed),
+            format!("{:.1}", best_s * 1e3),
+            format!("{events_per_sec:.0}"),
+            format!("{records_per_sec:.0}"),
+        ]);
+        rows.push(obj(vec![
+            ("scenario", s(scenario)),
+            ("shards", num(shards as f64)),
+            ("partitions", num(partitions as f64)),
+            ("invocations", num(stats.invocations as f64)),
+            ("emitted", num(stats.emitted as f64)),
+            ("events_processed", num(report.events_processed as f64)),
+            ("wall_seconds", num(best_s)),
+            ("events_per_sec", num(events_per_sec)),
+            ("records_per_sec", num(records_per_sec)),
+        ]));
+        snapshot_rows.push(obj(vec![
+            ("emitted", num(stats.emitted as f64)),
+            ("events_processed", num(report.events_processed as f64)),
+            ("invocations", num(stats.invocations as f64)),
+            ("partitions", num(partitions as f64)),
+            ("requests_served", num(report.requests_served as f64)),
+            ("scenario", s(scenario)),
+            ("shards", num(shards as f64)),
+        ]));
+    }
+    table.print(&format!("trace replay ({written} invocations, {TRACE_SECONDS}s horizon)"));
+    println!("(reports byte-identical across repeats — asserted)");
+    std::fs::remove_file(&path).ok();
+
+    if let Ok(out) = std::env::var("JIAGU_BENCH_JSON") {
+        if !out.is_empty() {
+            let payload = obj(vec![
+                ("bench", s("trace_replay")),
+                ("duration_s", num(TRACE_SECONDS as f64)),
+                ("invocations", num(written as f64)),
+                ("rows", arr(rows)),
+            ]);
+            std::fs::write(&out, format!("{}\n", payload.to_string()))
+                .expect("writing JIAGU_BENCH_JSON");
+            println!("wrote {out}");
+        }
+    }
+
+    if let Ok(out) = std::env::var("JIAGU_BENCH_SNAPSHOT") {
+        if !out.is_empty() {
+            let payload = obj(vec![
+                ("bench", s("trace_replay")),
+                ("bootstrap", Json::Bool(false)),
+                ("duration_s", num(TRACE_SECONDS as f64)),
+                ("scenarios", arr(snapshot_rows)),
+            ]);
+            std::fs::write(&out, format!("{}\n", payload.to_string()))
+                .expect("writing JIAGU_BENCH_SNAPSHOT");
+            println!("wrote {out}");
+        }
+    }
+}

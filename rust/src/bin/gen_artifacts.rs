@@ -6,15 +6,26 @@
 //!                     [--train-rows 20000] [--test-rows 2000]
 //!                     [--trees 64] [--depth 10] [--quick]
 //!                     [--no-model-comparison]
+//! jiagu-gen-artifacts --trace-out FILE [--trace-invocations N]
+//!                     [--trace-seconds S] [--trace-seed N]
+//!                     [--trace-format csv|jsonl] [--functions 6] [--seed 7]
 //! ```
 //!
 //! Defaults mirror the Python pipeline's hyperparameters; `--quick`
 //! switches to a small budget for dev loops (tests use an even smaller
 //! in-process configuration).  The HLO modules for the optional PJRT
 //! runtime still come from `make artifacts-jax`.
+//!
+//! `--trace-out` switches to trace-generation mode: instead of model
+//! artifacts it writes a deterministic Azure-style invocation log
+//! ([`jiagu::workload::replay::generate_trace_file`]) against the same
+//! synthetic catalog (`--functions`/`--seed`) the artifact pipeline
+//! builds, so generated traces replay against stock artifacts.
 
 use anyhow::{bail, Context, Result};
-use jiagu::artifacts::{generate, GenConfig};
+use jiagu::artifacts::{generate, make_catalog, GenConfig};
+use jiagu::catalog::Catalog;
+use jiagu::workload::replay::{generate_trace_file, TraceFormat, TraceGenSpec};
 
 fn main() {
     if let Err(e) = run() {
@@ -33,6 +44,13 @@ fn run() -> Result<()> {
         GenConfig::default()
     };
     let mut out_dir: Option<std::path::PathBuf> = None;
+    let mut trace_out: Option<std::path::PathBuf> = None;
+    let mut trace_spec = TraceGenSpec {
+        invocations: 100_000,
+        duration_s: 600,
+        seed: 7,
+        format: TraceFormat::Csv,
+    };
     let mut args = raw.into_iter();
     while let Some(a) = args.next() {
         let mut value = |name: &str| {
@@ -40,6 +58,21 @@ fn run() -> Result<()> {
         };
         match a.as_str() {
             "--out-dir" => out_dir = Some(value("--out-dir")?.into()),
+            "--trace-out" => trace_out = Some(value("--trace-out")?.into()),
+            "--trace-invocations" => {
+                trace_spec.invocations =
+                    value("--trace-invocations")?.parse().context("--trace-invocations")?
+            }
+            "--trace-seconds" => {
+                trace_spec.duration_s =
+                    value("--trace-seconds")?.parse().context("--trace-seconds")?
+            }
+            "--trace-seed" => {
+                trace_spec.seed = value("--trace-seed")?.parse().context("--trace-seed")?
+            }
+            "--trace-format" => {
+                trace_spec.format = TraceFormat::parse(&value("--trace-format")?)?
+            }
             "--seed" => cfg.seed = value("--seed")?.parse().context("--seed")?,
             "--functions" => {
                 cfg.n_functions = value("--functions")?.parse().context("--functions")?
@@ -58,12 +91,27 @@ fn run() -> Result<()> {
                 println!(
                     "jiagu-gen-artifacts [--out-dir DIR] [--seed N] [--functions N] \
                      [--train-rows N] [--test-rows N] [--trees N] [--depth N] \
-                     [--quick] [--no-model-comparison]"
+                     [--quick] [--no-model-comparison] | --trace-out FILE \
+                     [--trace-invocations N] [--trace-seconds N] [--trace-seed N] \
+                     [--trace-format csv|jsonl]"
                 );
                 return Ok(());
             }
             other => bail!("unknown flag {other:?} (see --help)"),
         }
+    }
+    if let Some(path) = trace_out {
+        let cat = Catalog::from_functions(make_catalog(cfg.n_functions, cfg.seed));
+        eprintln!(
+            "[gen] generating trace {} (~{} invocations, {} s, seed {})",
+            path.display(),
+            trace_spec.invocations,
+            trace_spec.duration_s,
+            trace_spec.seed
+        );
+        let written = generate_trace_file(&path, &cat, &trace_spec)?;
+        eprintln!("[gen] done: {written} invocations written");
+        return Ok(());
     }
     let out_dir = out_dir.unwrap_or_else(jiagu::artifacts_dir);
     eprintln!(

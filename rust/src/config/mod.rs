@@ -160,6 +160,14 @@ pub struct RunConfig {
     pub measurement_noise: f64,
     /// RNG seed for the simulator's noise streams.
     pub seed: u64,
+    /// Seed of the per-invocation arrival synthesis
+    /// ([`crate::traces::Workload::synthesize_arrivals_counted`]).  `None`
+    /// (the default) derives it from `seed` — see
+    /// [`crate::sim::ARRIVAL_SEED_SALT`].  The sharded control plane pins
+    /// it explicitly on every cell so arrival streams (and therefore the
+    /// per-cell `arrivals_dropped` counters) are a pure partition of the
+    /// unsharded stream, independent of per-cell engine seeds.
+    pub arrival_seed: Option<u64>,
     /// Deterministic virtual-time costs of decisions and refreshes.
     pub cost: CostModel,
     /// Autoscaler evaluation cadence in virtual ms (1 s mirrors the
@@ -203,6 +211,7 @@ impl Default for RunConfig {
             duration_s: 1800,
             measurement_noise: 0.05,
             seed: 42,
+            arrival_seed: None,
             cost: CostModel::default(),
             eval_interval_ms: 1000.0,
             requests: false,
@@ -258,6 +267,9 @@ impl RunConfig {
         }
         if let Some(v) = j.opt("seed") {
             c.seed = v.as_f64()? as u64;
+        }
+        if let Some(v) = j.opt("arrival_seed") {
+            c.arrival_seed = Some(v.as_f64()? as u64);
         }
         if let Some(v) = j.opt("init_model") {
             c.init_model = InitModel::parse(v.as_str()?)?;
@@ -366,6 +378,16 @@ mod tests {
         assert_eq!(c.shards, 2);
         assert_eq!(c.partitions, 8);
         assert_eq!(c.seed, 9);
+        assert_eq!(c.arrival_seed, None, "arrival seed derives from seed by default");
+    }
+
+    #[test]
+    fn load_reads_explicit_arrival_seed() {
+        let path = std::env::temp_dir().join("jiagu_cfg_arrival_seed_test.json");
+        std::fs::write(&path, r#"{"arrival_seed": 1234}"#).unwrap();
+        let c = RunConfig::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(c.arrival_seed, Some(1234));
     }
 
     #[test]

@@ -135,10 +135,20 @@ impl ShardedControlPlane {
 
     /// The plain-control-plane configuration `cell` runs with: its node
     /// allotment, its derived seed, sharding itself switched off.
+    ///
+    /// The arrival seed is pinned to the *run-level* value
+    /// ([`crate::sim::effective_arrival_seed`]) rather than derived from
+    /// the cell seed: per-invocation synthesis is per-function
+    /// (`Workload::synthesize_arrivals_counted` seeds an independent RNG
+    /// per function id), so with a shared arrival seed every cell thins
+    /// exactly the sub-stream of the unsharded arrival stream its
+    /// functions own — and per-cell `arrivals_dropped` counters sum to
+    /// the unsharded count under any partition layout.
     pub fn cell_config(&self, cell: usize) -> RunConfig {
         let mut cfg = self.cfg.clone();
         cfg.n_nodes = self.layout.nodes_of(cell);
         cfg.seed = cell_seed(self.cfg.seed, cell);
+        cfg.arrival_seed = Some(crate::sim::effective_arrival_seed(&self.cfg));
         cfg.shards = 0;
         cfg.partitions = 1;
         cfg

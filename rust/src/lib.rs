@@ -8,8 +8,10 @@
 //!   scheduler with per-node [`capacity`] tables, [`autoscaler`] with
 //!   dual-staged scaling, request [`router`], [`cluster`] state, baseline
 //!   schedulers, a millisecond-resolution discrete-event core
-//!   ([`engine`] + [`controlplane`]), the [`sim`]ulator and
-//!   per-second/sub-second workload generators ([`traces`]).
+//!   ([`engine`] + [`controlplane`]), the [`sim`]ulator,
+//!   per-second/sub-second workload generators ([`traces`]) and the
+//!   [`workload`] lab (streaming trace replay, adversarial scenario
+//!   fuzzer, differential QoS harness).
 //! * **L2 (JAX, build time)** — the latency predictor compute graph,
 //!   AOT-lowered to HLO text at `make artifacts`.
 //! * **L1 (Pallas, build time)** — the random-forest traversal kernel.
@@ -49,6 +51,7 @@ pub mod scheduler;
 pub mod sim;
 pub mod traces;
 pub mod util;
+pub mod workload;
 
 /// Repo-relative artifacts directory used by examples/benches/tests.
 ///

@@ -12,6 +12,11 @@
 //!             [--queue heap|wheel]    # Timeline impl (binary heap | timing wheel)
 //!             [--json]                # emit the RunReport as JSON
 //! jiagu compare [--duration 900]      # all schedulers on trace A
+//! jiagu replay  --trace FILE          # stream an invocation log (CSV/JSONL)
+//!             [--rescale X] [--bin-ms B] [--chunk-ms C] [--duration S]
+//!             [--shards N] [--partitions P] [--queue heap|wheel] [--json]
+//! jiagu fuzz  [--seeds 7,11,13] [--families correlated-burst,...]
+//!             [--duration 8] [--require-divergence] [--json] [--out FILE]
 //! jiagu info                          # artifacts + model summary
 //! ```
 //!
@@ -19,12 +24,23 @@
 //! (`artifacts::latency_golden_scenario`) — the CI determinism matrix
 //! runs it at `--shards 1,2,4` and byte-compares the `--json` outputs;
 //! only the parallelism knobs apply on top of the pinned scenario.
+//!
+//! `replay` streams a real-trace invocation log through the control
+//! plane in bounded memory (`workload::replay`); same file + options ⇒
+//! byte-identical `--json` output at any shard count.  `fuzz` runs the
+//! seeded adversarial scenario fuzzer through the differential QoS
+//! matrix over all four schedulers (`workload::diff`) and exits
+//! non-zero on any invariant violation — or, with
+//! `--require-divergence`, when no scenario separates any baseline from
+//! jiagu.
 
 use anyhow::{bail, Context, Result};
 use jiagu::config::{InitModel, RunConfig, SchedulerKind};
 use jiagu::engine::QueueKind;
 use jiagu::sim::{load_predictor, Simulation};
 use jiagu::traces;
+use jiagu::workload::fuzz::{ScenarioFamily, ScenarioFuzzer};
+use jiagu::workload::{diff, replay};
 
 fn main() {
     if let Err(e) = run() {
@@ -291,6 +307,126 @@ fn run() -> Result<()> {
                 print_report(&report);
             }
         }
+        Some("replay") => {
+            let mut cfg = build_config(&args)?;
+            cfg.requests = true; // replay is per-invocation by construction
+            let cat = jiagu::catalog::Catalog::load(&artifacts.join("functions.json"))?;
+            let native = args.switches.contains("native");
+            let predictor = load_predictor(&artifacts, native)?;
+            let trace = args
+                .flags
+                .get("trace")
+                .context("replay needs --trace <invocation log>")?;
+            let mut opts = replay::ReplayOptions { seed: cfg.seed, ..Default::default() };
+            if let Some(v) = args.flags.get("rescale") {
+                opts.rescale = v.parse().context("--rescale")?;
+            }
+            if let Some(v) = args.flags.get("bin-ms") {
+                opts.bin_ms = v.parse().context("--bin-ms")?;
+            }
+            if let Some(v) = args.flags.get("chunk-ms") {
+                opts.chunk_ms = v.parse().context("--chunk-ms")?;
+            }
+            let (report, stats) = replay::replay_path(
+                &cat,
+                &cfg,
+                predictor,
+                std::path::Path::new(trace),
+                &opts,
+            )?;
+            if args.switches.contains("json") {
+                println!("{}", report_json(&report).to_string());
+            } else {
+                print_report(&report);
+                println!(
+                    "  replay: {} records read, {} arrivals emitted, {} clipped at the horizon",
+                    stats.invocations, stats.emitted, stats.clipped
+                );
+            }
+        }
+        Some("fuzz") => {
+            let mut cfg = build_config(&args)?;
+            cfg.requests = true;
+            if !args.flags.contains_key("duration") {
+                cfg.duration_s = 8; // short adversarial horizons by default
+            }
+            let cat = jiagu::catalog::Catalog::load(&artifacts.join("functions.json"))?;
+            let native = args.switches.contains("native");
+            let predictor = load_predictor(&artifacts, native)?;
+            let seeds: Vec<u64> = match args.flags.get("seeds") {
+                Some(v) => v
+                    .split(',')
+                    .map(|s| s.trim().parse().context("--seeds"))
+                    .collect::<Result<_>>()?,
+                None => vec![7, 11, 13],
+            };
+            let families: Vec<ScenarioFamily> = match args.flags.get("families") {
+                Some(v) => v
+                    .split(',')
+                    .map(|s| ScenarioFamily::parse(s.trim()))
+                    .collect::<Result<_>>()?,
+                None => ScenarioFamily::ALL.to_vec(),
+            };
+            let mut matrices = Vec::new();
+            for &seed in &seeds {
+                let fuzzer = ScenarioFuzzer::new(seed, cfg.duration_s);
+                for &family in &families {
+                    let wl = fuzzer.workload(&cat, family);
+                    matrices.push(diff::run_matrix(&cat, &cfg, &predictor, &wl, true)?);
+                }
+            }
+            let divergences: usize = matrices.iter().map(|m| m.divergences.len()).sum();
+            let violations: usize = matrices.iter().map(|m| m.violations.len()).sum();
+            let json = jiagu::util::json::obj(vec![
+                (
+                    "matrices",
+                    jiagu::util::json::arr(matrices.iter().map(diff::matrix_json)),
+                ),
+                ("total_divergences", jiagu::util::json::num(divergences as f64)),
+                (
+                    "total_invariant_violations",
+                    jiagu::util::json::num(violations as f64),
+                ),
+            ]);
+            if let Some(path) = args.flags.get("out") {
+                std::fs::write(path, json.to_string())
+                    .with_context(|| format!("writing divergence report {path}"))?;
+            }
+            if args.switches.contains("json") {
+                println!("{}", json.to_string());
+            } else {
+                for m in &matrices {
+                    println!(
+                        "== {}: {} divergences, {} invariant violations ==",
+                        m.scenario,
+                        m.divergences.len(),
+                        m.violations.len()
+                    );
+                    for d in &m.divergences {
+                        println!(
+                            "  {:<12} {:<18} jiagu {:>10.3}  baseline {:>10.3}",
+                            d.scheduler, d.metric, d.jiagu, d.baseline
+                        );
+                    }
+                    for v in &m.violations {
+                        println!("  VIOLATION {} [{}]: {}", v.scheduler, v.invariant, v.detail);
+                    }
+                }
+                println!(
+                    "fuzz matrix: {} scenarios, {divergences} divergences, {violations} invariant violations",
+                    matrices.len()
+                );
+            }
+            if violations > 0 {
+                bail!("{violations} invariant violation(s) across the fuzz matrix");
+            }
+            if args.switches.contains("require-divergence") && divergences == 0 {
+                bail!(
+                    "no scenario separated any baseline from jiagu \
+                     (--require-divergence)"
+                );
+            }
+        }
         Some("info") => {
             let cat = jiagu::catalog::Catalog::load(&artifacts.join("functions.json"))?;
             println!("artifacts: {}", artifacts.display());
@@ -305,7 +441,7 @@ fn run() -> Result<()> {
             let backend = if cfg!(feature = "pjrt") { "pjrt" } else { "native" };
             println!("predictor: {backend}, {} features", predictor.n_features());
         }
-        Some(other) => bail!("unknown subcommand {other:?} (run|compare|info)"),
+        Some(other) => bail!("unknown subcommand {other:?} (run|compare|replay|fuzz|info)"),
     }
     Ok(())
 }

@@ -93,6 +93,7 @@ pub struct LatencyHistogram {
     bin_ms: f64,
     bins: Vec<u64>,
     overflow: u64,
+    invalid: u64,
     count: u64,
     max_ms: f64,
 }
@@ -107,15 +108,22 @@ impl LatencyHistogram {
     pub fn new(bin_ms: f64, n_bins: usize) -> Self {
         assert!(bin_ms > 0.0 && bin_ms.is_finite(), "bin width must be positive");
         assert!(n_bins > 0, "need at least one bin");
-        Self { bin_ms, bins: vec![0; n_bins], overflow: 0, count: 0, max_ms: 0.0 }
+        Self { bin_ms, bins: vec![0; n_bins], overflow: 0, invalid: 0, count: 0, max_ms: 0.0 }
     }
 
-    /// Record one latency sample; non-finite or negative values count
-    /// into the overflow bucket rather than poisoning the bins.
+    /// Record one latency sample.
+    ///
+    /// Degenerate samples — NaN, ±∞, negative — are clamped into the
+    /// explicit **invalid** bin: they bump `count` and `invalid` but
+    /// never touch the regular bins, the overflow bucket (which is
+    /// reserved for *valid* latencies beyond the binned range) or
+    /// `max_ms`.  A non-zero `invalid` count is therefore a loud,
+    /// attributable signal that an upstream latency computation produced
+    /// garbage, instead of a silently mis-binned percentile.
     pub fn record(&mut self, ms: f64) {
         self.count += 1;
         if !ms.is_finite() || ms < 0.0 {
-            self.overflow += 1;
+            self.invalid += 1;
             return;
         }
         self.max_ms = self.max_ms.max(ms);
@@ -145,6 +153,12 @@ impl LatencyHistogram {
 
     pub fn overflow(&self) -> u64 {
         self.overflow
+    }
+
+    /// Degenerate samples recorded (NaN/±∞/negative) — see
+    /// [`LatencyHistogram::record`].
+    pub fn invalid(&self) -> u64 {
+        self.invalid
     }
 
     /// Largest finite latency recorded.
@@ -191,6 +205,7 @@ impl LatencyHistogram {
             *a += b;
         }
         self.overflow += other.overflow;
+        self.invalid += other.invalid;
         self.count += other.count;
         self.max_ms = self.max_ms.max(other.max_ms);
         Ok(())
@@ -203,6 +218,7 @@ impl LatencyHistogram {
             ("bin_ms", num(self.bin_ms)),
             ("bins", arr(self.bins.iter().map(|c| num(*c as f64)))),
             ("overflow", num(self.overflow as f64)),
+            ("invalid", num(self.invalid as f64)),
             ("count", num(self.count as f64)),
             ("max_ms", num(self.max_ms)),
             ("p50_ms", num(self.percentile(0.50))),
@@ -469,12 +485,45 @@ mod tests {
         assert_eq!(h.percentile(0.50), 10.0);
         // p99 rank = 5 → overflow → max recorded value
         assert_eq!(h.percentile(0.99), 250.0);
-        // degenerate inputs count but never poison the bins
+        // degenerate inputs land in the explicit invalid bin — counted,
+        // attributable, and never mixed into the overflow bucket
         h.record(f64::NAN);
         h.record(-1.0);
         assert_eq!(h.count(), 7);
-        assert_eq!(h.overflow(), 3);
+        assert_eq!(h.overflow(), 1);
+        assert_eq!(h.invalid(), 2);
         assert_eq!(h.max_ms(), 250.0);
+    }
+
+    #[test]
+    fn latency_histogram_isolates_invalid_samples() {
+        let mut h = LatencyHistogram::new(10.0, 10);
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.001, -1e300] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.invalid(), 5);
+        assert_eq!(h.overflow(), 0, "overflow is reserved for valid out-of-range samples");
+        assert!(h.bins().iter().all(|b| *b == 0), "bins stay untouched");
+        assert_eq!(h.max_ms(), 0.0, "max never tracks garbage");
+        // valid samples recorded afterwards are unaffected
+        h.record(5.0);
+        h.record(15.0);
+        assert_eq!(h.bins()[0], 1);
+        assert_eq!(h.bins()[1], 1);
+        assert_eq!(h.invalid(), 5);
+        assert_eq!(h.max_ms(), 15.0);
+        // the invalid bin merges additively like every other counter
+        let mut other = LatencyHistogram::new(10.0, 10);
+        other.record(f64::NAN);
+        other.record(25.0);
+        let mut m = h.clone();
+        m.merge(&other).unwrap();
+        assert_eq!(m.invalid(), 6);
+        assert_eq!(m.count(), 9);
+        // and the JSON surface carries it explicitly
+        let j = m.to_json();
+        assert_eq!(j.get("invalid").unwrap().as_usize().unwrap(), 6);
     }
 
     #[test]

@@ -26,7 +26,7 @@
 //! QoS-violation counts — all equally bit-identical across replays.
 
 use crate::catalog::Catalog;
-use crate::config::RunConfig;
+use crate::config::{CostModel, RunConfig};
 use crate::controlplane::{ControlPlane, EngineEvents};
 use crate::metrics::{
     CostTracker, DensityTracker, LatencyHistogram, QosTracker, RequestTracker, Samples,
@@ -40,6 +40,18 @@ use std::sync::Arc;
 /// (`cfg.requests = true`), keeping it independent of the simulator's
 /// other seeded streams while still replaying per seed.
 pub const ARRIVAL_SEED_SALT: u64 = 0x0a21_71a1;
+
+/// Effective seed of the per-invocation arrival synthesis for `cfg`:
+/// the explicit [`RunConfig::arrival_seed`] override when present,
+/// otherwise the run seed salted with [`ARRIVAL_SEED_SALT`].  The
+/// sharded control plane pins this value onto every cell, so all cells
+/// thin the *same* underlying arrival stream regardless of their
+/// cell-local engine seeds — which is what makes per-cell
+/// `arrivals_dropped` counters sum to the unsharded count under any
+/// partition layout.
+pub fn effective_arrival_seed(cfg: &RunConfig) -> u64 {
+    cfg.arrival_seed.unwrap_or(cfg.seed ^ ARRIVAL_SEED_SALT)
+}
 
 /// Aggregated outcome of one simulated run.  Every field is derived
 /// from the deterministic event stream, so two runs with the same seed
@@ -322,86 +334,151 @@ impl Simulation {
         let mut cp =
             ControlPlane::new(self.cat.clone(), self.cfg.clone(), self.predictor.clone());
         cp.inject_workload(workload);
-        let mut arrivals_dropped = 0u64;
+        let mut builder = ReportBuilder::new(&self.cat, &self.cfg);
         if self.cfg.requests {
-            // per-invocation arrivals derive from the run seed (salted so
-            // the stream differs from every other seeded stream) — same
-            // cfg + workload ⇒ byte-identical arrival vector
+            // per-invocation arrivals derive from the arrival seed (by
+            // default the run seed, salted so the stream differs from
+            // every other seeded stream) — same cfg + workload ⇒
+            // byte-identical arrival vector
             let (arrivals, dropped) =
-                workload.synthesize_arrivals_counted(self.cfg.seed ^ ARRIVAL_SEED_SALT);
-            arrivals_dropped = dropped;
+                workload.synthesize_arrivals_counted(effective_arrival_seed(&self.cfg));
+            builder.add_arrivals_dropped(dropped);
             cp.inject_arrivals(&arrivals);
         }
         let duration = workload.duration_s().min(self.cfg.duration_s);
         let horizon_ms = duration as f64 * 1000.0;
-
-        let mut costs = CostTracker::default();
-        let mut qos = QosTracker::new(self.cat.len());
-        let mut density = DensityTracker::default();
-        let mut reqs = RequestTracker::new(self.cat.len());
-        let mut peak_node_in_flight = 0u32;
-        let mut peak_in_flight = 0u32;
-        let mut stranded_requests = 0u64;
-        let mut peak_nodes = self.cfg.n_nodes;
-        let mut logical_cold_starts = 0u64;
-        let mut real_after_release = 0u64;
-        let mut migrations = 0u64;
-        let mut released = 0u64;
-        let mut evicted = 0u64;
-        let mut async_nanos = 0u64;
-        let mut async_inferences = 0u64;
-        let mut events_processed = 0u64;
         let mut until = 0.0f64;
         while until < horizon_ms {
             until = (until + FOLD_CHUNK_MS).min(horizon_ms);
             let ev: EngineEvents = cp.run_until(until)?;
-            for committed in &ev.scheduled {
-                costs.record_schedule(
-                    committed,
-                    self.cfg.cost.decision_ms(committed.plan.critical_inferences),
-                );
-            }
-            for latency in &ev.cold_start_latency_ms {
-                costs.record_cold_start(*latency);
-            }
-            for w in &ev.qos {
-                qos.record(&self.cat, w.function, w.requests, w.measured_ms);
-            }
-            for r in &ev.requests {
-                reqs.record(&self.cat, r.function, r.latency_ms);
-            }
-            reqs.cold_waits += ev.cold_waits;
-            peak_node_in_flight = peak_node_in_flight.max(ev.peak_node_in_flight);
-            peak_in_flight = peak_in_flight.max(ev.in_flight);
-            // the final chunk's gauges = unserved demand at the horizon:
-            // cold-waiters plus requests queued but never admitted
-            stranded_requests = ev.waiting + ev.queued;
-            for s in &ev.samples {
-                density.record(s.instances, s.active_nodes.max(1), 1.0);
-                peak_nodes = peak_nodes.max(s.n_nodes);
-                peak_in_flight = peak_in_flight.max(s.in_flight);
-            }
-            peak_nodes = peak_nodes.max(ev.n_nodes);
-            logical_cold_starts += ev.logical_cold_starts as u64;
-            real_after_release += ev.real_after_release as u64;
-            migrations += ev.migrations as u64;
-            released += ev.released as u64;
-            evicted += (ev.evicted + ev.evicted_direct) as u64;
-            async_nanos += ev.async_nanos;
-            async_inferences += ev.async_inferences;
-            events_processed += ev.events_processed;
+            builder.absorb(&ev);
         }
 
-        let isolated_functions = cp.monitor().unpredictable();
-        // sufficient statistics first; every derived aggregate (ratios,
-        // means, percentiles) comes from recompute_derived — the same
-        // code path RunReport::merge re-derives with, so merging a
-        // single-partition report is the exact identity
+        let isolated = cp.monitor().unpredictable();
+        Ok(builder.finish(cp.scheduler_name(), &workload.name, duration, isolated))
+    }
+}
+
+/// Incremental fold of drained [`EngineEvents`] chunks into the
+/// sufficient statistics behind a [`RunReport`].
+///
+/// Extracted from [`Simulation::run_workload`] so every driver that
+/// drains a control plane in chunks — the batch simulation here, the
+/// streaming trace replay in [`crate::workload::replay`] — folds
+/// identically: `absorb` each drained chunk, then `finish` into the
+/// report.  Chunking is a memory bound, not a semantic one; the
+/// absorbed statistics depend only on the concatenation of the chunks'
+/// event streams.
+pub struct ReportBuilder {
+    cat: Catalog,
+    cost: CostModel,
+    costs: CostTracker,
+    qos: QosTracker,
+    density: DensityTracker,
+    reqs: RequestTracker,
+    peak_node_in_flight: u32,
+    peak_in_flight: u32,
+    stranded_requests: u64,
+    peak_nodes: usize,
+    logical_cold_starts: u64,
+    real_after_release: u64,
+    migrations: u64,
+    released: u64,
+    evicted: u64,
+    async_nanos: u64,
+    async_inferences: u64,
+    events_processed: u64,
+    arrivals_dropped: u64,
+}
+
+impl ReportBuilder {
+    pub fn new(cat: &Catalog, cfg: &RunConfig) -> Self {
+        Self {
+            cat: cat.clone(),
+            cost: cfg.cost,
+            costs: CostTracker::default(),
+            qos: QosTracker::new(cat.len()),
+            density: DensityTracker::default(),
+            reqs: RequestTracker::new(cat.len()),
+            peak_node_in_flight: 0,
+            peak_in_flight: 0,
+            stranded_requests: 0,
+            peak_nodes: cfg.n_nodes,
+            logical_cold_starts: 0,
+            real_after_release: 0,
+            migrations: 0,
+            released: 0,
+            evicted: 0,
+            async_nanos: 0,
+            async_inferences: 0,
+            events_processed: 0,
+            arrivals_dropped: 0,
+        }
+    }
+
+    /// Count arrivals dropped before injection (the synthesis safety
+    /// cap, or the replay horizon clip).
+    pub fn add_arrivals_dropped(&mut self, n: u64) {
+        self.arrivals_dropped += n;
+    }
+
+    /// Fold one drained chunk's events into the statistics.
+    pub fn absorb(&mut self, ev: &EngineEvents) {
+        for committed in &ev.scheduled {
+            self.costs.record_schedule(
+                committed,
+                self.cost.decision_ms(committed.plan.critical_inferences),
+            );
+        }
+        for latency in &ev.cold_start_latency_ms {
+            self.costs.record_cold_start(*latency);
+        }
+        for w in &ev.qos {
+            self.qos.record(&self.cat, w.function, w.requests, w.measured_ms);
+        }
+        for r in &ev.requests {
+            self.reqs.record(&self.cat, r.function, r.latency_ms);
+        }
+        self.reqs.cold_waits += ev.cold_waits;
+        self.peak_node_in_flight = self.peak_node_in_flight.max(ev.peak_node_in_flight);
+        self.peak_in_flight = self.peak_in_flight.max(ev.in_flight);
+        // the final chunk's gauges = unserved demand at the horizon:
+        // cold-waiters plus requests queued but never admitted
+        self.stranded_requests = ev.waiting + ev.queued;
+        for s in &ev.samples {
+            self.density.record(s.instances, s.active_nodes.max(1), 1.0);
+            self.peak_nodes = self.peak_nodes.max(s.n_nodes);
+            self.peak_in_flight = self.peak_in_flight.max(s.in_flight);
+        }
+        self.peak_nodes = self.peak_nodes.max(ev.n_nodes);
+        self.logical_cold_starts += ev.logical_cold_starts as u64;
+        self.real_after_release += ev.real_after_release as u64;
+        self.migrations += ev.migrations as u64;
+        self.released += ev.released as u64;
+        self.evicted += (ev.evicted + ev.evicted_direct) as u64;
+        self.async_nanos += ev.async_nanos;
+        self.async_inferences += ev.async_inferences;
+        self.events_processed += ev.events_processed;
+    }
+
+    /// Build the final report from the absorbed statistics.
+    ///
+    /// Sufficient statistics first; every derived aggregate (ratios,
+    /// means, percentiles) comes from `recompute_derived` — the same
+    /// code path `RunReport::merge` re-derives with, so merging a
+    /// single-partition report is the exact identity.
+    pub fn finish(
+        self,
+        scheduler: &str,
+        trace: &str,
+        duration_s: usize,
+        isolated_functions: Vec<usize>,
+    ) -> RunReport {
         let mut report = RunReport {
-            scheduler: cp.scheduler_name().to_string(),
-            trace: workload.name.clone(),
-            duration_s: duration,
-            events_processed,
+            scheduler: scheduler.to_string(),
+            trace: trace.to_string(),
+            duration_s,
+            events_processed: self.events_processed,
             density: 0.0,
             qos_violation_rate: 0.0,
             per_function_violation: Vec::new(),
@@ -410,41 +487,41 @@ impl Simulation {
             cold_start_ms_mean: 0.0,
             cold_start_ms_p99: 0.0,
             inferences_per_schedule: 0.0,
-            critical_inferences: costs.critical_inferences,
-            async_inferences,
-            schedule_calls: costs.calls,
-            instances_started: costs.instances_started,
-            fast_decisions: costs.fast_decisions,
-            slow_decisions: costs.slow_decisions,
-            logical_cold_starts,
-            real_after_release,
-            migrations,
-            released,
-            evicted,
-            peak_nodes,
-            async_nanos,
+            critical_inferences: self.costs.critical_inferences,
+            async_inferences: self.async_inferences,
+            schedule_calls: self.costs.calls,
+            instances_started: self.costs.instances_started,
+            fast_decisions: self.costs.fast_decisions,
+            slow_decisions: self.costs.slow_decisions,
+            logical_cold_starts: self.logical_cold_starts,
+            real_after_release: self.real_after_release,
+            migrations: self.migrations,
+            released: self.released,
+            evicted: self.evicted,
+            peak_nodes: self.peak_nodes,
+            async_nanos: self.async_nanos,
             isolated_functions,
-            requests_served: reqs.hist.count(),
+            requests_served: self.reqs.hist.count(),
             request_p50_ms: 0.0,
             request_p95_ms: 0.0,
             request_p99_ms: 0.0,
-            request_counts: reqs.requests,
-            request_qos_violations: reqs.violations,
-            cold_wait_requests: reqs.cold_waits,
-            stranded_requests,
-            arrivals_dropped,
-            peak_node_in_flight,
-            peak_in_flight,
-            latency_hist: reqs.hist,
-            qos_violating: qos.violating(),
-            qos_totals: qos.totals(),
-            instance_seconds: density.instance_seconds(),
-            node_seconds: density.node_seconds(),
-            scheduling_samples: costs.scheduling_ms,
-            cold_start_samples: costs.cold_start_ms,
+            request_counts: self.reqs.requests,
+            request_qos_violations: self.reqs.violations,
+            cold_wait_requests: self.reqs.cold_waits,
+            stranded_requests: self.stranded_requests,
+            arrivals_dropped: self.arrivals_dropped,
+            peak_node_in_flight: self.peak_node_in_flight,
+            peak_in_flight: self.peak_in_flight,
+            latency_hist: self.reqs.hist,
+            qos_violating: self.qos.violating(),
+            qos_totals: self.qos.totals(),
+            instance_seconds: self.density.instance_seconds(),
+            node_seconds: self.density.node_seconds(),
+            scheduling_samples: self.costs.scheduling_ms,
+            cold_start_samples: self.costs.cold_start_ms,
         };
         report.recompute_derived();
-        Ok(report)
+        report
     }
 }
 

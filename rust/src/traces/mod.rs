@@ -93,7 +93,16 @@ pub struct Workload {
 }
 
 impl Workload {
-    fn finish(name: String, n_functions: usize, mut events: Vec<LoadEvent>, duration_ms: f64) -> Self {
+    /// Stable time-sort of freshly emitted events into a workload —
+    /// shared by the generators here and the scenario fuzzer
+    /// ([`crate::workload::fuzz`]), so every producer satisfies the same
+    /// "sorted by `at_ms`, ties keep emission order" contract.
+    pub(crate) fn finish(
+        name: String,
+        n_functions: usize,
+        mut events: Vec<LoadEvent>,
+        duration_ms: f64,
+    ) -> Self {
         events.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
         Self { name, n_functions, events, duration_ms }
     }

@@ -78,6 +78,17 @@ impl Rng {
         -self.f64().max(1e-300).ln() / rate
     }
 
+    /// Pareto (type I) with scale `xm > 0` and shape `alpha > 0`, via
+    /// inverse-CDF sampling: heavy-tailed holding times and load
+    /// multipliers for the adversarial scenario fuzzer
+    /// (`workload::fuzz`).  Always returns a finite value ≥ `xm`.
+    pub fn pareto(&mut self, xm: f64, alpha: f64) -> f64 {
+        // 1 - f64() lies in (0, 1]; clamp away from 0 so the power stays
+        // finite even for tiny alpha
+        let u = (1.0 - self.f64()).max(1e-300);
+        xm * u.powf(-1.0 / alpha)
+    }
+
     /// Poisson (Knuth for small λ, normal approximation for large).
     pub fn poisson(&mut self, lambda: f64) -> u64 {
         if lambda <= 0.0 {
@@ -177,6 +188,22 @@ mod tests {
                 "lambda {lambda} mean {mean}"
             );
         }
+    }
+
+    #[test]
+    fn pareto_respects_scale_and_tail() {
+        let mut r = Rng::seed_from(17);
+        let n = 50_000;
+        let (xm, alpha) = (1.0, 2.0);
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = r.pareto(xm, alpha);
+            assert!(v.is_finite() && v >= xm, "pareto sample {v}");
+            sum += v;
+        }
+        // E[X] = alpha * xm / (alpha - 1) = 2.0 for these parameters
+        let mean = sum / n as f64;
+        assert!((mean - 2.0).abs() < 0.15, "mean {mean}");
     }
 
     #[test]

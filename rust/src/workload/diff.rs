@@ -1,0 +1,446 @@
+//! Differential QoS harness: one workload, all four schedulers, one
+//! machine-readable divergence report.
+//!
+//! [`run_matrix`] runs a workload under jiagu, gsight, owl and
+//! kubernetes (× the configured shard/queue setup), compares every
+//! baseline's [`RunReport`] against jiagu's, and emits:
+//!
+//! * **divergences** — metrics where a baseline measurably departs from
+//!   jiagu (p99 latency, QoS-violation counts, density, cold-start p99,
+//!   dropped arrivals), with lenient thresholds so the report flags
+//!   scheduler *behaviour*, not simulation noise;
+//! * **invariant violations** — properties no scheduler may break on
+//!   any workload: request accounting must balance, percentiles must be
+//!   monotone, latency samples must all be valid, and a workload whose
+//!   peak modeled demand fits comfortably inside modeled capacity must
+//!   not be majority-QoS-violated;
+//! * **rankings** — per-metric best-first scheduler orderings.
+//!
+//! `make fuzz-smoke` runs this matrix over the scenario fuzzer's
+//! families and fails CI on any invariant violation — and, with
+//! `--require-divergence`, when no adversarial scenario separates the
+//! baselines from jiagu at all (the regression expectation: the
+//! workload lab must keep producing scenarios that discriminate).
+
+use crate::catalog::Catalog;
+use crate::config::{RunConfig, SchedulerKind};
+use crate::controlplane::shard::ShardedControlPlane;
+use crate::runtime::Predictor;
+use crate::sim::{RunReport, Simulation};
+use crate::traces::Workload;
+use crate::util::json::{arr, num, obj, s, Json};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Matrix order: jiagu first (the comparison baseline), then the three
+/// paper baselines.
+pub const MATRIX_SCHEDULERS: [SchedulerKind; 4] = [
+    SchedulerKind::Jiagu,
+    SchedulerKind::Gsight,
+    SchedulerKind::Owl,
+    SchedulerKind::Kubernetes,
+];
+
+/// Absolute / relative thresholds for latency-metric divergence: small
+/// enough to catch real behaviour gaps, large enough to ignore one-bin
+/// histogram quantisation.
+const DIVERGE_ABS_MS: f64 = 4.0;
+const DIVERGE_REL: f64 = 0.05;
+
+/// One scheduler's full outcome.
+#[derive(Debug, Clone)]
+pub struct SchedulerOutcome {
+    pub scheduler: String,
+    pub report: RunReport,
+}
+
+/// A metric where a baseline measurably departs from jiagu.
+#[derive(Debug, Clone)]
+pub struct Divergence {
+    pub scheduler: String,
+    pub metric: &'static str,
+    pub jiagu: f64,
+    pub baseline: f64,
+}
+
+/// A property no scheduler may break, broken.
+#[derive(Debug, Clone)]
+pub struct InvariantViolation {
+    pub scheduler: String,
+    pub invariant: &'static str,
+    pub detail: String,
+}
+
+/// The differential matrix over one workload.
+#[derive(Debug, Clone)]
+pub struct MatrixReport {
+    pub scenario: String,
+    /// In [`MATRIX_SCHEDULERS`] order; `outcomes[0]` is jiagu.
+    pub outcomes: Vec<SchedulerOutcome>,
+    pub divergences: Vec<Divergence>,
+    pub violations: Vec<InvariantViolation>,
+    /// Per metric: schedulers best-first (ties keep matrix order).
+    pub rankings: Vec<(&'static str, Vec<String>)>,
+}
+
+fn scheduler_cfg(base: &RunConfig, kind: SchedulerKind) -> RunConfig {
+    let mut cfg = base.clone();
+    cfg.scheduler = kind;
+    if kind != SchedulerKind::Jiagu {
+        // dual-staged scaling and migration are Jiagu's mechanisms
+        cfg.autoscaler.dual_staged = false;
+        cfg.autoscaler.migration = false;
+    }
+    cfg
+}
+
+fn run_one(
+    cat: &Catalog,
+    cfg: &RunConfig,
+    predictor: &Arc<dyn Predictor>,
+    workload: &Workload,
+) -> Result<RunReport> {
+    if cfg.shards > 0 {
+        ShardedControlPlane::new(cat.clone(), cfg.clone(), predictor.clone())
+            .run_workload(workload)
+    } else {
+        Simulation::new(cat.clone(), cfg.clone(), predictor.clone()).run_workload(workload)
+    }
+}
+
+/// Peak instantaneous modeled demand of the workload, in expected
+/// instances (`ceil(rps / saturated_rps)` summed over functions).
+fn peak_expected_instances(cat: &Catalog, wl: &Workload) -> f64 {
+    let mut inst = vec![0.0f64; wl.n_functions];
+    let mut total = 0.0f64;
+    let mut peak = 0.0f64;
+    for e in &wl.events {
+        if e.function >= wl.n_functions || !e.rps.is_finite() {
+            continue;
+        }
+        let ni = (e.rps / cat.get(e.function).saturated_rps).ceil().max(0.0);
+        total += ni - inst[e.function];
+        inst[e.function] = ni;
+        peak = peak.max(total);
+    }
+    peak
+}
+
+fn total_qos_violations(report: &RunReport) -> u64 {
+    report.request_qos_violations.iter().sum()
+}
+
+fn check_invariants(
+    cat: &Catalog,
+    cfg: &RunConfig,
+    workload: &Workload,
+    outcome: &SchedulerOutcome,
+    out: &mut Vec<InvariantViolation>,
+) {
+    let r = &outcome.report;
+    let mut push = |invariant: &'static str, detail: String| {
+        out.push(InvariantViolation {
+            scheduler: outcome.scheduler.clone(),
+            invariant,
+            detail,
+        });
+    };
+    let counted: u64 = r.request_counts.iter().sum();
+    if counted != r.requests_served {
+        push(
+            "request-accounting",
+            format!("served {} != per-function sum {counted}", r.requests_served),
+        );
+    }
+    for (f, (v, c)) in r.request_qos_violations.iter().zip(&r.request_counts).enumerate() {
+        if v > c {
+            push("violations-bounded", format!("fn {f}: {v} violations > {c} requests"));
+        }
+    }
+    if !(r.request_p50_ms <= r.request_p95_ms && r.request_p95_ms <= r.request_p99_ms) {
+        push(
+            "percentiles-monotone",
+            format!("p50 {} p95 {} p99 {}", r.request_p50_ms, r.request_p95_ms, r.request_p99_ms),
+        );
+    }
+    if r.latency_hist.invalid() > 0 {
+        push(
+            "no-invalid-latency",
+            format!("{} degenerate latency samples recorded", r.latency_hist.invalid()),
+        );
+    }
+    // capacity invariant: when peak modeled demand fits inside half the
+    // modeled capacity, no scheduler may majority-violate QoS
+    let capacity =
+        (cfg.n_nodes as f64) * f64::from(cfg.capacity.max_instances_per_node);
+    let peak = peak_expected_instances(cat, workload);
+    if peak * 2.0 <= capacity && r.qos_violation_rate > 0.5 {
+        push(
+            "capacity-qos",
+            format!(
+                "peak demand {peak:.1} instances fits capacity {capacity:.0}, \
+                 yet violation rate is {:.3}",
+                r.qos_violation_rate
+            ),
+        );
+    }
+}
+
+fn latency_diverges(jiagu: f64, baseline: f64) -> bool {
+    let d = (baseline - jiagu).abs();
+    d >= DIVERGE_ABS_MS || (jiagu > 0.0 && d / jiagu > DIVERGE_REL && d >= 0.5)
+}
+
+fn find_divergences(outcomes: &[SchedulerOutcome], out: &mut Vec<Divergence>) {
+    let jiagu = &outcomes[0].report;
+    for o in &outcomes[1..] {
+        let b = &o.report;
+        let mut push = |metric: &'static str, j: f64, v: f64| {
+            out.push(Divergence {
+                scheduler: o.scheduler.clone(),
+                metric,
+                jiagu: j,
+                baseline: v,
+            });
+        };
+        if latency_diverges(jiagu.request_p99_ms, b.request_p99_ms) {
+            push("request_p99_ms", jiagu.request_p99_ms, b.request_p99_ms);
+        }
+        let (jv, bv) = (total_qos_violations(jiagu), total_qos_violations(b));
+        if jv != bv {
+            push("qos_violations", jv as f64, bv as f64);
+        }
+        if latency_diverges(jiagu.cold_start_ms_p99, b.cold_start_ms_p99) {
+            push("cold_start_ms_p99", jiagu.cold_start_ms_p99, b.cold_start_ms_p99);
+        }
+        let dd = (b.density - jiagu.density).abs();
+        if jiagu.density > 0.0 && dd / jiagu.density > DIVERGE_REL {
+            push("density", jiagu.density, b.density);
+        }
+        if jiagu.arrivals_dropped != b.arrivals_dropped {
+            push(
+                "arrivals_dropped",
+                jiagu.arrivals_dropped as f64,
+                b.arrivals_dropped as f64,
+            );
+        }
+    }
+}
+
+fn rank(
+    outcomes: &[SchedulerOutcome],
+    key: impl Fn(&RunReport) -> f64,
+    ascending: bool,
+) -> Vec<String> {
+    let mut order: Vec<&SchedulerOutcome> = outcomes.iter().collect();
+    order.sort_by(|a, b| {
+        let (ka, kb) = (key(&a.report), key(&b.report));
+        if ascending { ka.total_cmp(&kb) } else { kb.total_cmp(&ka) }
+    });
+    order.into_iter().map(|o| o.scheduler.clone()).collect()
+}
+
+/// Run `workload` across all four schedulers under `base_cfg`'s cluster
+/// setup (shards/queue included) and build the differential report.
+/// With `check_determinism` every scheduler runs twice and a mismatch
+/// is an invariant violation — the whole matrix then costs 8 runs.
+pub fn run_matrix(
+    cat: &Catalog,
+    base_cfg: &RunConfig,
+    predictor: &Arc<dyn Predictor>,
+    workload: &Workload,
+    check_determinism: bool,
+) -> Result<MatrixReport> {
+    let mut outcomes = Vec::with_capacity(MATRIX_SCHEDULERS.len());
+    let mut violations = Vec::new();
+    for kind in MATRIX_SCHEDULERS {
+        let cfg = scheduler_cfg(base_cfg, kind);
+        let report = run_one(cat, &cfg, predictor, workload)?;
+        if check_determinism {
+            let replayed = run_one(cat, &cfg, predictor, workload)?;
+            if replayed != report {
+                violations.push(InvariantViolation {
+                    scheduler: kind.name().to_string(),
+                    invariant: "determinism",
+                    detail: "second run of the same seed produced different bytes".into(),
+                });
+            }
+        }
+        let outcome = SchedulerOutcome { scheduler: kind.name().to_string(), report };
+        check_invariants(cat, &cfg, workload, &outcome, &mut violations);
+        outcomes.push(outcome);
+    }
+    let mut divergences = Vec::new();
+    find_divergences(&outcomes, &mut divergences);
+    let rankings = vec![
+        ("request_p99_ms", rank(&outcomes, |r| r.request_p99_ms, true)),
+        ("qos_violations", rank(&outcomes, |r| total_qos_violations(r) as f64, true)),
+        ("density", rank(&outcomes, |r| r.density, false)),
+        ("cold_start_ms_p99", rank(&outcomes, |r| r.cold_start_ms_p99, true)),
+    ];
+    Ok(MatrixReport {
+        scenario: workload.name.clone(),
+        outcomes,
+        divergences,
+        violations,
+        rankings,
+    })
+}
+
+/// Deterministic JSON surface of one matrix (sorted keys; the CLI and
+/// `make fuzz-smoke` emit this verbatim).
+pub fn matrix_json(m: &MatrixReport) -> Json {
+    obj(vec![
+        ("scenario", s(&m.scenario)),
+        (
+            "schedulers",
+            arr(m.outcomes.iter().map(|o| {
+                obj(vec![
+                    ("scheduler", s(&o.scheduler)),
+                    ("request_p99_ms", num(o.report.request_p99_ms)),
+                    ("qos_violation_rate", num(o.report.qos_violation_rate)),
+                    ("qos_violations", num(total_qos_violations(&o.report) as f64)),
+                    ("density", num(o.report.density)),
+                    ("cold_start_ms_p99", num(o.report.cold_start_ms_p99)),
+                    ("requests_served", num(o.report.requests_served as f64)),
+                    ("arrivals_dropped", num(o.report.arrivals_dropped as f64)),
+                ])
+            })),
+        ),
+        (
+            "divergences",
+            arr(m.divergences.iter().map(|d| {
+                obj(vec![
+                    ("scheduler", s(&d.scheduler)),
+                    ("metric", s(d.metric)),
+                    ("jiagu", num(d.jiagu)),
+                    ("baseline", num(d.baseline)),
+                ])
+            })),
+        ),
+        (
+            "invariant_violations",
+            arr(m.violations.iter().map(|v| {
+                obj(vec![
+                    ("scheduler", s(&v.scheduler)),
+                    ("invariant", s(v.invariant)),
+                    ("detail", s(&v.detail)),
+                ])
+            })),
+        ),
+        (
+            "rankings",
+            arr(m.rankings.iter().map(|(metric, order)| {
+                obj(vec![
+                    ("metric", s(metric)),
+                    ("best_first", arr(order.iter().map(|n| s(n)))),
+                ])
+            })),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::tests::test_catalog;
+    use crate::runtime::{ForestParams, NativeForestPredictor};
+    use crate::workload::fuzz::{ScenarioFamily, ScenarioFuzzer};
+
+    fn stub_predictor() -> Arc<dyn Predictor> {
+        Arc::new(NativeForestPredictor::new(ForestParams::synthetic_stub(
+            crate::model::N_FEATURES,
+            0.05,
+            0.05,
+        )))
+    }
+
+    fn base_cfg() -> RunConfig {
+        let mut cfg = RunConfig::jiagu_45();
+        cfg.n_nodes = 6;
+        cfg.duration_s = 5;
+        cfg.requests = true;
+        cfg.eval_interval_ms = 250.0;
+        cfg
+    }
+
+    #[test]
+    fn matrix_runs_all_four_schedulers_in_pinned_order() {
+        let cat = test_catalog();
+        let wl =
+            ScenarioFuzzer::new(7, 5).workload(&cat, ScenarioFamily::CorrelatedBurst);
+        let m =
+            run_matrix(&cat, &base_cfg(), &stub_predictor(), &wl, true).unwrap();
+        assert_eq!(m.scenario, wl.name);
+        let names: Vec<&str> =
+            m.outcomes.iter().map(|o| o.scheduler.as_str()).collect();
+        assert_eq!(names, vec!["jiagu", "gsight", "owl", "kubernetes"]);
+        assert!(
+            m.outcomes.iter().all(|o| o.report.requests_served > 0),
+            "every scheduler must route traffic"
+        );
+        assert!(
+            m.violations.is_empty(),
+            "no invariant may break on a stock scenario: {:?}",
+            m.violations
+        );
+        for (metric, order) in &m.rankings {
+            assert_eq!(order.len(), 4, "{metric}: all schedulers ranked");
+        }
+    }
+
+    #[test]
+    fn matrix_json_is_deterministic_and_carries_all_sections() {
+        let cat = test_catalog();
+        let wl = ScenarioFuzzer::new(13, 5).workload(&cat, ScenarioFamily::SquareWave);
+        let cfg = base_cfg();
+        let p = stub_predictor();
+        let a = matrix_json(&run_matrix(&cat, &cfg, &p, &wl, false).unwrap());
+        let b = matrix_json(&run_matrix(&cat, &cfg, &p, &wl, false).unwrap());
+        assert_eq!(a.to_string(), b.to_string(), "matrix JSON must be byte-stable");
+        for key in ["scenario", "schedulers", "divergences", "invariant_violations", "rankings"]
+        {
+            assert!(a.opt(key).is_some(), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn capacity_invariant_flags_violations_inside_capacity() {
+        // a report majority-violating QoS on a tiny workload must trip
+        // the capacity invariant check
+        let cat = test_catalog();
+        let wl = Workload {
+            name: "tiny".into(),
+            n_functions: cat.len(),
+            events: vec![crate::traces::LoadEvent {
+                at_ms: 0.0,
+                function: 0,
+                rps: 0.5 * cat.get(0).saturated_rps,
+            }],
+            duration_ms: 2000.0,
+        };
+        let cfg = base_cfg();
+        let p = stub_predictor();
+        let report =
+            Simulation::new(cat.clone(), scheduler_cfg(&cfg, SchedulerKind::Jiagu), p)
+                .run_workload(&wl)
+                .unwrap();
+        let mut bad = SchedulerOutcome { scheduler: "jiagu".into(), report };
+        bad.report.qos_violation_rate = 0.9; // forge a broken scheduler
+        let mut out = Vec::new();
+        check_invariants(&cat, &cfg, &wl, &bad, &mut out);
+        assert!(
+            out.iter().any(|v| v.invariant == "capacity-qos"),
+            "forged 90% violation rate inside capacity must be flagged: {out:?}"
+        );
+    }
+
+    #[test]
+    fn latency_divergence_thresholds() {
+        assert!(!latency_diverges(100.0, 102.0)); // 2 ms, 2% — noise
+        assert!(latency_diverges(100.0, 106.0)); // 6 ms
+        assert!(latency_diverges(10.0, 11.0)); // 10% relative
+        assert!(!latency_diverges(1.0, 1.2)); // big rel, sub-noise abs
+        assert!(latency_diverges(0.0, 4.0)); // absolute floor
+    }
+}

@@ -1,0 +1,352 @@
+//! Seeded adversarial scenario fuzzer: workloads the stock generators
+//! cannot express, each an ordinary [`Workload`] so every existing
+//! determinism / shard / queue contract applies unchanged.
+//!
+//! From a single seed the [`ScenarioFuzzer`] derives one independent
+//! RNG stream per [`ScenarioFamily`] (seed XOR family salt), so the
+//! families are mutually independent but individually reproducible:
+//! same `(seed, duration, catalog, family)` ⇒ byte-identical event
+//! stream — the `workload_props` suite pins exactly that, through to
+//! byte-identical `RunReport`s at shards 1/2/4 × queue heap/wheel.
+//!
+//! Substitution note: a [`Workload`] carries *offered load* (RPS
+//! levels), not per-request service times, so the paper's heavy-tailed
+//! service-time adversary enters through Pareto-distributed load levels
+//! and holding times ([`ScenarioFamily::HeavyTail`]) — the scheduler
+//! faces the same tail-driven capacity churn either way.
+
+use crate::catalog::Catalog;
+use crate::traces::{LoadEvent, Workload};
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Golden-ratio mixer separating per-family RNG streams.
+const FAMILY_SALT: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// The adversarial scenario families the fuzzer can generate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioFamily {
+    /// Cross-function correlated bursts: a majority subset of functions
+    /// spikes *simultaneously* for 300–1500 ms — the anti-case for
+    /// per-function capacity tables, since colocated interference jumps
+    /// everywhere at once.
+    CorrelatedBurst,
+    /// Heavy-tailed (Pareto) load process: levels and holding times both
+    /// Pareto-distributed, so rare enormous levels dominate the mass.
+    HeavyTail,
+    /// Flash crowd: near-idle baseline, then one function ramps to
+    /// 20–40× its saturation within a few hundred ms and holds.
+    FlashCrowd,
+    /// Cold-start stampede: every function idles long enough to be
+    /// released, then all jump to load at the same instant, repeatedly.
+    ColdStampede,
+    /// On/off square waves at 100–500 ms periods — faster than the 1 s
+    /// autoscaler cadence, the *Tiny Autoscalers* trap.
+    SquareWave,
+}
+
+impl ScenarioFamily {
+    pub const ALL: [ScenarioFamily; 5] = [
+        ScenarioFamily::CorrelatedBurst,
+        ScenarioFamily::HeavyTail,
+        ScenarioFamily::FlashCrowd,
+        ScenarioFamily::ColdStampede,
+        ScenarioFamily::SquareWave,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::CorrelatedBurst => "correlated-burst",
+            Self::HeavyTail => "heavy-tail",
+            Self::FlashCrowd => "flash-crowd",
+            Self::ColdStampede => "cold-stampede",
+            Self::SquareWave => "square-wave",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        for family in Self::ALL {
+            if s.eq_ignore_ascii_case(family.name()) {
+                return Ok(family);
+            }
+        }
+        bail!(
+            "unknown scenario family {s:?} (correlated-burst|heavy-tail|flash-crowd|\
+             cold-stampede|square-wave)"
+        )
+    }
+
+    fn index(&self) -> u64 {
+        Self::ALL.iter().position(|f| f == self).unwrap() as u64
+    }
+}
+
+/// The seeded fuzzer: one seed, one horizon, five families.
+#[derive(Debug, Clone, Copy)]
+pub struct ScenarioFuzzer {
+    pub seed: u64,
+    pub duration_s: usize,
+}
+
+impl ScenarioFuzzer {
+    pub fn new(seed: u64, duration_s: usize) -> Self {
+        Self { seed, duration_s }
+    }
+
+    fn family_rng(&self, family: ScenarioFamily) -> Rng {
+        Rng::seed_from(self.seed ^ (family.index() + 1).wrapping_mul(FAMILY_SALT))
+    }
+
+    /// Generate one family's workload.  Deterministic: same
+    /// `(seed, duration, catalog, family)` ⇒ identical event stream.
+    pub fn workload(&self, cat: &Catalog, family: ScenarioFamily) -> Workload {
+        let mut rng = self.family_rng(family);
+        let duration_ms = self.duration_s as f64 * 1000.0;
+        let events = match family {
+            ScenarioFamily::CorrelatedBurst => correlated_burst(cat, &mut rng, duration_ms),
+            ScenarioFamily::HeavyTail => heavy_tail(cat, &mut rng, duration_ms),
+            ScenarioFamily::FlashCrowd => flash_crowd(cat, &mut rng, duration_ms),
+            ScenarioFamily::ColdStampede => cold_stampede(cat, &mut rng, duration_ms),
+            ScenarioFamily::SquareWave => square_wave(cat, &mut rng, duration_ms),
+        };
+        Workload::finish(
+            format!("fuzz-{}-{}", family.name(), self.seed),
+            cat.len(),
+            events,
+            duration_ms,
+        )
+    }
+
+    /// All five families' workloads, in [`ScenarioFamily::ALL`] order.
+    pub fn all(&self, cat: &Catalog) -> Vec<Workload> {
+        ScenarioFamily::ALL.iter().map(|f| self.workload(cat, *f)).collect()
+    }
+}
+
+fn correlated_burst(cat: &Catalog, rng: &mut Rng, duration_ms: f64) -> Vec<LoadEvent> {
+    let n = cat.len();
+    let mut events = Vec::new();
+    // steady per-function baselines
+    let base: Vec<f64> = (0..n)
+        .map(|f| rng.range_f64(1.0, 2.0) * cat.get(f).saturated_rps)
+        .collect();
+    for (f, b) in base.iter().enumerate() {
+        events.push(LoadEvent { at_ms: 0.0, function: f, rps: *b });
+    }
+    // bursts hit a majority subset of functions at the same instant
+    let mut t_ms = rng.exp(0.4) * 1000.0;
+    while t_ms < duration_ms {
+        let gain = rng.range_f64(3.0, 8.0);
+        let len_ms = rng.range_f64(300.0, 1500.0);
+        let k = n / 2 + 1 + rng.below((n - n / 2) as u64) as usize;
+        let victims = rng.choose_k(n, k.min(n));
+        let end = (t_ms + len_ms).min(duration_ms);
+        for f in victims {
+            events.push(LoadEvent { at_ms: t_ms, function: f, rps: base[f] * gain });
+            events.push(LoadEvent { at_ms: end, function: f, rps: base[f] });
+        }
+        t_ms = end + rng.exp(0.4) * 1000.0;
+    }
+    events
+}
+
+fn heavy_tail(cat: &Catalog, rng: &mut Rng, duration_ms: f64) -> Vec<LoadEvent> {
+    let mut events = Vec::new();
+    for f in 0..cat.len() {
+        let sat = cat.get(f).saturated_rps;
+        let mut t_ms = 0.0;
+        while t_ms < duration_ms {
+            // Pareto level (α = 1.2: infinite variance) over a Pareto
+            // holding time (α = 1.5), both capped to keep runs bounded
+            let level = rng.pareto(0.4, 1.2).min(40.0) * sat;
+            let hold_ms = rng.pareto(120.0, 1.5).min(15_000.0);
+            events.push(LoadEvent { at_ms: t_ms, function: f, rps: level });
+            t_ms += hold_ms;
+        }
+    }
+    events
+}
+
+fn flash_crowd(cat: &Catalog, rng: &mut Rng, duration_ms: f64) -> Vec<LoadEvent> {
+    let n = cat.len();
+    let mut events = Vec::new();
+    for f in 0..n {
+        events.push(LoadEvent {
+            at_ms: 0.0,
+            function: f,
+            rps: 0.05 * cat.get(f).saturated_rps,
+        });
+    }
+    let crowds = 1 + rng.below(3) as usize;
+    for _ in 0..crowds {
+        let f = rng.below(n as u64) as usize;
+        let sat = cat.get(f).saturated_rps;
+        let start = rng.range_f64(0.1, 0.7) * duration_ms;
+        let peak = rng.range_f64(20.0, 40.0) * sat;
+        let hold_ms = rng.range_f64(2000.0, 5000.0);
+        // ramp up in 3 steps of 100 ms, hold, then decay in 3 steps;
+        // steps past the horizon are dropped (the crowd persists to the
+        // end — the engine never pops events beyond the horizon anyway)
+        for (i, frac) in [0.2, 0.55, 1.0].iter().enumerate() {
+            let at_ms = start + i as f64 * 100.0;
+            if at_ms < duration_ms {
+                events.push(LoadEvent { at_ms, function: f, rps: peak * frac });
+            }
+        }
+        let down = start + 300.0 + hold_ms;
+        for (i, frac) in [0.4, 0.1, 0.0].iter().enumerate() {
+            let at_ms = down + i as f64 * 200.0;
+            if at_ms < duration_ms {
+                events.push(LoadEvent {
+                    at_ms,
+                    function: f,
+                    rps: (peak * frac).max(0.05 * sat),
+                });
+            }
+        }
+    }
+    events
+}
+
+fn cold_stampede(cat: &Catalog, rng: &mut Rng, duration_ms: f64) -> Vec<LoadEvent> {
+    let n = cat.len();
+    let mut events = Vec::new();
+    // idle gap long enough for keep-alive release, then everyone at once
+    let idle_ms = rng.range_f64(2500.0, 5000.0);
+    let on_ms = rng.range_f64(800.0, 1800.0);
+    let mut t_ms = 0.0;
+    while t_ms < duration_ms {
+        let gains: Vec<f64> = (0..n).map(|_| rng.range_f64(2.0, 4.0)).collect();
+        for (f, gain) in gains.iter().enumerate() {
+            events.push(LoadEvent {
+                at_ms: t_ms,
+                function: f,
+                rps: gain * cat.get(f).saturated_rps,
+            });
+        }
+        let off = (t_ms + on_ms).min(duration_ms);
+        for f in 0..n {
+            events.push(LoadEvent { at_ms: off, function: f, rps: 0.0 });
+        }
+        t_ms = off + idle_ms;
+    }
+    events
+}
+
+fn square_wave(cat: &Catalog, rng: &mut Rng, duration_ms: f64) -> Vec<LoadEvent> {
+    let mut events = Vec::new();
+    for f in 0..cat.len() {
+        let sat = cat.get(f).saturated_rps;
+        let period_ms = rng.range_f64(100.0, 500.0);
+        let amplitude = rng.range_f64(1.0, 4.0) * sat;
+        let phase_ms = rng.f64() * period_ms;
+        let mut t_ms = phase_ms - period_ms; // first toggle inside [0, period)
+        let mut on = false;
+        events.push(LoadEvent { at_ms: 0.0, function: f, rps: 0.0 });
+        while t_ms < duration_ms {
+            if t_ms >= 0.0 {
+                events.push(LoadEvent {
+                    at_ms: t_ms,
+                    function: f,
+                    rps: if on { amplitude } else { 0.0 },
+                });
+            }
+            on = !on;
+            t_ms += period_ms / 2.0;
+        }
+    }
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::tests::test_catalog;
+
+    #[test]
+    fn families_parse_roundtrip() {
+        for family in ScenarioFamily::ALL {
+            assert_eq!(ScenarioFamily::parse(family.name()).unwrap(), family);
+        }
+        assert!(ScenarioFamily::parse("poisson").is_err());
+    }
+
+    #[test]
+    fn every_family_emits_a_wellformed_deterministic_workload() {
+        let cat = test_catalog();
+        let fuzzer = ScenarioFuzzer::new(123, 10);
+        for family in ScenarioFamily::ALL {
+            let a = fuzzer.workload(&cat, family);
+            let b = fuzzer.workload(&cat, family);
+            assert_eq!(a.events, b.events, "{}: same seed, same stream", family.name());
+            assert_eq!(a.name, format!("fuzz-{}-123", family.name()));
+            assert_eq!(a.n_functions, cat.len());
+            assert!(!a.events.is_empty(), "{}: must emit load", family.name());
+            for w in a.events.windows(2) {
+                assert!(w[0].at_ms <= w[1].at_ms, "{}: sorted", family.name());
+            }
+            for e in &a.events {
+                assert!(e.rps.is_finite() && e.rps >= 0.0, "{}: finite levels", family.name());
+                assert!(e.at_ms >= 0.0 && e.at_ms <= a.duration_ms);
+                assert!(e.function < cat.len());
+            }
+            let c = ScenarioFuzzer::new(124, 10).workload(&cat, family);
+            assert_ne!(a.events, c.events, "{}: seed must move the stream", family.name());
+        }
+    }
+
+    #[test]
+    fn families_are_mutually_independent_streams() {
+        let cat = test_catalog();
+        let fuzzer = ScenarioFuzzer::new(9, 8);
+        let all = fuzzer.all(&cat);
+        assert_eq!(all.len(), ScenarioFamily::ALL.len());
+        for pair in all.windows(2) {
+            assert_ne!(pair[0].events, pair[1].events);
+        }
+    }
+
+    #[test]
+    fn square_wave_periods_stay_subsecond() {
+        let cat = test_catalog();
+        let wl = ScenarioFuzzer::new(5, 6).workload(&cat, ScenarioFamily::SquareWave);
+        // per function, consecutive toggles are half a period apart:
+        // 50–250 ms, always under the 1 s autoscaler cadence
+        for f in 0..cat.len() {
+            let times: Vec<f64> = wl
+                .events
+                .iter()
+                .filter(|e| e.function == f && e.at_ms > 0.0)
+                .map(|e| e.at_ms)
+                .collect();
+            assert!(times.len() > 20, "fn {f}: dense toggling expected");
+            for w in times.windows(2) {
+                let gap = w[1] - w[0];
+                assert!(gap <= 250.0 + 1e-9, "fn {f}: toggle gap {gap} ms");
+            }
+        }
+    }
+
+    #[test]
+    fn cold_stampede_synchronises_functions() {
+        let cat = test_catalog();
+        let wl = ScenarioFuzzer::new(31, 12).workload(&cat, ScenarioFamily::ColdStampede);
+        // at every stampede instant, all functions step together
+        let mut onsets: Vec<f64> = wl
+            .events
+            .iter()
+            .filter(|e| e.rps > 0.0)
+            .map(|e| e.at_ms)
+            .collect();
+        onsets.sort_by(f64::total_cmp);
+        onsets.dedup();
+        for t in onsets {
+            let count = wl
+                .events
+                .iter()
+                .filter(|e| e.at_ms == t && e.rps > 0.0)
+                .count();
+            assert_eq!(count, cat.len(), "stampede at {t} ms must hit every function");
+        }
+    }
+}

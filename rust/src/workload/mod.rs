@@ -1,0 +1,35 @@
+//! Workload lab: the scenario-diversity surface the evaluation runs on.
+//!
+//! Jiagu's headline numbers come from replaying real production traces;
+//! the generators in [`crate::traces`] only synthesize Poisson, spike
+//! and diurnal shapes.  This subsystem closes that gap with three
+//! layers, all built on the deterministic event core:
+//!
+//! * [`replay`] — **streaming real-trace replay**: a bounded-memory
+//!   reader for Azure-Functions-style per-invocation logs
+//!   (newline-delimited JSON or CSV: `function_id, arrival_ms,
+//!   duration_ms`) that drives a control plane chunk by chunk via
+//!   `Timeline::extend`, never materializing the full trace, with
+//!   function-id interning against the catalog, horizon clipping and an
+//!   RPS-rescaling knob so one trace file exercises many densities.
+//! * [`fuzz`] — **seeded scenario fuzzer**: a [`fuzz::ScenarioFuzzer`]
+//!   that, from a single seed, produces adversarial workloads the stock
+//!   generators cannot express — correlated cross-function bursts,
+//!   heavy-tailed (Pareto) load processes, flash crowds, cold-start
+//!   stampedes, 100–500 ms on/off square waves — each an ordinary
+//!   [`crate::traces::Workload`], so every existing determinism /
+//!   shard / queue contract applies unchanged.
+//! * [`diff`] — **differential QoS harness**: [`diff::run_matrix`] runs
+//!   one workload across all four schedulers, compares the
+//!   [`crate::sim::RunReport`]s (p99, per-function violations, density,
+//!   cold-start latency, dropped arrivals) and emits a machine-readable
+//!   divergence report with per-scheduler rankings and invariant
+//!   checks.  `make fuzz-smoke` pins the harness in CI.
+//!
+//! Every layer inherits the engine's replay guarantee: same inputs and
+//! seed ⇒ byte-identical reports, at any shard count and for either
+//! timeline implementation.
+
+pub mod diff;
+pub mod fuzz;
+pub mod replay;

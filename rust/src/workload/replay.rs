@@ -1,0 +1,738 @@
+//! Streaming real-trace replay: drive a control plane from an
+//! Azure-Functions-style per-invocation log in bounded memory.
+//!
+//! ## Trace format
+//!
+//! Newline-delimited records, one invocation per line, auto-detected per
+//! line as either CSV or JSON:
+//!
+//! ```text
+//! function_id,arrival_ms,duration_ms
+//! rnn,12.500,118.000
+//! {"function_id": "gzip", "arrival_ms": 14.25, "duration_ms": 31.0}
+//! ```
+//!
+//! `function_id` interns against the catalog by name, or parses as a
+//! numeric catalog index; `arrival_ms` must be finite, non-negative and
+//! non-decreasing (production invocation logs are time-sorted);
+//! `duration_ms` is parsed and validated for format fidelity — the
+//! simulator's interference model supplies service times, so the column
+//! does not steer the run.  Blank lines, `#` comments and a CSV header
+//! line are skipped.
+//!
+//! ## Streaming contract
+//!
+//! [`replay_path`] never materializes the trace: the reader yields one
+//! [`Invocation`] at a time and the driver injects work chunk by chunk
+//! (each injection is one batched `Timeline::extend`), draining the
+//! engine between chunks and folding the emitted events through the
+//! same [`ReportBuilder`] the batch simulator uses.  Memory is bounded
+//! by one chunk's arrivals, never by trace length.  Arrivals at or past
+//! the horizon (`cfg.duration_s`) are clipped and counted into
+//! `RunReport::arrivals_dropped` — a clipped replay is never mistaken
+//! for a fully-served one.
+//!
+//! The [`ReplayOptions::rescale`] knob multiplies every function's
+//! offered load so one trace file drives many densities: each
+//! invocation is emitted `floor(r)` times plus one more with
+//! probability `frac(r)`, decided by a per-invocation RNG seeded from
+//! `(seed, function, per-function ordinal)` — invariant under chunking
+//! and under the sharded path's per-cell re-read, so the replay is
+//! byte-identical at any shard count.
+
+use crate::catalog::Catalog;
+use crate::config::RunConfig;
+use crate::controlplane::shard::ShardedControlPlane;
+use crate::controlplane::ControlPlane;
+use crate::runtime::Predictor;
+use crate::sim::{ReportBuilder, RunReport};
+use crate::traces::{Arrival, LoadEvent, Workload};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+/// One trace record: `function` invoked at `at_ms`, observed to run for
+/// `duration_ms` (carried for format fidelity; see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Invocation {
+    pub function: usize,
+    pub at_ms: f64,
+    pub duration_ms: f64,
+}
+
+/// Streaming trace reader: yields [`Invocation`]s one line at a time,
+/// interning function names against the catalog and validating as it
+/// goes.  Errors carry the 1-based line number.
+pub struct TraceReader<R> {
+    reader: R,
+    buf: String,
+    line_no: u64,
+    by_name: HashMap<String, usize>,
+    n_functions: usize,
+    last_at_ms: f64,
+}
+
+impl TraceReader<BufReader<File>> {
+    pub fn from_path(path: &Path, cat: &Catalog) -> Result<Self> {
+        let file = File::open(path)
+            .with_context(|| format!("opening trace {}", path.display()))?;
+        Ok(Self::new(BufReader::new(file), cat))
+    }
+}
+
+impl<R: BufRead> TraceReader<R> {
+    pub fn new(reader: R, cat: &Catalog) -> Self {
+        Self {
+            reader,
+            buf: String::new(),
+            line_no: 0,
+            by_name: cat
+                .functions
+                .iter()
+                .enumerate()
+                .map(|(i, f)| (f.name.clone(), i))
+                .collect(),
+            n_functions: cat.len(),
+            last_at_ms: f64::NEG_INFINITY,
+        }
+    }
+}
+
+fn parse_trace_line(
+    by_name: &HashMap<String, usize>,
+    n_functions: usize,
+    line: &str,
+) -> Result<Invocation> {
+    let intern = |token: &str| -> Result<usize> {
+        if let Some(id) = by_name.get(token) {
+            return Ok(*id);
+        }
+        if let Ok(id) = token.parse::<usize>() {
+            ensure!(
+                id < n_functions,
+                "function index {id} out of range (catalog has {n_functions})"
+            );
+            return Ok(id);
+        }
+        bail!("unknown function {token:?} (not a catalog name, not an index)")
+    };
+    let (function, at_ms, duration_ms) = if line.starts_with('{') {
+        let j = Json::parse(line)?;
+        let fid = j.get("function_id")?;
+        let function = match fid.as_str() {
+            Ok(name) => intern(name)?,
+            Err(_) => {
+                let id = fid.as_usize()?;
+                ensure!(
+                    id < n_functions,
+                    "function index {id} out of range (catalog has {n_functions})"
+                );
+                id
+            }
+        };
+        (function, j.get("arrival_ms")?.as_f64()?, j.get("duration_ms")?.as_f64()?)
+    } else {
+        let mut parts = line.split(',').map(str::trim);
+        let (Some(f), Some(a), Some(d)) = (parts.next(), parts.next(), parts.next()) else {
+            bail!("expected `function_id,arrival_ms,duration_ms`, got {line:?}");
+        };
+        let at_ms: f64 = a.parse().map_err(|_| anyhow!("bad arrival_ms {a:?}"))?;
+        let duration_ms: f64 = d.parse().map_err(|_| anyhow!("bad duration_ms {d:?}"))?;
+        (intern(f)?, at_ms, duration_ms)
+    };
+    ensure!(
+        at_ms.is_finite() && at_ms >= 0.0,
+        "arrival_ms {at_ms} must be finite and non-negative"
+    );
+    ensure!(
+        duration_ms.is_finite() && duration_ms >= 0.0,
+        "duration_ms {duration_ms} must be finite and non-negative"
+    );
+    Ok(Invocation { function, at_ms, duration_ms })
+}
+
+impl<R: BufRead> Iterator for TraceReader<R> {
+    type Item = Result<Invocation>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        loop {
+            self.buf.clear();
+            match self.reader.read_line(&mut self.buf) {
+                Ok(0) => return None,
+                Ok(_) => {}
+                Err(e) => return Some(Err(anyhow!("trace line {}: {e}", self.line_no + 1))),
+            }
+            self.line_no += 1;
+            {
+                let line = self.buf.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                // CSV header (any position, so concatenated traces work)
+                if !line.starts_with('{')
+                    && line.split(',').next().map(str::trim) == Some("function_id")
+                {
+                    continue;
+                }
+            }
+            let parsed = parse_trace_line(&self.by_name, self.n_functions, self.buf.trim());
+            return Some(match parsed {
+                Ok(inv) if inv.at_ms < self.last_at_ms => Err(anyhow!(
+                    "trace line {}: arrival_ms {} regresses below {} (trace must be time-sorted)",
+                    self.line_no,
+                    inv.at_ms,
+                    self.last_at_ms
+                )),
+                Ok(inv) => {
+                    self.last_at_ms = inv.at_ms;
+                    Ok(inv)
+                }
+                Err(e) => Err(anyhow!("trace line {}: {e}", self.line_no)),
+            });
+        }
+    }
+}
+
+/// Knobs of one replay.  All defaults reproduce the trace as recorded.
+#[derive(Debug, Clone)]
+pub struct ReplayOptions {
+    /// Offered-load multiplier: `floor(r)` copies of every invocation
+    /// plus one more with probability `frac(r)` (see the module docs).
+    /// `1.0` replays the trace verbatim.
+    pub rescale: f64,
+    /// Width of the bins the replay derives offered-load levels at (ms):
+    /// per bin and function, the arrival count becomes the RPS level the
+    /// autoscaler sees.
+    pub bin_ms: f64,
+    /// Streaming chunk length (virtual ms) — a memory bound, fixed so
+    /// the replay contract stays "same options ⇒ byte-identical report".
+    pub chunk_ms: f64,
+    /// Seed of the per-invocation rescaling decisions.
+    pub seed: u64,
+}
+
+impl Default for ReplayOptions {
+    fn default() -> Self {
+        Self { rescale: 1.0, bin_ms: 100.0, chunk_ms: 10_000.0, seed: 1 }
+    }
+}
+
+/// Side counters of one replay (merged additively across cells).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplayStats {
+    /// Trace records read (after cell filtering, before rescaling).
+    pub invocations: u64,
+    /// Arrivals injected after rescaling, inside the horizon.
+    pub emitted: u64,
+    /// Rescaled arrivals clipped at the horizon (also surfaced as
+    /// `RunReport::arrivals_dropped`).
+    pub clipped: u64,
+}
+
+impl ReplayStats {
+    fn merge(&mut self, other: &ReplayStats) {
+        self.invocations += other.invocations;
+        self.emitted += other.emitted;
+        self.clipped += other.clipped;
+    }
+}
+
+/// Copies of one invocation under `rescale`, decided by a per-invocation
+/// RNG over `(seed, function, per-function ordinal)` — so the decision
+/// is invariant under chunk boundaries and per-cell re-reads.
+fn rescale_copies(opts: &ReplayOptions, function: usize, ordinal: u64) -> u64 {
+    let whole = opts.rescale.max(0.0).floor();
+    let frac = opts.rescale.max(0.0) - whole;
+    let extra = if frac > 0.0 {
+        let mut rng = Rng::seed_from(
+            opts.seed
+                ^ (function as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                ^ ordinal.wrapping_mul(0xbf58_476d_1ce4_e5b9),
+        );
+        u64::from(rng.f64() < frac)
+    } else {
+        0
+    };
+    whole as u64 + extra
+}
+
+/// Stream `invocations` through one plain control plane configured by
+/// `cfg`, keeping only functions `keep` accepts (the sharded path's
+/// cell filter; pass `|_| true` for the whole trace).
+fn replay_stream(
+    cat: &Catalog,
+    cfg: &RunConfig,
+    predictor: Arc<dyn Predictor>,
+    mut invocations: impl Iterator<Item = Result<Invocation>>,
+    opts: &ReplayOptions,
+    keep: impl Fn(usize) -> bool,
+    name: &str,
+) -> Result<(RunReport, ReplayStats)> {
+    let n_functions = cat.len();
+    let mut cp = ControlPlane::new(cat.clone(), cfg.clone(), predictor);
+    let mut builder = ReportBuilder::new(cat, cfg);
+    let horizon_ms = cfg.duration_s as f64 * 1000.0;
+    let bin_ms = opts.bin_ms.max(1.0);
+    let bin_s = bin_ms / 1000.0;
+    // chunk length snapped up to a whole number of bins
+    let chunk_ms = (opts.chunk_ms.max(bin_ms) / bin_ms).ceil() * bin_ms;
+
+    let mut stats = ReplayStats::default();
+    let mut ordinals = vec![0u64; n_functions];
+    let mut last_rate = vec![0.0f64; n_functions];
+    let mut pending: Option<Invocation> = None;
+    let mut chunk_start = 0.0f64;
+
+    while chunk_start < horizon_ms {
+        let chunk_end = (chunk_start + chunk_ms).min(horizon_ms);
+        let n_bins = ((chunk_end - chunk_start) / bin_ms).ceil() as usize;
+        let mut counts = vec![0u64; n_bins * n_functions];
+        let mut arrivals: Vec<Arrival> = Vec::new();
+        loop {
+            let inv = match pending.take() {
+                Some(p) => p,
+                None => match invocations.next() {
+                    Some(r) => r?,
+                    None => break,
+                },
+            };
+            if !keep(inv.function) {
+                continue;
+            }
+            if inv.at_ms >= chunk_end {
+                pending = Some(inv);
+                break;
+            }
+            stats.invocations += 1;
+            let copies = rescale_copies(opts, inv.function, ordinals[inv.function]);
+            ordinals[inv.function] += 1;
+            if copies == 0 {
+                continue;
+            }
+            let bin = (((inv.at_ms - chunk_start) / bin_ms) as usize).min(n_bins - 1);
+            counts[inv.function * n_bins + bin] += copies;
+            for _ in 0..copies {
+                arrivals.push(Arrival { at_ms: inv.at_ms, function: inv.function });
+            }
+            stats.emitted += copies;
+        }
+        // per-bin arrival counts become the offered-load levels the
+        // autoscaler sees; emit a LoadEvent only where a level changes
+        let mut events: Vec<LoadEvent> = Vec::new();
+        for b in 0..n_bins {
+            let at_ms = chunk_start + b as f64 * bin_ms;
+            for (f, last) in last_rate.iter_mut().enumerate() {
+                let rate = counts[f * n_bins + b] as f64 / bin_s;
+                if rate != *last {
+                    events.push(LoadEvent { at_ms, function: f, rps: rate });
+                    *last = rate;
+                }
+            }
+        }
+        if !events.is_empty() {
+            cp.inject_workload(&Workload {
+                name: name.to_string(),
+                n_functions,
+                events,
+                duration_ms: horizon_ms,
+            });
+        }
+        if !arrivals.is_empty() {
+            cp.inject_arrivals(&arrivals);
+        }
+        builder.absorb(&cp.run_until(chunk_end)?);
+        chunk_start = chunk_end;
+    }
+
+    // everything at/after the horizon is clipped — counted, not dropped
+    // silently (rescaling still advances so the knob stays chunk-stable)
+    if let Some(inv) = pending.take() {
+        stats.invocations += 1;
+        stats.clipped += rescale_copies(opts, inv.function, ordinals[inv.function]);
+        ordinals[inv.function] += 1;
+    }
+    for r in invocations {
+        let inv = r?;
+        if !keep(inv.function) {
+            continue;
+        }
+        stats.invocations += 1;
+        stats.clipped += rescale_copies(opts, inv.function, ordinals[inv.function]);
+        ordinals[inv.function] += 1;
+    }
+    builder.add_arrivals_dropped(stats.clipped);
+
+    let isolated = cp.monitor().unpredictable();
+    let report = builder.finish(cp.scheduler_name(), name, cfg.duration_s, isolated);
+    Ok((report, stats))
+}
+
+/// Replay the trace at `path` under `cfg`: unsharded when
+/// `cfg.shards == 0`, otherwise across the partition layout of the
+/// sharded control plane — each cell re-reads the file with its own
+/// function filter (streaming stays bounded per cell) and the per-cell
+/// reports merge in ascending cell order, so the merged report depends
+/// on the layout only, never the thread count.
+pub fn replay_path(
+    cat: &Catalog,
+    cfg: &RunConfig,
+    predictor: Arc<dyn Predictor>,
+    path: &Path,
+    opts: &ReplayOptions,
+) -> Result<(RunReport, ReplayStats)> {
+    let name = format!(
+        "replay-{}",
+        path.file_name().and_then(|s| s.to_str()).unwrap_or("trace")
+    );
+    if cfg.shards == 0 {
+        let reader = TraceReader::from_path(path, cat)?;
+        return replay_stream(cat, cfg, predictor, reader, opts, |_| true, &name);
+    }
+    let scp = ShardedControlPlane::new(cat.clone(), cfg.clone(), predictor.clone());
+    let layout = scp.layout().clone();
+    let p = layout.partitions();
+    let threads = cfg.shards.clamp(1, p);
+
+    let run_cell = |c: usize| -> Result<(RunReport, ReplayStats)> {
+        let reader = TraceReader::from_path(path, cat)?;
+        let cell_cfg = scp.cell_config(c);
+        replay_stream(
+            cat,
+            &cell_cfg,
+            predictor.clone(),
+            reader,
+            opts,
+            |f| layout.cell_of(f) == c,
+            &name,
+        )
+    };
+
+    let mut results: Vec<Option<(RunReport, ReplayStats)>> = (0..p).map(|_| None).collect();
+    if threads == 1 {
+        for (c, slot) in results.iter_mut().enumerate() {
+            *slot = Some(run_cell(c)?);
+        }
+    } else {
+        std::thread::scope(|scope| -> Result<()> {
+            let run_cell = &run_cell;
+            let mut handles = Vec::with_capacity(threads);
+            for w in 0..threads {
+                handles.push(scope.spawn(
+                    move || -> Vec<(usize, Result<(RunReport, ReplayStats)>)> {
+                        let mut worker = Vec::new();
+                        let mut c = w;
+                        while c < p {
+                            worker.push((c, run_cell(c)));
+                            c += threads;
+                        }
+                        worker
+                    },
+                ));
+            }
+            for handle in handles {
+                let worker =
+                    handle.join().map_err(|_| anyhow!("replay worker panicked"))?;
+                for (c, result) in worker {
+                    results[c] = Some(result?);
+                }
+            }
+            Ok(())
+        })?;
+    }
+
+    // pinned merge order: ascending cell index
+    let mut iter = results.into_iter().map(|r| r.expect("every cell ran"));
+    let (mut report, mut stats) = iter.next().expect("layout has at least one cell");
+    for (r, s) in iter {
+        report.merge(&r)?;
+        stats.merge(&s);
+    }
+    Ok((report, stats))
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic trace-file generation (CI needs no downloads).
+// ---------------------------------------------------------------------------
+
+/// On-disk encoding of a generated trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceFormat {
+    Csv,
+    Jsonl,
+}
+
+impl TraceFormat {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "csv" => Self::Csv,
+            "jsonl" | "json" => Self::Jsonl,
+            _ => bail!("unknown trace format {s:?} (csv|jsonl)"),
+        })
+    }
+}
+
+/// Parameters of [`generate_trace_file`].
+#[derive(Debug, Clone)]
+pub struct TraceGenSpec {
+    /// Approximate total invocation count (Poisson-distributed).
+    pub invocations: u64,
+    pub duration_s: usize,
+    pub seed: u64,
+    pub format: TraceFormat,
+}
+
+/// Write a deterministic Azure-style invocation log: per-function
+/// Poisson arrival processes with heavy-tailed (Pareto) per-function
+/// shares — some functions dominate, as in the production traces —
+/// merged time-sorted.  Same `(catalog, spec)` ⇒ byte-identical file.
+/// Returns the number of invocations written.
+pub fn generate_trace_file(path: &Path, cat: &Catalog, spec: &TraceGenSpec) -> Result<u64> {
+    ensure!(spec.duration_s > 0, "trace duration must be positive");
+    let n = cat.len();
+    let mut rng = Rng::seed_from(spec.seed);
+    let weights: Vec<f64> = (0..n).map(|_| rng.pareto(1.0, 1.2).min(50.0)).collect();
+    let wsum: f64 = weights.iter().sum();
+    let horizon_ms = spec.duration_s as f64 * 1000.0;
+
+    let mut all: Vec<(f64, usize, f64)> = Vec::with_capacity(spec.invocations as usize);
+    for f in 0..n {
+        let target = spec.invocations as f64 * weights[f] / wsum;
+        let rate_per_ms = target / horizon_ms;
+        if rate_per_ms <= 0.0 {
+            continue;
+        }
+        let mut frng = Rng::seed_from(
+            spec.seed.wrapping_add((f as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)),
+        );
+        let base = cat.get(f).solo_latency_ms;
+        let mut t = 0.0f64;
+        loop {
+            t += frng.exp(rate_per_ms);
+            if t >= horizon_ms {
+                break;
+            }
+            let duration = base * (0.35 + frng.exp(1.0)).min(20.0);
+            all.push((t, f, duration));
+        }
+    }
+    all.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+    let file = File::create(path)
+        .with_context(|| format!("creating trace {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    if spec.format == TraceFormat::Csv {
+        writeln!(w, "function_id,arrival_ms,duration_ms")?;
+    }
+    for (t, f, d) in &all {
+        let name = &cat.get(*f).name;
+        match spec.format {
+            TraceFormat::Csv => writeln!(w, "{name},{t:.3},{d:.3}")?,
+            TraceFormat::Jsonl => writeln!(
+                w,
+                "{{\"function_id\": \"{name}\", \"arrival_ms\": {t:.3}, \"duration_ms\": {d:.3}}}"
+            )?,
+        }
+    }
+    w.flush()?;
+    Ok(all.len() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::tests::test_catalog;
+    use crate::runtime::{ForestParams, NativeForestPredictor};
+    use std::io::Cursor;
+
+    fn stub_predictor() -> Arc<dyn Predictor> {
+        Arc::new(NativeForestPredictor::new(ForestParams::synthetic_stub(
+            crate::model::N_FEATURES,
+            0.05,
+            0.05,
+        )))
+    }
+
+    fn read_all(text: &str) -> Result<Vec<Invocation>> {
+        let cat = test_catalog();
+        TraceReader::new(Cursor::new(text.to_string()), &cat).collect()
+    }
+
+    #[test]
+    fn reader_parses_csv_and_jsonl_interchangeably() {
+        let text = "\
+function_id,arrival_ms,duration_ms
+# a comment
+
+fn0,10.5,120.0
+{\"function_id\": \"fn1\", \"arrival_ms\": 12.25, \"duration_ms\": 80.0}
+2,14.0,55.0
+{\"function_id\": 3, \"arrival_ms\": 14.0, \"duration_ms\": 9.0}
+";
+        let got = read_all(text).unwrap();
+        assert_eq!(
+            got,
+            vec![
+                Invocation { function: 0, at_ms: 10.5, duration_ms: 120.0 },
+                Invocation { function: 1, at_ms: 12.25, duration_ms: 80.0 },
+                Invocation { function: 2, at_ms: 14.0, duration_ms: 55.0 },
+                Invocation { function: 3, at_ms: 14.0, duration_ms: 9.0 },
+            ]
+        );
+    }
+
+    #[test]
+    fn reader_rejects_malformed_records_with_line_numbers() {
+        for (text, needle) in [
+            ("nosuchfn,1.0,2.0", "unknown function"),
+            ("99,1.0,2.0", "out of range"),
+            ("fn0,abc,2.0", "bad arrival_ms"),
+            ("fn0,1.0", "expected"),
+            ("fn0,-1.0,2.0", "non-negative"),
+            ("fn0,1.0,nan", "finite"),
+            ("fn0,5.0,1.0\nfn0,4.0,1.0", "regresses"),
+        ] {
+            let err = read_all(text).unwrap_err().to_string();
+            assert!(err.contains(needle), "{text:?}: {err}");
+            assert!(err.contains("line"), "{text:?}: {err} must carry a line number");
+        }
+    }
+
+    #[test]
+    fn rescale_copies_are_deterministic_and_mean_tracks_knob() {
+        let opts = ReplayOptions { rescale: 2.5, ..Default::default() };
+        let a: Vec<u64> = (0..2000).map(|i| rescale_copies(&opts, 1, i)).collect();
+        let b: Vec<u64> = (0..2000).map(|i| rescale_copies(&opts, 1, i)).collect();
+        assert_eq!(a, b);
+        assert!(a.iter().all(|k| *k == 2 || *k == 3));
+        let mean = a.iter().sum::<u64>() as f64 / a.len() as f64;
+        assert!((mean - 2.5).abs() < 0.05, "mean {mean}");
+        // integral rescale is exact, zero thins everything
+        let one = ReplayOptions::default();
+        assert!((0..100).all(|i| rescale_copies(&one, 0, i) == 1));
+        let zero = ReplayOptions { rescale: 0.0, ..Default::default() };
+        assert!((0..100).all(|i| rescale_copies(&zero, 0, i) == 0));
+    }
+
+    #[test]
+    fn generated_trace_roundtrips_and_is_deterministic() {
+        let cat = test_catalog();
+        let dir = std::env::temp_dir();
+        for format in [TraceFormat::Csv, TraceFormat::Jsonl] {
+            let spec =
+                TraceGenSpec { invocations: 500, duration_s: 5, seed: 77, format };
+            let p1 = dir.join(format!("jiagu_replay_gen_a_{format:?}.trace"));
+            let p2 = dir.join(format!("jiagu_replay_gen_b_{format:?}.trace"));
+            let n1 = generate_trace_file(&p1, &cat, &spec).unwrap();
+            let n2 = generate_trace_file(&p2, &cat, &spec).unwrap();
+            assert_eq!(n1, n2);
+            assert!(n1 > 200, "expected a few hundred invocations, got {n1}");
+            assert_eq!(
+                std::fs::read(&p1).unwrap(),
+                std::fs::read(&p2).unwrap(),
+                "same spec must write identical bytes"
+            );
+            let invs: Vec<Invocation> = TraceReader::from_path(&p1, &cat)
+                .unwrap()
+                .collect::<Result<_>>()
+                .unwrap();
+            assert_eq!(invs.len() as u64, n1);
+            for w in invs.windows(2) {
+                assert!(w[0].at_ms <= w[1].at_ms);
+            }
+            std::fs::remove_file(&p1).ok();
+            std::fs::remove_file(&p2).ok();
+        }
+    }
+
+    fn replay_cfg(shards: usize) -> RunConfig {
+        let mut cfg = RunConfig::jiagu_45();
+        cfg.n_nodes = 6;
+        cfg.duration_s = 4;
+        cfg.requests = true;
+        cfg.eval_interval_ms = 250.0;
+        cfg.shards = shards;
+        cfg
+    }
+
+    #[test]
+    fn replay_is_deterministic_and_clips_the_horizon() {
+        let cat = test_catalog();
+        let path = std::env::temp_dir().join("jiagu_replay_e2e.csv");
+        // 6 s of trace against a 4 s horizon: the tail must be clipped
+        let spec = TraceGenSpec {
+            invocations: 1200,
+            duration_s: 6,
+            seed: 5,
+            format: TraceFormat::Csv,
+        };
+        let total = generate_trace_file(&path, &cat, &spec).unwrap();
+        let cfg = replay_cfg(0);
+        let opts = ReplayOptions::default();
+        let (r1, s1) =
+            replay_path(&cat, &cfg, stub_predictor(), &path, &opts).unwrap();
+        let (r2, s2) =
+            replay_path(&cat, &cfg, stub_predictor(), &path, &opts).unwrap();
+        assert_eq!(r1, r2, "same options must replay byte-identically");
+        assert_eq!(s1, s2);
+        assert_eq!(s1.invocations, total);
+        assert!(s1.clipped > 0, "the 2 s tail must be clipped");
+        assert_eq!(s1.emitted + s1.clipped, total, "verbatim replay: every record accounted");
+        assert_eq!(r1.arrivals_dropped, s1.clipped);
+        assert!(r1.requests_served > 0, "the replay must route traffic");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sharded_replay_matches_across_shard_counts_and_partitions_stats() {
+        let cat = test_catalog();
+        let path = std::env::temp_dir().join("jiagu_replay_shard.csv");
+        let spec = TraceGenSpec {
+            invocations: 900,
+            duration_s: 4,
+            seed: 11,
+            format: TraceFormat::Csv,
+        };
+        let total = generate_trace_file(&path, &cat, &spec).unwrap();
+        let opts = ReplayOptions::default();
+        let mut cfg = replay_cfg(1);
+        cfg.partitions = 2;
+        let (reference, ref_stats) =
+            replay_path(&cat, &cfg, stub_predictor(), &path, &opts).unwrap();
+        assert_eq!(ref_stats.invocations, total, "cells partition the record stream");
+        for shards in [2, 4] {
+            let mut cfg = replay_cfg(shards);
+            cfg.partitions = 2;
+            let (parallel, stats) =
+                replay_path(&cat, &cfg, stub_predictor(), &path, &opts).unwrap();
+            assert_eq!(reference, parallel, "{shards} shards");
+            assert_eq!(ref_stats, stats);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rescale_two_doubles_emitted_arrivals_exactly() {
+        let cat = test_catalog();
+        let path = std::env::temp_dir().join("jiagu_replay_rescale.csv");
+        let spec = TraceGenSpec {
+            invocations: 400,
+            duration_s: 3,
+            seed: 21,
+            format: TraceFormat::Csv,
+        };
+        generate_trace_file(&path, &cat, &spec).unwrap();
+        let cfg = replay_cfg(0);
+        let one = ReplayOptions::default();
+        let two = ReplayOptions { rescale: 2.0, ..Default::default() };
+        let (_, s1) = replay_path(&cat, &cfg, stub_predictor(), &path, &one).unwrap();
+        let (_, s2) = replay_path(&cat, &cfg, stub_predictor(), &path, &two).unwrap();
+        assert_eq!(s2.emitted, 2 * s1.emitted);
+        assert_eq!(s1.invocations, s2.invocations);
+        std::fs::remove_file(&path).ok();
+    }
+}

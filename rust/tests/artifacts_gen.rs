@@ -151,6 +151,7 @@ fn committed_bench_snapshots_parse_and_stay_machine_normalized() {
         ("BENCH_event_queue.json", "event_queue"),
         ("BENCH_router_hotpath.json", "router_hotpath"),
         ("BENCH_shard_scaling.json", "shard_scaling"),
+        ("BENCH_trace_replay.json", "trace_replay"),
     ] {
         let snap = Json::parse_file(&root.join(file)).unwrap();
         assert_eq!(snap.get("bench").unwrap().as_str().unwrap(), bench, "{file}");

@@ -1,0 +1,160 @@
+//! Workload-lab properties (registered as a `[[test]]` target;
+//! `autotests = false`):
+//!
+//! * **Fuzzer determinism, end to end** — for every tested scenario
+//!   family, the same seed yields a byte-identical `Workload` event
+//!   stream, and replaying it yields a byte-identical `RunReport`
+//!   across shard counts 1/2/4 × queue heap/wheel: the adversarial
+//!   scenarios inherit the engine's full replay contract.
+//! * **Dropped-arrival partition exactness** — the per-function safety
+//!   cap's dropped counts partition exactly under `Workload::restrict`:
+//!   for any cell layout, the per-cell `arrivals_dropped` sum equals
+//!   the unsharded count, because every cell synthesizes with the same
+//!   arrival seed (`RunConfig::arrival_seed` pinned by
+//!   `ShardedControlPlane::cell_config`) and synthesis is
+//!   per-function-seeded.
+
+use jiagu::artifacts::make_catalog;
+use jiagu::catalog::Catalog;
+use jiagu::config::RunConfig;
+use jiagu::controlplane::shard::ShardedControlPlane;
+use jiagu::engine::QueueKind;
+use jiagu::runtime::{ForestParams, NativeForestPredictor, Predictor};
+use jiagu::sim::effective_arrival_seed;
+use jiagu::traces::{LoadEvent, Workload, MAX_ARRIVALS_PER_FUNCTION};
+use jiagu::workload::fuzz::{ScenarioFamily, ScenarioFuzzer};
+use std::sync::Arc;
+
+fn stub_predictor() -> Arc<dyn Predictor> {
+    Arc::new(NativeForestPredictor::new(ForestParams::synthetic_stub(
+        jiagu::model::N_FEATURES,
+        0.05,
+        0.05,
+    )))
+}
+
+fn catalog() -> Catalog {
+    Catalog::from_functions(make_catalog(6, 5))
+}
+
+fn base_cfg() -> RunConfig {
+    let mut cfg = RunConfig::jiagu_45();
+    cfg.n_nodes = 6;
+    cfg.duration_s = 6;
+    cfg.requests = true;
+    cfg.eval_interval_ms = 250.0;
+    cfg.partitions = 2;
+    cfg
+}
+
+/// Satellite contract: same fuzzer seed ⇒ byte-identical event stream
+/// and byte-identical reports at shards 1/2/4 × queue heap/wheel, for
+/// three distinct scenario families.
+#[test]
+fn fuzzer_scenarios_replay_identically_across_shards_and_queues() {
+    let cat = catalog();
+    let families = [
+        ScenarioFamily::CorrelatedBurst,
+        ScenarioFamily::ColdStampede,
+        ScenarioFamily::SquareWave,
+    ];
+    for family in families {
+        let fuzzer = ScenarioFuzzer::new(17, base_cfg().duration_s);
+        let wl = fuzzer.workload(&cat, family);
+        assert_eq!(
+            wl.events,
+            fuzzer.workload(&cat, family).events,
+            "{}: same seed must regenerate the same stream",
+            family.name()
+        );
+        let mut reference = None;
+        for shards in [1usize, 2, 4] {
+            for queue in [QueueKind::Heap, QueueKind::Wheel] {
+                let mut cfg = base_cfg();
+                cfg.shards = shards;
+                cfg.queue = queue;
+                let report =
+                    ShardedControlPlane::new(cat.clone(), cfg, stub_predictor())
+                        .run_workload(&wl)
+                        .unwrap();
+                match &reference {
+                    None => {
+                        assert!(
+                            report.requests_served > 0,
+                            "{}: the scenario must route traffic",
+                            family.name()
+                        );
+                        reference = Some(report);
+                    }
+                    Some(r) => assert_eq!(
+                        *r,
+                        report,
+                        "{}: {shards} shards / {queue:?} must be byte-identical",
+                        family.name()
+                    ),
+                }
+            }
+        }
+    }
+}
+
+/// A workload hot enough that the per-function synthesis cap engages on
+/// every function.
+fn flood(n_functions: usize) -> Workload {
+    // 450k rps × 10 s ≈ 4.5M draws per function against the ~4.2M cap
+    let events = (0..n_functions)
+        .map(|f| LoadEvent { at_ms: 0.0, function: f, rps: 450_000.0 })
+        .collect();
+    Workload { name: "flood".into(), n_functions, events, duration_ms: 10_000.0 }
+}
+
+/// Satellite contract: per-cell dropped counts sum exactly to the
+/// unsharded count under any partition layout, as long as every cell
+/// uses the same arrival seed — synthesis is per-function-seeded, so
+/// `restrict` keeps each function's stream (and its dropped tail)
+/// bit-identical.
+#[test]
+fn restricted_synthesis_partitions_dropped_counts_exactly() {
+    let wl = flood(2);
+    let seed = 3;
+    let (all, dropped_all) = wl.synthesize_arrivals_counted(seed);
+    assert_eq!(all.len(), 2 * MAX_ARRIVALS_PER_FUNCTION, "cap must engage on both");
+    assert!(dropped_all > 0);
+    for cells in [1usize, 2] {
+        let mut kept = 0usize;
+        let mut dropped = 0u64;
+        for c in 0..cells {
+            let (a, d) = wl
+                .restrict(|f| f % cells == c)
+                .synthesize_arrivals_counted(seed);
+            kept += a.len();
+            dropped += d;
+        }
+        assert_eq!(kept, all.len(), "{cells} cells: kept arrivals partition");
+        assert_eq!(dropped, dropped_all, "{cells} cells: dropped counts partition");
+    }
+}
+
+/// The piece that makes the partition exact in the sharded control
+/// plane: every cell's config pins the *same* effective arrival seed,
+/// whether derived from the run seed or set explicitly.
+#[test]
+fn cell_configs_pin_one_arrival_seed_for_every_cell() {
+    let cat = catalog();
+    for explicit in [None, Some(99u64)] {
+        let mut cfg = base_cfg();
+        cfg.shards = 2;
+        cfg.arrival_seed = explicit;
+        let expected = effective_arrival_seed(&cfg);
+        let scp = ShardedControlPlane::new(cat.clone(), cfg, stub_predictor());
+        for c in 0..scp.layout().partitions() {
+            let cell = scp.cell_config(c);
+            assert_eq!(
+                cell.arrival_seed,
+                Some(expected),
+                "cell {c} (explicit {explicit:?}) must thin the shared stream"
+            );
+            assert_eq!(effective_arrival_seed(&cell), expected);
+        }
+    }
+}
