@@ -63,6 +63,7 @@ bench: $(ARTIFACTS_DIR)/meta.json
 bench-smoke: $(ARTIFACTS_DIR)/meta.json
 	JIAGU_BENCH_DURATION=60 JIAGU_NATIVE=1 $(CARGO) bench --bench fig13_density
 	$(CARGO) bench --bench event_queue
+	$(CARGO) bench --bench forest_inference
 	$(CARGO) bench --bench router_hotpath
 	$(CARGO) bench --bench shard_scaling
 	JIAGU_TRACE_INVOCATIONS=200000 $(CARGO) bench --bench trace_replay
@@ -74,6 +75,7 @@ bench-smoke: $(ARTIFACTS_DIR)/meta.json
 # and uploads the regenerated files as workflow artifacts.
 bench-snapshot: $(ARTIFACTS_DIR)/meta.json
 	JIAGU_BENCH_SNAPSHOT=BENCH_event_queue.json $(CARGO) bench --bench event_queue
+	JIAGU_BENCH_SNAPSHOT=BENCH_forest_inference.json $(CARGO) bench --bench forest_inference
 	JIAGU_BENCH_SNAPSHOT=BENCH_router_hotpath.json $(CARGO) bench --bench router_hotpath
 	JIAGU_BENCH_SNAPSHOT=BENCH_shard_scaling.json JIAGU_BENCH_DURATION=20 $(CARGO) bench --bench shard_scaling
 	JIAGU_BENCH_SNAPSHOT=BENCH_trace_replay.json JIAGU_TRACE_INVOCATIONS=200000 $(CARGO) bench --bench trace_replay

@@ -1,0 +1,155 @@
+//! Prediction hot path: the flattened batched [`FlatForest`] engine vs
+//! the scalar reference [`NativeForest::predict_one`] walk, over the
+//! batch shapes the schedulers actually submit:
+//!
+//! * **batch 1** — the accuracy-monitor probe (one row per function);
+//! * **batch 32** — a typical capacity sweep (`candidates × qos targets`);
+//! * **batch 1024** — a Gsight-style fanout validation / refresh burst.
+//!
+//! Two properties are asserted, not just printed:
+//!
+//! 1. the flat engine's outputs are **bit-identical** to the reference
+//!    walk on every row (the contract that keeps the determinism matrix
+//!    byte-identical with the flat engine serving all predictions);
+//! 2. the flat engine sustains at least the reference's rows/sec at every
+//!    batch size — the whole point of the SoA layout and tree-major
+//!    blocking is that it must never be slower.
+//!
+//! ```bash
+//! cargo bench --bench forest_inference
+//! # JIAGU_BENCH_SNAPSHOT=BENCH_forest_inference.json additionally writes
+//! # the machine-normalized snapshot (deterministic forest/batch sizes +
+//! # the dimensionless flat/reference throughput ratios; no wall-clock
+//! # fields).
+//! ```
+
+use jiagu::runtime::{FlatForest, FlatScratch, ForestParams, NativeForest};
+use jiagu::util::bench::{bench, Table};
+use jiagu::util::json::{arr, num, obj, s, Json};
+use jiagu::util::rng::Rng;
+use std::time::Duration;
+
+// realistic artifact shape: the trained forest is 40 trees x depth 7
+// over the 44-dim feature contract
+const N_TREES: usize = 40;
+const DEPTH: usize = 7;
+const N_FEATURES: usize = 44;
+// (batch size, snapshot ratio key)
+const BATCHES: [(usize, &str); 3] = [(1, "batch_1"), (32, "batch_32"), (1024, "batch_1024")];
+
+fn random_forest(rng: &mut Rng) -> ForestParams {
+    let n_internal = (1usize << DEPTH) - 1;
+    let n_leaves = 1usize << DEPTH;
+    let params = ForestParams {
+        n_trees: N_TREES,
+        depth: DEPTH,
+        n_features: N_FEATURES,
+        feature: (0..N_TREES)
+            .map(|_| (0..n_internal).map(|_| rng.below(N_FEATURES as u64) as i32).collect())
+            .collect(),
+        threshold: (0..N_TREES)
+            .map(|_| (0..n_internal).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect())
+            .collect(),
+        leaf: (0..N_TREES)
+            .map(|_| (0..n_leaves).map(|_| rng.range_f64(-0.3, 0.3) as f32).collect())
+            .collect(),
+        mean: (0..N_FEATURES).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect(),
+        std: (0..N_FEATURES).map(|_| rng.range_f64(0.5, 2.0) as f32).collect(),
+        test_error: 0.0,
+        fit_seconds: 0.0,
+    };
+    params.validate().expect("generated forest must be well-formed");
+    params
+}
+
+fn main() {
+    let mut rng = Rng::seed_from(0xF0_4E57);
+    let params = random_forest(&mut rng);
+    let reference = NativeForest::new(params.clone());
+    let flat = FlatForest::from_params(&params);
+    let mut scratch = FlatScratch::default();
+
+    let mut table = Table::new(&["batch", "engine", "ns/row", "Mrows/s", "p99 ns/row"]);
+    let mut rows_json: Vec<Json> = Vec::new();
+    let mut ratios: Vec<(&str, Json)> = Vec::new();
+    let mut slower_than_reference: Vec<String> = Vec::new();
+
+    for (batch, ratio_key) in BATCHES {
+        let data: Vec<f32> =
+            (0..batch * N_FEATURES).map(|_| rng.range_f64(-10.0, 10.0) as f32).collect();
+
+        // the contract first: every row bit-identical to the reference walk
+        let got = flat.predict(&data, &mut scratch);
+        for r in 0..batch {
+            let want = reference.predict_one(&data[r * N_FEATURES..(r + 1) * N_FEATURES]);
+            assert_eq!(
+                got[r].to_bits(),
+                want.to_bits(),
+                "flat engine diverged from the reference walk at batch {batch}, row {r}"
+            );
+        }
+
+        let mut out = Vec::with_capacity(batch);
+        let flat_summary = bench(10, Duration::from_millis(300), || {
+            flat.predict_into(&data, &mut scratch, &mut out);
+        });
+        let mut sink = 0.0f64;
+        let ref_summary = bench(10, Duration::from_millis(300), || {
+            for r in 0..batch {
+                sink += reference.predict_one(&data[r * N_FEATURES..(r + 1) * N_FEATURES])
+                    as f64;
+            }
+        });
+        assert!(sink.is_finite()); // keep the optimizer honest
+
+        let flat_ns = flat_summary.mean_ns / batch as f64;
+        let ref_ns = ref_summary.mean_ns / batch as f64;
+        for (engine, summary, ns) in
+            [("flat", &flat_summary, flat_ns), ("reference", &ref_summary, ref_ns)]
+        {
+            table.row(&[
+                batch.to_string(),
+                engine.to_string(),
+                format!("{ns:.1}"),
+                format!("{:.2}", 1e3 / ns),
+                format!("{:.1}", summary.p99_ns / batch as f64),
+            ]);
+        }
+        // dimensionless and machine-normalized: >1 means flat is faster
+        ratios.push((ratio_key, num(ref_ns / flat_ns)));
+        if flat_ns > ref_ns {
+            slower_than_reference.push(format!(
+                "batch {batch}: flat {flat_ns:.1} ns/row vs reference {ref_ns:.1} ns/row"
+            ));
+        }
+        rows_json.push(obj(vec![
+            ("batch", num(batch as f64)),
+            ("n_trees", num(N_TREES as f64)),
+            ("depth", num(DEPTH as f64)),
+            ("n_features", num(N_FEATURES as f64)),
+        ]));
+    }
+    table.print("forest inference (flat SoA batched engine vs scalar reference walk)");
+
+    assert!(
+        slower_than_reference.is_empty(),
+        "flat engine must sustain at least the reference's rows/sec: {}",
+        slower_than_reference.join("; ")
+    );
+    println!("(flat >= reference rows/sec at batch 1/32/1024 — asserted)");
+    println!("(flat output bit-identical to the reference walk — asserted)");
+
+    if let Ok(path) = std::env::var("JIAGU_BENCH_SNAPSHOT") {
+        if !path.is_empty() {
+            let payload = obj(vec![
+                ("bench", s("forest_inference")),
+                ("bootstrap", Json::Bool(false)),
+                ("scenarios", arr(rows_json)),
+                ("flat_over_reference_throughput", obj(ratios)),
+            ]);
+            std::fs::write(&path, format!("{}\n", payload.to_string()))
+                .expect("writing JIAGU_BENCH_SNAPSHOT");
+            println!("wrote {path}");
+        }
+    }
+}

@@ -12,10 +12,19 @@
 //! (concurrency-aware refinement, §4.4; Fig. 17b shows batched inference
 //! is nearly flat in the row count), so computing one function's capacity
 //! costs *one* model inference.
+//!
+//! On top of the batched sweep sits [`SweepMemo`]: capacity is a pure
+//! function of `(target, node mix)` for a fixed catalog and config, and
+//! real workloads revisit the same mixes constantly (every empty node
+//! looks identical; steady-state nodes cycle through a handful of
+//! signatures).  The memo answers repeated sweeps from a canonical
+//! mix-signature key without touching the predictor at all — see
+//! [`compute_capacity_memoized`].
 
 use crate::catalog::{Catalog, FunctionId};
 use crate::interference::NodeMix;
 use crate::model::features::FeatureBuilder;
+use crate::model::FeatureMatrix;
 use crate::runtime::Predictor;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -196,8 +205,10 @@ pub fn compute_capacity_counted(
     let mut qos_targets: Vec<FunctionId> = vec![target];
     qos_targets.extend(neighbours.iter().filter(|(_, s, _)| *s > 0).map(|(f, _, _)| *f));
 
-    // one batched inference over (candidate, qos-target) rows
-    let mut rows: Vec<Vec<f32>> = Vec::with_capacity(max_c as usize * qos_targets.len());
+    // one batched inference over (candidate, qos-target) rows, packed
+    // row-major into a single flat buffer — no per-row allocation
+    let mut rows =
+        FeatureMatrix::with_capacity(crate::model::N_FEATURES, max_c as usize * qos_targets.len());
     let mut candidate_mix = NodeMix::new(
         neighbours
             .iter()
@@ -206,16 +217,14 @@ pub fn compute_capacity_counted(
             .collect(),
     );
     let target_slot = candidate_mix.entries.len() - 1;
-    let mut row = Vec::with_capacity(crate::model::N_FEATURES);
     for c in 1..=max_c {
         candidate_mix.entries[target_slot].1 = c;
         let builder = FeatureBuilder::new(cat, &candidate_mix);
         for f in &qos_targets {
-            builder.row_into(*f, &mut row);
-            rows.push(row.clone());
+            builder.row_into_matrix(*f, &mut rows);
         }
     }
-    let preds = predictor.predict(&rows)?;
+    let preds = predictor.predict_batch(&rows)?;
 
     // largest feasible prefix
     let per_c = qos_targets.len();
@@ -230,6 +239,150 @@ pub fn compute_capacity_counted(
         capacity = c;
     }
     Ok((capacity, 1))
+}
+
+/// Aggregate cost of one (or several summed) memoized capacity sweeps.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SweepCost {
+    /// Batched predictor invocations actually executed.
+    pub inferences: u64,
+    /// Sweeps answered from the memo without running the predictor.
+    pub memo_hits: u64,
+    /// Sweeps that missed the memo and paid `inferences` for it.
+    pub memo_misses: u64,
+}
+
+impl SweepCost {
+    /// Fold another sweep's cost into this one (plain counter addition).
+    pub fn absorb(&mut self, other: SweepCost) {
+        self.inferences += other.inferences;
+        self.memo_hits += other.memo_hits;
+        self.memo_misses += other.memo_misses;
+    }
+}
+
+/// Canonical memo key: target + mix entries sorted by function id.
+/// [`NodeMix::new`] does *not* sort its entries (the sweep relies on slot
+/// positions), so two logically identical mixes can arrive with different
+/// entry orders — sorting here makes them share one memo slot.
+type MemoKey = (FunctionId, Vec<(FunctionId, u32, u32)>);
+
+/// Default bound on live memo entries before a deterministic wholesale
+/// clear (mirrors `scheduler::CandidateOrders`' epoch scheme): large
+/// enough that steady-state golden scenarios never clear, small enough
+/// that a pathological mix churn cannot grow the map without bound.
+pub const SWEEP_MEMO_CAPACITY: usize = 4096;
+
+/// Memo of completed capacity sweeps, keyed by canonical mix signature.
+///
+/// Capacity is a pure function of `(target, mix)` once the catalog and
+/// [`CapacityConfig`] are fixed — and both are fixed for the lifetime of a
+/// scheduler instance, which is exactly the lifetime of this memo.  A hit
+/// therefore returns the *identical* capacity the sweep would have
+/// computed, so placements (and every determinism contract downstream of
+/// them) are unchanged; only the inference count drops.
+///
+/// When the map reaches its bound it is cleared outright and the epoch
+/// bumped — a deterministic, data-independent policy (no LRU clocks, no
+/// hash-order eviction), so shards and reruns always observe the same
+/// hit/miss sequence.
+#[derive(Debug, Clone)]
+pub struct SweepMemo {
+    entries: HashMap<MemoKey, u32>,
+    capacity: usize,
+    epoch: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl Default for SweepMemo {
+    fn default() -> Self {
+        Self::with_capacity(SWEEP_MEMO_CAPACITY)
+    }
+}
+
+impl SweepMemo {
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            entries: HashMap::new(),
+            capacity: capacity.max(1),
+            epoch: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn key(target: FunctionId, mix: &NodeMix) -> MemoKey {
+        let mut entries = mix.entries.clone();
+        entries.sort_unstable();
+        (target, entries)
+    }
+
+    /// Live entries in the current epoch.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Number of wholesale clears so far.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// `(hits, misses)` over the memo's lifetime (epochs included).
+    pub fn counts(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    fn lookup(&mut self, key: &MemoKey) -> Option<u32> {
+        match self.entries.get(key).copied() {
+            Some(cap) => {
+                self.hits += 1;
+                Some(cap)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    fn insert(&mut self, key: MemoKey, capacity: u32) {
+        if self.entries.len() >= self.capacity {
+            self.entries.clear();
+            self.epoch += 1;
+        }
+        self.entries.insert(key, capacity);
+    }
+}
+
+/// [`compute_capacity_counted`] behind a [`SweepMemo`]: a hit returns the
+/// cached capacity with zero inferences; a miss runs the batched sweep
+/// and memoizes the result.  Either way the outcome is recorded on the
+/// predictor's shared [`InferenceStats`](crate::runtime::InferenceStats)
+/// memo counters (observability) *and* returned in the [`SweepCost`]
+/// (per-sweep accounting that feeds reports — deliberately not read back
+/// off the shared counters, same rationale as `compute_capacity_counted`).
+pub fn compute_capacity_memoized(
+    cat: &Catalog,
+    mix: &NodeMix,
+    target: FunctionId,
+    predictor: &dyn Predictor,
+    cfg: &CapacityConfig,
+    memo: &mut SweepMemo,
+) -> Result<(u32, SweepCost)> {
+    let key = SweepMemo::key(target, mix);
+    if let Some(capacity) = memo.lookup(&key) {
+        predictor.stats().record_memo(true);
+        return Ok((capacity, SweepCost { inferences: 0, memo_hits: 1, memo_misses: 0 }));
+    }
+    let (capacity, inferences) = compute_capacity_counted(cat, mix, target, predictor, cfg)?;
+    memo.insert(key, capacity);
+    predictor.stats().record_memo(false);
+    Ok((capacity, SweepCost { inferences, memo_hits: 0, memo_misses: 1 }))
 }
 
 /// Recompute the full capacity table of a node (asynchronous update body):
@@ -287,14 +440,14 @@ mod tests {
     }
 
     impl Predictor for OraclePredictor {
-        fn predict(&self, rows: &[Vec<f32>]) -> Result<Vec<f32>> {
+        fn predict_batch(&self, batch: &FeatureMatrix) -> Result<Vec<f32>> {
             // Reconstruct per-row latency from (target sat/cached counts +
             // totals) assuming a *single-function* or known-mix node; the
             // capacity tests below only use single-function sweeps where
             // the row describes the full mix exactly.
-            self.stats.record(rows.len(), 0);
-            Ok(rows
-                .iter()
+            self.stats.record(batch.n_rows(), 0);
+            Ok(batch
+                .rows()
                 .map(|row| {
                     let target = self.target_of(row);
                     let t_sat = row[14] as u32;
@@ -376,6 +529,51 @@ mod tests {
         let (cap0, inf0) = compute_capacity_counted(&cat, &mix, 0, &oracle, &no_room).unwrap();
         assert_eq!((cap0, inf0), (0, 0));
         assert_eq!(oracle.stats.snapshot().0, 1, "predictor untouched");
+    }
+
+    #[test]
+    fn memoized_sweep_hits_on_repeated_mix_and_matches_counted() {
+        let cat = test_catalog();
+        let oracle = OraclePredictor::new(cat.clone());
+        let cfg = CapacityConfig::default();
+        let mut memo = SweepMemo::default();
+        let mix = NodeMix::new(vec![(0, 2, 0), (1, 1, 0)]);
+        let (cap1, cost1) =
+            compute_capacity_memoized(&cat, &mix, 0, &oracle, &cfg, &mut memo).unwrap();
+        assert_eq!(cost1, SweepCost { inferences: 1, memo_hits: 0, memo_misses: 1 });
+        // same logical mix, different entry order — must share the slot
+        let permuted = NodeMix::new(vec![(1, 1, 0), (0, 2, 0)]);
+        let (cap2, cost2) =
+            compute_capacity_memoized(&cat, &permuted, 0, &oracle, &cfg, &mut memo).unwrap();
+        assert_eq!(cost2, SweepCost { inferences: 0, memo_hits: 1, memo_misses: 0 });
+        assert_eq!(cap1, cap2, "a hit must return the identical capacity");
+        // bit-for-bit against the unmemoized sweep
+        let (plain, _) = compute_capacity_counted(&cat, &mix, 0, &oracle, &cfg).unwrap();
+        assert_eq!(cap1, plain);
+        // only the miss touched the predictor; both outcomes were recorded
+        assert_eq!(oracle.stats.snapshot().0, 2, "one sweep + one plain check");
+        assert_eq!(oracle.stats.memo_snapshot(), (1, 1));
+        assert_eq!(memo.counts(), (1, 1));
+    }
+
+    #[test]
+    fn memo_bound_triggers_deterministic_clear_with_epoch_bump() {
+        let cat = test_catalog();
+        let oracle = OraclePredictor::new(cat.clone());
+        let cfg = CapacityConfig::default();
+        let mut memo = SweepMemo::with_capacity(2);
+        for sat in 1..=3u32 {
+            let mix = NodeMix::new(vec![(0, sat, 0)]);
+            compute_capacity_memoized(&cat, &mix, 0, &oracle, &cfg, &mut memo).unwrap();
+        }
+        assert_eq!(memo.epoch(), 1, "third distinct key must clear the full map");
+        assert_eq!(memo.len(), 1, "only the post-clear insert survives");
+        // a re-sweep of an evicted key recomputes — and still agrees
+        let mix = NodeMix::new(vec![(0, 1, 0)]);
+        let (cap, cost) =
+            compute_capacity_memoized(&cat, &mix, 0, &oracle, &cfg, &mut memo).unwrap();
+        assert_eq!(cost.memo_misses, 1);
+        assert_eq!(cap, compute_capacity(&cat, &mix, 0, &oracle, &cfg).unwrap());
     }
 
     #[test]

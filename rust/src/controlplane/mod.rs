@@ -157,6 +157,10 @@ pub struct EngineEvents {
     /// (deterministic; see [`crate::config::CostModel`]).
     pub async_nanos: u64,
     pub async_inferences: u64,
+    /// Capacity sweeps (critical-path and refresh alike) answered from the
+    /// scheduler's mix-signature memo / run because it missed.
+    pub memo_hits: u64,
+    pub memo_misses: u64,
     /// QoS measurement windows.
     pub qos: Vec<QosWindow>,
     /// Utilisation samples, one per monitor tick in the drain.
@@ -553,6 +557,8 @@ impl ControlPlane {
         for update in outcome.deferred {
             ev.deferred_submitted += 1;
             ev.async_inferences += update.inferences;
+            ev.memo_hits += update.memo_hits;
+            ev.memo_misses += update.memo_misses;
             let cost_ns = self.cfg.cost.refresh_ns(update.inferences);
             ev.async_nanos += cost_ns;
             self.queue.push(
@@ -586,6 +592,8 @@ impl ControlPlane {
     fn monitor_tick(&mut self, now_ms: f64, ev: &mut EngineEvents) -> Result<()> {
         let accuracy_tick = self.monitor_ticks % MONITOR_EVERY == MONITOR_EVERY - 1;
         self.monitor_ticks += 1;
+        // single-row batch reused across every accuracy probe in the tick
+        let mut probe = crate::model::FeatureMatrix::with_capacity(crate::model::N_FEATURES, 1);
         for node in 0..self.cluster.n_nodes() {
             let mix = self.cluster.mix(node);
             if mix.is_empty() {
@@ -605,8 +613,10 @@ impl ControlPlane {
                     ev.qos.push(QosWindow { function: *f, requests, measured_ms: measured });
                 }
                 if accuracy_tick {
-                    let row = crate::model::feature_row(&self.cat, &mix, *f);
-                    if let Ok(pred) = self.predictor.predict(std::slice::from_ref(&row)) {
+                    probe.clear();
+                    crate::model::FeatureBuilder::new(&self.cat, &mix)
+                        .row_into_matrix(*f, &mut probe);
+                    if let Ok(pred) = self.predictor.predict_batch(&probe) {
                         self.monitor.record(*f, pred[0] as f64, measured);
                     }
                 }

@@ -168,6 +168,8 @@ fn report_json(r: &jiagu::sim::RunReport) -> jiagu::util::json::Json {
         ("inferences_per_schedule", num(r.inferences_per_schedule)),
         ("critical_inferences", num(r.critical_inferences as f64)),
         ("async_inferences", num(r.async_inferences as f64)),
+        ("memo_hits", num(r.memo_hits as f64)),
+        ("memo_misses", num(r.memo_misses as f64)),
         ("schedule_calls", num(r.schedule_calls as f64)),
         ("instances_started", num(r.instances_started as f64)),
         ("fast_decisions", num(r.fast_decisions as f64)),
@@ -218,8 +220,12 @@ fn print_report(r: &jiagu::sim::RunReport) {
         r.cold_start_ms_mean, r.cold_start_ms_p99, r.instances_started
     );
     println!(
-        "  inferences: {:.2}/schedule critical ({} critical, {} async)",
-        r.inferences_per_schedule, r.critical_inferences, r.async_inferences
+        "  inferences: {:.2}/schedule critical ({} critical, {} async); sweep memo {} hits / {} misses",
+        r.inferences_per_schedule,
+        r.critical_inferences,
+        r.async_inferences,
+        r.memo_hits,
+        r.memo_misses
     );
     println!(
         "  paths: {} fast / {} slow; logical cold starts {}, migrations {}",

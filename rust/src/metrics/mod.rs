@@ -376,6 +376,11 @@ pub struct CostTracker {
     pub cold_start_ms: Samples,
     /// Model inferences on the critical path.
     pub critical_inferences: u64,
+    /// Critical-path capacity sweeps answered from the scheduler's
+    /// mix-signature memo (each one an inference avoided).
+    pub memo_hits: u64,
+    /// Critical-path capacity sweeps that missed the memo.
+    pub memo_misses: u64,
     /// Scheduling calls.
     pub calls: u64,
     /// Individual instances cold-started.
@@ -397,6 +402,8 @@ impl CostTracker {
         self.scheduling_ms.push(decision_ms);
         self.calls += 1;
         self.critical_inferences += plan.critical_inferences;
+        self.memo_hits += plan.memo_hits;
+        self.memo_misses += plan.memo_misses;
         if plan.path() == crate::scheduler::Path::Slow {
             self.slow_decisions += 1;
         } else {
@@ -455,6 +462,8 @@ mod tests {
         plan.slow_path_used = true;
         plan.decision_nanos = 123_456; // measured; must NOT drive the samples
         plan.critical_inferences = 2;
+        plan.memo_hits = 3;
+        plan.memo_misses = 2;
         let committed = CommittedPlan {
             plan,
             placements: vec![Placement { instance: 0, node: 0 }],
@@ -463,6 +472,7 @@ mod tests {
         assert_eq!(c.calls, 1);
         assert_eq!(c.slow_decisions, 1);
         assert_eq!(c.instances_started, 1);
+        assert_eq!((c.memo_hits, c.memo_misses), (3, 2));
         assert_eq!(c.scheduling_ms.values(), &[0.055]);
         assert!(c.cold_start_ms.is_empty(), "cold starts attribute at completion");
         c.record_cold_start(8.455);

@@ -8,11 +8,108 @@
 
 use crate::catalog::{Catalog, FunctionId};
 use crate::interference::NodeMix;
+use anyhow::{ensure, Result};
 
 /// Total feature dimensionality (1 + 13 + 2 + 13 + 13 + 2).
 pub const N_FEATURES: usize = 44;
 
 const N_PROFILE: usize = 13;
+
+/// A borrowed row-major feature batch: one flat `Vec<f32>` of
+/// `n_rows x n_features` values instead of one heap `Vec` per row.
+///
+/// This is the shape the prediction hot path works in end to end: the
+/// capacity sweep appends rows straight from [`FeatureBuilder`] (no
+/// per-row allocation),
+/// [`Predictor::predict_batch`](crate::runtime::Predictor::predict_batch)
+/// borrows the flat buffer, and the flat forest engine
+/// ([`crate::runtime::FlatForest`]) standardises and traverses it in row
+/// blocks.  The buffer is reusable: `clear` keeps the capacity, so a
+/// steady-state sweep allocates nothing.
+#[derive(Debug, Clone, Default)]
+pub struct FeatureMatrix {
+    data: Vec<f32>,
+    n_features: usize,
+}
+
+impl FeatureMatrix {
+    pub fn new(n_features: usize) -> Self {
+        Self { data: Vec::new(), n_features }
+    }
+
+    /// Pre-size for `rows` rows.
+    pub fn with_capacity(n_features: usize, rows: usize) -> Self {
+        Self { data: Vec::with_capacity(n_features * rows), n_features }
+    }
+
+    /// Build from per-row `Vec`s (the compatibility path for callers that
+    /// load rows from JSON or tests that hold `Vec<Vec<f32>>`).
+    pub fn from_rows(n_features: usize, rows: &[Vec<f32>]) -> Result<Self> {
+        let mut m = Self::with_capacity(n_features, rows.len());
+        for row in rows {
+            ensure!(
+                row.len() == n_features,
+                "feature row has {} dims, matrix expects {}",
+                row.len(),
+                n_features
+            );
+            m.data.extend_from_slice(row);
+        }
+        Ok(m)
+    }
+
+    /// Drop all rows, keeping the allocation for reuse.
+    pub fn clear(&mut self) {
+        self.data.clear();
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    pub fn n_rows(&self) -> usize {
+        debug_assert_eq!(self.data.len() % self.n_features.max(1), 0);
+        if self.n_features == 0 {
+            0
+        } else {
+            self.data.len() / self.n_features
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row `i` as a slice view into the flat buffer.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.n_features..(i + 1) * self.n_features]
+    }
+
+    /// Iterate all rows as slices.
+    pub fn rows(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.n_features)
+    }
+
+    /// The flat row-major buffer.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Append one row by copying a slice.
+    pub fn push_row(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.n_features);
+        self.data.extend_from_slice(row);
+    }
+
+    /// Append one row produced by `fill`, which must push exactly
+    /// `n_features` values — the allocation-free producer hook
+    /// [`FeatureBuilder::row_into_matrix`] uses.
+    pub fn push_row_with(&mut self, fill: impl FnOnce(&mut Vec<f32>)) {
+        let start = self.data.len();
+        fill(&mut self.data);
+        debug_assert_eq!(self.data.len() - start, self.n_features, "row width mismatch");
+    }
+}
 
 /// Build one feature row for (node mix, target function).
 pub fn feature_row(cat: &Catalog, mix: &NodeMix, target: FunctionId) -> Vec<f32> {
@@ -68,9 +165,24 @@ impl<'a> FeatureBuilder<'a> {
     }
 
     /// Emit the row for `target` into `out` (cleared first) — the
-    /// allocation-free hot-path variant used by the capacity sweep.
+    /// allocation-free variant for callers that want one standalone row.
     pub fn row_into(&self, target: FunctionId, out: &mut Vec<f32>) {
         out.clear();
+        self.write_row(target, out);
+        debug_assert_eq!(out.len(), N_FEATURES);
+    }
+
+    /// Append the row for `target` onto a [`FeatureMatrix`] — the batch
+    /// hot-path variant the capacity sweep uses: no temporary `Vec`, the
+    /// values land directly in the matrix's flat buffer.
+    pub fn row_into_matrix(&self, target: FunctionId, m: &mut FeatureMatrix) {
+        debug_assert_eq!(m.n_features(), N_FEATURES);
+        m.push_row_with(|out| self.write_row(target, out));
+    }
+
+    /// The single row writer behind both emit paths (identical f32
+    /// conversions in identical order, so the two paths are bit-equal).
+    fn write_row(&self, target: FunctionId, out: &mut Vec<f32>) {
         let spec = self.cat.get(target);
         let (t_sat, t_cached) = self.target_counts(target);
         out.push(spec.solo_latency_ms as f32);
@@ -81,7 +193,6 @@ impl<'a> FeatureBuilder<'a> {
         out.extend(self.agg_cached.iter().map(|v| *v as f32));
         out.push(self.tot_sat as f32);
         out.push(self.tot_cached as f32);
-        debug_assert_eq!(out.len(), N_FEATURES);
     }
 }
 
@@ -128,5 +239,36 @@ mod tests {
         for t in 0..2 {
             assert_eq!(b.row(t), feature_row(&cat, &mix, t));
         }
+    }
+
+    #[test]
+    fn matrix_rows_are_bit_equal_to_vec_rows() {
+        let cat = cat2();
+        let mix = NodeMix::new(vec![(0, 2, 1), (1, 5, 3)]);
+        let b = FeatureBuilder::new(&cat, &mix);
+        let mut m = FeatureMatrix::new(N_FEATURES);
+        for t in 0..2 {
+            b.row_into_matrix(t, &mut m);
+        }
+        assert_eq!(m.n_rows(), 2);
+        for t in 0..2 {
+            assert_eq!(m.row(t), feature_row(&cat, &mix, t).as_slice());
+        }
+        // reuse keeps the allocation and drops the rows
+        m.clear();
+        assert!(m.is_empty());
+        b.row_into_matrix(1, &mut m);
+        assert_eq!(m.n_rows(), 1);
+        assert_eq!(m.row(0), feature_row(&cat, &mix, 1).as_slice());
+    }
+
+    #[test]
+    fn matrix_from_rows_roundtrips_and_rejects_ragged_input() {
+        let rows = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        let m = FeatureMatrix::from_rows(2, &rows).unwrap();
+        assert_eq!(m.n_rows(), 2);
+        assert_eq!(m.data(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.rows().collect::<Vec<_>>(), vec![&[1.0f32, 2.0][..], &[3.0, 4.0][..]]);
+        assert!(FeatureMatrix::from_rows(3, &rows).is_err(), "ragged rows must be rejected");
     }
 }

@@ -8,5 +8,5 @@
 pub mod features;
 pub mod monitor;
 
-pub use features::{feature_row, FeatureBuilder, N_FEATURES};
+pub use features::{feature_row, FeatureBuilder, FeatureMatrix, N_FEATURES};
 pub use monitor::AccuracyMonitor;

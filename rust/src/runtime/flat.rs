@@ -1,0 +1,238 @@
+//! Flattened SoA forest engine — the batched prediction hot path.
+//!
+//! [`FlatForest`] lowers [`ForestParams`]' per-tree `Vec<Vec<_>>` tensors
+//! into three contiguous arrays (all trees' split features, thresholds
+//! and leaves back to back, one fixed stride per tree — the trees are
+//! perfect, so every tree occupies exactly `2^D − 1` internal slots and
+//! `2^D` leaf slots):
+//!
+//! ```text
+//! feature:   [ tree0[0..2^D-1] | tree1[..] | ... ]   stride = 2^D − 1
+//! threshold: [ tree0[0..2^D-1] | tree1[..] | ... ]   stride = 2^D − 1
+//! leaf:      [ tree0[0..2^D]   | tree1[..] | ... ]   stride = 2^D
+//! ```
+//!
+//! Traversal is the branchless level-order walk
+//! `idx = 2*idx + 1 + (x > thr) as usize`, run **tree-major over row
+//! blocks**: for each block of up to [`BLOCK`] rows the engine
+//! standardises the block once, then walks tree 0 over every row, tree 1
+//! over every row, and so on — each tree's threshold/leaf lines are
+//! loaded once per block instead of once per row, which is what makes
+//! the batched capacity sweep cheap (§4.4, Fig. 17b).
+//!
+//! **Bit-identity contract.**  Every prediction is bit-identical to the
+//! reference [`NativeForest::predict_one`](super::NativeForest) walk,
+//! because each row performs *exactly* the same float operations in the
+//! same order: standardise `(v − mean) / std` (a division — never a
+//! reciprocal multiply), accumulate leaf values into an `f64` in tree
+//! order `t = 0..T`, finish with
+//! `row[0] * ((acc / T as f64).exp() as f32)`.  Reordering only happens
+//! *across* rows, which share no state.  `rust/tests/predictor_props.rs`
+//! asserts the equality over seeded random forests; the determinism
+//! contracts (golden reports, shard/queue matrix, fuzz smoke) therefore
+//! hold unchanged with this engine serving every prediction.
+
+use super::forest_params::ForestParams;
+
+/// Rows standardised and traversed per block: big enough to amortise the
+/// per-tree tensor loads, small enough that a block of standardised rows
+/// (`BLOCK × n_features` f32) plus accumulators stays cache-resident.
+pub const BLOCK: usize = 64;
+
+/// Reusable per-call buffers for [`FlatForest::predict_into`] — hold one
+/// per thread (the native predictor keeps one behind a mutex) and the
+/// steady-state batch path allocates nothing.
+#[derive(Debug, Default, Clone)]
+pub struct FlatScratch {
+    /// Standardised feature block, row-major `[rows_in_block × F]`.
+    std_rows: Vec<f32>,
+    /// Per-row leaf-sum accumulators for the current block.
+    acc: Vec<f64>,
+    /// Raw (un-standardised) feature 0 of each block row — the solo
+    /// latency the final prediction scales.
+    solo: Vec<f32>,
+}
+
+/// The flattened forest: same parameters as [`ForestParams`], contiguous
+/// layout, batched evaluation.
+#[derive(Debug, Clone)]
+pub struct FlatForest {
+    n_trees: usize,
+    depth: usize,
+    n_features: usize,
+    n_internal: usize,
+    n_leaves: usize,
+    /// `[T × (2^D − 1)]` split feature indices, level order per tree.
+    feature: Vec<i32>,
+    /// `[T × (2^D − 1)]` standardised split thresholds.
+    threshold: Vec<f32>,
+    /// `[T × 2^D]` leaf values (log-slowdown space).
+    leaf: Vec<f32>,
+    /// `[F]` standardisation mean.
+    mean: Vec<f32>,
+    /// `[F]` standardisation std — kept as-is and *divided* by, so the
+    /// standardise expression matches the reference walk bit for bit.
+    std: Vec<f32>,
+}
+
+impl FlatForest {
+    pub fn from_params(p: &ForestParams) -> Self {
+        Self {
+            n_trees: p.n_trees,
+            depth: p.depth,
+            n_features: p.n_features,
+            n_internal: p.n_internal(),
+            n_leaves: 1 << p.depth,
+            feature: p.flat_feature(),
+            threshold: p.flat_threshold(),
+            leaf: p.flat_leaf(),
+            mean: p.mean.clone(),
+            std: p.std.clone(),
+        }
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.n_trees
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Predict a whole row-major batch (`rows × n_features` flat values)
+    /// into `out` (cleared first), reusing `scratch` across calls.
+    ///
+    /// # Panics
+    ///
+    /// Panics (debug) if `data.len()` is not a multiple of `n_features`.
+    pub fn predict_into(&self, data: &[f32], scratch: &mut FlatScratch, out: &mut Vec<f32>) {
+        let f = self.n_features;
+        debug_assert_eq!(data.len() % f, 0, "flat batch width mismatch");
+        let n_rows = data.len() / f;
+        out.clear();
+        out.reserve(n_rows);
+        scratch.std_rows.resize(BLOCK * f, 0.0);
+        scratch.acc.resize(BLOCK, 0.0);
+        scratch.solo.resize(BLOCK, 0.0);
+
+        let mut base = 0;
+        while base < n_rows {
+            let rows_here = BLOCK.min(n_rows - base);
+            // standardise the block once; remember each row's raw solo head
+            for r in 0..rows_here {
+                let row = &data[(base + r) * f..(base + r + 1) * f];
+                scratch.solo[r] = row[0];
+                let dst = &mut scratch.std_rows[r * f..(r + 1) * f];
+                for i in 0..f {
+                    dst[i] = (row[i] - self.mean[i]) / self.std[i];
+                }
+                scratch.acc[r] = 0.0;
+            }
+            // tree-major: each tree's threshold/leaf lines stay hot across
+            // the whole block; per-row accumulation order stays t = 0..T,
+            // exactly the reference walk's order
+            for t in 0..self.n_trees {
+                let feat = &self.feature[t * self.n_internal..(t + 1) * self.n_internal];
+                let thr = &self.threshold[t * self.n_internal..(t + 1) * self.n_internal];
+                let leaf = &self.leaf[t * self.n_leaves..(t + 1) * self.n_leaves];
+                for r in 0..rows_here {
+                    let x = &scratch.std_rows[r * f..(r + 1) * f];
+                    let mut idx = 0usize;
+                    for _ in 0..self.depth {
+                        let split = x[feat[idx] as usize];
+                        let go_right = split > thr[idx];
+                        idx = 2 * idx + 1 + go_right as usize;
+                    }
+                    scratch.acc[r] += leaf[idx - self.n_internal] as f64;
+                }
+            }
+            for r in 0..rows_here {
+                let slowdown = (scratch.acc[r] / self.n_trees as f64).exp() as f32;
+                out.push(scratch.solo[r] * slowdown);
+            }
+            base += rows_here;
+        }
+    }
+
+    /// Convenience wrapper allocating the output (tests, benches).
+    pub fn predict(&self, data: &[f32], scratch: &mut FlatScratch) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.predict_into(data, scratch, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeForest;
+    use crate::util::rng::Rng;
+
+    fn random_forest(rng: &mut Rng, n_trees: usize, depth: usize, n_features: usize) -> ForestParams {
+        let n_internal = (1usize << depth) - 1;
+        let n_leaves = 1usize << depth;
+        let params = ForestParams {
+            n_trees,
+            depth,
+            n_features,
+            feature: (0..n_trees)
+                .map(|_| (0..n_internal).map(|_| rng.below(n_features as u64) as i32).collect())
+                .collect(),
+            threshold: (0..n_trees)
+                .map(|_| (0..n_internal).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect())
+                .collect(),
+            leaf: (0..n_trees)
+                .map(|_| (0..n_leaves).map(|_| rng.range_f64(-0.5, 0.5) as f32).collect())
+                .collect(),
+            mean: (0..n_features).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect(),
+            std: (0..n_features).map(|_| rng.range_f64(0.5, 2.0) as f32).collect(),
+            test_error: 0.0,
+            fit_seconds: 0.0,
+        };
+        params.validate().unwrap();
+        params
+    }
+
+    #[test]
+    fn flat_matches_reference_bit_for_bit_across_block_boundaries() {
+        let mut rng = Rng::seed_from(0xF1A7);
+        let params = random_forest(&mut rng, 9, 5, 17);
+        let forest = NativeForest::new(params.clone());
+        let flat = FlatForest::from_params(&params);
+        let mut scratch = FlatScratch::default();
+        // sizes straddling the block boundary: 1, BLOCK-1, BLOCK, BLOCK+1, 3*BLOCK+5
+        for n in [1usize, BLOCK - 1, BLOCK, BLOCK + 1, 3 * BLOCK + 5] {
+            let data: Vec<f32> =
+                (0..n * 17).map(|_| rng.range_f64(-10.0, 10.0) as f32).collect();
+            let got = flat.predict(&data, &mut scratch);
+            for (r, g) in got.iter().enumerate() {
+                let want = forest.predict_one(&data[r * 17..(r + 1) * 17]);
+                assert_eq!(g.to_bits(), want.to_bits(), "row {r} of {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_does_not_leak_state_between_batches() {
+        let mut rng = Rng::seed_from(0xF1A8);
+        let params = random_forest(&mut rng, 4, 3, 6);
+        let flat = FlatForest::from_params(&params);
+        let forest = NativeForest::new(params);
+        let mut scratch = FlatScratch::default();
+        let big: Vec<f32> = (0..100 * 6).map(|_| rng.range_f64(-5.0, 5.0) as f32).collect();
+        let _ = flat.predict(&big, &mut scratch);
+        let small: Vec<f32> = (0..2 * 6).map(|_| rng.range_f64(-5.0, 5.0) as f32).collect();
+        let got = flat.predict(&small, &mut scratch);
+        assert_eq!(got.len(), 2);
+        for r in 0..2 {
+            assert_eq!(
+                got[r].to_bits(),
+                forest.predict_one(&small[r * 6..(r + 1) * 6]).to_bits()
+            );
+        }
+    }
+}

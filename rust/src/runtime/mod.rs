@@ -2,8 +2,10 @@
 //! inference to the scheduler.
 //!
 //! Two interchangeable backends sit behind [`Predictor`]: the pure-Rust
-//! [`NativeForest`] traversal (always available, the default build) and
-//! the PJRT/XLA path below (behind the off-by-default `pjrt` feature).
+//! path (always available, the default build — served by the flattened
+//! batched [`FlatForest`] engine, with the scalar [`NativeForest`] walk
+//! kept as the bit-identical reference) and the PJRT/XLA path below
+//! (behind the off-by-default `pjrt` feature).
 //!
 //! `make artifacts` (Python, build time only) lowers the L2 JAX graph —
 //! feature standardisation → Pallas forest traversal → exp — to **HLO
@@ -17,10 +19,12 @@
 //! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids.
 
+mod flat;
 mod forest_params;
 mod native;
 mod predictor;
 
+pub use flat::{FlatForest, FlatScratch, BLOCK};
 pub use forest_params::ForestParams;
 pub use native::NativeForest;
 #[cfg(feature = "pjrt")]
@@ -30,7 +34,9 @@ pub use predictor::{NativeForestPredictor, Predictor};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Global counters for model-inference accounting (Figs. 11/12 report
-/// inferences-per-schedule; the schedulers bump these).
+/// inferences-per-schedule; the schedulers bump these).  The memo pair
+/// tracks the capacity-sweep memoization layer: a hit means a whole
+/// batched sweep was answered from cache without touching the predictor.
 #[derive(Debug, Default)]
 pub struct InferenceStats {
     /// Number of predictor invocations (each is one batched PJRT execute).
@@ -39,6 +45,10 @@ pub struct InferenceStats {
     pub rows: AtomicU64,
     /// Cumulative wall-clock nanoseconds spent inside the predictor.
     pub nanos: AtomicU64,
+    /// Capacity sweeps answered from the mix-signature memo (no inference).
+    pub memo_hits: AtomicU64,
+    /// Capacity sweeps that missed the memo and ran the batched inference.
+    pub memo_misses: AtomicU64,
 }
 
 impl InferenceStats {
@@ -46,6 +56,15 @@ impl InferenceStats {
         self.calls.fetch_add(1, Ordering::Relaxed);
         self.rows.fetch_add(rows as u64, Ordering::Relaxed);
         self.nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    /// Record one memoized-sweep lookup outcome.
+    pub fn record_memo(&self, hit: bool) {
+        if hit {
+            self.memo_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.memo_misses.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     pub fn snapshot(&self) -> (u64, u64, u64) {
@@ -56,9 +75,19 @@ impl InferenceStats {
         )
     }
 
+    /// `(memo_hits, memo_misses)` across every memoized sweep so far.
+    pub fn memo_snapshot(&self) -> (u64, u64) {
+        (
+            self.memo_hits.load(Ordering::Relaxed),
+            self.memo_misses.load(Ordering::Relaxed),
+        )
+    }
+
     pub fn reset(&self) {
         self.calls.store(0, Ordering::Relaxed);
         self.rows.store(0, Ordering::Relaxed);
         self.nanos.store(0, Ordering::Relaxed);
+        self.memo_hits.store(0, Ordering::Relaxed);
+        self.memo_misses.store(0, Ordering::Relaxed);
     }
 }

@@ -32,9 +32,17 @@ impl NativeForest {
 
     pub fn predict_one(&self, row: &[f32]) -> f32 {
         debug_assert_eq!(row.len(), self.params.n_features);
-        // standardise once into a stack-friendly buffer
-        let mut x = [0f32; 128];
-        let x = &mut x[..row.len()];
+        // standardise once; stack buffer for the common small dims, heap
+        // fallback past it (a fixed [0f32; 128] would panic on wider
+        // feature spaces — Gsight-style instance-granularity rows are 404)
+        let mut small = [0f32; 128];
+        let mut large: Vec<f32>;
+        let x: &mut [f32] = if row.len() <= small.len() {
+            &mut small[..row.len()]
+        } else {
+            large = vec![0f32; row.len()];
+            &mut large
+        };
         for i in 0..row.len() {
             x[i] = (row[i] - self.params.mean[i]) / self.params.std[i];
         }
@@ -54,3 +62,26 @@ impl NativeForest {
         row[0] * (acc / self.params.n_trees as f64).exp() as f32
     }
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predict_one_handles_forests_wider_than_the_stack_buffer() {
+        // regression: a fixed [0f32; 128] standardise buffer panicked on
+        // any forest with n_features > 128
+        let n_features = 200;
+        let forest = NativeForest::new(ForestParams::synthetic_stub(n_features, 0.1, 0.1));
+        let row: Vec<f32> = (0..n_features).map(|i| i as f32).collect();
+        let got = forest.predict_one(&row);
+        // stump splits feature 0 at 0.0; row[0] = 0.0 is not > 0.0, so
+        // every tree lands on the `lo` leaf: 0.0 * exp(0.1) = 0.0
+        assert_eq!(got, 0.0);
+        let mut row = row;
+        row[0] = 10.0;
+        let want = 10.0f32 * (0.1f64).exp() as f32;
+        assert_eq!(forest.predict_one(&row).to_bits(), want.to_bits());
+    }
+}
+

@@ -3,9 +3,11 @@
 //! `pjrt` feature) the PJRT-backed `PjrtPredictor`:
 //! compile-once, pad-and-execute-batched.
 
+use super::flat::{FlatForest, FlatScratch};
 use super::forest_params::ForestParams;
 use super::native::NativeForest;
 use super::InferenceStats;
+use crate::model::FeatureMatrix;
 use anyhow::Result;
 #[cfg(feature = "pjrt")]
 use anyhow::{anyhow, bail, Context};
@@ -18,10 +20,22 @@ use std::time::Instant;
 ///
 /// Two implementations: `PjrtPredictor` (the production path — AOT HLO
 /// through the PJRT CPU client, behind the `pjrt` feature) and
-/// [`NativeForest`] via this blanket impl (tests / perf baseline).
+/// [`NativeForestPredictor`] (tests / perf baseline / default build).
+///
+/// [`Predictor::predict_batch`] is the hot-path entry point: it borrows a
+/// row-major [`FeatureMatrix`], so the capacity sweep hands over one flat
+/// buffer instead of a `Vec` per row.  [`Predictor::predict`] adapts
+/// per-row `Vec`s for callers that hold them (JSON-loaded check vectors,
+/// tests) by packing them into a matrix first.
 pub trait Predictor: Send + Sync {
-    /// Batched prediction; one output per input row.
-    fn predict(&self, rows: &[Vec<f32>]) -> Result<Vec<f32>>;
+    /// Batched prediction over a borrowed row-major matrix; one output
+    /// per input row.
+    fn predict_batch(&self, batch: &FeatureMatrix) -> Result<Vec<f32>>;
+
+    /// Compatibility adapter: batched prediction over per-row `Vec`s.
+    fn predict(&self, rows: &[Vec<f32>]) -> Result<Vec<f32>> {
+        self.predict_batch(&FeatureMatrix::from_rows(self.n_features(), rows)?)
+    }
 
     /// Inference accounting shared with the schedulers.
     fn stats(&self) -> &InferenceStats;
@@ -30,10 +44,20 @@ pub trait Predictor: Send + Sync {
 }
 
 impl Predictor for NativeForestPredictor {
-    fn predict(&self, rows: &[Vec<f32>]) -> Result<Vec<f32>> {
+    fn predict_batch(&self, batch: &FeatureMatrix) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            batch.n_features() == self.flat.n_features(),
+            "feature matrix is {}-wide, forest expects {}",
+            batch.n_features(),
+            self.flat.n_features()
+        );
         let t0 = Instant::now();
-        let out = self.forest.predict(rows);
-        self.stats.record(rows.len(), t0.elapsed().as_nanos() as u64);
+        let mut out = Vec::new();
+        {
+            let mut scratch = self.scratch.lock().unwrap();
+            self.flat.predict_into(batch.data(), &mut scratch, &mut out);
+        }
+        self.stats.record(batch.n_rows(), t0.elapsed().as_nanos() as u64);
         Ok(out)
     }
 
@@ -46,15 +70,36 @@ impl Predictor for NativeForestPredictor {
     }
 }
 
-/// [`NativeForest`] wrapped with inference accounting.
+/// The pure-Rust forest wrapped with inference accounting.  Serving runs
+/// on the flattened SoA engine ([`FlatForest`]); the reference
+/// [`NativeForest`] walk is kept alongside for equality tests and as the
+/// baseline the `forest_inference` bench measures against.  The two are
+/// bit-identical by construction (see [`super::flat`]).
 pub struct NativeForestPredictor {
     forest: NativeForest,
+    flat: FlatForest,
+    /// Reusable standardise/accumulate buffers for the flat engine.
+    /// `Predictor` takes `&self` and must stay `Sync`; uncontended mutex
+    /// acquisition is noise next to a batched traversal, and each control
+    /// plane shard drives its predictions sequentially anyway.
+    scratch: std::sync::Mutex<FlatScratch>,
     stats: InferenceStats,
 }
 
 impl NativeForestPredictor {
     pub fn new(params: ForestParams) -> Self {
-        Self { forest: NativeForest::new(params), stats: InferenceStats::default() }
+        let flat = FlatForest::from_params(&params);
+        Self {
+            forest: NativeForest::new(params),
+            flat,
+            scratch: std::sync::Mutex::new(FlatScratch::default()),
+            stats: InferenceStats::default(),
+        }
+    }
+
+    /// The reference traversal this predictor's flat engine must match.
+    pub fn reference(&self) -> &NativeForest {
+        &self.forest
     }
 }
 
@@ -201,12 +246,14 @@ impl PjrtPredictor {
     /// an 84-row sweep runs as 64+16+8(pad 4) instead of one padded
     /// 256-row call.  (§Perf: this cut the capacity sweep ~2.6x — padding
     /// waste dominated the PJRT execution time.)
-    fn run(&self, rows: &[Vec<f32>]) -> Result<Vec<f32>> {
+    fn run(&self, batch: &FeatureMatrix) -> Result<Vec<f32>> {
         let f = self.params.n_features;
-        let mut out = Vec::with_capacity(rows.len());
+        anyhow::ensure!(batch.n_features() == f, "feature matrix has wrong dim");
+        let n_rows = batch.n_rows();
+        let mut out = Vec::with_capacity(n_rows);
         let mut off = 0;
-        while off < rows.len() {
-            let remaining = rows.len() - off;
+        while off < n_rows {
+            let remaining = n_rows - off;
             // largest variant <= remaining, else the smallest that fits
             let v = self
                 .variants
@@ -216,12 +263,10 @@ impl PjrtPredictor {
                 .or_else(|| self.variants.iter().find(|v| v.batch >= remaining))
                 .unwrap_or_else(|| self.variants.last().unwrap());
             let chunk = remaining.min(v.batch);
-            // pad to the variant's batch
+            // pad to the variant's batch: one contiguous copy out of the
+            // row-major matrix, then zero fill
             let mut flat = vec![0f32; v.batch * f];
-            for (i, row) in rows[off..off + chunk].iter().enumerate() {
-                anyhow::ensure!(row.len() == f, "feature row has wrong dim");
-                flat[i * f..(i + 1) * f].copy_from_slice(row);
-            }
+            flat[..chunk * f].copy_from_slice(&batch.data()[off * f..(off + chunk) * f]);
             let x = self
                 .client
                 .buffer_from_host_buffer(&flat, &[v.batch, f], None)?;
@@ -239,14 +284,14 @@ impl PjrtPredictor {
 
 #[cfg(feature = "pjrt")]
 impl Predictor for PjrtPredictor {
-    fn predict(&self, rows: &[Vec<f32>]) -> Result<Vec<f32>> {
-        if rows.is_empty() {
+    fn predict_batch(&self, batch: &FeatureMatrix) -> Result<Vec<f32>> {
+        if batch.is_empty() {
             return Ok(Vec::new());
         }
         let _guard = self.lock.lock().unwrap();
         let t0 = Instant::now();
-        let out = self.run(rows)?;
-        self.stats.record(rows.len(), t0.elapsed().as_nanos() as u64);
+        let out = self.run(batch)?;
+        self.stats.record(batch.n_rows(), t0.elapsed().as_nanos() as u64);
         Ok(out)
     }
 

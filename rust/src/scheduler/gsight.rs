@@ -18,6 +18,7 @@ use crate::catalog::{Catalog, FunctionId};
 use crate::cluster::{Cluster, NodeId};
 use crate::interference::NodeMix;
 use crate::model::features::FeatureBuilder;
+use crate::model::FeatureMatrix;
 use crate::runtime::Predictor;
 use anyhow::Result;
 use std::sync::Arc;
@@ -54,7 +55,7 @@ impl GsightScheduler {
         cat: &Catalog,
         mix: &NodeMix,
         function: FunctionId,
-        rows: &mut Vec<Vec<f32>>,
+        rows: &mut FeatureMatrix,
         qos: &mut Vec<f64>,
     ) -> usize {
         let mut entries = mix.entries.clone();
@@ -69,9 +70,7 @@ impl GsightScheduler {
             if *sat == 0 {
                 continue;
             }
-            let mut r = Vec::with_capacity(crate::model::N_FEATURES);
-            builder.row_into(*f, &mut r);
-            rows.push(r);
+            builder.row_into_matrix(*f, rows);
             qos.push(self.qos_headroom * cat.get(*f).qos_latency_ms);
             n += 1;
         }
@@ -105,14 +104,14 @@ impl GsightScheduler {
         if candidates.is_empty() {
             return Ok((None, 0));
         }
-        let mut rows = Vec::new();
+        let mut rows = FeatureMatrix::new(crate::model::N_FEATURES);
         let mut qos = Vec::new();
         let mut spans = Vec::new();
         for node in &candidates {
             let n = self.candidate_rows(cat, &view.mix(*node), function, &mut rows, &mut qos);
             spans.push(n);
         }
-        let preds = self.predictor.predict(&rows)?;
+        let preds = self.predictor.predict_batch(&rows)?;
         let mut off = 0;
         for (i, n) in spans.iter().enumerate() {
             let ok = (off..off + n).all(|j| (preds[j] as f64) <= qos[j]);

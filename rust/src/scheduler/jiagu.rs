@@ -23,7 +23,7 @@ use super::{
     CandidateOrders, ClusterView, DeferredUpdate, Plan, PlanBuilder, Scheduler,
     SchedulerFeedback,
 };
-use crate::capacity::{self, CapacityConfig, CapacityTable};
+use crate::capacity::{self, CapacityConfig, CapacityTable, SweepCost, SweepMemo};
 use crate::catalog::{Catalog, FunctionId};
 use crate::cluster::{Cluster, NodeId};
 use crate::runtime::Predictor;
@@ -45,6 +45,12 @@ pub struct JiaguScheduler {
     isolated: HashSet<FunctionId>,
     /// Incrementally-maintained candidate rankings (no per-eval re-sort).
     orders: CandidateOrders,
+    /// Memo of completed capacity sweeps keyed by canonical mix signature
+    /// (capacity is pure in `(target, mix)` for this scheduler's fixed
+    /// catalog and config).  Per-scheduler — under sharding each cell owns
+    /// its own memo, so hit/miss sequences are cell-local and the merged
+    /// report stays independent of shard thread interleaving.
+    memo: SweepMemo,
 }
 
 impl JiaguScheduler {
@@ -57,7 +63,14 @@ impl JiaguScheduler {
             slow_decisions: 0,
             isolated: HashSet::new(),
             orders: CandidateOrders::new(),
+            memo: SweepMemo::default(),
         }
+    }
+
+    /// `(hits, misses)` of the capacity-sweep memo over this scheduler's
+    /// lifetime.
+    pub fn memo_counts(&self) -> (u64, u64) {
+        self.memo.counts()
     }
 
     /// Apply / clear the §6 unpredictability fallback for a function.
@@ -120,10 +133,11 @@ impl JiaguScheduler {
     }
 
     /// Capacity of `function` on `node` under the planning view.  A table
-    /// hit is the fast path; a miss runs one batched sweep on the critical
-    /// path (`slow`/`critical` account for it).  Sweep results persist in
-    /// the table for real nodes (§4.2 warm-up) and in `local` for nodes
-    /// the plan itself adds.
+    /// hit is the fast path; a miss is a slow-path sweep — answered from
+    /// the mix-signature memo when possible, batched-inferred otherwise
+    /// (`cost`/`slow` account for it).  Sweep results persist in the
+    /// table for real nodes (§4.2 warm-up) and in `local` for nodes the
+    /// plan itself adds.
     fn planned_capacity(
         &mut self,
         cat: &Catalog,
@@ -131,7 +145,7 @@ impl JiaguScheduler {
         node: NodeId,
         function: FunctionId,
         local: &mut HashMap<NodeId, u32>,
-        critical: &mut u64,
+        cost: &mut SweepCost,
         slow: &mut bool,
     ) -> Result<u32> {
         if node < pb.base_nodes() {
@@ -145,14 +159,15 @@ impl JiaguScheduler {
         // the sweep reports its own inference cost — never a delta of the
         // predictor's shared stats counters, which sibling shard threads
         // also bump (see compute_capacity_counted)
-        let (cap, inferences) = capacity::compute_capacity_counted(
+        let (cap, sweep_cost) = capacity::compute_capacity_memoized(
             cat,
             &mix,
             function,
             self.predictor.as_ref(),
             &self.cfg,
+            &mut self.memo,
         )?;
-        *critical += inferences;
+        cost.absorb(sweep_cost);
         *slow = true;
         if node < pb.base_nodes() {
             let v = self.tables[node].version();
@@ -194,7 +209,7 @@ impl Scheduler for JiaguScheduler {
             self.fast_decisions += 1;
             return Ok(pb.finish(false, 0, t0.elapsed().as_nanos() as u64));
         }
-        let mut critical = 0u64;
+        let mut cost = SweepCost::default();
         let mut slow = false;
         let mut remaining = count;
         // ranked once per call from the incremental cache (a hit skips
@@ -209,7 +224,7 @@ impl Scheduler for JiaguScheduler {
                 let (sat, cached) = pb.counts(node, function);
                 let current = sat + cached;
                 let cap = self.planned_capacity(
-                    cat, &pb, node, function, &mut local, &mut critical, &mut slow,
+                    cat, &pb, node, function, &mut local, &mut cost, &mut slow,
                 )?;
                 if cap > current {
                     let fit = (cap - current).min(remaining);
@@ -233,7 +248,10 @@ impl Scheduler for JiaguScheduler {
         } else {
             self.fast_decisions += 1;
         }
-        Ok(pb.finish(slow, critical, t0.elapsed().as_nanos() as u64))
+        let mut plan = pb.finish(slow, cost.inferences, t0.elapsed().as_nanos() as u64);
+        plan.memo_hits = cost.memo_hits;
+        plan.memo_misses = cost.memo_misses;
+        Ok(plan)
     }
 
     /// Compute the node's asynchronous table refresh (§4.3) from the
@@ -262,23 +280,31 @@ impl Scheduler for JiaguScheduler {
                 targets.insert(*f);
             }
         }
+        // sweep in function-id order: the memo's bounded clear makes
+        // hit/miss sequences order-sensitive, and HashSet iteration order
+        // is seeded per process — sorting keeps the refresh deterministic
+        let mut targets: Vec<FunctionId> = targets.into_iter().collect();
+        targets.sort_unstable();
         let mut entries = HashMap::new();
-        let mut inferences = 0u64;
+        let mut cost = SweepCost::default();
         for f in targets {
-            let (cap, sweep_inferences) = capacity::compute_capacity_counted(
+            let (cap, sweep_cost) = capacity::compute_capacity_memoized(
                 cat,
                 &mix,
                 f,
                 self.predictor.as_ref(),
                 &self.cfg,
+                &mut self.memo,
             )?;
-            inferences += sweep_inferences;
+            cost.absorb(sweep_cost);
             entries.insert(f, capacity::CapacityEntry { capacity: cap, mix_version: version });
         }
         Ok(Some(DeferredUpdate {
             node,
             nanos: t0.elapsed().as_nanos() as u64,
-            inferences,
+            inferences: cost.inferences,
+            memo_hits: cost.memo_hits,
+            memo_misses: cost.memo_misses,
             version,
             entries,
         }))
@@ -305,12 +331,13 @@ impl Scheduler for JiaguScheduler {
             Some(e) => e.capacity,
             None => {
                 let mix = cluster.mix(node);
-                let cap = capacity::compute_capacity(
+                let (cap, _) = capacity::compute_capacity_memoized(
                     cat,
                     &mix,
                     function,
                     self.predictor.as_ref(),
                     &self.cfg,
+                    &mut self.memo,
                 )?;
                 let v = self.tables[node].version();
                 self.tables[node].insert(function, cap, v);
@@ -349,8 +376,8 @@ impl Scheduler for JiaguScheduler {
     ) -> Result<Option<NodeId>> {
         self.ensure_tables(cluster.n_nodes());
         // split borrows: the ranking slice stays borrowed from `orders`
-        // while the loop body warms `tables`
-        let Self { orders, tables, predictor, cfg, .. } = self;
+        // while the loop body warms `tables` and the sweep memo
+        let Self { orders, tables, predictor, cfg, memo, .. } = self;
         for &node in orders.order(cluster, function) {
             if node == exclude {
                 continue;
@@ -361,12 +388,13 @@ impl Scheduler for JiaguScheduler {
                 Some(e) => e.capacity,
                 None => {
                     let mix = cluster.mix(node);
-                    let cap = capacity::compute_capacity(
+                    let (cap, _) = capacity::compute_capacity_memoized(
                         cat,
                         &mix,
                         function,
                         predictor.as_ref(),
                         cfg,
+                        memo,
                     )?;
                     let v = tables[node].version();
                     tables[node].insert(function, cap, v);
@@ -461,11 +489,11 @@ mod tests {
     }
 
     impl Predictor for MixSensitivePredictor {
-        fn predict(&self, rows: &[Vec<f32>]) -> Result<Vec<f32>> {
-            self.stats.record(rows.len(), 0);
+        fn predict_batch(&self, batch: &crate::model::FeatureMatrix) -> Result<Vec<f32>> {
+            self.stats.record(batch.n_rows(), 0);
             // row[0] = target solo latency, row[42] = total saturated on
             // the node; feasible while 1 + 0.04·tot ≤ 0.95 · 1.2 ⇒ tot ≤ 3
-            Ok(rows.iter().map(|r| r[0] * (1.0 + 0.04 * r[42])).collect())
+            Ok(batch.rows().map(|r| r[0] * (1.0 + 0.04 * r[42])).collect())
         }
 
         fn stats(&self) -> &InferenceStats {
@@ -519,6 +547,27 @@ mod tests {
         assert_eq!(s.capacity_table(0).get(0).unwrap().capacity, 1);
         let after = s.schedule(&cat, &cluster, 0, 1, 3.0).unwrap();
         assert_eq!(after.nodes_added(), 1, "fresh capacity forces growth");
+    }
+
+    #[test]
+    fn repeated_mix_signatures_hit_the_sweep_memo() {
+        let cat = test_catalog();
+        let cluster = Cluster::new(3); // three identical empty nodes
+        let cfg = CapacityConfig {
+            max_candidates: 2,
+            max_instances_per_node: 2,
+            ..Default::default()
+        };
+        let mut s = JiaguScheduler::new(stub_predictor(), cfg, 3);
+        // 6 instances over nodes of capacity 2: the first empty-node sweep
+        // misses, every further empty node shares the (f, []) signature
+        let plan = s.schedule(&cat, &cluster, 0, 6, 0.0).unwrap();
+        assert_eq!(plan.placements_planned(), 6);
+        assert_eq!(plan.memo_misses, 1);
+        assert_eq!(plan.memo_hits, 2);
+        assert_eq!(plan.critical_inferences, 1, "only the miss paid an inference");
+        assert_eq!(plan.path(), super::super::Path::Slow, "a memo hit is still a table miss");
+        assert_eq!(s.memo_counts(), (2, 1));
     }
 
     #[test]

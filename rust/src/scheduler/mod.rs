@@ -111,6 +111,11 @@ pub struct Plan {
     pub decision_nanos: u64,
     /// Model inferences on the critical path.
     pub critical_inferences: u64,
+    /// Capacity sweeps this decision answered from the mix-signature memo
+    /// (each hit is a whole batched inference avoided).
+    pub memo_hits: u64,
+    /// Capacity sweeps this decision ran because the memo missed.
+    pub memo_misses: u64,
     /// Node count of the cluster the plan was computed against — virtual
     /// node ids start here, and `commit` refuses a cluster whose size no
     /// longer matches (stale plans must not remap onto the wrong nodes).
@@ -218,6 +223,10 @@ pub struct DeferredUpdate {
     pub nanos: u64,
     /// Model inferences the computation spent.
     pub inferences: u64,
+    /// Per-function sweeps inside the refresh answered from the memo.
+    pub memo_hits: u64,
+    /// Per-function sweeps that missed the memo and ran the predictor.
+    pub memo_misses: u64,
     /// Node-mix version the refresh was computed under (stale refreshes
     /// that complete out of order are dropped).
     pub version: u64,
@@ -350,6 +359,10 @@ impl<'a> PlanBuilder<'a> {
             slow_path_used,
             decision_nanos,
             critical_inferences,
+            // memo accounting is stamped by the scheduler after sealing
+            // (only Jiagu's sweeps have a memo to report)
+            memo_hits: 0,
+            memo_misses: 0,
             base_nodes: self.cluster.n_nodes(),
         }
     }

@@ -88,6 +88,11 @@ pub struct RunReport {
     pub inferences_per_schedule: f64,
     pub critical_inferences: u64,
     pub async_inferences: u64,
+    /// Capacity sweeps (critical path + async refresh) answered from the
+    /// scheduler's mix-signature memo — inferences avoided outright.
+    pub memo_hits: u64,
+    /// Capacity sweeps that missed the memo and ran the batched inference.
+    pub memo_misses: u64,
     pub schedule_calls: u64,
     pub instances_started: u64,
     pub fast_decisions: u64,
@@ -223,6 +228,8 @@ impl RunReport {
         self.events_processed += other.events_processed;
         self.critical_inferences += other.critical_inferences;
         self.async_inferences += other.async_inferences;
+        self.memo_hits += other.memo_hits;
+        self.memo_misses += other.memo_misses;
         self.schedule_calls += other.schedule_calls;
         self.instances_started += other.instances_started;
         self.fast_decisions += other.fast_decisions;
@@ -387,6 +394,10 @@ pub struct ReportBuilder {
     evicted: u64,
     async_nanos: u64,
     async_inferences: u64,
+    /// Memo outcomes of async-refresh sweeps (critical-path ones arrive
+    /// through `costs`; the two sets are disjoint).
+    memo_hits: u64,
+    memo_misses: u64,
     events_processed: u64,
     arrivals_dropped: u64,
 }
@@ -411,6 +422,8 @@ impl ReportBuilder {
             evicted: 0,
             async_nanos: 0,
             async_inferences: 0,
+            memo_hits: 0,
+            memo_misses: 0,
             events_processed: 0,
             arrivals_dropped: 0,
         }
@@ -458,6 +471,8 @@ impl ReportBuilder {
         self.evicted += (ev.evicted + ev.evicted_direct) as u64;
         self.async_nanos += ev.async_nanos;
         self.async_inferences += ev.async_inferences;
+        self.memo_hits += ev.memo_hits;
+        self.memo_misses += ev.memo_misses;
         self.events_processed += ev.events_processed;
     }
 
@@ -489,6 +504,8 @@ impl ReportBuilder {
             inferences_per_schedule: 0.0,
             critical_inferences: self.costs.critical_inferences,
             async_inferences: self.async_inferences,
+            memo_hits: self.costs.memo_hits + self.memo_hits,
+            memo_misses: self.costs.memo_misses + self.memo_misses,
             schedule_calls: self.costs.calls,
             instances_started: self.costs.instances_started,
             fast_decisions: self.costs.fast_decisions,

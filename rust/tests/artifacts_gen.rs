@@ -149,6 +149,7 @@ fn committed_bench_snapshots_parse_and_stay_machine_normalized() {
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
     for (file, bench) in [
         ("BENCH_event_queue.json", "event_queue"),
+        ("BENCH_forest_inference.json", "forest_inference"),
         ("BENCH_router_hotpath.json", "router_hotpath"),
         ("BENCH_shard_scaling.json", "shard_scaling"),
         ("BENCH_trace_replay.json", "trace_replay"),
@@ -169,6 +170,12 @@ fn committed_bench_snapshots_parse_and_stay_machine_normalized() {
     let eq = Json::parse_file(&root.join("BENCH_event_queue.json")).unwrap();
     let ratios = eq.get("wheel_over_heap_throughput").unwrap();
     for key in ["bulk_drain", "steady_churn", "million_churn"] {
+        assert!(ratios.get(key).unwrap().as_f64().unwrap() >= 0.0, "ratio {key}");
+    }
+    // the forest-inference snapshot carries the flat-vs-reference ratios
+    let fi = Json::parse_file(&root.join("BENCH_forest_inference.json")).unwrap();
+    let ratios = fi.get("flat_over_reference_throughput").unwrap();
+    for key in ["batch_1", "batch_32", "batch_1024"] {
         assert!(ratios.get(key).unwrap().as_f64().unwrap() >= 0.0, "ratio {key}");
     }
 }

@@ -1,0 +1,173 @@
+//! Prediction hot-path properties: the flattened batched engine must be
+//! bit-identical to the scalar reference walk, the memoized capacity
+//! sweep must change *counts* only (never a placement), and both must
+//! hold under the full determinism matrix (shards 1/2/4 × queue
+//! heap/wheel on the latency-golden scenario).
+//!
+//! The random-forest tests are self-contained; the golden-scenario tests
+//! are artifact-gated like `e2e_sim.rs`.
+
+use jiagu::catalog::Catalog;
+use jiagu::engine::QueueKind;
+use jiagu::model::FeatureMatrix;
+use jiagu::runtime::{
+    FlatForest, FlatScratch, ForestParams, NativeForest, NativeForestPredictor, Predictor, BLOCK,
+};
+use jiagu::sim::load_predictor;
+use jiagu::util::rng::Rng;
+
+fn random_forest(rng: &mut Rng, n_trees: usize, depth: usize, n_features: usize) -> ForestParams {
+    let n_internal = (1usize << depth) - 1;
+    let n_leaves = 1usize << depth;
+    let params = ForestParams {
+        n_trees,
+        depth,
+        n_features,
+        feature: (0..n_trees)
+            .map(|_| (0..n_internal).map(|_| rng.below(n_features as u64) as i32).collect())
+            .collect(),
+        threshold: (0..n_trees)
+            .map(|_| (0..n_internal).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect())
+            .collect(),
+        leaf: (0..n_trees)
+            .map(|_| (0..n_leaves).map(|_| rng.range_f64(-0.4, 0.4) as f32).collect())
+            .collect(),
+        mean: (0..n_features).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect(),
+        std: (0..n_features).map(|_| rng.range_f64(0.5, 2.0) as f32).collect(),
+        test_error: 0.0,
+        fit_seconds: 0.0,
+    };
+    params.validate().unwrap();
+    params
+}
+
+/// The core tentpole contract, swept across forest shapes: every flat
+/// prediction is bit-identical to the reference walk — including a
+/// forest wider than `predict_one`'s 128-feature stack fast path and
+/// batch sizes straddling the [`BLOCK`] boundary.
+#[test]
+fn flat_engine_is_bit_identical_to_reference_across_random_forests() {
+    let mut rng = Rng::seed_from(0x9E3779);
+    // (n_trees, depth, n_features); 150 features exercises the reference
+    // walk's heap fallback as well
+    for (n_trees, depth, n_features) in
+        [(1, 1, 2), (7, 4, 11), (40, 7, 44), (16, 6, 150), (3, 9, 5)]
+    {
+        let params = random_forest(&mut rng, n_trees, depth, n_features);
+        let forest = NativeForest::new(params.clone());
+        let flat = FlatForest::from_params(&params);
+        let mut scratch = FlatScratch::default();
+        for n_rows in [1usize, BLOCK, BLOCK + 3] {
+            let data: Vec<f32> = (0..n_rows * n_features)
+                .map(|_| rng.range_f64(-10.0, 10.0) as f32)
+                .collect();
+            let got = flat.predict(&data, &mut scratch);
+            assert_eq!(got.len(), n_rows);
+            for (r, g) in got.iter().enumerate() {
+                let want = forest.predict_one(&data[r * n_features..(r + 1) * n_features]);
+                assert_eq!(
+                    g.to_bits(),
+                    want.to_bits(),
+                    "forest ({n_trees},{depth},{n_features}), row {r} of {n_rows}"
+                );
+            }
+        }
+    }
+}
+
+/// The [`Predictor`] wiring on top of the flat engine: a borrowed
+/// [`FeatureMatrix`] through `predict_batch` and the `Vec<Vec<f32>>`
+/// compatibility path through `predict` must both reproduce the
+/// reference walk bit for bit, and the stats must account every row.
+#[test]
+fn native_predictor_batch_and_rows_paths_agree_with_reference() {
+    let mut rng = Rng::seed_from(0xB4D6E);
+    let params = random_forest(&mut rng, 12, 5, 23);
+    let predictor = NativeForestPredictor::new(params);
+    let rows: Vec<Vec<f32>> = (0..90)
+        .map(|_| (0..23).map(|_| rng.range_f64(-8.0, 8.0) as f32).collect())
+        .collect();
+
+    let via_rows = predictor.predict(&rows).unwrap();
+    let m = FeatureMatrix::from_rows(23, &rows).unwrap();
+    let via_batch = predictor.predict_batch(&m).unwrap();
+    assert_eq!(via_rows.len(), 90);
+    for (r, row) in rows.iter().enumerate() {
+        let want = predictor.reference().predict_one(row);
+        assert_eq!(via_rows[r].to_bits(), want.to_bits(), "rows path, row {r}");
+        assert_eq!(via_batch[r].to_bits(), want.to_bits(), "batch path, row {r}");
+    }
+    let (calls, row_count, _) = predictor.stats().snapshot();
+    assert_eq!(calls, 2, "one batched call per predict entry point");
+    assert_eq!(row_count, 180, "every row accounted");
+
+    // width mismatches are rejected, not mis-sliced
+    let narrow = FeatureMatrix::from_rows(4, &[vec![0.0; 4]]).unwrap();
+    assert!(predictor.predict_batch(&narrow).is_err());
+}
+
+fn setup() -> Option<(Catalog, std::path::PathBuf)> {
+    let dir = jiagu::artifacts_dir();
+    if !dir.join("functions.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some((Catalog::load(&dir.join("functions.json")).unwrap(), dir))
+}
+
+/// Acceptance criterion for the memoized sweep layer: on the golden
+/// Poisson scenario the per-scheduler memo must actually fire — the
+/// merged [`RunReport`](jiagu::sim::RunReport) surfaces nonzero hits —
+/// while every placement-bearing metric stays exactly what the scenario
+/// has always produced (replayed bit-identically below).
+#[test]
+fn golden_scenario_reports_nonzero_sweep_memo_hits() {
+    let Some((cat, dir)) = setup() else { return };
+    let predictor = load_predictor(&dir, true).unwrap();
+    let (cfg, workload) = jiagu::artifacts::latency_golden_scenario(&cat);
+    let report = jiagu::sim::Simulation::new(cat, cfg, predictor)
+        .run_workload(&workload)
+        .unwrap();
+    assert!(report.requests_served > 0);
+    assert!(
+        report.memo_hits > 0,
+        "repeated mix signatures on the golden scenario must hit the sweep memo"
+    );
+    assert!(report.memo_misses > 0, "first sweep of each signature is a miss");
+    assert!(report.slow_decisions > 0, "the memo only fires on the slow path");
+}
+
+/// The determinism matrix with the flat engine serving every prediction
+/// and the sweep memo on the critical path: the golden scenario's merged
+/// RunReport — memo counters included — must compare equal at shards
+/// 1/2/4 under either Timeline implementation.
+#[test]
+fn golden_scenario_replays_identically_across_shards_and_queues() {
+    let Some((cat, dir)) = setup() else { return };
+    let predictor = load_predictor(&dir, true).unwrap();
+    let mut reports = Vec::new();
+    for shards in [1usize, 2, 4] {
+        for queue in [QueueKind::Heap, QueueKind::Wheel] {
+            let (mut cfg, workload) = jiagu::artifacts::latency_golden_scenario(&cat);
+            cfg.shards = shards;
+            cfg.queue = queue;
+            let report = jiagu::controlplane::shard::ShardedControlPlane::new(
+                cat.clone(),
+                cfg,
+                predictor.clone(),
+            )
+            .run_workload(&workload)
+            .unwrap();
+            reports.push((shards, queue, report));
+        }
+    }
+    let (_, _, reference) = &reports[0];
+    assert!(reference.requests_served > 0);
+    assert!(reference.memo_hits > 0, "the sharded cells must hit their memos too");
+    for (shards, queue, report) in &reports[1..] {
+        assert_eq!(
+            report, reference,
+            "shards {shards} × queue {queue:?} diverged from shards 1 × heap"
+        );
+    }
+}

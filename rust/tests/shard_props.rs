@@ -128,6 +128,8 @@ fn synthetic_report(rng: &mut Rng, cell: usize, cells: usize) -> RunReport {
         inferences_per_schedule: 0.0,
         critical_inferences: rng.range_u64(0, 100),
         async_inferences: rng.range_u64(0, 100),
+        memo_hits: rng.range_u64(0, 100),
+        memo_misses: rng.range_u64(0, 100),
         schedule_calls: rng.range_u64(1, 50),
         instances_started: rng.range_u64(0, 50),
         fast_decisions: rng.range_u64(0, 40),
