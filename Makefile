@@ -66,6 +66,7 @@ bench-smoke: $(ARTIFACTS_DIR)/meta.json
 	$(CARGO) bench --bench forest_inference
 	$(CARGO) bench --bench router_hotpath
 	$(CARGO) bench --bench shard_scaling
+	$(CARGO) bench --bench region_federation
 	JIAGU_TRACE_INVOCATIONS=200000 $(CARGO) bench --bench trace_replay
 
 # Regenerate the committed bench snapshots (BENCH_*.json at the repo
@@ -78,6 +79,7 @@ bench-snapshot: $(ARTIFACTS_DIR)/meta.json
 	JIAGU_BENCH_SNAPSHOT=BENCH_forest_inference.json $(CARGO) bench --bench forest_inference
 	JIAGU_BENCH_SNAPSHOT=BENCH_router_hotpath.json $(CARGO) bench --bench router_hotpath
 	JIAGU_BENCH_SNAPSHOT=BENCH_shard_scaling.json JIAGU_BENCH_DURATION=20 $(CARGO) bench --bench shard_scaling
+	JIAGU_BENCH_SNAPSHOT=BENCH_region_federation.json JIAGU_BENCH_DURATION=20 $(CARGO) bench --bench region_federation
 	JIAGU_BENCH_SNAPSHOT=BENCH_trace_replay.json JIAGU_TRACE_INVOCATIONS=200000 $(CARGO) bench --bench trace_replay
 
 # Determinism matrix: the fixed-seed latency-golden scenario must emit
@@ -86,6 +88,12 @@ bench-snapshot: $(ARTIFACTS_DIR)/meta.json
 # partition layout only, never of the worker-thread count or of the
 # queue data structure.  Reports land in target/determinism/ (uploaded
 # by CI).
+#
+# Second leg: the same scenario federated over 2 regions, with and
+# without one region crashed at mid-horizon (5000 ms of the 10 s golden
+# horizon) and replayed from its cell seed — all regions runs at shards
+# 1/2/4 x heap/wheel must match the crash-free 2-region reference
+# byte-for-byte (the crash-replay recovery contract).
 determinism: $(ARTIFACTS_DIR)/meta.json
 	@mkdir -p target/determinism; \
 	for n in 1 2 4; do \
@@ -99,7 +107,21 @@ determinism: $(ARTIFACTS_DIR)/meta.json
 	for f in target/determinism/report-shards-*.json; do \
 		cmp $$ref $$f || { echo "error: $$f diverged from $$ref"; exit 1; }; \
 	done; \
-	echo "determinism: shards 1/2/4 x queue heap/wheel emit byte-identical RunReports"
+	for n in 1 2 4; do \
+		for q in heap wheel; do \
+			echo "jiagu run --trace golden --regions 2 --shards $$n --queue $$q --json"; \
+			$(CARGO) run --release --quiet --bin jiagu -- run --trace golden --regions 2 --shards $$n --queue $$q --json \
+				> target/determinism/report-regions-$$n-$$q.json || exit 1; \
+			echo "jiagu run --trace golden --regions 2 --fail 1@5000 --shards $$n --queue $$q --json"; \
+			$(CARGO) run --release --quiet --bin jiagu -- run --trace golden --regions 2 --fail 1@5000 --shards $$n --queue $$q --json \
+				> target/determinism/report-regions-fail-$$n-$$q.json || exit 1; \
+		done; \
+	done; \
+	ref=target/determinism/report-regions-1-heap.json; \
+	for f in target/determinism/report-regions-*.json; do \
+		cmp $$ref $$f || { echo "error: $$f diverged from $$ref (crash-replay moved report bytes)"; exit 1; }; \
+	done; \
+	echo "determinism: shards 1/2/4 x queue heap/wheel byte-identical, plain and 2-region federated with a mid-horizon crash-replay"
 
 # Workload-lab smoke: (1) the seeded scenario fuzzer through the
 # differential QoS matrix over all four schedulers — fails on any

@@ -1,0 +1,161 @@
+//! Region-federation throughput and crash-replay overhead: wall-clock
+//! cost of the two-region federation at 1 / 2 / 4 phase-1 worker
+//! threads, clean vs one region crashed at mid-horizon and replayed
+//! from seed.  Every clean/crashed pair must merge to the same bytes
+//! (asserted here, not just in CI), so the overhead column is the only
+//! thing the failure plan is allowed to move.
+//!
+//! Self-contained: generates its own catalog and uses the synthetic-stub
+//! forest, so it runs on a fresh checkout without `make artifacts`.
+//!
+//! ```bash
+//! cargo bench --bench region_federation
+//! # JIAGU_BENCH_DURATION=60 scales the virtual horizon (default 20 s);
+//! # JIAGU_BENCH_JSON=path.json additionally writes the rows as JSON
+//! # (uploaded as a CI workflow artifact);
+//! # JIAGU_BENCH_SNAPSHOT=BENCH_region_federation.json writes the
+//! # machine-normalized snapshot (deterministic event counts only;
+//! # no wall-clock fields).
+//! ```
+
+use jiagu::artifacts::make_catalog;
+use jiagu::catalog::Catalog;
+use jiagu::config::RunConfig;
+use jiagu::controlplane::region::{FederatedControlPlane, FederationStats};
+use jiagu::runtime::{ForestParams, NativeForestPredictor, Predictor};
+use jiagu::sim::RunReport;
+use jiagu::traces::{PoissonParams, Workload};
+use jiagu::util::bench::Table;
+use jiagu::util::json::{arr, num, obj, s, Json};
+use std::sync::Arc;
+use std::time::Instant;
+
+const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
+const REGIONS: [usize; 2] = [8, 8];
+const N_FUNCTIONS: usize = 8;
+/// Deterministic runs: wall time is the only noise, so a few repeats
+/// with a min-take are enough.
+const REPEATS: usize = 3;
+
+fn main() {
+    let duration_s: usize = std::env::var("JIAGU_BENCH_DURATION")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20);
+    let crash_ms = duration_s as f64 * 1000.0 / 2.0;
+    let cat = Catalog::from_functions(make_catalog(N_FUNCTIONS, 0xbe7c));
+    let predictor: Arc<dyn Predictor> = Arc::new(NativeForestPredictor::new(
+        ForestParams::synthetic_stub(jiagu::model::N_FEATURES, 0.05, 0.05),
+    ));
+    let workload = Workload::poisson(
+        &cat,
+        &PoissonParams { duration_s, bin_ms: 100.0, mean_concurrency: 3.0 },
+        0x51ed,
+    );
+
+    let run = |shards: usize, crash: bool| -> (RunReport, FederationStats, f64) {
+        let mut cfg = RunConfig::jiagu_45();
+        cfg.n_nodes = REGIONS.iter().sum();
+        cfg.duration_s = duration_s;
+        cfg.requests = true;
+        cfg.eval_interval_ms = 250.0;
+        cfg.seed = 4242;
+        cfg.shards = shards;
+        cfg.regions = REGIONS.to_vec();
+        if crash {
+            cfg.failures = vec![(1, crash_ms)];
+        }
+        let fed = FederatedControlPlane::new(cat.clone(), cfg, predictor.clone())
+            .expect("valid federation");
+        let mut best_s = f64::INFINITY;
+        let mut result = None;
+        for _ in 0..REPEATS {
+            let t0 = Instant::now();
+            let out = fed.run_workload(&workload).expect("federated run");
+            best_s = best_s.min(t0.elapsed().as_secs_f64());
+            result = Some(out);
+        }
+        let (report, stats) = result.expect("at least one repeat");
+        (report, stats, best_s)
+    };
+
+    let mut table =
+        Table::new(&["shards", "events", "lost", "clean ms", "crashed ms", "overhead"]);
+    let mut rows = Vec::new();
+    let mut snapshot_rows = Vec::new();
+    let mut reference: Option<RunReport> = None;
+    for shards in SHARD_COUNTS {
+        let (clean, clean_stats, clean_s) = run(shards, false);
+        let (crashed, stats, crashed_s) = run(shards, true);
+        assert!(clean.events_processed > 0, "the scenario must process events");
+        assert_eq!(
+            clean, crashed,
+            "{shards} shards: crash-replay must reproduce the uncrashed bytes"
+        );
+        assert_eq!(clean_stats.crashes, 0);
+        assert_eq!(stats.crashes, 1, "{shards} shards: the plan must fire");
+        assert!(stats.lost_events > 0, "the doomed run must lose real work");
+        if let Some(r) = &reference {
+            assert_eq!(*r, clean, "{shards}-thread report must be bit-identical to 1-thread");
+        }
+        let overhead = crashed_s / clean_s;
+        table.row(&[
+            format!("{shards}"),
+            format!("{}", clean.events_processed),
+            format!("{}", stats.lost_events),
+            format!("{:.1}", clean_s * 1e3),
+            format!("{:.1}", crashed_s * 1e3),
+            format!("{overhead:.2}x"),
+        ]);
+        rows.push(obj(vec![
+            ("shards", num(shards as f64)),
+            ("regions", num(REGIONS.len() as f64)),
+            ("events_processed", num(clean.events_processed as f64)),
+            ("lost_events", num(stats.lost_events as f64)),
+            ("clean_wall_seconds", num(clean_s)),
+            ("crashed_wall_seconds", num(crashed_s)),
+            ("recovery_overhead", num(overhead)),
+        ]));
+        snapshot_rows.push(obj(vec![
+            ("events_processed", num(clean.events_processed as f64)),
+            ("lost_events", num(stats.lost_events as f64)),
+            ("regions", num(REGIONS.len() as f64)),
+            ("shards", num(shards as f64)),
+        ]));
+        if reference.is_none() {
+            reference = Some(clean);
+        }
+    }
+    table.print(&format!(
+        "region federation ({} regions, crash at {crash_ms:.0} ms, {duration_s}s horizon)",
+        REGIONS.len()
+    ));
+    println!("(clean and crash-replay reports byte-identical at every thread count — asserted)");
+
+    if let Ok(path) = std::env::var("JIAGU_BENCH_JSON") {
+        if !path.is_empty() {
+            let payload = obj(vec![
+                ("bench", s("region_federation")),
+                ("duration_s", num(duration_s as f64)),
+                ("rows", arr(rows)),
+            ]);
+            std::fs::write(&path, format!("{}\n", payload.to_string()))
+                .expect("writing JIAGU_BENCH_JSON");
+            println!("wrote {path}");
+        }
+    }
+
+    if let Ok(path) = std::env::var("JIAGU_BENCH_SNAPSHOT") {
+        if !path.is_empty() {
+            let payload = obj(vec![
+                ("bench", s("region_federation")),
+                ("bootstrap", Json::Bool(false)),
+                ("duration_s", num(duration_s as f64)),
+                ("rows", arr(snapshot_rows)),
+            ]);
+            std::fs::write(&path, format!("{}\n", payload.to_string()))
+                .expect("writing JIAGU_BENCH_SNAPSHOT");
+            println!("wrote {path}");
+        }
+    }
+}

@@ -62,7 +62,8 @@ fn main() {
         cfg.seed = 4242;
         cfg.partitions = PARTITIONS;
         cfg.shards = shards;
-        let plane = ShardedControlPlane::new(cat.clone(), cfg, predictor.clone());
+        let plane =
+            ShardedControlPlane::new(cat.clone(), cfg, predictor.clone()).expect("valid layout");
         let mut best_s = f64::INFINITY;
         let mut report = None;
         for _ in 0..REPEATS {

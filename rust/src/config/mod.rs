@@ -16,6 +16,33 @@ use std::path::Path;
 /// exactly that invariance.
 pub const DEFAULT_PARTITIONS: usize = 4;
 
+/// Default uniform inter-region network latency (virtual ms) — the
+/// response-time penalty of serving a request from a foreign region
+/// after overflow rerouting ([`crate::controlplane::region`]).
+pub const DEFAULT_REGION_LATENCY_MS: f64 = 25.0;
+
+/// Parse one `"REGION@MS"` failure spec (shared by the `failures` JSON
+/// key and the `--fail` CLI flag): region index, then the virtual crash
+/// instant in milliseconds.
+pub fn parse_fail_spec(s: &str) -> Result<(usize, f64)> {
+    let (region, at_ms) = match s.split_once('@') {
+        Some(parts) => parts,
+        None => bail!("failure spec {s:?} must be REGION@MS"),
+    };
+    let region: usize = match region.trim().parse() {
+        Ok(r) => r,
+        Err(_) => bail!("failure spec {s:?}: region index must be an integer"),
+    };
+    let at_ms: f64 = match at_ms.trim().parse() {
+        Ok(ms) => ms,
+        Err(_) => bail!("failure spec {s:?}: crash time must be a number (ms)"),
+    };
+    if !at_ms.is_finite() || at_ms < 0.0 {
+        bail!("failure spec {s:?}: crash time must be finite and >= 0");
+    }
+    Ok((region, at_ms))
+}
+
 /// Which scheduler drives a run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SchedulerKind {
@@ -198,6 +225,26 @@ pub struct RunConfig {
     /// the same `(due_ms, seq)` contract, so the choice never changes a
     /// byte of any report — the determinism matrix pins exactly that.
     pub queue: QueueKind,
+    /// Per-region node counts of the federated control plane
+    /// ([`crate::controlplane::region`]).  Empty (the default) runs the
+    /// single-cluster path; `[a, b, ...]` runs one region per entry with
+    /// that many nodes (JSON key `regions`; CLI `--regions N` splits
+    /// `n_nodes` proportionally, `--regions a,b,c` is explicit).
+    pub regions: Vec<usize>,
+    /// Uniform off-diagonal inter-region network latency (virtual ms)
+    /// added to the response time of every request served by a foreign
+    /// region after overflow rerouting (JSON key `region_latency_ms`).
+    pub region_latency_ms: f64,
+    /// Deterministic failure plan: `(region, at_ms)` pairs, each killing
+    /// one region at a virtual instant; the region is replayed from its
+    /// cell seed and resumed at the crash horizon (JSON key `failures`,
+    /// an array of `"REGION@MS"` strings; CLI `--fail REGION@MS[,...]`).
+    pub failures: Vec<(usize, f64)>,
+    /// Internal (no JSON key): make each drain collect the fresh arrivals
+    /// that cold-waited or queued, as overflow-rerouting candidates
+    /// ([`crate::controlplane::EngineEvents::overflow_candidates`]).  Off
+    /// by default — normal runs skip the per-request bookkeeping.
+    pub collect_overflow: bool,
 }
 
 impl Default for RunConfig {
@@ -218,6 +265,10 @@ impl Default for RunConfig {
             shards: 0,
             partitions: DEFAULT_PARTITIONS,
             queue: QueueKind::Heap,
+            regions: Vec::new(),
+            region_latency_ms: DEFAULT_REGION_LATENCY_MS,
+            failures: Vec::new(),
+            collect_overflow: false,
         }
     }
 }
@@ -326,6 +377,20 @@ impl RunConfig {
                 None => bail!("unknown queue kind {s:?} (heap|wheel)"),
             };
         }
+        if let Some(v) = j.opt("regions") {
+            c.regions =
+                v.as_arr()?.iter().map(|n| n.as_usize()).collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(v) = j.opt("region_latency_ms") {
+            c.region_latency_ms = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("failures") {
+            c.failures = v
+                .as_arr()?
+                .iter()
+                .map(|f| parse_fail_spec(f.as_str()?))
+                .collect::<Result<Vec<_>>>()?;
+        }
         Ok(c)
     }
 }
@@ -400,6 +465,37 @@ mod tests {
         std::fs::write(&path, r#"{"queue": "ring"}"#).unwrap();
         assert!(RunConfig::load(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_reads_region_knobs_and_fail_specs() {
+        let d = RunConfig::default();
+        assert!(d.regions.is_empty(), "single-cluster by default");
+        assert!(d.failures.is_empty());
+        assert_eq!(d.region_latency_ms, DEFAULT_REGION_LATENCY_MS);
+        assert!(!d.collect_overflow);
+        let path = std::env::temp_dir().join("jiagu_cfg_regions_test.json");
+        std::fs::write(
+            &path,
+            r#"{"regions": [4, 2], "region_latency_ms": 12.5, "failures": ["1@5000"]}"#,
+        )
+        .unwrap();
+        let c = RunConfig::load(&path).unwrap();
+        assert_eq!(c.regions, vec![4, 2]);
+        assert_eq!(c.region_latency_ms, 12.5);
+        assert_eq!(c.failures, vec![(1, 5000.0)]);
+        std::fs::write(&path, r#"{"failures": ["1+5000"]}"#).unwrap();
+        assert!(RunConfig::load(&path).is_err(), "malformed fail spec must be rejected");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fail_spec_parses_and_rejects_garbage() {
+        assert_eq!(parse_fail_spec("0@1500").unwrap(), (0, 1500.0));
+        assert_eq!(parse_fail_spec(" 2 @ 250.5 ").unwrap(), (2, 250.5));
+        for bad in ["", "1", "x@5", "1@y", "1@-3", "1@inf", "1@NaN"] {
+            assert!(parse_fail_spec(bad).is_err(), "{bad:?} must be rejected");
+        }
     }
 
     #[test]

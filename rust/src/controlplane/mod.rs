@@ -68,6 +68,7 @@
 //! parallel threads and merged into one report — byte-identical for any
 //! thread count.
 
+pub mod region;
 pub mod shard;
 
 use crate::autoscaler::Autoscaler;
@@ -188,6 +189,12 @@ pub struct EngineEvents {
     pub active_nodes: usize,
     /// Cluster size at drain end.
     pub n_nodes: usize,
+    /// Fresh arrivals whose first dispatch could not start service
+    /// (parked cold-waiting or queued behind a busy instance), recorded
+    /// only under [`RunConfig::collect_overflow`].  The federation layer
+    /// reads these as spill candidates for overflow routing; a plain run
+    /// never populates the vector, so the hot path stays allocation-free.
+    pub overflow_candidates: Vec<Arrival>,
 }
 
 /// Build the scheduler a run configuration asks for.
@@ -474,10 +481,18 @@ impl ControlPlane {
             RouteOutcome::Started { instance, node } => {
                 self.begin_service(f, instance, node, arrival_ms, now_ms, ev);
             }
-            RouteOutcome::Queued { .. } => {} // attributed at admission
+            RouteOutcome::Queued { .. } => {
+                // attributed at admission
+                if fresh && self.cfg.collect_overflow {
+                    ev.overflow_candidates.push(Arrival { at_ms: arrival_ms, function: f });
+                }
+            }
             RouteOutcome::ColdWait => {
                 if fresh {
                     ev.cold_waits += 1;
+                    if self.cfg.collect_overflow {
+                        ev.overflow_candidates.push(Arrival { at_ms: arrival_ms, function: f });
+                    }
                 }
             }
         }

@@ -1,0 +1,814 @@
+//! Multi-region federation: heterogeneous cells, deterministic failure
+//! injection with crash-replay recovery, and cross-region overflow
+//! routing.
+//!
+//! The paper deploys one control plane per region and scales out by
+//! adding regions; [`crate::controlplane::shard`] already models the
+//! *partitioning* half of that story (disjoint cells, layout-only
+//! determinism, exactly-associative report merge).  This module promotes
+//! cells to **regions**:
+//!
+//! * a [`RegionSpec`] per cell with a *heterogeneous* node count (the
+//!   shard layout's proportional split becomes an explicit per-region
+//!   allotment), functions assigned round-robin by global id and routed
+//!   with [`Workload::restrict`] — the same global-id contract the shard
+//!   layer pinned, so per-function report tables scatter-add exactly;
+//! * a static inter-region [`LatencyMatrix`]: a request spilled from its
+//!   home region and served elsewhere pays the matrix's inter-region
+//!   milliseconds on top of its in-cluster response time;
+//! * a seeded [`FailurePlan`] that kills a region at a chosen virtual
+//!   time and recovers it by **replay-from-seed** (below);
+//! * **overflow routing**: a saturated region's cold-queued arrivals are
+//!   re-targeted to its latency-nearest region in a deterministic
+//!   two-phase schedule (below).
+//!
+//! ## The crash-replay determinism contract
+//!
+//! A region is a deterministic state machine over its seeded event
+//! stream: its state at any virtual time `t` is a pure function of
+//! `(catalog, region config, sub-workload, cell_seed)` — nothing else
+//! (the shard layer's cell-isolation proof carries over unchanged).
+//! When the [`FailurePlan`] crashes a region at `t_c`, recovery is
+//! **replay from seed**: the region's timeline is re-executed from
+//! virtual time 0 with the same `cell_seed(run_seed, region)`, reaches
+//! `t_c` in exactly the state the crashed instance held (byte-for-byte —
+//! there is no other state to restore), and *resumes* past the crash
+//! horizon to the end of the run.  Consequently:
+//!
+//! > a region crashed at any `t_c` and replayed from its seed produces a
+//! > report **byte-equal** to the uncrashed run of the same sub-stream,
+//! > and the merged federation report is byte-equal to the crash-free
+//! > federation — which is exactly what the CI determinism matrix pins
+//! > (`--regions 2 --fail 1@5000` vs `--regions 2`).
+//!
+//! The work lost to the crash is *accounted*, not lost silently: the
+//! doomed pre-crash execution is drained up to `t_c`, its processed
+//! events counted into [`FederationStats::lost_events`] (and the replay
+//! re-executes exactly that many to catch up —
+//! [`FederationStats::replayed_events`]), then discarded.  The stats
+//! ride next to the report, never inside it, so failure injection can
+//! never perturb the report bytes.
+//!
+//! ## Two-phase overflow routing
+//!
+//! Cross-region spill must not break layout-only determinism, so it is
+//! scheduled in two deterministic phases rather than reactively:
+//!
+//! 1. **Phase 1** runs every region on its own arrivals with
+//!    [`RunConfig::collect_overflow`] set, recording each fresh arrival
+//!    whose first dispatch could not start service (parked cold-waiting
+//!    or queued behind a busy instance) as a spill *candidate*.  A
+//!    region is **saturated** when demand is still stranded at its
+//!    horizon (`stranded_requests > 0`).
+//! 2. Every saturated region re-targets its candidates to its
+//!    latency-nearest region ([`LatencyMatrix::nearest`]).  **Phase 2**
+//!    re-runs only the affected regions: homes without their spilled
+//!    arrivals, targets with the spilled arrivals added — plus derived
+//!    load steps binned from the spill (the target's autoscaler must see
+//!    the foreign demand) — and the matrix latency added to every
+//!    foreign request's response time.  Spill is one hop: phase 2 never
+//!    collects candidates, so overflow cannot cascade.
+//!
+//! Both phases are pure functions of the layout and the run seed;
+//! `cfg.shards` only picks how many threads drain phase 1, so the
+//! federation inherits the shard layer's byte-identity across `--shards
+//! 1/2/4` and both queue backends.
+
+use crate::catalog::Catalog;
+use crate::config::RunConfig;
+use crate::controlplane::shard::{cell_seed, ZeroNodeCell};
+use crate::controlplane::ControlPlane;
+use crate::runtime::Predictor;
+use crate::sim::{effective_arrival_seed, ReportBuilder, RunReport};
+use crate::traces::{Arrival, LoadEvent, Workload};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, ensure, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Fold granularity (virtual ms) of the per-region drains — the same
+/// value [`crate::sim::Simulation`] folds with, so a 1-region federation
+/// absorbs chunks exactly like the plain driver.
+const FOLD_CHUNK_MS: f64 = 60_000.0;
+
+/// Bin width (virtual ms) of the load signal derived from spilled
+/// arrivals for an overflow target's autoscaler.
+const OVERFLOW_BIN_MS: f64 = 100.0;
+
+/// One region of the federation: a named cell with an explicit
+/// (heterogeneous) node allotment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RegionSpec {
+    pub name: String,
+    pub n_nodes: usize,
+}
+
+/// Static inter-region latency matrix (virtual ms), row-major:
+/// `ms(from, to)` is the extra response time a request of `from`'s
+/// functions pays when served in region `to`.  The diagonal is zero.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyMatrix {
+    n: usize,
+    ms: Vec<f64>,
+}
+
+impl LatencyMatrix {
+    /// Uniform matrix: `ms` between every distinct pair, zero diagonal.
+    pub fn uniform(n: usize, ms: f64) -> Result<Self> {
+        ensure!(n > 0, "latency matrix needs at least one region");
+        ensure!(ms.is_finite() && ms >= 0.0, "inter-region latency must be finite and >= 0");
+        let cells = (0..n * n)
+            .map(|i| if i / n == i % n { 0.0 } else { ms })
+            .collect();
+        Ok(Self { n, ms: cells })
+    }
+
+    /// Number of regions the matrix spans.
+    pub fn regions(&self) -> usize {
+        self.n
+    }
+
+    /// Inter-region latency `from → to` (zero on the diagonal).
+    pub fn ms(&self, from: usize, to: usize) -> f64 {
+        self.ms[from * self.n + to]
+    }
+
+    /// The latency-nearest *other* region of `from` (ties break toward
+    /// the lower index, keeping overflow targeting deterministic);
+    /// `None` for a 1-region federation.
+    pub fn nearest(&self, from: usize) -> Option<usize> {
+        (0..self.n)
+            .filter(|&t| t != from)
+            .min_by(|&a, &b| self.ms(from, a).total_cmp(&self.ms(from, b)))
+    }
+}
+
+/// One injected failure: `region` dies at virtual time `at_ms` and is
+/// recovered by replay-from-seed (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RegionCrash {
+    pub region: usize,
+    pub at_ms: f64,
+}
+
+/// A validated set of injected failures: at most one crash per region,
+/// each at a finite, non-negative virtual time inside the region range.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FailurePlan {
+    crashes: Vec<RegionCrash>,
+}
+
+impl FailurePlan {
+    /// Build from explicit `(region, at_ms)` specs (the `--fail
+    /// region@ms` CLI form).
+    pub fn from_specs(specs: &[(usize, f64)], n_regions: usize) -> Result<Self> {
+        let mut crashes = Vec::with_capacity(specs.len());
+        for &(region, at_ms) in specs {
+            ensure!(
+                region < n_regions,
+                "failure spec targets region {region}, but only {n_regions} regions exist"
+            );
+            ensure!(
+                at_ms.is_finite() && at_ms >= 0.0,
+                "failure spec for region {region}: crash time must be finite and >= 0"
+            );
+            ensure!(
+                crashes.iter().all(|c: &RegionCrash| c.region != region),
+                "region {region} has more than one scheduled crash"
+            );
+            crashes.push(RegionCrash { region, at_ms });
+        }
+        Ok(Self { crashes })
+    }
+
+    /// Seeded plan: one region picked uniformly, crashed at a uniform
+    /// time inside `(0, horizon_ms)` — deterministic per seed, so a
+    /// fuzzing harness can scatter crashes without losing replay.
+    pub fn seeded(seed: u64, n_regions: usize, horizon_ms: f64) -> Result<Self> {
+        ensure!(n_regions > 0, "seeded failure plan needs at least one region");
+        ensure!(
+            horizon_ms.is_finite() && horizon_ms > 0.0,
+            "seeded failure plan needs a positive horizon"
+        );
+        let mut rng = Rng::seed_from(seed);
+        let region = rng.below(n_regions as u64) as usize;
+        let at_ms = rng.f64() * horizon_ms;
+        Self::from_specs(&[(region, at_ms)], n_regions)
+    }
+
+    /// The scheduled crash of `region`, if any.
+    pub fn crash_of(&self, region: usize) -> Option<f64> {
+        self.crashes.iter().find(|c| c.region == region).map(|c| c.at_ms)
+    }
+
+    /// All scheduled crashes.
+    pub fn crashes(&self) -> &[RegionCrash] {
+        &self.crashes
+    }
+}
+
+/// The deterministic region layout: functions round-robin by global id
+/// (`region_of(f) = f % regions`), nodes per the explicit
+/// [`RegionSpec`] allotments.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RegionLayout {
+    regions: Vec<RegionSpec>,
+    n_functions: usize,
+}
+
+impl RegionLayout {
+    /// Build the layout from explicit per-region node counts; rejects a
+    /// zero-node region with the typed
+    /// [`ZeroNodeCell`](crate::controlplane::shard::ZeroNodeCell) error.
+    pub fn new(n_functions: usize, node_counts: &[usize]) -> Result<Self> {
+        ensure!(!node_counts.is_empty(), "a federation needs at least one region");
+        if let Some(cell) = node_counts.iter().position(|&n| n == 0) {
+            return Err(ZeroNodeCell { cell }.into());
+        }
+        let regions = node_counts
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| RegionSpec { name: format!("r{i}"), n_nodes: n })
+            .collect();
+        Ok(Self { regions, n_functions })
+    }
+
+    pub fn regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn spec(&self, region: usize) -> &RegionSpec {
+        &self.regions[region]
+    }
+
+    /// The region owning `function` (round-robin by global id).
+    pub fn region_of(&self, function: usize) -> usize {
+        function % self.regions.len()
+    }
+
+    /// Node allotment of `region`.
+    pub fn nodes_of(&self, region: usize) -> usize {
+        self.regions[region].n_nodes
+    }
+
+    /// The (global) function ids `region` owns, ascending.
+    pub fn functions_of(&self, region: usize) -> Vec<usize> {
+        (region..self.n_functions).step_by(self.regions.len()).collect()
+    }
+
+    /// Total nodes across the federation.
+    pub fn total_nodes(&self) -> usize {
+        self.regions.iter().map(|r| r.n_nodes).sum()
+    }
+}
+
+/// Proportional split of `n_nodes` over `regions` cells (the `--regions
+/// N` CLI form; earlier regions absorb the remainder) — the same split
+/// rule [`crate::controlplane::shard::ShardLayout`] uses.
+pub fn proportional_split(n_nodes: usize, regions: usize) -> Vec<usize> {
+    let p = regions.max(1);
+    (0..p).map(|i| n_nodes / p + usize::from(i < n_nodes % p)).collect()
+}
+
+/// Side accounting of a federated run: crash/replay and overflow
+/// bookkeeping.  Lives **next to** the merged [`RunReport`], never
+/// inside it, so failure injection and spill scheduling can never
+/// perturb the report bytes the determinism matrix compares.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FederationStats {
+    /// Regions in the layout.
+    pub regions: usize,
+    /// Regions the failure plan actually crashed (crash time inside the
+    /// horizon).
+    pub crashes: u64,
+    /// Events the doomed pre-crash executions had processed (work lost
+    /// to the crashes, re-executed by the replays).
+    pub lost_events: u64,
+    /// Events the recovery replays re-executed to catch back up to the
+    /// crash horizons (equals `lost_events` by determinism).
+    pub replayed_events: u64,
+    /// Regions whose phase-1 run left demand stranded at the horizon.
+    pub saturated_regions: u64,
+    /// Arrivals re-targeted from a saturated home to its nearest region.
+    pub spilled_arrivals: u64,
+    /// Regions re-run in phase 2 (spill homes and targets).
+    pub regions_rerun: u64,
+}
+
+impl std::fmt::Display for FederationStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} regions | crashes {} (lost {} events, replayed {}) | saturated {} | \
+             spilled {} arrivals | reran {} regions",
+            self.regions,
+            self.crashes,
+            self.lost_events,
+            self.replayed_events,
+            self.saturated_regions,
+            self.spilled_arrivals,
+            self.regions_rerun
+        )
+    }
+}
+
+/// Outcome of one region's run: its report, its spill candidates
+/// (phase 1 only) and its crash accounting.
+struct RegionRun {
+    report: RunReport,
+    overflow: Vec<Arrival>,
+    lost_events: u64,
+}
+
+/// The federated orchestrator: one control-plane cell per region, a
+/// failure plan replayed from seed, and two-phase overflow routing (see
+/// the module docs for the determinism contracts).
+pub struct FederatedControlPlane {
+    cat: Catalog,
+    cfg: RunConfig,
+    predictor: Arc<dyn Predictor>,
+    layout: RegionLayout,
+    latency: LatencyMatrix,
+    failures: FailurePlan,
+}
+
+impl FederatedControlPlane {
+    /// Build the federation from `cfg.regions` (per-region node counts),
+    /// `cfg.region_latency_ms` (uniform matrix) and `cfg.failures`.
+    pub fn new(cat: Catalog, cfg: RunConfig, predictor: Arc<dyn Predictor>) -> Result<Self> {
+        let layout = RegionLayout::new(cat.len(), &cfg.regions)?;
+        let latency = LatencyMatrix::uniform(layout.regions(), cfg.region_latency_ms)?;
+        let failures = FailurePlan::from_specs(&cfg.failures, layout.regions())?;
+        Ok(Self { cat, cfg, predictor, layout, latency, failures })
+    }
+
+    pub fn layout(&self) -> &RegionLayout {
+        &self.layout
+    }
+
+    pub fn latency(&self) -> &LatencyMatrix {
+        &self.latency
+    }
+
+    /// The plain-control-plane configuration `region` runs with — the
+    /// shard layer's cell config plus the region's explicit node count:
+    /// cell seed derived from the run seed, the arrival seed pinned to
+    /// the run-level value so every region thins the same underlying
+    /// arrival stream, sharding and federation switched off.
+    fn region_config(&self, region: usize, collect_overflow: bool) -> RunConfig {
+        let mut cfg = self.cfg.clone();
+        cfg.n_nodes = self.layout.nodes_of(region);
+        cfg.seed = cell_seed(self.cfg.seed, region);
+        cfg.arrival_seed = Some(effective_arrival_seed(&self.cfg));
+        cfg.shards = 0;
+        cfg.partitions = 1;
+        cfg.regions = Vec::new();
+        cfg.failures = Vec::new();
+        cfg.collect_overflow = collect_overflow;
+        cfg
+    }
+
+    /// Run `workload` across the federation: phase 1 on
+    /// `cfg.shards.clamp(1, regions)` threads with crash-replay applied
+    /// per the failure plan, then phase-2 overflow re-runs, then the
+    /// pinned ascending-region merge.  Returns the merged report and the
+    /// side stats (which never influence the report bytes).
+    pub fn run_workload(&self, workload: &Workload) -> Result<(RunReport, FederationStats)> {
+        ensure!(
+            workload.n_functions == self.cat.len(),
+            "workload spans {} functions, catalog has {}",
+            workload.n_functions,
+            self.cat.len()
+        );
+        let r = self.layout.regions();
+        let duration = workload.duration_s().min(self.cfg.duration_s);
+        let horizon_ms = duration as f64 * 1000.0;
+        let mut stats = FederationStats { regions: r, ..Default::default() };
+
+        // Per-region sub-streams: restricted workload + its synthesized
+        // arrivals.  Synthesis is per-function from the pinned run-level
+        // arrival seed, so each region draws exactly the sub-stream of
+        // the global arrival stream its functions own.
+        let mut subs = Vec::with_capacity(r);
+        for region in 0..r {
+            let wl = workload.restrict(|f| self.layout.region_of(f) == region);
+            let (arrivals, dropped) = if self.cfg.requests {
+                wl.synthesize_arrivals_counted(effective_arrival_seed(&self.cfg))
+            } else {
+                (Vec::new(), 0)
+            };
+            subs.push((self.region_config(region, true), wl, arrivals, dropped));
+        }
+
+        // Phase 1: every region on its own arrivals, spill candidates
+        // collected, crashes replayed from seed.
+        let threads = self.cfg.shards.clamp(1, r);
+        let mut phase1: Vec<Option<RegionRun>> = (0..r).map(|_| None).collect();
+        if threads == 1 {
+            for (region, (cfg, wl, arrivals, dropped)) in subs.iter().enumerate() {
+                phase1[region] =
+                    Some(self.run_region(region, cfg, wl, arrivals, *dropped, None, horizon_ms)?);
+            }
+        } else {
+            // same worker discipline as the shard layer: cells taken
+            // round-robin, results landing in region-indexed slots so
+            // thread scheduling can never reorder anything downstream
+            std::thread::scope(|scope| -> Result<()> {
+                let subs = &subs;
+                let mut handles = Vec::with_capacity(threads);
+                for w in 0..threads {
+                    handles.push(scope.spawn(move || -> Vec<(usize, Result<RegionRun>)> {
+                        let mut worker = Vec::new();
+                        let mut region = w;
+                        while region < r {
+                            let (cfg, wl, arrivals, dropped) = &subs[region];
+                            worker.push((
+                                region,
+                                self.run_region(
+                                    region, cfg, wl, arrivals, *dropped, None, horizon_ms,
+                                ),
+                            ));
+                            region += threads;
+                        }
+                        worker
+                    }));
+                }
+                for handle in handles {
+                    let worker =
+                        handle.join().map_err(|_| anyhow!("region worker panicked"))?;
+                    for (region, run) in worker {
+                        phase1[region] = Some(run?);
+                    }
+                }
+                Ok(())
+            })?;
+        }
+        let mut phase1: Vec<RegionRun> =
+            phase1.into_iter().map(|p| p.expect("every region ran")).collect();
+        for run in &phase1 {
+            stats.lost_events += run.lost_events;
+        }
+        stats.replayed_events = stats.lost_events;
+        stats.crashes = self
+            .failures
+            .crashes()
+            .iter()
+            .filter(|c| c.at_ms < horizon_ms)
+            .count() as u64;
+
+        // Overflow schedule: each saturated region re-targets its
+        // candidates to its latency-nearest region.
+        let mut spills: Vec<Vec<Arrival>> = (0..r).map(|_| Vec::new()).collect(); // by target
+        let mut spilled_from: Vec<Vec<Arrival>> = (0..r).map(|_| Vec::new()).collect(); // by home
+        for home in 0..r {
+            let saturated = phase1[home].report.stranded_requests > 0
+                && !phase1[home].overflow.is_empty();
+            if !saturated {
+                continue;
+            }
+            let Some(target) = self.latency.nearest(home) else { continue };
+            stats.saturated_regions += 1;
+            stats.spilled_arrivals += phase1[home].overflow.len() as u64;
+            let candidates = std::mem::take(&mut phase1[home].overflow);
+            spilled_from[home].extend_from_slice(&candidates);
+            spills[target].extend(candidates);
+        }
+
+        // Phase 2: re-run spill homes (their arrivals minus the spilled
+        // multiset) and targets (arrivals plus the spill, its derived
+        // load signal, and the matrix latency on foreign requests).
+        let mut merged: Vec<RunReport> = Vec::with_capacity(r);
+        for region in 0..r {
+            let rerun = !spilled_from[region].is_empty() || !spills[region].is_empty();
+            if !rerun {
+                merged.push(phase1[region].report.clone());
+                continue;
+            }
+            stats.regions_rerun += 1;
+            let (_, wl, arrivals, dropped) = &subs[region];
+            let mut arrivals = remove_multiset(arrivals, &spilled_from[region]);
+            let mut wl = wl.clone();
+            let mut extra = None;
+            if !spills[region].is_empty() {
+                arrivals.extend_from_slice(&spills[region]);
+                arrivals.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
+                wl.events.extend(derive_load_events(&spills[region], horizon_ms));
+                wl.events.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
+                let mut per_function = vec![0.0; self.cat.len()];
+                for a in &spills[region] {
+                    per_function[a.function] =
+                        self.latency.ms(self.layout.region_of(a.function), region);
+                }
+                extra = Some(per_function);
+            }
+            let cfg = self.region_config(region, false);
+            let run = self.run_region(
+                region,
+                &cfg,
+                &wl,
+                &arrivals,
+                *dropped,
+                extra.as_deref(),
+                horizon_ms,
+            )?;
+            merged.push(run.report);
+        }
+
+        // pinned merge order: ascending region index
+        let mut iter = merged.into_iter();
+        let mut report = iter.next().expect("layout has at least one region");
+        for other in iter {
+            report.merge(&other)?;
+        }
+        Ok((report, stats))
+    }
+
+    /// One region's run: crash-replay per the failure plan, then the
+    /// full deterministic drain.  The doomed pre-crash execution is
+    /// drained to the crash horizon, its processed events counted, and
+    /// discarded; the recovery replay *is* the fresh full run — the
+    /// module-level byte-equality contract.
+    #[allow(clippy::too_many_arguments)]
+    fn run_region(
+        &self,
+        region: usize,
+        cfg: &RunConfig,
+        workload: &Workload,
+        arrivals: &[Arrival],
+        dropped: u64,
+        extra_latency_ms: Option<&[f64]>,
+        horizon_ms: f64,
+    ) -> Result<RegionRun> {
+        let mut lost_events = 0u64;
+        if let Some(crash_ms) = self.failures.crash_of(region) {
+            if crash_ms < horizon_ms {
+                let mut doomed = self.fresh_plane(cfg, workload, arrivals);
+                let mut until = 0.0f64;
+                while until < crash_ms {
+                    until = (until + FOLD_CHUNK_MS).min(crash_ms);
+                    lost_events += doomed.run_until(until)?.events_processed;
+                }
+                // the crashed instance and everything it computed are
+                // gone; recovery replays the region from its seed below
+            }
+        }
+
+        let mut cp = self.fresh_plane(cfg, workload, arrivals);
+        let mut builder = ReportBuilder::new(&self.cat, cfg);
+        builder.add_arrivals_dropped(dropped);
+        let mut overflow = Vec::new();
+        let mut until = 0.0f64;
+        while until < horizon_ms {
+            until = (until + FOLD_CHUNK_MS).min(horizon_ms);
+            let mut ev = cp.run_until(until)?;
+            if let Some(extra) = extra_latency_ms {
+                for rec in &mut ev.requests {
+                    let add = extra[rec.function];
+                    if add > 0.0 {
+                        rec.latency_ms += add;
+                    }
+                }
+            }
+            builder.absorb(&ev);
+            overflow.append(&mut ev.overflow_candidates);
+        }
+        let isolated = cp.monitor().unpredictable();
+        let duration = (horizon_ms / 1000.0).ceil() as usize;
+        let mut report =
+            builder.finish(cp.scheduler_name(), &workload.name, duration, isolated);
+        report.owned_functions = self.layout.functions_of(region);
+        Ok(RegionRun { report, overflow, lost_events })
+    }
+
+    /// A fresh, injected control plane for one region run (both the
+    /// doomed pre-crash execution and the recovery replay build their
+    /// plane here, from the same inputs — which is the whole point).
+    fn fresh_plane(
+        &self,
+        cfg: &RunConfig,
+        workload: &Workload,
+        arrivals: &[Arrival],
+    ) -> ControlPlane {
+        let mut cp = ControlPlane::new(self.cat.clone(), cfg.clone(), self.predictor.clone());
+        cp.inject_workload(workload);
+        if cfg.requests {
+            cp.inject_arrivals(arrivals);
+        }
+        cp
+    }
+}
+
+/// Remove the `spilled` multiset from `arrivals` (keyed by exact
+/// `(at_ms bits, function)` — candidates are copies of injected
+/// arrivals, so the match is exact), preserving order.
+fn remove_multiset(arrivals: &[Arrival], spilled: &[Arrival]) -> Vec<Arrival> {
+    if spilled.is_empty() {
+        return arrivals.to_vec();
+    }
+    let mut counts: HashMap<(u64, usize), usize> = HashMap::new();
+    for s in spilled {
+        *counts.entry((s.at_ms.to_bits(), s.function)).or_insert(0) += 1;
+    }
+    let mut kept = Vec::with_capacity(arrivals.len().saturating_sub(spilled.len()));
+    for a in arrivals {
+        match counts.get_mut(&(a.at_ms.to_bits(), a.function)) {
+            Some(c) if *c > 0 => *c -= 1,
+            _ => kept.push(*a),
+        }
+    }
+    kept
+}
+
+/// Derive a piecewise-constant load signal from spilled arrivals (one
+/// [`LoadEvent`] per [`OVERFLOW_BIN_MS`] bin where the binned rate
+/// changes), so an overflow target's autoscaler sees the foreign demand
+/// it is about to serve.  Functions emit in ascending id order and bins
+/// in time order — fully deterministic.
+fn derive_load_events(spilled: &[Arrival], horizon_ms: f64) -> Vec<LoadEvent> {
+    let mut functions: Vec<usize> = spilled.iter().map(|a| a.function).collect();
+    functions.sort_unstable();
+    functions.dedup();
+    let n_bins = (horizon_ms / OVERFLOW_BIN_MS).ceil() as usize;
+    let mut events = Vec::new();
+    for f in functions {
+        let mut bins = vec![0u32; n_bins.max(1)];
+        for a in spilled.iter().filter(|a| a.function == f) {
+            let b = ((a.at_ms / OVERFLOW_BIN_MS) as usize).min(bins.len() - 1);
+            bins[b] += 1;
+        }
+        let mut prev = f64::NAN; // always emit the first level
+        for (b, count) in bins.iter().enumerate() {
+            let rps = *count as f64 * (1000.0 / OVERFLOW_BIN_MS);
+            if prev.to_bits() != rps.to_bits() {
+                events.push(LoadEvent { at_ms: b as f64 * OVERFLOW_BIN_MS, function: f, rps });
+                prev = rps;
+            }
+        }
+    }
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::tests::test_catalog;
+    use crate::runtime::{ForestParams, NativeForestPredictor};
+    use crate::traces::PoissonParams;
+
+    fn stub_predictor() -> Arc<dyn Predictor> {
+        Arc::new(NativeForestPredictor::new(ForestParams::synthetic_stub(
+            crate::model::N_FEATURES,
+            0.05,
+            0.05,
+        )))
+    }
+
+    fn base_cfg() -> RunConfig {
+        let mut cfg = RunConfig::jiagu_45();
+        cfg.n_nodes = 6;
+        cfg.duration_s = 8;
+        cfg.requests = true;
+        cfg.eval_interval_ms = 250.0;
+        cfg.regions = vec![3, 3];
+        cfg
+    }
+
+    fn test_workload(cat: &Catalog) -> Workload {
+        Workload::poisson(cat, &PoissonParams { duration_s: 8, ..Default::default() }, 33)
+    }
+
+    fn run(cfg: RunConfig) -> (RunReport, FederationStats) {
+        let cat = test_catalog();
+        let wl = test_workload(&cat);
+        FederatedControlPlane::new(cat, cfg, stub_predictor())
+            .unwrap()
+            .run_workload(&wl)
+            .unwrap()
+    }
+
+    #[test]
+    fn latency_matrix_nearest_breaks_ties_toward_lower_index() {
+        let m = LatencyMatrix::uniform(3, 25.0).unwrap();
+        assert_eq!(m.ms(0, 0), 0.0);
+        assert_eq!(m.ms(0, 2), 25.0);
+        assert_eq!(m.nearest(0), Some(1));
+        assert_eq!(m.nearest(1), Some(0));
+        assert_eq!(m.nearest(2), Some(0));
+        assert_eq!(LatencyMatrix::uniform(1, 25.0).unwrap().nearest(0), None);
+        assert!(LatencyMatrix::uniform(2, f64::NAN).is_err());
+    }
+
+    #[test]
+    fn failure_plan_validates_specs() {
+        assert!(FailurePlan::from_specs(&[(0, 5000.0)], 2).is_ok());
+        assert!(FailurePlan::from_specs(&[(2, 5000.0)], 2).is_err());
+        assert!(FailurePlan::from_specs(&[(0, -1.0)], 2).is_err());
+        assert!(FailurePlan::from_specs(&[(0, f64::NAN)], 2).is_err());
+        assert!(FailurePlan::from_specs(&[(0, 1.0), (0, 2.0)], 2).is_err());
+        let seeded = FailurePlan::seeded(7, 3, 8000.0).unwrap();
+        assert_eq!(seeded.crashes().len(), 1);
+        assert_eq!(seeded, FailurePlan::seeded(7, 3, 8000.0).unwrap());
+    }
+
+    #[test]
+    fn region_layout_rejects_zero_node_regions() {
+        assert!(RegionLayout::new(6, &[3, 0]).is_err());
+        assert!(RegionLayout::new(6, &[]).is_err());
+        let l = RegionLayout::new(6, &[4, 2]).unwrap();
+        assert_eq!(l.regions(), 2);
+        assert_eq!(l.functions_of(0), vec![0, 2, 4]);
+        assert_eq!(l.functions_of(1), vec![1, 3, 5]);
+        assert_eq!(l.total_nodes(), 6);
+        assert_eq!(proportional_split(7, 3), vec![3, 2, 2]);
+    }
+
+    /// The tentpole contract: a region crashed at mid-horizon and
+    /// replayed from its seed merges to the uncrashed run's exact bytes
+    /// (full `PartialEq` surface, histogram and sample vectors
+    /// included), and the side stats record the recovery.
+    #[test]
+    fn crash_replay_recovers_byte_identical_reports() {
+        let (clean, clean_stats) = run(base_cfg());
+        assert!(clean.requests_served > 0, "scenario must route traffic");
+        assert_eq!(clean_stats.crashes, 0);
+
+        let mut cfg = base_cfg();
+        cfg.failures = vec![(1, 4000.0)];
+        let (crashed, stats) = run(cfg);
+        assert_eq!(clean, crashed, "crash-replay must reproduce the uncrashed bytes");
+        assert_eq!(stats.crashes, 1);
+        assert!(stats.lost_events > 0, "the doomed run must have done work to lose");
+        assert_eq!(stats.replayed_events, stats.lost_events);
+    }
+
+    /// `shards` is a pure thread knob for federations too.
+    #[test]
+    fn shard_count_never_changes_the_federated_report() {
+        let mut cfg = base_cfg();
+        cfg.failures = vec![(0, 3000.0)];
+        cfg.shards = 1;
+        let (reference, _) = run(cfg.clone());
+        for shards in [2, 4] {
+            cfg.shards = shards;
+            let (parallel, _) = run(cfg.clone());
+            assert_eq!(reference, parallel, "{shards} threads must reproduce 1-thread bytes");
+        }
+    }
+
+    /// Region reports own disjoint function slices and the merge counts
+    /// cells, so the federated report carries the layout's shape.
+    #[test]
+    fn merged_report_carries_layout_ownership() {
+        let (report, _) = run(base_cfg());
+        assert_eq!(report.cells, 2);
+        assert_eq!(report.owned_functions, (0..test_catalog().len()).collect::<Vec<_>>());
+    }
+
+    /// A starved federation (one node per region, heavy load) saturates,
+    /// spills to the latency-nearest region, and stays deterministic:
+    /// two identical runs agree byte-for-byte, stats included.
+    #[test]
+    fn overflow_routing_is_deterministic() {
+        let cat = test_catalog();
+        let mut cfg = base_cfg();
+        cfg.regions = vec![1, 1];
+        cfg.n_nodes = 2;
+        let wl = Workload::poisson(
+            &cat,
+            &PoissonParams { duration_s: 8, mean_concurrency: 24.0, ..Default::default() },
+            33,
+        );
+        let fed = FederatedControlPlane::new(cat.clone(), cfg.clone(), stub_predictor()).unwrap();
+        let (a, sa) = fed.run_workload(&wl).unwrap();
+        let fed2 = FederatedControlPlane::new(cat, cfg, stub_predictor()).unwrap();
+        let (b, sb) = fed2.run_workload(&wl).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(sa, sb);
+        if sa.saturated_regions > 0 {
+            assert!(sa.spilled_arrivals > 0);
+            assert!(sa.regions_rerun > 0);
+        }
+    }
+
+    #[test]
+    fn remove_multiset_is_exact_and_order_preserving() {
+        let a = |t: f64, f: usize| Arrival { at_ms: t, function: f };
+        let arrivals = vec![a(1.0, 0), a(2.0, 1), a(2.0, 1), a(3.0, 0)];
+        let kept = remove_multiset(&arrivals, &[a(2.0, 1)]);
+        assert_eq!(kept, vec![a(1.0, 0), a(2.0, 1), a(3.0, 0)]);
+        assert_eq!(remove_multiset(&arrivals, &[]), arrivals);
+        assert_eq!(remove_multiset(&arrivals, &arrivals), Vec::new());
+    }
+
+    #[test]
+    fn derived_load_events_bin_the_spill() {
+        let a = |t: f64, f: usize| Arrival { at_ms: t, function: f };
+        let ev = derive_load_events(&[a(50.0, 2), a(60.0, 2), a(250.0, 2)], 1000.0);
+        // bin 0 holds two arrivals (20 rps), bin 1 none, bin 2 one
+        assert_eq!(ev[0], LoadEvent { at_ms: 0.0, function: 2, rps: 20.0 });
+        assert_eq!(ev[1], LoadEvent { at_ms: 100.0, function: 2, rps: 0.0 });
+        assert_eq!(ev[2], LoadEvent { at_ms: 200.0, function: 2, rps: 10.0 });
+        assert_eq!(ev[3], LoadEvent { at_ms: 300.0, function: 2, rps: 0.0 });
+        assert_eq!(ev.len(), 4);
+    }
+}

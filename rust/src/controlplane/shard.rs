@@ -70,6 +70,33 @@ pub fn cell_seed(seed: u64, cell: usize) -> u64 {
     seed ^ (cell as u64).wrapping_mul(CELL_SEED_MULT)
 }
 
+/// Typed rejection of a layout that would hand a cell an empty
+/// sub-cluster.  `ShardLayout::new` clamps `partitions` so every cell
+/// owns at least one function and one node *when the cluster has any
+/// nodes at all* — but `n_nodes == 0` slips through the clamp (the cap
+/// is `max(1)`-ed to keep one cell) and would feed `n_nodes = 0` to the
+/// cell's `Simulation`, which cannot place anything.  The orchestrators
+/// refuse to run such a layout and surface this error; it implements
+/// [`std::error::Error`], so it converts into `anyhow::Error` via `?`
+/// and stays readable in the chain's root cause.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ZeroNodeCell {
+    /// The first cell whose node allotment is zero.
+    pub cell: usize,
+}
+
+impl std::fmt::Display for ZeroNodeCell {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "cell {} owns zero nodes: the cluster needs at least one node per cell",
+            self.cell
+        )
+    }
+}
+
+impl std::error::Error for ZeroNodeCell {}
+
 /// The deterministic partition layout: which functions and how many
 /// nodes each cell owns.  Built from `(n_functions, n_nodes,
 /// partitions)` alone — never from the shard/thread count.
@@ -111,6 +138,16 @@ impl ShardLayout {
     pub fn functions_of(&self, cell: usize) -> Vec<usize> {
         (cell..self.n_functions).step_by(self.partitions).collect()
     }
+
+    /// Reject a layout with a zero-node cell (only reachable with
+    /// `n_nodes == 0`; the constructor's clamp guarantees every cell at
+    /// least one node otherwise).
+    pub fn validate(&self) -> Result<(), ZeroNodeCell> {
+        match self.node_share.iter().position(|&n| n == 0) {
+            Some(cell) => Err(ZeroNodeCell { cell }),
+            None => Ok(()),
+        }
+    }
 }
 
 /// The sharded orchestrator: partitions a workload across independent
@@ -124,9 +161,13 @@ pub struct ShardedControlPlane {
 }
 
 impl ShardedControlPlane {
-    pub fn new(cat: Catalog, cfg: RunConfig, predictor: Arc<dyn Predictor>) -> Self {
+    /// Build the orchestrator, rejecting any layout with a zero-node
+    /// cell (the [`ZeroNodeCell`] typed error — in practice
+    /// `cfg.n_nodes == 0`, which the layout clamp alone does not catch).
+    pub fn new(cat: Catalog, cfg: RunConfig, predictor: Arc<dyn Predictor>) -> Result<Self> {
         let layout = ShardLayout::new(cat.len(), cfg.n_nodes, cfg.partitions);
-        Self { cat, cfg, predictor, layout }
+        layout.validate()?;
+        Ok(Self { cat, cfg, predictor, layout })
     }
 
     pub fn layout(&self) -> &ShardLayout {
@@ -163,6 +204,7 @@ impl ShardedControlPlane {
     /// (on `cfg.shards.max(1)` threads, capped at the cell count), and
     /// merge the per-cell reports in ascending cell order.
     pub fn run_workload(&self, workload: &Workload) -> Result<RunReport> {
+        self.layout.validate()?;
         ensure!(
             workload.n_functions == self.cat.len(),
             "workload spans {} functions, catalog has {}",
@@ -180,7 +222,7 @@ impl ShardedControlPlane {
         let mut reports: Vec<Option<RunReport>> = (0..p).map(|_| None).collect();
         if threads == 1 {
             for (c, (cfg, wl)) in cells.iter().enumerate() {
-                reports[c] = Some(self.run_cell(cfg, wl)?);
+                reports[c] = Some(self.run_cell(c, cfg, wl)?);
             }
         } else {
             // Workers take cells round-robin; each returns (cell, result)
@@ -195,7 +237,7 @@ impl ShardedControlPlane {
                         let mut c = w;
                         while c < p {
                             let (cfg, wl) = &cells[c];
-                            worker.push((c, self.run_cell(cfg, wl)));
+                            worker.push((c, self.run_cell(c, cfg, wl)));
                             c += threads;
                         }
                         worker
@@ -221,10 +263,14 @@ impl ShardedControlPlane {
     }
 
     /// One cell = one plain simulation over the full catalog with the
-    /// cell's sub-workload, node allotment and seed.
-    fn run_cell(&self, cfg: &RunConfig, workload: &Workload) -> Result<RunReport> {
-        Simulation::new(self.cat.clone(), cfg.clone(), self.predictor.clone())
-            .run_workload(workload)
+    /// cell's sub-workload, node allotment and seed.  The fresh report
+    /// claims ownership of the whole catalog; overwrite it with the
+    /// cell's actual slice so the merge's disjointness check holds.
+    fn run_cell(&self, cell: usize, cfg: &RunConfig, workload: &Workload) -> Result<RunReport> {
+        let mut report = Simulation::new(self.cat.clone(), cfg.clone(), self.predictor.clone())
+            .run_workload(workload)?;
+        report.owned_functions = self.layout.functions_of(cell);
+        Ok(report)
     }
 }
 
@@ -262,7 +308,7 @@ mod tests {
         let mut cfg = base_cfg();
         cfg.shards = shards;
         let wl = test_workload(&cat);
-        ShardedControlPlane::new(cat, cfg, stub_predictor()).run_workload(&wl).unwrap()
+        ShardedControlPlane::new(cat, cfg, stub_predictor()).unwrap().run_workload(&wl).unwrap()
     }
 
     #[test]
@@ -322,6 +368,7 @@ mod tests {
         cfg.shards = 1;
         let wl = test_workload(&cat);
         let sharded = ShardedControlPlane::new(cat.clone(), cfg.clone(), stub_predictor())
+            .unwrap()
             .run_workload(&wl)
             .unwrap();
         cfg.shards = 0;
@@ -336,11 +383,12 @@ mod tests {
         let cat = test_catalog();
         let cfg = base_cfg();
         let wl = test_workload(&cat);
-        let cp = ShardedControlPlane::new(cat, cfg, stub_predictor());
+        let cp = ShardedControlPlane::new(cat, cfg, stub_predictor()).unwrap();
         let layout = cp.layout().clone();
         for cell in 0..layout.partitions() {
             let cell_wl = wl.restrict(|f| layout.cell_of(f) == cell);
-            let report = cp.run_cell(&cp.cell_config(cell), &cell_wl).unwrap();
+            let report = cp.run_cell(cell, &cp.cell_config(cell), &cell_wl).unwrap();
+            assert_eq!(report.owned_functions, layout.functions_of(cell));
             for (f, count) in report.request_counts.iter().enumerate() {
                 if layout.cell_of(f) != cell {
                     assert_eq!(*count, 0, "cell {cell} served foreign function {f}");
@@ -352,7 +400,7 @@ mod tests {
     #[test]
     fn mismatched_workload_is_rejected() {
         let cat = test_catalog();
-        let cp = ShardedControlPlane::new(cat, base_cfg(), stub_predictor());
+        let cp = ShardedControlPlane::new(cat, base_cfg(), stub_predictor()).unwrap();
         let wl = Workload {
             name: "wrong-arity".into(),
             n_functions: 1,
@@ -360,5 +408,24 @@ mod tests {
             duration_ms: 1000.0,
         };
         assert!(cp.run_workload(&wl).is_err());
+    }
+
+    /// Regression: `ShardLayout::new(_, 0, _)` emits a zero-node cell
+    /// (`node_share = [0]`) that the clamp does not catch; the
+    /// orchestrator must refuse to build on it with the typed
+    /// [`ZeroNodeCell`] error rather than hand `Simulation` an empty
+    /// cluster.  Fails on the pre-fix code, where `new` was infallible.
+    #[test]
+    fn zero_node_cluster_is_rejected_with_typed_error() {
+        let layout = ShardLayout::new(4, 0, 2);
+        assert_eq!(layout.validate(), Err(ZeroNodeCell { cell: 0 }));
+        assert!(ShardLayout::new(4, 3, 2).validate().is_ok());
+
+        let mut cfg = base_cfg();
+        cfg.n_nodes = 0;
+        let err = ShardedControlPlane::new(test_catalog(), cfg, stub_predictor())
+            .map(|_| ())
+            .unwrap_err();
+        assert_eq!(err.root_cause(), ZeroNodeCell { cell: 0 }.to_string());
     }
 }

@@ -10,6 +10,10 @@
 //!             [--shards N]            # sharded control planes on N threads
 //!             [--partitions P]        # partition layout (default 4)
 //!             [--queue heap|wheel]    # Timeline impl (binary heap | timing wheel)
+//!             [--regions N|a,b,c]     # multi-region federation (N proportional
+//!                                     # regions, or explicit per-region node counts)
+//!             [--region-latency MS]   # uniform inter-region latency matrix
+//!             [--fail R@MS,...]       # crash region R at virtual ms MS
 //!             [--json]                # emit the RunReport as JSON
 //! jiagu compare [--duration 900]      # all schedulers on trace A
 //! jiagu replay  --trace FILE          # stream an invocation log (CSV/JSONL)
@@ -127,7 +131,34 @@ fn build_config(args: &Args) -> Result<RunConfig> {
         cfg.queue = QueueKind::parse(v)
             .ok_or_else(|| anyhow::anyhow!("--queue {v:?} (heap|wheel)"))?;
     }
+    if let Some(v) = args.flags.get("regions") {
+        cfg.regions = parse_regions(v, cfg.n_nodes)?;
+    }
+    if let Some(v) = args.flags.get("region-latency") {
+        cfg.region_latency_ms = v.parse().context("--region-latency")?;
+    }
+    if let Some(v) = args.flags.get("fail") {
+        cfg.failures = v
+            .split(',')
+            .map(jiagu::config::parse_fail_spec)
+            .collect::<Result<_>>()?;
+    }
     Ok(cfg)
+}
+
+/// `--regions N` splits the cluster's `n_nodes` proportionally into `N`
+/// regions; `--regions a,b,c` gives explicit heterogeneous per-region
+/// node counts.
+fn parse_regions(v: &str, n_nodes: usize) -> Result<Vec<usize>> {
+    let counts: Vec<usize> = v
+        .split(',')
+        .map(|s| s.trim().parse().context("--regions"))
+        .collect::<Result<_>>()?;
+    Ok(if counts.len() == 1 {
+        jiagu::controlplane::region::proportional_split(n_nodes, counts[0])
+    } else {
+        counts
+    })
 }
 
 fn make_trace(
@@ -154,6 +185,11 @@ fn report_json(r: &jiagu::sim::RunReport) -> jiagu::util::json::Json {
         ("scheduler", s(&r.scheduler)),
         ("trace", s(&r.trace)),
         ("duration_s", num(r.duration_s as f64)),
+        ("cells", num(r.cells as f64)),
+        (
+            "owned_functions",
+            arr(r.owned_functions.iter().map(|f| num(*f as f64))),
+        ),
         ("events_processed", num(r.events_processed as f64)),
         ("density", num(r.density)),
         ("qos_violation_rate", num(r.qos_violation_rate)),
@@ -272,21 +308,42 @@ fn run() -> Result<()> {
                 golden_cfg.shards = cfg.shards;
                 golden_cfg.partitions = cfg.partitions;
                 golden_cfg.queue = cfg.queue;
+                // federation knobs ride on top of the pinned scenario;
+                // `--regions N` re-splits the golden cluster size
+                if let Some(v) = args.flags.get("regions") {
+                    golden_cfg.regions = parse_regions(v, golden_cfg.n_nodes)?;
+                }
+                golden_cfg.region_latency_ms = cfg.region_latency_ms;
+                golden_cfg.failures = cfg.failures.clone();
                 (golden_cfg, wl)
             } else {
                 let trace = make_trace(&cat, trace_name, cfg.duration_s)?;
                 (cfg, trace.workload())
             };
-            let report = if cfg.shards > 0 {
-                jiagu::controlplane::shard::ShardedControlPlane::new(cat, cfg, predictor)
+            let mut federation_stats = None;
+            let report = if !cfg.regions.is_empty() {
+                let fed = jiagu::controlplane::region::FederatedControlPlane::new(
+                    cat, cfg, predictor,
+                )?;
+                let (report, stats) = fed.run_workload(&workload)?;
+                federation_stats = Some(stats);
+                report
+            } else if cfg.shards > 0 {
+                jiagu::controlplane::shard::ShardedControlPlane::new(cat, cfg, predictor)?
                     .run_workload(&workload)?
             } else {
                 Simulation::new(cat, cfg, predictor).run_workload(&workload)?
             };
             if args.switches.contains("json") {
+                // federation stats stay out of the JSON deliberately:
+                // the determinism matrix byte-compares this output, and
+                // crash-replay accounting must never perturb it
                 println!("{}", report_json(&report).to_string());
             } else {
                 print_report(&report);
+                if let Some(stats) = federation_stats {
+                    println!("  federation: {stats}");
+                }
             }
         }
         Some("compare") => {

@@ -138,6 +138,11 @@ pub struct Router {
     waiting: Vec<VecDeque<f64>>,
     /// Reusable weight buffer for [`Router::pick`] (never observable).
     scratch: Vec<f64>,
+    /// Gauge under-decrements repaired by saturating at zero instead of
+    /// wrapping (see [`Router::gauge_skew_repairs`]).  Any nonzero value
+    /// is a routing-accounting bug upstream — an unchecked wrap here used
+    /// to corrupt every later [`Router::pick`] weight in release builds.
+    gauge_skew_repairs: u64,
 }
 
 impl Default for Router {
@@ -166,6 +171,7 @@ impl Router {
             peak_node_in_flight: 0,
             waiting: Vec::new(),
             scratch: Vec::new(),
+            gauge_skew_repairs: 0,
         }
     }
 
@@ -251,7 +257,13 @@ impl Router {
         }
         let i = id as usize;
         let orphaned: Vec<f64> = self.load_queue[i].drain(..).collect();
-        self.load_in_flight[i] -= orphaned.len() as u32;
+        // checked, not unchecked `-=`: a skewed gauge would wrap in
+        // release builds and poison every later pick weight
+        Self::checked_gauge_sub(
+            &mut self.load_in_flight[i],
+            orphaned.len() as u32,
+            &mut self.gauge_skew_repairs,
+        );
         let node = self.load_node[i];
         if self.load_in_flight[i] == 0 {
             self.load_live[i] = false;
@@ -417,8 +429,34 @@ impl Router {
 
     fn dec_node(&mut self, node: NodeId, by: u32) {
         if let Some(c) = self.node_in_flight.get_mut(node) {
-            *c = c.saturating_sub(by);
+            Self::checked_gauge_sub(c, by, &mut self.gauge_skew_repairs);
         }
+    }
+
+    /// Subtract `by` from an in-flight gauge, loudly: an under-decrement
+    /// trips the debug assertion (outside the crate's own unit tests,
+    /// which inject skew on purpose to exercise this path) and is then
+    /// repaired by saturating at zero and counted, so release builds keep
+    /// coherent pick weights instead of a wrapped ~4-billion gauge.
+    fn checked_gauge_sub(count: &mut u32, by: u32, repairs: &mut u64) {
+        match count.checked_sub(by) {
+            Some(v) => *count = v,
+            None => {
+                debug_assert!(
+                    cfg!(test),
+                    "in-flight gauge {count} under-decremented by {by}"
+                );
+                *count = 0;
+                *repairs += 1;
+            }
+        }
+    }
+
+    /// Gauge under-decrements repaired since construction.  Zero in any
+    /// healthy run — `rust/tests/router_props.rs` pins that across
+    /// adversarial add/route/remove/complete storms.
+    pub fn gauge_skew_repairs(&self) -> u64 {
+        self.gauge_skew_repairs
     }
 
     /// Per-instance RPS under equal load balancing of `total_rps` (the
@@ -592,6 +630,30 @@ mod tests {
         assert!(r.complete(1).is_none(), "no queue left to pop");
         assert_eq!(r.in_flight_of(1), 0, "state dropped after the drain");
         assert_eq!(r.total_in_flight(), 0);
+    }
+
+    /// Regression: `remove` used an unchecked `-=` on the per-instance
+    /// gauge, so an injected skew (queue longer than the gauge) wrapped
+    /// to ~4 billion in release and panicked in debug — this test fails
+    /// on the pre-fix code.  Post-fix the subtraction saturates at zero
+    /// and the repair is counted, for both the per-instance gauge and
+    /// its `dec_node` mirror.
+    #[test]
+    fn skewed_gauges_saturate_and_count_instead_of_wrapping() {
+        let mut r = Router::with_seed(8);
+        r.add(0, 1, 0);
+        r.route(0, 1.0); // in service
+        r.route(0, 2.0); // queued
+        assert_eq!(r.gauge_skew_repairs(), 0);
+        // inject skew: the FIFO queue is now longer than both gauges
+        r.load_in_flight[1] = 0;
+        r.node_in_flight[0] = 0;
+        let orphaned = r.remove(0, 1);
+        assert_eq!(orphaned, vec![2.0], "queued arrival still handed back");
+        assert_eq!(r.in_flight_of(1), 0, "gauge saturated at zero, not wrapped");
+        assert_eq!(r.node_in_flight(0), 0, "node gauge saturated too");
+        assert_eq!(r.gauge_skew_repairs(), 2, "both repairs counted");
+        assert_eq!(r.total_in_flight(), 0, "pick weights stay coherent");
     }
 
     #[test]

@@ -33,7 +33,7 @@ use crate::metrics::{
 };
 use crate::runtime::Predictor;
 use crate::traces::{TraceSet, Workload};
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 use std::sync::Arc;
 
 /// Salt XOR-ed into `cfg.seed` for the per-invocation arrival stream
@@ -72,6 +72,18 @@ pub struct RunReport {
     pub scheduler: String,
     pub trace: String,
     pub duration_s: usize,
+    /// Control-plane cells folded into this report: 1 for an unsharded
+    /// run, the partition count after a sharded merge, the region count
+    /// after a federated merge.  A pure function of the layout (never of
+    /// thread count or failure injection); merges by addition.
+    pub cells: u64,
+    /// Sorted global function ids this report's cell(s) own.  A fresh
+    /// single-plane report owns the whole catalog; shard/region drivers
+    /// overwrite it with their cell's slice of the id space before
+    /// merging.  [`RunReport::merge`] rejects overlapping ownership —
+    /// the function-id remapping check that keeps per-function
+    /// scatter-adds exact — and unions the sets.
+    pub owned_functions: Vec<usize>,
     /// Events popped and handled by the control plane(s) — the
     /// throughput denominator `benches/shard_scaling.rs` reports.
     pub events_processed: u64,
@@ -223,6 +235,21 @@ impl RunReport {
                 && self.request_qos_violations.len() == other.request_qos_violations.len(),
             "merge across catalog sizes"
         );
+        // Function-id remapping check: the operands must own disjoint
+        // global id sets, or the per-function scatter-adds below would
+        // silently double-count a function's traffic.  Both vectors are
+        // kept sorted, so a two-pointer walk finds any collision.
+        let (mut i, mut j) = (0, 0);
+        while i < self.owned_functions.len() && j < other.owned_functions.len() {
+            match self.owned_functions[i].cmp(&other.owned_functions[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => bail!(
+                    "merge operands both own function {}: global-id remapping bug",
+                    self.owned_functions[i]
+                ),
+            }
+        }
         self.latency_hist.merge(&other.latency_hist)?;
         // counters
         self.events_processed += other.events_processed;
@@ -248,6 +275,9 @@ impl RunReport {
         self.peak_nodes += other.peak_nodes;
         self.peak_in_flight += other.peak_in_flight;
         self.peak_node_in_flight = self.peak_node_in_flight.max(other.peak_node_in_flight);
+        self.cells += other.cells;
+        self.owned_functions.extend_from_slice(&other.owned_functions);
+        self.owned_functions.sort_unstable();
         // per-function tables (scatter: one owner per function)
         for (a, b) in self.qos_violating.iter_mut().zip(&other.qos_violating) {
             *a += b;
@@ -493,6 +523,8 @@ impl ReportBuilder {
             scheduler: scheduler.to_string(),
             trace: trace.to_string(),
             duration_s,
+            cells: 1,
+            owned_functions: (0..self.cat.len()).collect(),
             events_processed: self.events_processed,
             density: 0.0,
             qos_violation_rate: 0.0,

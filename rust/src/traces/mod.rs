@@ -770,6 +770,67 @@ mod tests {
         assert_eq!(arrivals, wl.synthesize_arrivals(3));
     }
 
+    /// Restricting to a function with no load events is a valid cell
+    /// assignment, not an error: the cell keeps the global id space and
+    /// horizon, carries zero events, and synthesizes zero arrivals.
+    #[test]
+    fn restrict_keeps_zero_event_functions_structurally_alive() {
+        let cat = test_catalog();
+        // only function 0 ever receives load; function 1 exists but is idle
+        let wl = Workload {
+            name: "sparse".into(),
+            n_functions: cat.len(),
+            events: vec![LoadEvent { at_ms: 0.0, function: 0, rps: 10.0 }],
+            duration_ms: 5_000.0,
+        };
+        let idle_cell = wl.restrict(|f| f == 1);
+        assert_eq!(idle_cell.n_functions, wl.n_functions, "ids stay global");
+        assert_eq!(idle_cell.duration_ms, wl.duration_ms, "horizon carries over");
+        assert_eq!(idle_cell.name, wl.name, "trace identity carries over");
+        assert!(idle_cell.events.is_empty(), "no load belongs to the idle function");
+        let (arrivals, dropped) = idle_cell.synthesize_arrivals_counted(17);
+        assert!(arrivals.is_empty(), "an idle cell synthesizes nothing");
+        assert_eq!(dropped, 0);
+    }
+
+    /// The all-empty restriction (a cell that owns no functions) is the
+    /// identity's absorbing element: structurally intact, zero events,
+    /// and further restriction cannot resurrect anything.
+    #[test]
+    fn restrict_to_nothing_is_an_empty_but_well_formed_workload() {
+        let cat = test_catalog();
+        let wl = Workload::poisson(&cat, &PoissonParams::default(), 21);
+        let empty = wl.restrict(|_| false);
+        assert!(empty.events.is_empty());
+        assert_eq!(empty.n_functions, wl.n_functions);
+        assert_eq!(empty.duration_ms, wl.duration_ms);
+        assert!(empty.synthesize_arrivals(9).is_empty());
+        assert!(empty.restrict(|_| true).events.is_empty(), "absorbing under composition");
+    }
+
+    /// Composing two restrictions equals restricting to the predicate
+    /// intersection, in either order — the algebraic fact that lets the
+    /// federation layer restrict per region and then per cell.
+    #[test]
+    fn restrict_composed_twice_is_the_intersection() {
+        let cat = test_catalog();
+        let wl = Workload::poisson(&cat, &PoissonParams::default(), 34);
+        let p = |f: usize| f % 2 == 0;
+        let q = |f: usize| f < 3;
+        let composed = wl.restrict(p).restrict(q);
+        let swapped = wl.restrict(q).restrict(p);
+        let intersection = wl.restrict(|f| p(f) && q(f));
+        assert!(!intersection.events.is_empty(), "the overlap must carry traffic");
+        assert_eq!(composed.events, intersection.events);
+        assert_eq!(swapped.events, intersection.events, "composition commutes");
+        assert_eq!(composed.n_functions, wl.n_functions);
+        // arrivals agree too: synthesis commutes with restriction
+        assert_eq!(
+            composed.synthesize_arrivals(5),
+            intersection.synthesize_arrivals(5)
+        );
+    }
+
     #[test]
     fn concurrency_cdf_monotone_to_one() {
         let cat = test_catalog();

@@ -101,7 +101,7 @@ fn run_one(
     workload: &Workload,
 ) -> Result<RunReport> {
     if cfg.shards > 0 {
-        ShardedControlPlane::new(cat.clone(), cfg.clone(), predictor.clone())
+        ShardedControlPlane::new(cat.clone(), cfg.clone(), predictor.clone())?
             .run_workload(workload)
     } else {
         Simulation::new(cat.clone(), cfg.clone(), predictor.clone()).run_workload(workload)

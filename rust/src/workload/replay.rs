@@ -261,6 +261,18 @@ fn rescale_copies(opts: &ReplayOptions, function: usize, ordinal: u64) -> u64 {
     whole as u64 + extra
 }
 
+/// Draw one invocation's copy count *and* advance its per-function
+/// ordinal — the single accessor both the emission path and the
+/// horizon-clip paths go through.  Sharing it is what guarantees the
+/// fractional-rescale decisions stay aligned between emitted and clipped
+/// accounting: if either path read a different ordinal, `emitted +
+/// clipped` would drift from the trace's expected copy total.
+fn take_copies(opts: &ReplayOptions, ordinals: &mut [u64], function: usize) -> u64 {
+    let copies = rescale_copies(opts, function, ordinals[function]);
+    ordinals[function] += 1;
+    copies
+}
+
 /// Stream `invocations` through one plain control plane configured by
 /// `cfg`, keeping only functions `keep` accepts (the sharded path's
 /// cell filter; pass `|_| true` for the whole trace).
@@ -309,8 +321,7 @@ fn replay_stream(
                 break;
             }
             stats.invocations += 1;
-            let copies = rescale_copies(opts, inv.function, ordinals[inv.function]);
-            ordinals[inv.function] += 1;
+            let copies = take_copies(opts, &mut ordinals, inv.function);
             if copies == 0 {
                 continue;
             }
@@ -353,8 +364,7 @@ fn replay_stream(
     // silently (rescaling still advances so the knob stays chunk-stable)
     if let Some(inv) = pending.take() {
         stats.invocations += 1;
-        stats.clipped += rescale_copies(opts, inv.function, ordinals[inv.function]);
-        ordinals[inv.function] += 1;
+        stats.clipped += take_copies(opts, &mut ordinals, inv.function);
     }
     for r in invocations {
         let inv = r?;
@@ -362,8 +372,7 @@ fn replay_stream(
             continue;
         }
         stats.invocations += 1;
-        stats.clipped += rescale_copies(opts, inv.function, ordinals[inv.function]);
-        ordinals[inv.function] += 1;
+        stats.clipped += take_copies(opts, &mut ordinals, inv.function);
     }
     builder.add_arrivals_dropped(stats.clipped);
 
@@ -393,7 +402,7 @@ pub fn replay_path(
         let reader = TraceReader::from_path(path, cat)?;
         return replay_stream(cat, cfg, predictor, reader, opts, |_| true, &name);
     }
-    let scp = ShardedControlPlane::new(cat.clone(), cfg.clone(), predictor.clone());
+    let scp = ShardedControlPlane::new(cat.clone(), cfg.clone(), predictor.clone())?;
     let layout = scp.layout().clone();
     let p = layout.partitions();
     let threads = cfg.shards.clamp(1, p);
@@ -401,7 +410,7 @@ pub fn replay_path(
     let run_cell = |c: usize| -> Result<(RunReport, ReplayStats)> {
         let reader = TraceReader::from_path(path, cat)?;
         let cell_cfg = scp.cell_config(c);
-        replay_stream(
+        let (mut report, stats) = replay_stream(
             cat,
             &cell_cfg,
             predictor.clone(),
@@ -409,7 +418,11 @@ pub fn replay_path(
             opts,
             |f| layout.cell_of(f) == c,
             &name,
-        )
+        )?;
+        // the fresh report claims the whole catalog; narrow it to the
+        // cell's slice so the merge's disjointness check holds
+        report.owned_functions = layout.functions_of(c);
+        Ok((report, stats))
     };
 
     let mut results: Vec<Option<(RunReport, ReplayStats)>> = (0..p).map(|_| None).collect();
@@ -733,6 +746,50 @@ fn0,10.5,120.0
         let (_, s2) = replay_path(&cat, &cfg, stub_predictor(), &path, &two).unwrap();
         assert_eq!(s2.emitted, 2 * s1.emitted);
         assert_eq!(s1.invocations, s2.invocations);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Pin of the `--rescale` clipped accounting audit: the emission and
+    /// horizon-clip paths must consume the *same* per-invocation ordinal
+    /// stream (they now share [`take_copies`]), so under fractional
+    /// rescale every trace record's copy decision is drawn exactly once
+    /// and `emitted + clipped` equals the expectation recomputed
+    /// independently of chunking and of the emit/clip split.
+    #[test]
+    fn fractional_rescale_accounts_every_copy_across_the_clip_horizon() {
+        let cat = test_catalog();
+        let path = std::env::temp_dir().join("jiagu_replay_rescale_clip.csv");
+        // 6 s of trace against a 4 s horizon: a fat clipped tail
+        let spec = TraceGenSpec {
+            invocations: 900,
+            duration_s: 6,
+            seed: 31,
+            format: TraceFormat::Csv,
+        };
+        let total = generate_trace_file(&path, &cat, &spec).unwrap();
+        let cfg = replay_cfg(0);
+        let opts = ReplayOptions { rescale: 1.5, ..Default::default() };
+
+        // independent expectation: one flat walk of the raw trace, one
+        // ordinal per record per function
+        let mut ordinals = vec![0u64; cat.len()];
+        let mut expected = 0u64;
+        for inv in TraceReader::from_path(&path, &cat).unwrap() {
+            let inv = inv.unwrap();
+            expected += rescale_copies(&opts, inv.function, ordinals[inv.function]);
+            ordinals[inv.function] += 1;
+        }
+
+        let (report, stats) =
+            replay_path(&cat, &cfg, stub_predictor(), &path, &opts).unwrap();
+        assert_eq!(stats.invocations, total);
+        assert!(stats.clipped > 0, "the 2 s tail must be clipped");
+        assert_eq!(
+            stats.emitted + stats.clipped,
+            expected,
+            "clip paths must draw the same per-invocation ordinals as emission"
+        );
+        assert_eq!(report.arrivals_dropped, stats.clipped);
         std::fs::remove_file(&path).ok();
     }
 }

@@ -150,6 +150,7 @@ fn committed_bench_snapshots_parse_and_stay_machine_normalized() {
     for (file, bench) in [
         ("BENCH_event_queue.json", "event_queue"),
         ("BENCH_forest_inference.json", "forest_inference"),
+        ("BENCH_region_federation.json", "region_federation"),
         ("BENCH_router_hotpath.json", "router_hotpath"),
         ("BENCH_shard_scaling.json", "shard_scaling"),
         ("BENCH_trace_replay.json", "trace_replay"),
@@ -157,7 +158,11 @@ fn committed_bench_snapshots_parse_and_stay_machine_normalized() {
         let snap = Json::parse_file(&root.join(file)).unwrap();
         assert_eq!(snap.get("bench").unwrap().as_str().unwrap(), bench, "{file}");
         snap.get("bootstrap").unwrap().as_bool().unwrap();
-        let rows_key = if bench == "shard_scaling" { "rows" } else { "scenarios" };
+        let rows_key = if matches!(bench, "shard_scaling" | "region_federation") {
+            "rows"
+        } else {
+            "scenarios"
+        };
         let rows = snap.get(rows_key).unwrap().as_arr().unwrap();
         assert!(!rows.is_empty(), "{file}: empty {rows_key}");
         for row in rows {

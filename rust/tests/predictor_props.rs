@@ -156,6 +156,7 @@ fn golden_scenario_replays_identically_across_shards_and_queues() {
                 cfg,
                 predictor.clone(),
             )
+            .unwrap()
             .run_workload(&workload)
             .unwrap();
             reports.push((shards, queue, report));

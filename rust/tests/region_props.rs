@@ -1,0 +1,160 @@
+//! End-to-end properties of the multi-region federation
+//! ([`jiagu::controlplane::region`]), mirroring the determinism matrix
+//! CI re-checks through the CLI:
+//!
+//! * **crash-replay byte-identity** — the golden scenario with one
+//!   region crashed at mid-horizon and replayed from its seed merges to
+//!   the exact bytes of the uncrashed federation, at shard counts
+//!   1/2/4 under both Timeline implementations (`--regions 2 --fail
+//!   1@5000` vs `--regions 2` in the CI leg),
+//! * a 1-region federation is the identity embedding of the plain
+//!   unsharded simulation,
+//! * heterogeneous node allotments are part of the semantics (they move
+//!   bits) but replay deterministically,
+//! * invalid layouts and failure specs are rejected up front with the
+//!   typed errors the CLI surfaces.
+//!
+//! Registered in `Cargo.toml` as a `[[test]]` target (`autotests =
+//! false`; `make check-test-targets` fails on unregistered files).
+
+use jiagu::artifacts::{latency_golden_scenario, make_catalog};
+use jiagu::catalog::Catalog;
+use jiagu::config::RunConfig;
+use jiagu::controlplane::region::{FederatedControlPlane, FederationStats};
+use jiagu::controlplane::shard::ZeroNodeCell;
+use jiagu::engine::QueueKind;
+use jiagu::runtime::{ForestParams, NativeForestPredictor, Predictor};
+use jiagu::sim::{RunReport, Simulation};
+use jiagu::traces::Workload;
+use std::sync::Arc;
+
+fn stub_predictor() -> Arc<dyn Predictor> {
+    Arc::new(NativeForestPredictor::new(ForestParams::synthetic_stub(
+        jiagu::model::N_FEATURES,
+        0.05,
+        0.05,
+    )))
+}
+
+fn golden(cat: &Catalog) -> (RunConfig, Workload) {
+    latency_golden_scenario(cat)
+}
+
+fn run_federated(
+    cat: &Catalog,
+    cfg: RunConfig,
+    wl: &Workload,
+) -> (RunReport, FederationStats) {
+    FederatedControlPlane::new(cat.clone(), cfg, stub_predictor())
+        .unwrap()
+        .run_workload(wl)
+        .unwrap()
+}
+
+/// The PR's acceptance criterion, end to end: region 1 crashed at
+/// mid-horizon (5000 ms of the 10 s golden horizon) and replayed from
+/// its cell seed produces a merged report byte-identical to the
+/// uncrashed federation — at shards 1/2/4 × queue heap/wheel, the same
+/// matrix the CI determinism job compares through `jiagu run --json`.
+#[test]
+fn golden_scenario_crash_replay_is_byte_identical_across_shards_and_queues() {
+    let cat = Catalog::from_functions(make_catalog(8, 0x5ca1e));
+    let mut reference: Option<RunReport> = None;
+    for shards in [1usize, 2, 4] {
+        for queue in [QueueKind::Heap, QueueKind::Wheel] {
+            let (mut cfg, wl) = golden(&cat);
+            cfg.regions = vec![3, 3];
+            cfg.shards = shards;
+            cfg.queue = queue;
+
+            let mut crashed_cfg = cfg.clone();
+            crashed_cfg.failures = vec![(1, 5000.0)];
+
+            let (clean, clean_stats) = run_federated(&cat, cfg, &wl);
+            let (crashed, stats) = run_federated(&cat, crashed_cfg, &wl);
+            assert_eq!(
+                clean, crashed,
+                "shards {shards} × {queue:?}: crash-replay moved report bytes"
+            );
+            assert_eq!(clean_stats.crashes, 0);
+            assert_eq!(stats.crashes, 1, "shards {shards} × {queue:?}");
+            assert!(stats.lost_events > 0, "the doomed run must lose real work");
+            assert_eq!(stats.replayed_events, stats.lost_events);
+
+            match &reference {
+                None => {
+                    assert!(clean.requests_served > 0, "scenario must route traffic");
+                    assert_eq!(clean.cells, 2, "two regions merged");
+                    reference = Some(clean);
+                }
+                Some(r) => assert_eq!(
+                    *r, clean,
+                    "shards {shards} × {queue:?} diverged from shards 1 × heap"
+                ),
+            }
+        }
+    }
+}
+
+/// A federation of one region is the identity embedding: same bytes as
+/// the plain unsharded simulation of the same config (the region layer
+/// drains the same 60 s fold chunks with the same seeds).
+#[test]
+fn single_region_federation_reproduces_the_unsharded_plane() {
+    let cat = Catalog::from_functions(make_catalog(6, 0xfeed));
+    let (mut cfg, wl) = golden(&cat);
+    cfg.n_nodes = 6;
+    cfg.regions = vec![6];
+    let (federated, stats) = run_federated(&cat, cfg.clone(), &wl);
+    cfg.regions = Vec::new();
+    let plain = Simulation::new(cat, cfg, stub_predictor()).run_workload(&wl).unwrap();
+    assert_eq!(federated, plain, "R = 1 must be the identity embedding");
+    assert_eq!(stats.regions, 1);
+    assert_eq!(stats.spilled_arrivals, 0, "one region has nowhere to spill");
+}
+
+/// Node allotments are semantics, not tuning: `[4, 2]` and `[3, 3]`
+/// disagree, but each layout replays itself byte-for-byte.
+#[test]
+fn heterogeneous_allotments_move_bits_but_replay_deterministically() {
+    let cat = Catalog::from_functions(make_catalog(8, 0x5ca1e));
+    let run = |counts: Vec<usize>| {
+        let (mut cfg, wl) = golden(&cat);
+        cfg.regions = counts;
+        run_federated(&cat, cfg, &wl)
+    };
+    let (balanced, _) = run(vec![3, 3]);
+    let (skewed, _) = run(vec![4, 2]);
+    assert!(balanced.requests_served > 0);
+    assert_ne!(balanced, skewed, "the node split is part of the semantics");
+    let (balanced2, stats2) = run(vec![3, 3]);
+    let (skewed2, _) = run(vec![4, 2]);
+    assert_eq!(balanced, balanced2, "same layout, same bytes");
+    assert_eq!(skewed, skewed2, "same layout, same bytes");
+    assert_eq!(stats2.regions, 2);
+}
+
+/// Invalid inputs fail construction with the typed errors the CLI
+/// surfaces — never a run that silently does something else.
+#[test]
+fn federation_rejects_invalid_layouts_and_failure_specs() {
+    let cat = Catalog::from_functions(make_catalog(6, 3));
+    let build = |mutate: &dyn Fn(&mut RunConfig)| {
+        let (mut cfg, _) = golden(&cat);
+        cfg.regions = vec![3, 3];
+        mutate(&mut cfg);
+        FederatedControlPlane::new(cat.clone(), cfg, stub_predictor()).map(|_| ())
+    };
+    assert!(build(&|_| {}).is_ok());
+
+    let err = build(&|cfg| cfg.regions = vec![6, 0]).unwrap_err();
+    assert_eq!(err.root_cause(), ZeroNodeCell { cell: 1 }.to_string());
+
+    assert!(build(&|cfg| cfg.failures = vec![(2, 1000.0)]).is_err(), "region out of range");
+    assert!(build(&|cfg| cfg.failures = vec![(0, f64::NAN)]).is_err(), "NaN crash time");
+    assert!(
+        build(&|cfg| cfg.failures = vec![(0, 1.0), (0, 2.0)]).is_err(),
+        "double crash of one region"
+    );
+    assert!(build(&|cfg| cfg.region_latency_ms = -1.0).is_err(), "negative latency");
+}

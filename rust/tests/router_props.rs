@@ -147,6 +147,9 @@ fn random_sequences_route_only_to_serving_instances() {
             });
             cluster.check_invariants().unwrap();
         }
+        // healthy storms never need the saturating-repair path: nonzero
+        // repairs would mean `remove`/`dec_node` under-accounted somewhere
+        assert_eq!(router.gauge_skew_repairs(), 0, "seed {seed}: gauges skewed");
     }
 }
 
@@ -170,6 +173,9 @@ fn in_flight_gauges_survive_adversarial_completions() {
     assert_eq!(router.total_in_flight(), 0);
     assert_eq!(router.node_in_flight(0), 0);
     assert_eq!(router.peak_node_in_flight(), 1, "peak is a high-water mark");
+    // none of the no-op completes above is allowed to reach the
+    // saturating-repair fallback — that path is for skewed gauges only
+    assert_eq!(router.gauge_skew_repairs(), 0, "no-op completes never repair");
 }
 
 /// The typed [`Dispatch`] verdict from `pick` must classify the picked

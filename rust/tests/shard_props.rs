@@ -117,6 +117,8 @@ fn synthetic_report(rng: &mut Rng, cell: usize, cells: usize) -> RunReport {
         scheduler: "jiagu".into(),
         trace: "synthetic".into(),
         duration_s: 60,
+        cells: 1,
+        owned_functions: (cell..N_FUNCTIONS).step_by(cells).collect(),
         events_processed: rng.range_u64(0, 10_000),
         density: 0.0,
         qos_violation_rate: 0.0,
@@ -262,6 +264,14 @@ fn incompatible_reports_are_rejected() {
     let mut o = other.clone();
     o.latency_hist = LatencyHistogram::new(1.0, 4);
     assert!(wrong_bins.merge(&o).is_err(), "histogram-binning mismatch must fail");
+
+    // global-id remapping bug: both operands claim ownership of the same
+    // function — the merge must refuse before touching any aggregate
+    let mut overlapping = base.clone();
+    let o = base.clone();
+    let snapshot = overlapping.clone();
+    assert!(overlapping.merge(&o).is_err(), "overlapping ownership must fail");
+    assert_eq!(overlapping, snapshot, "a rejected merge must leave self unchanged");
 }
 
 /// The end-to-end invariant the CI matrix pins through the CLI: for a
@@ -280,7 +290,10 @@ fn shard_count_never_changes_any_aggregate_end_to_end() {
         cfg.seed = 99;
         cfg.shards = shards;
         cfg.partitions = partitions;
-        ShardedControlPlane::new(cat.clone(), cfg, stub_predictor()).run_workload(&wl).unwrap()
+        ShardedControlPlane::new(cat.clone(), cfg, stub_predictor())
+            .unwrap()
+            .run_workload(&wl)
+            .unwrap()
     };
     let reference = run(1, 4);
     assert!(reference.requests_served > 0, "the scenario must route traffic");
@@ -305,6 +318,7 @@ fn single_partition_layout_reproduces_the_unsharded_plane() {
     cfg.partitions = 1;
     cfg.shards = 1;
     let sharded = ShardedControlPlane::new(cat.clone(), cfg.clone(), stub_predictor())
+        .unwrap()
         .run_workload(&wl)
         .unwrap();
     let plain = Simulation::new(cat, cfg, stub_predictor()).run_workload(&wl).unwrap();

@@ -240,6 +240,7 @@ fn golden_scenario_reports_identical_under_heap_and_wheel_at_all_shard_counts() 
             cfg.shards = shards;
             cfg.queue = queue;
             ShardedControlPlane::new(cat.clone(), cfg, stub_predictor())
+                .unwrap()
                 .run_workload(&wl)
                 .unwrap()
         };

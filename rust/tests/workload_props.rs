@@ -75,6 +75,7 @@ fn fuzzer_scenarios_replay_identically_across_shards_and_queues() {
                 cfg.queue = queue;
                 let report =
                     ShardedControlPlane::new(cat.clone(), cfg, stub_predictor())
+                        .unwrap()
                         .run_workload(&wl)
                         .unwrap();
                 match &reference {
@@ -146,7 +147,7 @@ fn cell_configs_pin_one_arrival_seed_for_every_cell() {
         cfg.shards = 2;
         cfg.arrival_seed = explicit;
         let expected = effective_arrival_seed(&cfg);
-        let scp = ShardedControlPlane::new(cat.clone(), cfg, stub_predictor());
+        let scp = ShardedControlPlane::new(cat.clone(), cfg, stub_predictor()).unwrap();
         for c in 0..scp.layout().partitions() {
             let cell = scp.cell_config(c);
             assert_eq!(
