@@ -10,7 +10,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts artifacts-jax build test check-test-targets bench bench-smoke bench-snapshot determinism fuzz-smoke fmt-check clippy doc ci clean
+.PHONY: artifacts artifacts-jax build test check-test-targets bench bench-smoke bench-snapshot determinism fuzz-smoke policy-smoke docs-lint fmt-check clippy doc ci clean
 
 # Regenerate unconditionally.
 artifacts:
@@ -68,6 +68,7 @@ bench-smoke: $(ARTIFACTS_DIR)/meta.json
 	$(CARGO) bench --bench shard_scaling
 	$(CARGO) bench --bench region_federation
 	JIAGU_TRACE_INVOCATIONS=200000 $(CARGO) bench --bench trace_replay
+	$(CARGO) bench --bench policy_matrix
 
 # Regenerate the committed bench snapshots (BENCH_*.json at the repo
 # root): machine-normalized measurements only — deterministic event
@@ -81,6 +82,7 @@ bench-snapshot: $(ARTIFACTS_DIR)/meta.json
 	JIAGU_BENCH_SNAPSHOT=BENCH_shard_scaling.json JIAGU_BENCH_DURATION=20 $(CARGO) bench --bench shard_scaling
 	JIAGU_BENCH_SNAPSHOT=BENCH_region_federation.json JIAGU_BENCH_DURATION=20 $(CARGO) bench --bench region_federation
 	JIAGU_BENCH_SNAPSHOT=BENCH_trace_replay.json JIAGU_TRACE_INVOCATIONS=200000 $(CARGO) bench --bench trace_replay
+	JIAGU_BENCH_SNAPSHOT=BENCH_policy_matrix.json $(CARGO) bench --bench policy_matrix
 
 # Determinism matrix: the fixed-seed latency-golden scenario must emit
 # byte-identical RunReport JSON at every shard count AND under either
@@ -155,6 +157,43 @@ fuzz-smoke: $(ARTIFACTS_DIR)/meta.json
 		> target/fuzz/replay-burst.json || exit 1; \
 	echo "fuzz-smoke: divergence report written; replay matrix byte-identical at shards 1/2/4 x heap/wheel"
 
+# Policy-lab smoke: every dispatch x scaling policy combination across
+# the sweepable autoscaler cadence, through the differential harness's
+# invariant checks (request accounting, monotone percentiles, no invalid
+# latency samples, double-run byte-stability) — any violation fails the
+# build.  The ranked machine-readable matrix lands in target/policy/
+# (uploaded by CI).  See docs/POLICIES.md.
+policy-smoke: $(ARTIFACTS_DIR)/meta.json
+	@mkdir -p target/policy; \
+	echo "jiagu policy-matrix --out target/policy/policy_matrix.json"; \
+	$(CARGO) run --release --quiet --bin jiagu -- policy-matrix \
+		--out target/policy/policy_matrix.json || exit 1; \
+	echo "policy-smoke: all dispatch x scaling combos ranked with zero invariant violations"
+
+# Docs link lint: every relative link in README.md and docs/*.md must
+# resolve to a file or directory in the repo (anchors stripped; http(s)
+# and mailto links skipped).  Pure shell — runs without a Rust toolchain.
+docs-lint:
+	@fail=0; \
+	for doc in README.md docs/*.md; do \
+		dir=$$(dirname $$doc); \
+		links=$$(grep -o '](\([^)]*\))' $$doc | sed 's/^](//; s/)$$//'); \
+		for link in $$links; do \
+			case $$link in \
+				http://*|https://*|mailto:*|\#*) continue ;; \
+				../../actions/*) continue ;; \
+			esac; \
+			target=$${link%%\#*}; \
+			[ -n "$$target" ] || continue; \
+			if [ ! -e "$$dir/$$target" ]; then \
+				echo "error: $$doc links to missing $$target"; \
+				fail=1; \
+			fi; \
+		done; \
+	done; \
+	[ $$fail -eq 0 ] && echo "docs-lint: all relative links resolve"; \
+	exit $$fail
+
 fmt-check:
 	$(CARGO) fmt --all -- --check
 
@@ -168,7 +207,7 @@ clippy:
 doc:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
-ci: build fmt-check clippy doc test bench-smoke determinism fuzz-smoke
+ci: build fmt-check clippy doc docs-lint test bench-smoke determinism fuzz-smoke policy-smoke
 
 clean:
 	$(CARGO) clean

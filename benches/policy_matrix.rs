@@ -1,0 +1,119 @@
+//! Policy-lab matrix bench: every dispatch × scaling policy combination
+//! across the sweepable autoscaler cadence, ranked on the latency
+//! histogram (`workload::diff::run_policy_matrix`).  Reports wall time
+//! for the full matrix plus the per-combo virtual-time metrics the
+//! rankings are built from; the committed snapshot pins only the
+//! deterministic (virtual-time) numbers, never wall clock.
+//!
+//! Self-contained: generates its own catalog and synthetic-stub forest,
+//! so it runs on a fresh checkout without `make artifacts`.
+//!
+//! ```bash
+//! cargo bench --bench policy_matrix
+//! # JIAGU_BENCH_SNAPSHOT=BENCH_policy_matrix.json writes the
+//! # machine-normalized snapshot (deterministic metrics only).
+//! ```
+
+use jiagu::artifacts::make_catalog;
+use jiagu::catalog::Catalog;
+use jiagu::config::RunConfig;
+use jiagu::runtime::{ForestParams, NativeForestPredictor, Predictor};
+use jiagu::traces::{PoissonParams, Workload};
+use jiagu::util::bench::Table;
+use jiagu::util::json::{arr, num, obj, s, Json};
+use jiagu::workload::diff;
+use std::sync::Arc;
+use std::time::Instant;
+
+const N_FUNCTIONS: usize = 8;
+const N_NODES: usize = 6;
+const DURATION_S: usize = 5;
+const SEED: u64 = 4242;
+/// Deterministic runs: wall time is the only noise, so two repeats with
+/// a min-take suffice — and the repeat doubles as a determinism guard.
+const REPEATS: usize = 2;
+
+fn main() {
+    let cat = Catalog::from_functions(make_catalog(N_FUNCTIONS, 0x90110c));
+    let predictor: Arc<dyn Predictor> = Arc::new(NativeForestPredictor::new(
+        ForestParams::synthetic_stub(jiagu::model::N_FEATURES, 0.05, 0.05),
+    ));
+    let wl = Workload::poisson(
+        &cat,
+        &PoissonParams { duration_s: DURATION_S, ..Default::default() },
+        SEED,
+    );
+    let mut cfg = RunConfig::jiagu_45();
+    cfg.n_nodes = N_NODES;
+    cfg.duration_s = DURATION_S;
+    cfg.requests = true;
+    cfg.seed = SEED;
+    // shorten both release triggers so scaling policies differ inside the
+    // bench horizon (the 45/60 s defaults never fire in a 5 s run)
+    cfg.autoscaler.release_duration_s = 3.0;
+    cfg.autoscaler.keepalive_duration_s = 6.0;
+
+    let mut best_s = f64::INFINITY;
+    let mut kept = None;
+    for _ in 0..REPEATS {
+        let t0 = Instant::now();
+        let m = diff::run_policy_matrix(&cat, &cfg, &predictor, &wl, false)
+            .expect("policy matrix");
+        best_s = best_s.min(t0.elapsed().as_secs_f64());
+        if let Some(prev) = &kept {
+            // the determinism guard: repeats may only move wall time
+            assert_eq!(
+                diff::matrix_json(prev).to_string(),
+                diff::matrix_json(&m).to_string(),
+                "policy matrix must be byte-stable across repeats"
+            );
+        }
+        kept = Some(m);
+    }
+    let m = kept.expect("at least one repeat");
+    assert!(m.violations.is_empty(), "invariant violations: {:?}", m.violations);
+
+    let mut table =
+        Table::new(&["combo", "p99 ms", "qos viol", "density", "served"]);
+    let mut snapshot_rows = Vec::new();
+    for o in &m.outcomes {
+        let qos_violations: u64 = o.report.request_qos_violations.iter().sum();
+        table.row(&[
+            o.scheduler.clone(),
+            format!("{:.3}", o.report.request_p99_ms),
+            format!("{qos_violations}"),
+            format!("{:.3}", o.report.density),
+            format!("{}", o.report.requests_served),
+        ]);
+        snapshot_rows.push(obj(vec![
+            ("combo", s(&o.scheduler)),
+            ("density", num(o.report.density)),
+            ("p99_ms", num(o.report.request_p99_ms)),
+            ("qos_violations", num(qos_violations as f64)),
+            ("requests_served", num(o.report.requests_served as f64)),
+        ]));
+    }
+    table.print(&format!(
+        "policy matrix ({} combos, {DURATION_S}s horizon, wall {:.1} ms)",
+        m.outcomes.len(),
+        best_s * 1e3
+    ));
+    for (metric, order) in &m.rankings {
+        println!("  best {metric}: {}", order.first().map(String::as_str).unwrap_or("-"));
+    }
+    println!("(matrix byte-identical across repeats — asserted)");
+
+    if let Ok(out) = std::env::var("JIAGU_BENCH_SNAPSHOT") {
+        if !out.is_empty() {
+            let payload = obj(vec![
+                ("bench", s("policy_matrix")),
+                ("bootstrap", Json::Bool(false)),
+                ("combos", arr(snapshot_rows)),
+                ("duration_s", num(DURATION_S as f64)),
+            ]);
+            std::fs::write(&out, format!("{}\n", payload.to_string()))
+                .expect("writing JIAGU_BENCH_SNAPSHOT");
+            println!("wrote {out}");
+        }
+    }
+}

@@ -27,6 +27,7 @@
 
 use crate::catalog::{Catalog, FunctionId};
 use crate::cluster::{Cluster, InstanceId, InstanceState};
+use crate::policy::{BaselineScaling, ScalingPolicy};
 use crate::router::Router;
 use crate::scheduler::{CommittedPlan, DeferredUpdate, Plan, Scheduler};
 use anyhow::Result;
@@ -130,14 +131,42 @@ struct FnState {
 pub struct Autoscaler {
     pub cfg: AutoscalerConfig,
     state: Vec<FnState>,
+    /// Pluggable scaling strategy (see [`crate::policy`]); the default
+    /// [`BaselineScaling`] reproduces the original release/keep-alive
+    /// behaviour exactly.
+    policy: Box<dyn ScalingPolicy>,
 }
 
 impl Autoscaler {
+    /// An autoscaler with the default [`BaselineScaling`] policy.
     pub fn new(cfg: AutoscalerConfig, n_functions: usize) -> Self {
-        Self { cfg, state: vec![FnState::default(); n_functions] }
+        Self::with_policy(cfg, n_functions, Box::new(BaselineScaling))
     }
 
-    /// Expected saturated-instance count for a load level.
+    /// An autoscaler driven by `policy`.
+    pub fn with_policy(
+        cfg: AutoscalerConfig,
+        n_functions: usize,
+        policy: Box<dyn ScalingPolicy>,
+    ) -> Self {
+        Self { cfg, state: vec![FnState::default(); n_functions], policy }
+    }
+
+    /// Name of the active scaling policy.
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Forward one QoS-monitor observation to the scaling policy (the
+    /// harvesting policy reclaims lent capacity on recent violations;
+    /// the baseline ignores it).  Consumes no randomness.
+    pub fn observe_qos(&mut self, f: FunctionId, violated: bool, now_ms: f64) {
+        self.policy.observe_qos(f, violated, now_ms);
+    }
+
+    /// Expected saturated-instance count for a load level — the
+    /// baseline target formula (kept as the policy-independent
+    /// reference; [`BaselineScaling`] computes exactly this).
     pub fn expected_instances(cat: &Catalog, f: FunctionId, rps: f64) -> u32 {
         if rps <= 0.0 {
             0
@@ -206,7 +235,7 @@ impl Autoscaler {
         now_ms: f64,
     ) -> Result<TickOutcome> {
         let mut out = TickOutcome::default();
-        let expected = Self::expected_instances(cat, f, rps);
+        let expected = self.policy.target_instances(cat, f, rps);
         // serving = saturated in router + instances still starting (they
         // will serve once ready; double-starting would overshoot)
         let serving = router.serving_count(f) as u32;
@@ -244,14 +273,15 @@ impl Autoscaler {
             }
         } else if expected < serving {
             // sustained surplus → stage 1 release (or direct eviction
-            // when dual-staged scaling is disabled)
+            // when dual-staged scaling is disabled); the policy decides
+            // how long the surplus must sustain (the harvesting policy
+            // stretches it to lend idle capacity, reclaiming when the
+            // function or a node neighbour shows recent QoS pressure)
             let since = self.state[f].surplus_since_ms.get_or_insert(now_ms);
             let sustained_s = (now_ms - *since) / 1000.0;
-            let trigger_s = if self.cfg.dual_staged {
-                self.cfg.release_duration_s
-            } else {
-                self.cfg.keepalive_duration_s
-            };
+            let neighbours = Self::colocated(cluster, router, f);
+            let trigger_s =
+                self.policy.release_trigger_s(&self.cfg, f, &neighbours, now_ms);
             if sustained_s >= trigger_s {
                 let surplus = serving - expected;
                 let victims = self.newest_serving(cluster, router, f, surplus);
@@ -344,6 +374,25 @@ impl Autoscaler {
     }
 
     // -- helpers -------------------------------------------------------------
+
+    /// Functions co-located with `f`'s serving instances (saturated or
+    /// cached on the same nodes), sorted and deduplicated — the
+    /// neighbour set the scaling policy's release trigger may consult.
+    /// Only computed on the surplus branch, off the per-request hot
+    /// path; deterministic because node mixes are.
+    fn colocated(cluster: &Cluster, router: &Router, f: FunctionId) -> Vec<FunctionId> {
+        let mut out: Vec<FunctionId> = Vec::new();
+        for &id in router.serving(f) {
+            let Some(inst) = cluster.instance(id) else { continue };
+            for (g, sat, cached) in cluster.mix(inst.node).entries {
+                if g != f && (sat > 0 || cached > 0) && !out.contains(&g) {
+                    out.push(g);
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
 
     /// Newest `k` serving instances of `f` (LIFO release policy).  The
     /// sort key is a total order (`f64::total_cmp`), so a NaN-poisoned

@@ -5,6 +5,7 @@
 use crate::autoscaler::AutoscalerConfig;
 use crate::capacity::CapacityConfig;
 use crate::engine::QueueKind;
+use crate::policy::{DispatchPolicyKind, ScalingPolicyKind};
 use crate::util::json::Json;
 use anyhow::{bail, Result};
 use std::path::Path;
@@ -240,6 +241,17 @@ pub struct RunConfig {
     /// cell seed and resumed at the crash horizon (JSON key `failures`,
     /// an array of `"REGION@MS"` strings; CLI `--fail REGION@MS[,...]`).
     pub failures: Vec<(usize, f64)>,
+    /// Which request-dispatch strategy the [`crate::router::Router`] runs
+    /// ([`crate::policy`]; JSON key `dispatch_policy`, CLI
+    /// `--dispatch-policy`).  The default [`DispatchPolicyKind::Weighted`]
+    /// reproduces the pre-policy-lab router byte-for-byte.
+    pub dispatch_policy: DispatchPolicyKind,
+    /// Which scaling strategy the [`crate::autoscaler::Autoscaler`]
+    /// delegates its target/release decisions to ([`crate::policy`]; JSON
+    /// key `scaling_policy`, CLI `--scaling-policy`).  The default
+    /// [`ScalingPolicyKind::Baseline`] reproduces the pre-policy-lab
+    /// dual-staged/keep-alive behaviour byte-for-byte.
+    pub scaling_policy: ScalingPolicyKind,
     /// Internal (no JSON key): make each drain collect the fresh arrivals
     /// that cold-waited or queued, as overflow-rerouting candidates
     /// ([`crate::controlplane::EngineEvents::overflow_candidates`]).  Off
@@ -268,6 +280,8 @@ impl Default for RunConfig {
             regions: Vec::new(),
             region_latency_ms: DEFAULT_REGION_LATENCY_MS,
             failures: Vec::new(),
+            dispatch_policy: DispatchPolicyKind::Weighted,
+            scaling_policy: ScalingPolicyKind::Baseline,
             collect_overflow: false,
         }
     }
@@ -391,6 +405,12 @@ impl RunConfig {
                 .map(|f| parse_fail_spec(f.as_str()?))
                 .collect::<Result<Vec<_>>>()?;
         }
+        if let Some(v) = j.opt("dispatch_policy") {
+            c.dispatch_policy = DispatchPolicyKind::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.opt("scaling_policy") {
+            c.scaling_policy = ScalingPolicyKind::parse(v.as_str()?)?;
+        }
         Ok(c)
     }
 }
@@ -496,6 +516,25 @@ mod tests {
         for bad in ["", "1", "x@5", "1@y", "1@-3", "1@inf", "1@NaN"] {
             assert!(parse_fail_spec(bad).is_err(), "{bad:?} must be rejected");
         }
+    }
+
+    #[test]
+    fn load_reads_policy_kinds_and_defaults_reproduce_the_prerefactor_run() {
+        let d = RunConfig::default();
+        assert_eq!(d.dispatch_policy, DispatchPolicyKind::Weighted);
+        assert_eq!(d.scaling_policy, ScalingPolicyKind::Baseline);
+        let path = std::env::temp_dir().join("jiagu_cfg_policy_test.json");
+        std::fs::write(
+            &path,
+            r#"{"dispatch_policy": "p2c", "scaling_policy": "harvesting"}"#,
+        )
+        .unwrap();
+        let c = RunConfig::load(&path).unwrap();
+        assert_eq!(c.dispatch_policy, DispatchPolicyKind::PowerOfTwo);
+        assert_eq!(c.scaling_policy, ScalingPolicyKind::Harvesting);
+        std::fs::write(&path, r#"{"dispatch_policy": "round-robin"}"#).unwrap();
+        assert!(RunConfig::load(&path).is_err(), "unknown policy must be rejected");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

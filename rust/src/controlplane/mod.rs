@@ -255,12 +255,20 @@ impl ControlPlane {
         } else {
             1000.0
         };
+        // catalogs reaching the engine passed `Catalog::load` validation
+        // (positive finite solo latencies), so policy construction can
+        // only fail on a hand-built degenerate catalog — a programming
+        // error here, a typed error at the policy layer (see
+        // `policy::InvalidDurationEstimate` and its regression test)
+        let dispatch = crate::policy::make_dispatch_policy(cfg.dispatch_policy, &cat)
+            .expect("dispatch policy rejected the catalog");
+        let scaling = crate::policy::make_scaling_policy(cfg.scaling_policy);
         Self {
             cluster: Cluster::new(cfg.n_nodes),
             // the pick stream must differ from every other seeded stream
             // yet derive from the run seed (replica determinism)
-            router: Router::with_seed(cfg.seed ^ 0x7e57_0a11),
-            autoscaler: Autoscaler::new(cfg.autoscaler.clone(), n_functions),
+            router: Router::with_policy(cfg.seed ^ 0x7e57_0a11, dispatch),
+            autoscaler: Autoscaler::with_policy(cfg.autoscaler.clone(), n_functions, scaling),
             monitor: AccuracyMonitor::new(n_functions),
             rng: Rng::seed_from(cfg.seed),
             queue: AnyTimeline::new(cfg.queue),
@@ -451,6 +459,12 @@ impl ControlPlane {
                 // superseded event pops as a no-op
                 if self.in_flight.get(&node).map(|u| u.version) == Some(version) {
                     let update = self.in_flight.remove(&node).expect("checked above");
+                    // locality dispatch reads the refreshed tables: the
+                    // node's summed capacity lands as a hint at the same
+                    // deterministic virtual time the scheduler sees it
+                    let capacity: f64 =
+                        update.entries.values().map(|e| f64::from(e.capacity)).sum();
+                    self.router.capacity_hint(node, capacity);
                     self.sched.complete_deferred(update);
                     ev.deferred_completed += 1;
                 }
@@ -626,6 +640,10 @@ impl ControlPlane {
                 let requests = self.loads[*f] * (*sat as f64 / serving_total).min(1.0);
                 if requests > 0.0 {
                     ev.qos.push(QosWindow { function: *f, requests, measured_ms: measured });
+                    // feed the scaling policy the same verdict the report
+                    // builder applies downstream; consumes no RNG
+                    let violated = measured > self.cat.get(*f).qos_latency_ms;
+                    self.autoscaler.observe_qos(*f, violated, now_ms);
                 }
                 if accuracy_tick {
                     probe.clear();

@@ -9,9 +9,10 @@
 //!   dual-staged scaling, request [`router`], [`cluster`] state, baseline
 //!   schedulers, a millisecond-resolution discrete-event core
 //!   ([`engine`] + [`controlplane`]), the [`sim`]ulator,
-//!   per-second/sub-second workload generators ([`traces`]) and the
+//!   per-second/sub-second workload generators ([`traces`]), the
 //!   [`workload`] lab (streaming trace replay, adversarial scenario
-//!   fuzzer, differential QoS harness).
+//!   fuzzer, differential QoS harness) and the [`policy`] lab (pluggable
+//!   dispatch/scaling strategies ranked on the latency histogram).
 //! * **L2 (JAX, build time)** — the latency predictor compute graph,
 //!   AOT-lowered to HLO text at `make artifacts`.
 //! * **L1 (Pallas, build time)** — the random-forest traversal kernel.
@@ -45,6 +46,7 @@ pub mod engine;
 pub mod interference;
 pub mod metrics;
 pub mod model;
+pub mod policy;
 pub mod router;
 pub mod runtime;
 pub mod scheduler;

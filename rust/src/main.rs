@@ -14,6 +14,8 @@
 //!                                     # regions, or explicit per-region node counts)
 //!             [--region-latency MS]   # uniform inter-region latency matrix
 //!             [--fail R@MS,...]       # crash region R at virtual ms MS
+//!             [--dispatch-policy P]   # weighted|p2c|locality|sita (policy lab)
+//!             [--scaling-policy S]    # baseline|harvesting (policy lab)
 //!             [--json]                # emit the RunReport as JSON
 //! jiagu compare [--duration 900]      # all schedulers on trace A
 //! jiagu replay  --trace FILE          # stream an invocation log (CSV/JSONL)
@@ -21,6 +23,8 @@
 //!             [--shards N] [--partitions P] [--queue heap|wheel] [--json]
 //! jiagu fuzz  [--seeds 7,11,13] [--families correlated-burst,...]
 //!             [--duration 8] [--require-divergence] [--json] [--out FILE]
+//! jiagu policy-matrix [--duration 6] [--seed 4242] [--json] [--out FILE]
+//!                                     # rank every dispatch x scaling combo
 //! jiagu info                          # artifacts + model summary
 //! ```
 //!
@@ -36,7 +40,10 @@
 //! matrix over all four schedulers (`workload::diff`) and exits
 //! non-zero on any invariant violation — or, with
 //! `--require-divergence`, when no scenario separates any baseline from
-//! jiagu.
+//! jiagu.  `policy-matrix` runs the policy lab (`jiagu::policy`): every
+//! dispatch × scaling policy combination across the sweepable autoscaler
+//! cadence, ranked on the golden latency histogram (`workload::diff::
+//! run_policy_matrix`); exits non-zero on any invariant violation.
 
 use anyhow::{bail, Context, Result};
 use jiagu::config::{InitModel, RunConfig, SchedulerKind};
@@ -142,6 +149,12 @@ fn build_config(args: &Args) -> Result<RunConfig> {
             .split(',')
             .map(jiagu::config::parse_fail_spec)
             .collect::<Result<_>>()?;
+    }
+    if let Some(v) = args.flags.get("dispatch-policy") {
+        cfg.dispatch_policy = jiagu::policy::DispatchPolicyKind::parse(v)?;
+    }
+    if let Some(v) = args.flags.get("scaling-policy") {
+        cfg.scaling_policy = jiagu::policy::ScalingPolicyKind::parse(v)?;
     }
     Ok(cfg)
 }
@@ -315,6 +328,8 @@ fn run() -> Result<()> {
                 }
                 golden_cfg.region_latency_ms = cfg.region_latency_ms;
                 golden_cfg.failures = cfg.failures.clone();
+                golden_cfg.dispatch_policy = cfg.dispatch_policy;
+                golden_cfg.scaling_policy = cfg.scaling_policy;
                 (golden_cfg, wl)
             } else {
                 let trace = make_trace(&cat, trace_name, cfg.duration_s)?;
@@ -490,6 +505,62 @@ fn run() -> Result<()> {
                 );
             }
         }
+        Some("policy-matrix") => {
+            let mut cfg = build_config(&args)?;
+            cfg.requests = true; // the rankings live on the latency histogram
+            if !args.flags.contains_key("duration") {
+                cfg.duration_s = 6; // short smoke horizon by default
+            }
+            if !args.flags.contains_key("seed") {
+                cfg.seed = 4242; // the golden scenario's seed
+            }
+            // shorten both release triggers so scaling policies can differ
+            // observably inside the smoke horizon (the defaults, 45/60 s,
+            // never fire before a sub-minute run ends)
+            cfg.autoscaler.release_duration_s = 3.0;
+            cfg.autoscaler.keepalive_duration_s = 6.0;
+            let cat = jiagu::catalog::Catalog::load(&artifacts.join("functions.json"))?;
+            let native = args.switches.contains("native");
+            let predictor = load_predictor(&artifacts, native)?;
+            let wl = jiagu::traces::Workload::poisson(
+                &cat,
+                &jiagu::traces::PoissonParams {
+                    duration_s: cfg.duration_s,
+                    ..Default::default()
+                },
+                cfg.seed,
+            );
+            let matrix = diff::run_policy_matrix(&cat, &cfg, &predictor, &wl, true)?;
+            let json = diff::matrix_json(&matrix);
+            if let Some(path) = args.flags.get("out") {
+                std::fs::write(path, json.to_string())
+                    .with_context(|| format!("writing policy matrix {path}"))?;
+            }
+            if args.switches.contains("json") {
+                println!("{}", json.to_string());
+            } else {
+                println!(
+                    "== policy matrix: {} combos, {} invariant violations ==",
+                    matrix.outcomes.len(),
+                    matrix.violations.len()
+                );
+                for (metric, order) in &matrix.rankings {
+                    println!("  ranking by {metric} (best first):");
+                    for (i, combo) in order.iter().enumerate() {
+                        println!("    {:>2}. {combo}", i + 1);
+                    }
+                }
+                for v in &matrix.violations {
+                    println!("  VIOLATION {} [{}]: {}", v.scheduler, v.invariant, v.detail);
+                }
+            }
+            if !matrix.violations.is_empty() {
+                bail!(
+                    "{} invariant violation(s) across the policy matrix",
+                    matrix.violations.len()
+                );
+            }
+        }
         Some("info") => {
             let cat = jiagu::catalog::Catalog::load(&artifacts.join("functions.json"))?;
             println!("artifacts: {}", artifacts.display());
@@ -504,7 +575,9 @@ fn run() -> Result<()> {
             let backend = if cfg!(feature = "pjrt") { "pjrt" } else { "native" };
             println!("predictor: {backend}, {} features", predictor.n_features());
         }
-        Some(other) => bail!("unknown subcommand {other:?} (run|compare|replay|fuzz|info)"),
+        Some(other) => bail!(
+            "unknown subcommand {other:?} (run|compare|replay|fuzz|policy-matrix|info)"
+        ),
     }
     Ok(())
 }

@@ -1,0 +1,874 @@
+//! Pluggable dispatch & scaling policies — the **policy lab**.
+//!
+//! Jiagu's density wins come from the policies layered on its
+//! deterministic core; this module factors them out of the engine so new
+//! strategies (including learned ones, cf. the DRL scheduling survey)
+//! can be slotted in without touching the event loop:
+//!
+//! * [`DispatchPolicy`] — which serving instance receives one request.
+//!   Factored out of the router's pick loop; the router keeps the
+//!   cold-queue gate (an empty serving set never reaches a policy and
+//!   consumes no randomness) and the verdict typing (idle pick →
+//!   `Routed`, busy pick → `Saturated`), so every policy shares the same
+//!   queueing semantics and differs only in *which* instance it picks.
+//! * [`ScalingPolicy`] — how many instances a function should have and
+//!   how long a serving surplus must sustain before instances are
+//!   released.  Factored out of the autoscaler's release/keep-alive
+//!   logic (dual-staged scaling, §5 of the paper).
+//!
+//! ## Implementations
+//!
+//! Dispatch ([`DispatchPolicyKind`]):
+//!
+//! * `weighted` (default) — the original `1 / (1 + in_flight)` weighted
+//!   draw, **byte-identical** to the pre-refactor router: one `f64` RNG
+//!   draw per pick, identical weight arithmetic and threshold walk.
+//! * `p2c` — power-of-two-choices: two uniform index draws, the lower
+//!   in-flight gauge wins (ties keep the first draw).  Two RNG draws per
+//!   pick, always — even over a single instance — so the draw count is a
+//!   pure function of the dispatch sequence.
+//! * `locality` — capacity-table-affine: the weighted draw, scaled per
+//!   node by the headroom the scheduler's asynchronously refreshed
+//!   capacity tables report (pushed in via
+//!   [`DispatchPolicy::on_capacity_hint`] when a deferred update lands
+//!   in virtual time).  Before the first refresh lands it degrades to
+//!   plain load weighting.
+//! * `sita` — SITA-style size-interval routing: functions are split
+//!   into short/long bands by their catalog solo-latency estimate at
+//!   construction; short-band functions use deterministic
+//!   join-shortest-queue (ties → lowest instance id), long-band
+//!   functions round-robin so one elephant cannot camp on the shortest
+//!   queue.  Consumes **no** RNG.
+//!
+//! Scaling ([`ScalingPolicyKind`]):
+//!
+//! * `baseline` (default) — the original behaviour: target =
+//!   `ceil(rps / saturated_rps)`, release trigger = `release_duration_s`
+//!   (dual-staged) or `keepalive_duration_s` (keep-alive only).
+//! * `harvesting` — overcommit à la idle-resource harvesting: an idle
+//!   surplus is *lent* (kept warm for the full keep-alive duration —
+//!   reserved capacity co-located functions may convert cheaply) while
+//!   no co-located function shows QoS pressure, and *reclaimed* at the
+//!   faster release trigger as soon as the QoS monitor reports a recent
+//!   violation for the function or any of its node neighbours.  Scale-up
+//!   targets are identical to `baseline`, so harvesting can only keep
+//!   instances longer, never under-provision.
+//!
+//! ## Determinism contract (the seeding rules)
+//!
+//! Policies draw randomness **only** from the seeded [`Rng`] handed into
+//! [`DispatchPolicy::pick`] (the router's own pick stream, derived from
+//! `RunConfig.seed`).  A policy may consume any fixed number of draws
+//! per pick — including zero — but the count must be a pure function of
+//! the pick sequence, never of wall-clock state, hash iteration order or
+//! thread count.  Policy-internal state (round-robin cursors, capacity
+//! hints, QoS pressure timestamps) must be driven exclusively by the
+//! deterministic event stream.  `docs/DETERMINISM.md` specifies the full
+//! replay contract; `rust/tests/policy_props.rs` pins every policy to
+//! byte-identical replays across shards 1/2/4 × heap/wheel timelines.
+//!
+//! ## Adding a policy
+//!
+//! Implement the trait, add a [`DispatchPolicyKind`] /
+//! [`ScalingPolicyKind`] variant (with `parse`/`name` entries), and
+//! construct it in [`make_dispatch_policy`] / [`make_scaling_policy`] —
+//! config, CLI, the diff harness's policy matrix and the determinism
+//! tests pick the variant up from the kind enums.  See
+//! `docs/POLICIES.md` for the full walkthrough and the ranking workflow.
+
+use crate::autoscaler::AutoscalerConfig;
+use crate::catalog::{Catalog, FunctionId};
+use crate::cluster::{InstanceId, NodeId};
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// Read-only view of one pick's candidates: the function's serving set
+/// plus the router's load columns (indexed by dense instance/node id).
+/// The serving set is guaranteed non-empty — the router answers
+/// `ColdQueued` itself before consulting any policy.
+#[derive(Debug)]
+pub struct CandidateView<'a> {
+    /// The function being routed.
+    pub function: FunctionId,
+    /// Serving (saturated) instances of the function, non-empty.
+    pub serving: &'a [InstanceId],
+    /// Per-instance in-flight gauges, indexed by instance id.
+    pub in_flight: &'a [u32],
+    /// Per-instance home node, indexed by instance id.
+    pub node_of: &'a [NodeId],
+    /// Per-node in-flight totals, indexed by node id.
+    pub node_in_flight: &'a [u32],
+}
+
+impl CandidateView<'_> {
+    /// In-flight gauge of `id` (0 for an untracked slot — the same guard
+    /// the pre-refactor pick loop used).
+    pub fn in_flight_of(&self, id: InstanceId) -> u32 {
+        self.in_flight.get(id as usize).copied().unwrap_or(0)
+    }
+
+    /// Home node of `id` (node 0 for an untracked slot).
+    pub fn node(&self, id: InstanceId) -> NodeId {
+        self.node_of.get(id as usize).copied().unwrap_or(0)
+    }
+
+    /// In-flight total of `node` (0 for an unseen node).
+    pub fn node_load(&self, node: NodeId) -> u32 {
+        self.node_in_flight.get(node).copied().unwrap_or(0)
+    }
+}
+
+/// One request-dispatch strategy.  Object-safe; `&mut self` so policies
+/// may keep deterministic internal state (cursors, hints).
+pub trait DispatchPolicy: fmt::Debug + Send {
+    /// Stable policy name (matches [`DispatchPolicyKind::name`]).
+    fn name(&self) -> &'static str;
+
+    /// Pick one instance out of `view.serving` (non-empty).  Randomness
+    /// comes only from `rng` — see the module docs' seeding rules.  The
+    /// router turns the returned id into the typed `Routed`/`Saturated`
+    /// verdict, so the idle-vs-busy rule is shared by every policy.
+    fn pick(&mut self, view: &CandidateView<'_>, rng: &mut Rng) -> InstanceId;
+
+    /// Capacity-table hint for `node`: the sum of the node's
+    /// per-function capacities from the scheduler's asynchronously
+    /// refreshed table, pushed when the deferred update lands in virtual
+    /// time.  Default: ignored.
+    fn on_capacity_hint(&mut self, _node: NodeId, _capacity: f64) {}
+}
+
+/// One autoscaling strategy: scale-up targets plus release sensitivity.
+/// Object-safe; `&mut self` so policies may keep deterministic
+/// per-function state (QoS pressure timestamps).
+pub trait ScalingPolicy: fmt::Debug + Send {
+    /// Stable policy name (matches [`ScalingPolicyKind::name`]).
+    fn name(&self) -> &'static str;
+
+    /// Target instance count for `f` at modeled load `rps`.
+    fn target_instances(&mut self, cat: &Catalog, f: FunctionId, rps: f64) -> u32;
+
+    /// Seconds a serving surplus must sustain before instances are
+    /// released (dual-staged) or evicted (keep-alive only).
+    /// `neighbours` is the sorted set of functions co-located with `f`'s
+    /// serving instances — computed only on the (off-hot-path) surplus
+    /// branch.
+    fn release_trigger_s(
+        &mut self,
+        cfg: &AutoscalerConfig,
+        f: FunctionId,
+        neighbours: &[FunctionId],
+        now_ms: f64,
+    ) -> f64;
+
+    /// QoS observation feed from the monitor: one sample per (node,
+    /// function) window, `violated` when the measured latency exceeded
+    /// the function's QoS target.  Consumes no randomness.  Default:
+    /// ignored.
+    fn observe_qos(&mut self, _f: FunctionId, _violated: bool, _now_ms: f64) {}
+}
+
+// ---------------------------------------------------------------------------
+// kinds (config / CLI surface)
+// ---------------------------------------------------------------------------
+
+/// Selectable dispatch policies (`--dispatch-policy`, config key
+/// `dispatch_policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicyKind {
+    /// The original `1 / (1 + in_flight)` weighted draw (default).
+    Weighted,
+    /// Power-of-two-choices.
+    PowerOfTwo,
+    /// Capacity-table-affine locality weighting.
+    Locality,
+    /// SITA-style size-interval routing.
+    Sita,
+}
+
+impl DispatchPolicyKind {
+    /// Every dispatch policy, default first (the diff harness's policy
+    /// matrix iterates this).
+    pub const ALL: [Self; 4] = [Self::Weighted, Self::PowerOfTwo, Self::Locality, Self::Sita];
+
+    /// Parse a CLI/JSON name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "weighted" => Self::Weighted,
+            "p2c" | "power-of-two" | "poweroftwo" => Self::PowerOfTwo,
+            "locality" => Self::Locality,
+            "sita" => Self::Sita,
+            _ => bail!("unknown dispatch policy {s:?} (weighted|p2c|locality|sita)"),
+        })
+    }
+
+    /// Canonical name (round-trips through [`DispatchPolicyKind::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Weighted => "weighted",
+            Self::PowerOfTwo => "p2c",
+            Self::Locality => "locality",
+            Self::Sita => "sita",
+        }
+    }
+}
+
+/// Selectable scaling policies (`--scaling-policy`, config key
+/// `scaling_policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalingPolicyKind {
+    /// The original release/keep-alive behaviour (default).
+    Baseline,
+    /// Harvesting overcommit: lend idle surplus, reclaim on QoS
+    /// pressure.
+    Harvesting,
+}
+
+impl ScalingPolicyKind {
+    /// Every scaling policy, default first.
+    pub const ALL: [Self; 2] = [Self::Baseline, Self::Harvesting];
+
+    /// Parse a CLI/JSON name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "baseline" => Self::Baseline,
+            "harvesting" => Self::Harvesting,
+            _ => bail!("unknown scaling policy {s:?} (baseline|harvesting)"),
+        })
+    }
+
+    /// Canonical name (round-trips through [`ScalingPolicyKind::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Baseline => "baseline",
+            Self::Harvesting => "harvesting",
+        }
+    }
+}
+
+/// Construct a boxed dispatch policy.  Fallible because SITA derives its
+/// size intervals from the catalog and rejects degenerate duration
+/// estimates (see [`InvalidDurationEstimate`]).
+pub fn make_dispatch_policy(
+    kind: DispatchPolicyKind,
+    cat: &Catalog,
+) -> Result<Box<dyn DispatchPolicy>> {
+    Ok(match kind {
+        DispatchPolicyKind::Weighted => Box::new(WeightedPolicy::new()),
+        DispatchPolicyKind::PowerOfTwo => Box::new(PowerOfTwoPolicy),
+        DispatchPolicyKind::Locality => Box::new(LocalityPolicy::new()),
+        DispatchPolicyKind::Sita => Box::new(SitaDispatch::from_catalog(cat)?),
+    })
+}
+
+/// Construct a boxed scaling policy.
+pub fn make_scaling_policy(kind: ScalingPolicyKind) -> Box<dyn ScalingPolicy> {
+    match kind {
+        ScalingPolicyKind::Baseline => Box::new(BaselineScaling),
+        ScalingPolicyKind::Harvesting => Box::new(HarvestingScaling::new()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dispatch policies
+// ---------------------------------------------------------------------------
+
+/// The original weighted pick: probability ∝ `1 / (1 + in_flight)`.
+///
+/// Byte-identical to the pre-refactor `Router::pick` hot loop: one
+/// `f64` draw, weights accumulated in the same order into a reusable
+/// scratch buffer, the same threshold walk with the same last-instance
+/// fallback.  `rust/tests/policy_props.rs` locks this against an inline
+/// copy of the pre-refactor algorithm.
+#[derive(Debug, Default)]
+pub struct WeightedPolicy {
+    /// Reusable weight buffer (never observable).
+    scratch: Vec<f64>,
+}
+
+impl WeightedPolicy {
+    /// A fresh weighted policy.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl DispatchPolicy for WeightedPolicy {
+    fn name(&self) -> &'static str {
+        "weighted"
+    }
+
+    fn pick(&mut self, view: &CandidateView<'_>, rng: &mut Rng) -> InstanceId {
+        let u = rng.f64();
+        self.scratch.clear();
+        let mut total = 0.0;
+        for &id in view.serving {
+            let n = view.in_flight.get(id as usize).copied().unwrap_or(0);
+            let w = 1.0 / (1.0 + n as f64);
+            total += w;
+            self.scratch.push(w);
+        }
+        let mut r = u * total;
+        let mut picked = *view.serving.last().expect("serving set is non-empty");
+        for (&id, w) in view.serving.iter().zip(&self.scratch) {
+            r -= w;
+            if r <= 0.0 {
+                picked = id;
+                break;
+            }
+        }
+        picked
+    }
+}
+
+/// Power-of-two-choices: draw two uniform candidates, keep the one with
+/// the lower in-flight gauge (ties keep the first draw).  Exactly two
+/// RNG draws per pick regardless of the serving-set size, so the draw
+/// count stays a pure function of the dispatch sequence.  Both draws
+/// index into `view.serving`, so the pick can never leave the serving
+/// set — pinned by `rust/tests/policy_props.rs`.
+#[derive(Debug, Default)]
+pub struct PowerOfTwoPolicy;
+
+impl DispatchPolicy for PowerOfTwoPolicy {
+    fn name(&self) -> &'static str {
+        "p2c"
+    }
+
+    fn pick(&mut self, view: &CandidateView<'_>, rng: &mut Rng) -> InstanceId {
+        let n = view.serving.len() as u64;
+        let a = view.serving[rng.below(n) as usize];
+        let b = view.serving[rng.below(n) as usize];
+        if view.in_flight_of(b) < view.in_flight_of(a) {
+            b
+        } else {
+            a
+        }
+    }
+}
+
+/// Capacity-table-affine locality weighting: the weighted draw, scaled
+/// by per-node headroom from the scheduler's capacity tables.
+///
+/// Weight of instance `i` on node `m`:
+/// `1/(1 + in_flight_i) * (1 + max(0, hint_m − node_in_flight_m))` —
+/// instances on nodes whose refreshed capacity tables report spare
+/// admission headroom draw proportionally more traffic.  Hints land via
+/// [`DispatchPolicy::on_capacity_hint`] when a deferred capacity update
+/// completes in virtual time (so the hint stream is deterministic);
+/// until the first hint arrives every headroom term is `1` and the
+/// policy degrades to plain load weighting.  One RNG draw per pick,
+/// like `weighted`.
+#[derive(Debug, Default)]
+pub struct LocalityPolicy {
+    /// Per-node capacity hints (latest deferred-update totals).
+    hints: Vec<f64>,
+    /// Reusable weight buffer (never observable).
+    scratch: Vec<f64>,
+}
+
+impl LocalityPolicy {
+    /// A locality policy with no hints yet (plain load weighting).
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl DispatchPolicy for LocalityPolicy {
+    fn name(&self) -> &'static str {
+        "locality"
+    }
+
+    fn pick(&mut self, view: &CandidateView<'_>, rng: &mut Rng) -> InstanceId {
+        let u = rng.f64();
+        self.scratch.clear();
+        let mut total = 0.0;
+        for &id in view.serving {
+            let node = view.node(id);
+            let headroom =
+                (self.hints.get(node).copied().unwrap_or(0.0) - view.node_load(node) as f64)
+                    .max(0.0);
+            let w = (1.0 + headroom) / (1.0 + view.in_flight_of(id) as f64);
+            total += w;
+            self.scratch.push(w);
+        }
+        let mut r = u * total;
+        let mut picked = *view.serving.last().expect("serving set is non-empty");
+        for (&id, w) in view.serving.iter().zip(&self.scratch) {
+            r -= w;
+            if r <= 0.0 {
+                picked = id;
+                break;
+            }
+        }
+        picked
+    }
+
+    fn on_capacity_hint(&mut self, node: NodeId, capacity: f64) {
+        // guard like `Router::per_instance_rps`: a non-finite or negative
+        // hint degrades to "no headroom", never to NaN weights
+        let clean = if capacity.is_finite() { capacity.max(0.0) } else { 0.0 };
+        if self.hints.len() <= node {
+            self.hints.resize(node + 1, 0.0);
+        }
+        self.hints[node] = clean;
+    }
+}
+
+/// Typed construction error for [`SitaDispatch`]: a catalog function
+/// whose solo-latency duration estimate is non-finite or non-positive.
+///
+/// SITA derives its size-interval boundaries from these estimates; the
+/// pre-fix behaviour silently routed every such function to interval 0
+/// (the NaN/zero comparison landed it in the short band), hiding a
+/// poisoned catalog.  Construction now fails loudly instead — pinned by
+/// a regression test in `rust/tests/policy_props.rs`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InvalidDurationEstimate {
+    /// The offending function id.
+    pub function: FunctionId,
+    /// Its `solo_latency_ms` estimate as found in the catalog.
+    pub estimate_ms: f64,
+}
+
+impl fmt::Display for InvalidDurationEstimate {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "sita size intervals need finite positive duration estimates; \
+             function {} has solo_latency_ms = {}",
+            self.function, self.estimate_ms
+        )
+    }
+}
+
+impl std::error::Error for InvalidDurationEstimate {}
+
+/// SITA-style size-interval routing.
+///
+/// Classic SITA segregates *request sizes* onto disjoint servers; in
+/// this model every request of a function costs one saturated-rate
+/// interval, so the size signal lives in the catalog: functions are
+/// banded by their `solo_latency_ms` estimate at construction (strictly
+/// below the upper median → short band).  Short-band functions use
+/// join-shortest-queue (deterministic; ties break to the lowest
+/// instance id), long-band functions round-robin over their serving set
+/// so an elephant spreads instead of camping on one queue.  Consumes no
+/// RNG — determinism holds because the pick is a pure function of the
+/// queue state and the per-function cursor.
+#[derive(Debug)]
+pub struct SitaDispatch {
+    /// Per-function band: `false` = short (JSQ), `true` = long (RR).
+    long_band: Vec<bool>,
+    /// Per-function round-robin cursors for the long band.
+    cursor: Vec<usize>,
+}
+
+impl SitaDispatch {
+    /// Derive the size intervals from the catalog's solo-latency
+    /// estimates.  Fails with [`InvalidDurationEstimate`] on any
+    /// non-finite or non-positive estimate (the regression this
+    /// constructor exists to catch).
+    pub fn from_catalog(cat: &Catalog) -> Result<Self, InvalidDurationEstimate> {
+        let mut estimates = Vec::with_capacity(cat.len());
+        for f in 0..cat.len() {
+            let est = cat.get(f).solo_latency_ms;
+            if !est.is_finite() || est <= 0.0 {
+                return Err(InvalidDurationEstimate { function: f, estimate_ms: est });
+            }
+            estimates.push(est);
+        }
+        let mut sorted = estimates.clone();
+        sorted.sort_by(f64::total_cmp);
+        // upper median: with an empty catalog there is no boundary and
+        // no function either, so any placeholder works
+        let boundary = sorted.get(sorted.len() / 2).copied().unwrap_or(0.0);
+        let long_band = estimates.iter().map(|&e| e >= boundary).collect();
+        Ok(Self { long_band, cursor: vec![0; cat.len()] })
+    }
+
+    /// Whether `f` routes through the long (round-robin) band.
+    pub fn is_long_band(&self, f: FunctionId) -> bool {
+        self.long_band.get(f).copied().unwrap_or(false)
+    }
+}
+
+impl DispatchPolicy for SitaDispatch {
+    fn name(&self) -> &'static str {
+        "sita"
+    }
+
+    fn pick(&mut self, view: &CandidateView<'_>, _rng: &mut Rng) -> InstanceId {
+        let f = view.function;
+        if self.is_long_band(f) {
+            if self.cursor.len() <= f {
+                self.cursor.resize(f + 1, 0);
+            }
+            let c = &mut self.cursor[f];
+            let picked = view.serving[*c % view.serving.len()];
+            *c = (*c + 1) % view.serving.len();
+            return picked;
+        }
+        // short band: join-shortest-queue, ties to the lowest id
+        let mut best = view.serving[0];
+        let mut best_q = view.in_flight_of(best);
+        for &id in &view.serving[1..] {
+            let q = view.in_flight_of(id);
+            if q < best_q || (q == best_q && id < best) {
+                best = id;
+                best_q = q;
+            }
+        }
+        best
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scaling policies
+// ---------------------------------------------------------------------------
+
+/// The original autoscaler behaviour: target `ceil(rps/saturated_rps)`,
+/// release after `release_duration_s` (dual-staged) or
+/// `keepalive_duration_s` (keep-alive only) of sustained surplus.
+#[derive(Debug, Default)]
+pub struct BaselineScaling;
+
+impl ScalingPolicy for BaselineScaling {
+    fn name(&self) -> &'static str {
+        "baseline"
+    }
+
+    fn target_instances(&mut self, cat: &Catalog, f: FunctionId, rps: f64) -> u32 {
+        if rps <= 0.0 {
+            0
+        } else {
+            (rps / cat.get(f).saturated_rps).ceil() as u32
+        }
+    }
+
+    fn release_trigger_s(
+        &mut self,
+        cfg: &AutoscalerConfig,
+        _f: FunctionId,
+        _neighbours: &[FunctionId],
+        _now_ms: f64,
+    ) -> f64 {
+        if cfg.dual_staged {
+            cfg.release_duration_s
+        } else {
+            cfg.keepalive_duration_s
+        }
+    }
+}
+
+/// Milliseconds after a function's last observed QoS violation during
+/// which its co-located lenders must reclaim their surplus.
+pub const HARVEST_PRESSURE_TTL_MS: f64 = 3_000.0;
+
+/// Harvesting overcommit: lend idle reserved capacity, reclaim it on
+/// QoS pressure.
+///
+/// Scale-up targets are identical to [`BaselineScaling`] — harvesting
+/// never under-provisions.  The release trigger is where it differs:
+/// while neither the function nor any co-located neighbour has a QoS
+/// violation within [`HARVEST_PRESSURE_TTL_MS`], a surplus is held for
+/// the full `keepalive_duration_s` (the lend: warm reserved capacity
+/// stays convertible); a recent violation drops the trigger back to
+/// `release_duration_s` (the reclaim).  Since `keepalive ≥ release` by
+/// configuration, harvesting can only *delay* releases relative to
+/// baseline — on the golden scenario (whose 10 s horizon never sustains
+/// either trigger) it is behaviourally identical, which
+/// `rust/tests/policy_props.rs` pins as full-report equality.
+#[derive(Debug, Default)]
+pub struct HarvestingScaling {
+    /// Per-function virtual time of the last observed QoS violation
+    /// (`-inf` when never violated).
+    last_pressure_ms: Vec<f64>,
+}
+
+impl HarvestingScaling {
+    /// A harvesting policy with no pressure observed yet.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn pressured(&self, f: FunctionId, now_ms: f64) -> bool {
+        matches!(self.last_pressure_ms.get(f),
+                 Some(&t) if now_ms - t <= HARVEST_PRESSURE_TTL_MS)
+    }
+}
+
+impl ScalingPolicy for HarvestingScaling {
+    fn name(&self) -> &'static str {
+        "harvesting"
+    }
+
+    fn target_instances(&mut self, cat: &Catalog, f: FunctionId, rps: f64) -> u32 {
+        if rps <= 0.0 {
+            0
+        } else {
+            (rps / cat.get(f).saturated_rps).ceil() as u32
+        }
+    }
+
+    fn release_trigger_s(
+        &mut self,
+        cfg: &AutoscalerConfig,
+        f: FunctionId,
+        neighbours: &[FunctionId],
+        now_ms: f64,
+    ) -> f64 {
+        if !cfg.dual_staged {
+            // keep-alive-only mode has no release stage to stretch
+            return cfg.keepalive_duration_s;
+        }
+        let reclaim =
+            self.pressured(f, now_ms) || neighbours.iter().any(|&g| self.pressured(g, now_ms));
+        if reclaim {
+            cfg.release_duration_s
+        } else {
+            cfg.keepalive_duration_s
+        }
+    }
+
+    fn observe_qos(&mut self, f: FunctionId, violated: bool, now_ms: f64) {
+        if !violated {
+            return;
+        }
+        if self.last_pressure_ms.len() <= f {
+            self.last_pressure_ms.resize(f + 1, f64::NEG_INFINITY);
+        }
+        self.last_pressure_ms[f] = now_ms;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::tests::test_catalog;
+
+    fn view<'a>(
+        serving: &'a [InstanceId],
+        in_flight: &'a [u32],
+        node_of: &'a [NodeId],
+        node_in_flight: &'a [u32],
+    ) -> CandidateView<'a> {
+        CandidateView { function: 0, serving, in_flight, node_of, node_in_flight }
+    }
+
+    #[test]
+    fn kinds_parse_roundtrip_and_reject_unknown() {
+        for k in DispatchPolicyKind::ALL {
+            assert_eq!(DispatchPolicyKind::parse(k.name()).unwrap(), k);
+        }
+        for k in ScalingPolicyKind::ALL {
+            assert_eq!(ScalingPolicyKind::parse(k.name()).unwrap(), k);
+        }
+        assert_eq!(DispatchPolicyKind::parse("P2C").unwrap(), DispatchPolicyKind::PowerOfTwo);
+        assert!(DispatchPolicyKind::parse("rr").is_err());
+        assert!(ScalingPolicyKind::parse("borrow").is_err());
+    }
+
+    #[test]
+    fn weighted_matches_the_reference_threshold_walk() {
+        // the exact pre-refactor arithmetic, inline
+        let serving: Vec<InstanceId> = vec![3, 5, 9];
+        let mut in_flight = vec![0u32; 10];
+        in_flight[3] = 4;
+        in_flight[9] = 1;
+        let nodes = vec![0usize; 10];
+        let node_load = vec![0u32; 4];
+        let mut policy = WeightedPolicy::new();
+        let mut rng = Rng::seed_from(0xfeed);
+        let mut reference_rng = Rng::seed_from(0xfeed);
+        for _ in 0..256 {
+            let picked =
+                policy.pick(&view(&serving, &in_flight, &nodes, &node_load), &mut rng);
+            let u = reference_rng.f64();
+            let weights: Vec<f64> =
+                serving.iter().map(|&id| 1.0 / (1.0 + in_flight[id as usize] as f64)).collect();
+            let total: f64 = weights.iter().sum();
+            let mut r = u * total;
+            let mut expect = *serving.last().unwrap();
+            for (&id, w) in serving.iter().zip(&weights) {
+                r -= w;
+                if r <= 0.0 {
+                    expect = id;
+                    break;
+                }
+            }
+            assert_eq!(picked, expect);
+        }
+    }
+
+    #[test]
+    fn p2c_prefers_the_lighter_of_two_draws_and_stays_in_set() {
+        let serving: Vec<InstanceId> = vec![1, 2, 6];
+        let mut in_flight = vec![0u32; 8];
+        in_flight[1] = 50;
+        in_flight[2] = 50;
+        let nodes = vec![0usize; 8];
+        let node_load = vec![0u32; 2];
+        let mut policy = PowerOfTwoPolicy;
+        let mut rng = Rng::seed_from(7);
+        let mut idle_hits = 0u32;
+        for _ in 0..512 {
+            let picked = policy.pick(&view(&serving, &in_flight, &nodes, &node_load), &mut rng);
+            assert!(serving.contains(&picked), "picked {picked} outside the serving set");
+            if picked == 6 {
+                idle_hits += 1;
+            }
+        }
+        // the idle instance wins every pair it appears in: ~5/9 of picks
+        assert!(idle_hits > 200, "idle instance must win its pairs: {idle_hits}/512");
+    }
+
+    #[test]
+    fn p2c_draw_count_is_fixed_even_for_one_instance() {
+        let serving: Vec<InstanceId> = vec![4];
+        let in_flight = vec![0u32; 5];
+        let nodes = vec![0usize; 5];
+        let node_load = vec![0u32; 1];
+        let mut policy = PowerOfTwoPolicy;
+        let mut a = Rng::seed_from(11);
+        let mut b = Rng::seed_from(11);
+        policy.pick(&view(&serving, &in_flight, &nodes, &node_load), &mut a);
+        // the same stream advanced by exactly two below() draws
+        b.below(1);
+        b.below(1);
+        assert_eq!(a.next_u64(), b.next_u64(), "p2c must always consume two draws");
+    }
+
+    #[test]
+    fn locality_follows_capacity_headroom_and_guards_bad_hints() {
+        let serving: Vec<InstanceId> = vec![0, 1];
+        let in_flight = vec![0u32; 2];
+        let nodes = vec![0usize, 1usize];
+        let node_load = vec![0u32, 0u32];
+        let mut policy = LocalityPolicy::new();
+        // node 1 advertises big headroom; NaN/negative hints are inert
+        policy.on_capacity_hint(1, 40.0);
+        policy.on_capacity_hint(0, f64::NAN);
+        let mut rng = Rng::seed_from(3);
+        let mut hits = [0u32; 2];
+        for _ in 0..400 {
+            let picked = policy.pick(&view(&serving, &in_flight, &nodes, &node_load), &mut rng);
+            hits[picked as usize] += 1;
+        }
+        assert!(
+            hits[1] > hits[0] * 5,
+            "headroom node must dominate (weights 41 vs 1): {hits:?}"
+        );
+        policy.on_capacity_hint(0, -7.0);
+        assert_eq!(policy.hints[0], 0.0, "negative hints clamp to zero");
+    }
+
+    #[test]
+    fn sita_bands_split_on_the_median_and_route_jsq_vs_rr() {
+        // derive the expected split from the catalog itself: strictly
+        // below the upper-median solo latency → short band
+        let cat = test_catalog();
+        let policy = SitaDispatch::from_catalog(&cat).unwrap();
+        let solos: Vec<f64> =
+            (0..cat.len()).map(|f| cat.get(f).solo_latency_ms).collect();
+        let mut sorted = solos.clone();
+        sorted.sort_by(f64::total_cmp);
+        let boundary = sorted[sorted.len() / 2];
+        let mut short_fns = Vec::new();
+        let mut long_fns = Vec::new();
+        for (f, &solo) in solos.iter().enumerate() {
+            assert_eq!(policy.is_long_band(f), solo >= boundary, "band of fn {f}");
+            if solo >= boundary {
+                long_fns.push(f);
+            } else {
+                short_fns.push(f);
+            }
+        }
+        assert_eq!(short_fns.len(), 2, "4 functions split evenly on the median");
+        assert_eq!(long_fns.len(), 2);
+
+        let serving: Vec<InstanceId> = vec![2, 5, 7];
+        let mut in_flight = vec![0u32; 8];
+        in_flight[2] = 3;
+        in_flight[7] = 3;
+        let nodes = vec![0usize; 8];
+        let node_load = vec![0u32; 1];
+        let mut rng = Rng::seed_from(1);
+        let mut policy = SitaDispatch::from_catalog(&cat).unwrap();
+        // short band: JSQ picks the only idle instance
+        let mut v = view(&serving, &in_flight, &nodes, &node_load);
+        v.function = short_fns[0];
+        assert_eq!(policy.pick(&v, &mut rng), 5);
+        // JSQ tie: lowest instance id wins
+        in_flight[5] = 3;
+        let mut v = view(&serving, &in_flight, &nodes, &node_load);
+        v.function = short_fns[0];
+        assert_eq!(policy.pick(&v, &mut rng), 2);
+        // long band: round-robin ignores queue lengths
+        let mut v = view(&serving, &in_flight, &nodes, &node_load);
+        v.function = long_fns[0];
+        let rr: Vec<InstanceId> = (0..4).map(|_| policy.pick(&v, &mut rng)).collect();
+        assert_eq!(rr, vec![2, 5, 7, 2]);
+        // and consumed no RNG at all
+        assert_eq!(Rng::seed_from(1).next_u64(), rng.next_u64());
+    }
+
+    #[test]
+    fn sita_rejects_degenerate_duration_estimates() {
+        for bad in [f64::NAN, 0.0, -3.0, f64::INFINITY] {
+            let mut funcs = test_catalog().functions.clone();
+            funcs[2].solo_latency_ms = bad;
+            let cat = Catalog::from_functions(funcs);
+            let err = SitaDispatch::from_catalog(&cat).unwrap_err();
+            assert_eq!(err.function, 2);
+            if bad.is_nan() {
+                assert!(err.estimate_ms.is_nan());
+            } else {
+                assert_eq!(err.estimate_ms, bad);
+            }
+            assert!(err.to_string().contains("function 2"), "{err}");
+        }
+    }
+
+    #[test]
+    fn baseline_trigger_matches_the_prerefactor_constants() {
+        let mut p = BaselineScaling;
+        let mut cfg = AutoscalerConfig::default();
+        assert_eq!(p.release_trigger_s(&cfg, 0, &[], 0.0), 45.0);
+        cfg.dual_staged = false;
+        assert_eq!(p.release_trigger_s(&cfg, 0, &[], 0.0), 60.0);
+        let cat = test_catalog();
+        // target formula unchanged: ceil(rps / saturated_rps), 0 at rest
+        assert_eq!(p.target_instances(&cat, 0, 0.0), 0);
+        let sat = cat.get(0).saturated_rps;
+        assert_eq!(p.target_instances(&cat, 0, sat * 2.5), 3);
+    }
+
+    #[test]
+    fn harvesting_lends_idle_surplus_and_reclaims_on_pressure() {
+        let mut p = HarvestingScaling::new();
+        let cfg = AutoscalerConfig::default();
+        // no pressure anywhere: lend (keep-alive trigger)
+        assert_eq!(p.release_trigger_s(&cfg, 0, &[1, 2], 10_000.0), 60.0);
+        // a co-located neighbour violates QoS: reclaim promptly
+        p.observe_qos(2, true, 9_500.0);
+        assert_eq!(p.release_trigger_s(&cfg, 0, &[1, 2], 10_000.0), 45.0);
+        // pressure ages out after the TTL
+        assert_eq!(
+            p.release_trigger_s(&cfg, 0, &[1, 2], 9_500.0 + HARVEST_PRESSURE_TTL_MS + 1.0),
+            60.0
+        );
+        // non-violating samples leave no pressure
+        p.observe_qos(1, false, 20_000.0);
+        assert_eq!(p.release_trigger_s(&cfg, 0, &[1], 20_001.0), 60.0);
+        // self-pressure reclaims too
+        p.observe_qos(0, true, 30_000.0);
+        assert_eq!(p.release_trigger_s(&cfg, 0, &[], 30_001.0), 45.0);
+        // targets are exactly baseline's
+        let cat = test_catalog();
+        let mut b = BaselineScaling;
+        for rps in [0.0, 1.0, 17.3, 500.0] {
+            assert_eq!(p.target_instances(&cat, 1, rps), b.target_instances(&cat, 1, rps));
+        }
+    }
+}

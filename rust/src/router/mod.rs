@@ -11,11 +11,12 @@
 //!
 //! Routing is event-driven, one request at a time:
 //!
-//! * [`Router::pick`] chooses a serving instance with probability
-//!   proportional to `1 / (1 + in_flight)` — lightly loaded instances
-//!   draw more traffic, the saturated ones draw less — from the router's
-//!   **own seeded RNG**, so the pick stream is a pure function of the
-//!   seed and the dispatch order (bit-identical across replays; it never
+//! * [`Router::pick`] chooses a serving instance through a pluggable
+//!   [`DispatchPolicy`] (see [`crate::policy`]; the default weights by
+//!   `1 / (1 + in_flight)` — lightly loaded instances draw more
+//!   traffic, the saturated ones draw less) from the router's **own
+//!   seeded RNG**, so the pick stream is a pure function of the seed
+//!   and the dispatch order (bit-identical across replays; it never
 //!   touches the control plane's noise RNG).  The result is a typed
 //!   [`Dispatch`]: an idle instance ([`Dispatch::Routed`]), a busy one
 //!   ([`Dispatch::Saturated`]) or no serving instance at all
@@ -56,6 +57,7 @@
 
 use crate::catalog::FunctionId;
 use crate::cluster::{Cluster, InstanceId, InstanceState, NodeId};
+use crate::policy::{CandidateView, DispatchPolicy, WeightedPolicy};
 use crate::util::rng::Rng;
 use std::collections::VecDeque;
 
@@ -136,8 +138,10 @@ pub struct Router {
     /// Cold-wait queues: arrival times of requests that found no serving
     /// instance, indexed by function id.
     waiting: Vec<VecDeque<f64>>,
-    /// Reusable weight buffer for [`Router::pick`] (never observable).
-    scratch: Vec<f64>,
+    /// Pluggable pick strategy (see [`crate::policy`]); the default
+    /// [`WeightedPolicy`] reproduces the original weighted draw
+    /// byte-identically.
+    policy: Box<dyn DispatchPolicy>,
     /// Gauge under-decrements repaired by saturating at zero instead of
     /// wrapping (see [`Router::gauge_skew_repairs`]).  Any nonzero value
     /// is a routing-accounting bug upstream — an unchecked wrap here used
@@ -156,8 +160,14 @@ impl Router {
         Self::default()
     }
 
-    /// A router whose pick stream derives from `seed`.
+    /// A router whose pick stream derives from `seed`, using the default
+    /// [`WeightedPolicy`] (the original weighted draw).
     pub fn with_seed(seed: u64) -> Self {
+        Self::with_policy(seed, Box::new(WeightedPolicy::new()))
+    }
+
+    /// A router whose pick stream derives from `seed` through `policy`.
+    pub fn with_policy(seed: u64, policy: Box<dyn DispatchPolicy>) -> Self {
         Self {
             serving: Vec::new(),
             reroutes: 0,
@@ -170,9 +180,22 @@ impl Router {
             node_in_flight: Vec::new(),
             peak_node_in_flight: 0,
             waiting: Vec::new(),
-            scratch: Vec::new(),
+            policy,
             gauge_skew_repairs: 0,
         }
+    }
+
+    /// Name of the active dispatch policy.
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Forward a capacity-table hint for `node` (the sum of the node's
+    /// per-function capacities from a just-landed deferred update) to
+    /// the dispatch policy.  Most policies ignore it; see
+    /// [`DispatchPolicy::on_capacity_hint`].
+    pub fn capacity_hint(&mut self, node: NodeId, capacity: f64) {
+        self.policy.on_capacity_hint(node, capacity);
     }
 
     fn ensure_function(&mut self, f: FunctionId) {
@@ -274,37 +297,29 @@ impl Router {
         orphaned
     }
 
-    /// Pick a serving instance of `f`, weighted by instantaneous
-    /// in-flight load (`weight ∝ 1 / (1 + in_flight)`), from the seeded
+    /// Pick a serving instance of `f` through the dispatch policy (the
+    /// default weights by instantaneous in-flight load,
+    /// `weight ∝ 1 / (1 + in_flight)`), drawing only from the seeded
     /// pick RNG.  The verdict is typed: [`Dispatch::Routed`] for an idle
     /// pick, [`Dispatch::Saturated`] for a busy one and
     /// [`Dispatch::ColdQueued`] when nothing serves `f` — in which case
-    /// the RNG is **not** consumed, so replica routers fed the same
-    /// dispatch sequence stay in lockstep.
+    /// **no policy runs and the RNG is not consumed**, so replica
+    /// routers fed the same dispatch sequence stay in lockstep
+    /// whichever policy they carry.
     pub fn pick(&mut self, f: FunctionId) -> Dispatch {
         let Some(serving) = self.serving.get(f).filter(|v| !v.is_empty()) else {
             return Dispatch::ColdQueued;
         };
-        let u = self.rng.f64();
-        // weights computed once into the reusable scratch buffer (this is
-        // the per-request hot path; see benches/router_hotpath.rs)
-        self.scratch.clear();
-        let mut total = 0.0;
-        for &id in serving {
-            let n = self.load_in_flight.get(id as usize).copied().unwrap_or(0);
-            let w = 1.0 / (1.0 + n as f64);
-            total += w;
-            self.scratch.push(w);
-        }
-        let mut r = u * total;
-        let mut picked = *serving.last().expect("serving set is non-empty");
-        for (&id, w) in serving.iter().zip(&self.scratch) {
-            r -= w;
-            if r <= 0.0 {
-                picked = id;
-                break;
-            }
-        }
+        // this is the per-request hot path (benches/router_hotpath.rs):
+        // the view hands the policy the SoA load columns by reference
+        let view = CandidateView {
+            function: f,
+            serving: serving.as_slice(),
+            in_flight: &self.load_in_flight,
+            node_of: &self.load_node,
+            node_in_flight: &self.node_in_flight,
+        };
+        let picked = self.policy.pick(&view, &mut self.rng);
         if self.load_in_flight.get(picked as usize).copied().unwrap_or(0) == 0 {
             Dispatch::Routed(picked)
         } else {
@@ -687,6 +702,27 @@ mod tests {
         assert!(
             hits[1] > hits[0] * 5,
             "idle instance must dominate: {hits:?} (weights 1/21 vs 1)"
+        );
+    }
+
+    #[test]
+    fn pluggable_policy_routes_and_receives_capacity_hints() {
+        use crate::policy::{make_dispatch_policy, DispatchPolicyKind};
+        let cat = crate::catalog::tests::test_catalog();
+        let policy = make_dispatch_policy(DispatchPolicyKind::Locality, &cat).unwrap();
+        let mut r = Router::with_policy(3, policy);
+        assert_eq!(r.policy_name(), "locality");
+        assert_eq!(Router::with_seed(0).policy_name(), "weighted", "default unchanged");
+        r.add(0, 0, 0);
+        r.add(0, 1, 1);
+        r.capacity_hint(1, 50.0);
+        let mut hits = [0u32; 2];
+        for _ in 0..300 {
+            hits[picked(r.pick(0)) as usize] += 1;
+        }
+        assert!(
+            hits[1] > hits[0] * 5,
+            "capacity-hinted node must draw most traffic: {hits:?}"
         );
     }
 

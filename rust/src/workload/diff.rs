@@ -21,10 +21,16 @@
 //! `--require-divergence`, when no adversarial scenario separates the
 //! baselines from jiagu at all (the regression expectation: the
 //! workload lab must keep producing scenarios that discriminate).
+//!
+//! [`run_policy_matrix`] reuses the same invariants, divergence
+//! thresholds and rankings to judge the policy lab ([`crate::policy`]):
+//! every dispatch × scaling combination across the sweepable autoscaler
+//! cadence, ranked on the latency histogram (`make policy-smoke`).
 
 use crate::catalog::Catalog;
 use crate::config::{RunConfig, SchedulerKind};
 use crate::controlplane::shard::ShardedControlPlane;
+use crate::policy::{DispatchPolicyKind, ScalingPolicyKind};
 use crate::runtime::Predictor;
 use crate::sim::{RunReport, Simulation};
 use crate::traces::Workload;
@@ -287,6 +293,84 @@ pub fn run_matrix(
     })
 }
 
+/// The autoscaler cadences the policy matrix sweeps (ISSUE: 100–250 ms).
+/// Descending so the first combo — `weighted+baseline@250`, today's
+/// defaults at the golden scenario's cadence — is `outcomes[0]`, the
+/// baseline every divergence is measured against.
+pub const POLICY_EVAL_INTERVALS_MS: [f64; 3] = [250.0, 175.0, 100.0];
+
+/// Label of one policy-lab combination: `dispatch+scaling@cadence_ms`.
+pub fn policy_combo_label(
+    dispatch: DispatchPolicyKind,
+    scaling: ScalingPolicyKind,
+    eval_interval_ms: f64,
+) -> String {
+    format!("{}+{}@{}", dispatch.name(), scaling.name(), eval_interval_ms as u32)
+}
+
+/// Policy-lab differential matrix: one workload, every dispatch ×
+/// scaling policy combination × every sweepable autoscaler cadence
+/// ([`POLICY_EVAL_INTERVALS_MS`]), all under the Jiagu scheduler, judged
+/// on the golden latency histogram exactly like [`run_matrix`] judges
+/// schedulers.  `outcomes[0]` is `weighted+baseline@250` — the
+/// pre-policy-lab defaults — so divergences read as "what this policy
+/// combination changes relative to today".  With `check_determinism`
+/// every combo runs twice and a byte mismatch is an invariant violation.
+pub fn run_policy_matrix(
+    cat: &Catalog,
+    base_cfg: &RunConfig,
+    predictor: &Arc<dyn Predictor>,
+    workload: &Workload,
+    check_determinism: bool,
+) -> Result<MatrixReport> {
+    let n_combos = DispatchPolicyKind::ALL.len()
+        * ScalingPolicyKind::ALL.len()
+        * POLICY_EVAL_INTERVALS_MS.len();
+    let mut outcomes = Vec::with_capacity(n_combos);
+    let mut violations = Vec::new();
+    for dispatch in DispatchPolicyKind::ALL {
+        for scaling in ScalingPolicyKind::ALL {
+            for eval_interval_ms in POLICY_EVAL_INTERVALS_MS {
+                let mut cfg = scheduler_cfg(base_cfg, SchedulerKind::Jiagu);
+                cfg.dispatch_policy = dispatch;
+                cfg.scaling_policy = scaling;
+                cfg.eval_interval_ms = eval_interval_ms;
+                let label = policy_combo_label(dispatch, scaling, eval_interval_ms);
+                let report = run_one(cat, &cfg, predictor, workload)?;
+                if check_determinism {
+                    let replayed = run_one(cat, &cfg, predictor, workload)?;
+                    if replayed != report {
+                        violations.push(InvariantViolation {
+                            scheduler: label.clone(),
+                            invariant: "determinism",
+                            detail: "second run of the same seed produced different bytes"
+                                .into(),
+                        });
+                    }
+                }
+                let outcome = SchedulerOutcome { scheduler: label, report };
+                check_invariants(cat, &cfg, workload, &outcome, &mut violations);
+                outcomes.push(outcome);
+            }
+        }
+    }
+    let mut divergences = Vec::new();
+    find_divergences(&outcomes, &mut divergences);
+    let rankings = vec![
+        ("request_p99_ms", rank(&outcomes, |r| r.request_p99_ms, true)),
+        ("qos_violations", rank(&outcomes, |r| total_qos_violations(r) as f64, true)),
+        ("density", rank(&outcomes, |r| r.density, false)),
+        ("cold_start_ms_p99", rank(&outcomes, |r| r.cold_start_ms_p99, true)),
+    ];
+    Ok(MatrixReport {
+        scenario: workload.name.clone(),
+        outcomes,
+        divergences,
+        violations,
+        rankings,
+    })
+}
+
 /// Deterministic JSON surface of one matrix (sorted keys; the CLI and
 /// `make fuzz-smoke` emit this verbatim).
 pub fn matrix_json(m: &MatrixReport) -> Json {
@@ -401,6 +485,40 @@ mod tests {
         for key in ["scenario", "schedulers", "divergences", "invariant_violations", "rankings"]
         {
             assert!(a.opt(key).is_some(), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn policy_matrix_covers_every_combo_and_leads_with_the_defaults() {
+        let cat = test_catalog();
+        let wl = ScenarioFuzzer::new(11, 3).workload(&cat, ScenarioFamily::SquareWave);
+        let mut cfg = base_cfg();
+        cfg.duration_s = 3;
+        let m = run_policy_matrix(&cat, &cfg, &stub_predictor(), &wl, false).unwrap();
+        let combos = DispatchPolicyKind::ALL.len()
+            * ScalingPolicyKind::ALL.len()
+            * POLICY_EVAL_INTERVALS_MS.len();
+        assert_eq!(m.outcomes.len(), combos);
+        assert_eq!(
+            m.outcomes[0].scheduler, "weighted+baseline@250",
+            "the divergence baseline must be today's defaults at the golden cadence"
+        );
+        let mut labels: Vec<&str> =
+            m.outcomes.iter().map(|o| o.scheduler.as_str()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), combos, "combo labels must be unique");
+        assert!(
+            m.outcomes.iter().all(|o| o.report.requests_served > 0),
+            "every policy combination must route traffic"
+        );
+        assert!(
+            m.violations.is_empty(),
+            "no invariant may break on a stock scenario: {:?}",
+            m.violations
+        );
+        for (metric, order) in &m.rankings {
+            assert_eq!(order.len(), combos, "{metric}: all combos ranked");
         }
     }
 

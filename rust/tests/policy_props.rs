@@ -1,0 +1,238 @@
+//! Policy-lab property tests (`jiagu::policy`):
+//!
+//! * the default `weighted` dispatch policy reproduces the pre-refactor
+//!   router algorithm byte-for-byte (a shadow implementation driven by a
+//!   twin RNG stays in lockstep through route/complete storms);
+//! * every dispatch × scaling policy replays byte-identically across
+//!   shard counts 1/2/4 and both `Timeline` implementations;
+//! * power-of-two-choices never picks an instance outside the serving
+//!   set;
+//! * the `harvesting` scaling policy never increases any function's QoS
+//!   violations on the golden scenario;
+//! * SITA rejects non-finite/zero duration estimates with a typed error
+//!   instead of silently routing everything to interval 0.
+
+use jiagu::artifacts::{latency_golden_scenario, make_catalog};
+use jiagu::catalog::Catalog;
+use jiagu::config::RunConfig;
+use jiagu::controlplane::shard::ShardedControlPlane;
+use jiagu::engine::QueueKind;
+use jiagu::policy::{
+    make_dispatch_policy, CandidateView, DispatchPolicy, DispatchPolicyKind,
+    PowerOfTwoPolicy, ScalingPolicyKind, SitaDispatch,
+};
+use jiagu::router::{RouteOutcome, Router};
+use jiagu::runtime::{ForestParams, NativeForestPredictor, Predictor};
+use jiagu::sim::{RunReport, Simulation};
+use jiagu::traces::{PoissonParams, Workload};
+use jiagu::util::rng::Rng;
+use std::sync::Arc;
+
+fn stub_predictor() -> Arc<dyn Predictor> {
+    Arc::new(NativeForestPredictor::new(ForestParams::synthetic_stub(
+        jiagu::model::N_FEATURES,
+        0.05,
+        0.05,
+    )))
+}
+
+/// The pre-refactor `Router::pick` algorithm, verbatim: one `f64` draw,
+/// weights `1 / (1 + in_flight)`, threshold walk defaulting to the last
+/// serving instance.  The byte-identity contract of the default policy
+/// is exactly "indistinguishable from this".
+fn shadow_pick(serving: &[u64], in_flight: &[u32], rng: &mut Rng) -> u64 {
+    let u = rng.f64();
+    let mut total = 0.0;
+    let mut weights = Vec::with_capacity(serving.len());
+    for &id in serving {
+        let n = in_flight.get(id as usize).copied().unwrap_or(0);
+        let w = 1.0 / (1.0 + n as f64);
+        total += w;
+        weights.push(w);
+    }
+    let mut r = u * total;
+    let mut picked = *serving.last().expect("non-empty serving set");
+    for (&id, w) in serving.iter().zip(&weights) {
+        r -= w;
+        if r <= 0.0 {
+            picked = id;
+            break;
+        }
+    }
+    picked
+}
+
+#[test]
+fn default_policy_matches_the_prerefactor_router_in_lockstep() {
+    const SEED: u64 = 0xd15b;
+    let mut router = Router::with_seed(SEED);
+    let mut twin = Rng::seed_from(SEED);
+    // shadow state: serving sets in insertion order + in-flight gauges
+    let mut serving: Vec<Vec<u64>> = vec![Vec::new(); 2];
+    let mut in_flight = vec![0u32; 16];
+    for (f, id, node) in
+        [(0usize, 0u64, 0usize), (0, 1, 1), (0, 2, 2), (0, 3, 0), (1, 4, 1), (1, 5, 2)]
+    {
+        router.add(f, id, node);
+        serving[f].push(id);
+    }
+    // a function nobody serves: ColdWait must not advance either stream
+    assert_eq!(router.route(7, 0.0), RouteOutcome::ColdWait);
+    let mut step = Rng::seed_from(99);
+    for i in 0..600 {
+        let t = i as f64;
+        let f = (step.below(2)) as usize;
+        let expect = shadow_pick(&serving[f], &in_flight, &mut twin);
+        let got = match router.route(f, t) {
+            RouteOutcome::Started { instance, .. } => instance,
+            RouteOutcome::Queued { instance, .. } => instance,
+            RouteOutcome::ColdWait => panic!("both functions are served"),
+        };
+        assert_eq!(got, expect, "step {i}: policy diverged from the shadow");
+        in_flight[got as usize] += 1;
+        // drain a pseudo-random busy instance now and then, mirrored
+        if step.below(3) == 0 {
+            let id = step.below(6);
+            if in_flight[id as usize] > 0 {
+                router.complete(id);
+                in_flight[id as usize] -= 1;
+            }
+        }
+    }
+}
+
+#[test]
+fn every_policy_replays_byte_identically_across_shards_and_queues() {
+    let cat = Catalog::from_functions(make_catalog(8, 0x5ca1e));
+    let predictor = stub_predictor();
+    let wl = Workload::poisson(
+        &cat,
+        &PoissonParams { duration_s: 3, ..Default::default() },
+        61,
+    );
+    let combos = [
+        (DispatchPolicyKind::Weighted, ScalingPolicyKind::Baseline),
+        (DispatchPolicyKind::PowerOfTwo, ScalingPolicyKind::Baseline),
+        (DispatchPolicyKind::Locality, ScalingPolicyKind::Baseline),
+        (DispatchPolicyKind::Sita, ScalingPolicyKind::Baseline),
+        (DispatchPolicyKind::Weighted, ScalingPolicyKind::Harvesting),
+    ];
+    for (dispatch, scaling) in combos {
+        let mut reports: Vec<RunReport> = Vec::new();
+        for shards in [1usize, 2, 4] {
+            for queue in [QueueKind::Heap, QueueKind::Wheel] {
+                let mut cfg = RunConfig::jiagu_45();
+                cfg.n_nodes = 6;
+                cfg.duration_s = 3;
+                cfg.requests = true;
+                cfg.eval_interval_ms = 250.0;
+                cfg.seed = 77;
+                cfg.shards = shards;
+                cfg.partitions = 4;
+                cfg.queue = queue;
+                cfg.dispatch_policy = dispatch;
+                cfg.scaling_policy = scaling;
+                let report =
+                    ShardedControlPlane::new(cat.clone(), cfg, predictor.clone())
+                        .unwrap()
+                        .run_workload(&wl)
+                        .unwrap();
+                reports.push(report);
+            }
+        }
+        assert!(
+            reports.iter().all(|r| *r == reports[0]),
+            "{}+{}: report must not depend on shard count or queue kind",
+            dispatch.name(),
+            scaling.name()
+        );
+        assert!(
+            reports[0].requests_served > 0,
+            "{}+{}: traffic must be served",
+            dispatch.name(),
+            scaling.name()
+        );
+    }
+}
+
+#[test]
+fn power_of_two_never_picks_outside_the_serving_set() {
+    let serving = [3u64, 9, 12];
+    let mut in_flight = vec![0u32; 16];
+    in_flight[3] = 20; // heavy
+    in_flight[9] = 1;
+    in_flight[12] = 0;
+    in_flight[5] = 0; // idle but NOT serving — must never be picked
+    let node_of = vec![0usize; 16];
+    let node_in_flight = vec![0u32; 4];
+    let view = CandidateView {
+        function: 0,
+        serving: &serving,
+        in_flight: &in_flight,
+        node_of: &node_of,
+        node_in_flight: &node_in_flight,
+    };
+    let mut policy = PowerOfTwoPolicy::default();
+    let mut rng = Rng::seed_from(0x9c);
+    let mut picked_heavy = 0u32;
+    for _ in 0..500 {
+        let picked = policy.pick(&view, &mut rng);
+        assert!(serving.contains(&picked), "picked non-serving instance {picked}");
+        if picked == 3 {
+            picked_heavy += 1;
+        }
+    }
+    // d=2 choices: the heavy instance only wins when drawn twice (~1/9)
+    assert!(picked_heavy < 150, "heavy instance over-picked: {picked_heavy}/500");
+}
+
+#[test]
+fn harvesting_never_raises_golden_qos_violations() {
+    let cat = Catalog::from_functions(make_catalog(8, 0xa7));
+    let predictor = stub_predictor();
+    let (cfg, wl) = latency_golden_scenario(&cat);
+    let baseline = Simulation::new(cat.clone(), cfg.clone(), predictor.clone())
+        .run_workload(&wl)
+        .unwrap();
+    let mut harvest_cfg = cfg;
+    harvest_cfg.scaling_policy = ScalingPolicyKind::Harvesting;
+    let harvested = Simulation::new(cat, harvest_cfg, predictor)
+        .run_workload(&wl)
+        .unwrap();
+    for (f, (h, b)) in harvested
+        .request_qos_violations
+        .iter()
+        .zip(&baseline.request_qos_violations)
+        .enumerate()
+    {
+        assert!(h <= b, "fn {f}: harvesting raised QoS violations {h} > {b}");
+    }
+    // stronger on the golden scenario: both release-trigger candidates
+    // (45 s release, 60 s keep-alive) sit beyond the 10 s horizon, so
+    // harvesting is provably inert there — byte-identical, not just <=
+    assert_eq!(harvested, baseline, "harvesting must be inert on the golden horizon");
+}
+
+#[test]
+fn sita_rejects_degenerate_duration_estimates_with_a_typed_error() {
+    for bad in [f64::NAN, 0.0, -3.0, f64::INFINITY] {
+        let mut funcs = make_catalog(4, 0x517a);
+        funcs[1].solo_latency_ms = bad;
+        let cat = Catalog::from_functions(funcs);
+        let err = SitaDispatch::from_catalog(&cat)
+            .expect_err("degenerate estimate must be rejected");
+        assert_eq!(err.function, 1);
+        if bad.is_nan() {
+            assert!(err.estimate_ms.is_nan());
+        } else {
+            assert_eq!(err.estimate_ms, bad);
+        }
+        // the factory propagates the same typed error through anyhow
+        let any = make_dispatch_policy(DispatchPolicyKind::Sita, &cat)
+            .expect_err("factory must propagate the rejection");
+        assert!(any.to_string().contains("function 1"), "unexpected: {any}");
+    }
+    // a healthy generated catalog constructs fine
+    let cat = Catalog::from_functions(make_catalog(4, 0x517a));
+    assert!(SitaDispatch::from_catalog(&cat).is_ok());
+}
